@@ -1,0 +1,74 @@
+//! Quickstart: load the AOT SlimResNet artifacts and run real inference
+//! at every uniform width — the 60-second proof that the python-authored,
+//! Pallas-kerneled network executes from rust with zero python.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use slim_scheduler::model::{AccuracyPrior, ModelMeta, WIDTHS};
+use slim_scheduler::runtime::{HostTensor, SegmentExecutor};
+use slim_scheduler::utilx::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let meta = ModelMeta::default();
+    let prior = AccuracyPrior::new();
+    let mut ex = SegmentExecutor::new("artifacts")?;
+    println!(
+        "loaded {} artifacts ({} segments × {:?} widths × {:?} batches)\n",
+        ex.index.artifacts.len(),
+        ex.index.num_segments,
+        ex.index.widths,
+        ex.index.batches
+    );
+
+    // one synthetic CIFAR-like batch
+    let batch = 4;
+    let (in_shape, _) = meta.seg_io_shapes(0, batch);
+    let mut rng = Rng::new(7);
+    let mut image = HostTensor::zeros(&in_shape);
+    for v in &mut image.data {
+        *v = rng.normal() as f32 * 0.5;
+    }
+
+    println!(
+        "{:<8} {:>12} {:>12} {:>14} {:>10}",
+        "width", "cold (compile)", "warm", "prior top-1", "top-1 row0"
+    );
+    for &w in &WIDTHS {
+        let t_cold = std::time::Instant::now();
+        let _ = ex.full_forward(&[w, w, w, w], &image)?;
+        let cold = t_cold.elapsed();
+        let t0 = std::time::Instant::now();
+        let logits = ex.full_forward(&[w, w, w, w], &image)?;
+        let dt = t0.elapsed();
+        let top1 = logits.data[..meta.num_classes]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        println!(
+            "{:<8} {:>13.1?} {:>12.1?} {:>13.2}% {:>10}",
+            w,
+            cold,
+            dt,
+            prior.lookup(&[w, w, w, w]),
+            top1
+        );
+    }
+
+    // mixed-width chaining across segment boundaries (any w_prev works)
+    let mixed = [0.25, 0.50, 0.75, 1.00];
+    let logits = ex.full_forward(&mixed, &image)?;
+    println!(
+        "\nmixed tuple {:?}: prior {:.2}%, {} logits per image, all finite: {}",
+        mixed,
+        prior.lookup(&mixed),
+        logits.shape[1],
+        logits.data.iter().all(|v| v.is_finite())
+    );
+    println!(
+        "PJRT compiles: {}, executions: {}",
+        ex.pool.compiles, ex.executions
+    );
+    Ok(())
+}

@@ -1,0 +1,271 @@
+//! END-TO-END VALIDATION DRIVER (DESIGN.md §5, EXPERIMENTS.md §E2E).
+//!
+//! Proves all three layers compose on a real workload:
+//!
+//!   L1/L2  Pallas-kerneled SlimResNet, AOT-lowered to HLO text
+//!   runtime PJRT CPU execution of those artifacts (zero python)
+//!   L3     PPO router trained in the simulated cluster (sim-to-real
+//!          transfer — the paper's claim that the learned policy
+//!          "generalizes across hardware"), greedy per-server dispatch,
+//!          three real worker threads standing in for the 3-GPU cluster
+//!
+//! Serves a bursty stream of CIFAR-sized requests through router →
+//! worker → segment chain and reports latency percentiles, throughput,
+//! and the served width mix.
+//!
+//!   make artifacts && cargo run --release --example serve_cluster
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use slim_scheduler::config::{Config, RewardCfg};
+use slim_scheduler::coordinator::router::Router;
+use slim_scheduler::coordinator::telemetry::{ServerTelemetry, TelemetrySnapshot};
+use slim_scheduler::experiments;
+use slim_scheduler::metrics::Summary;
+use slim_scheduler::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS};
+use slim_scheduler::runtime::{HostTensor, SegmentExecutor};
+use slim_scheduler::utilx::{Args, Rng};
+
+struct Work {
+    block_id: u64,
+    seg: usize,
+    width: f64,
+    batch: HostTensor,
+}
+
+struct Done {
+    worker: usize,
+    block_id: u64,
+    output: HostTensor,
+    exec_ms: f64,
+}
+
+struct LiveRequest {
+    arrival: Instant,
+    seg: usize,
+    activation: HostTensor,
+    widths_used: [f64; NUM_SEGMENTS],
+}
+
+fn stack(batch: &[&HostTensor]) -> HostTensor {
+    let mut shape = batch[0].shape.clone();
+    shape[0] = batch.len();
+    let mut data = Vec::with_capacity(batch[0].numel() * batch.len());
+    for t in batch {
+        data.extend_from_slice(&t.data);
+    }
+    HostTensor::from_vec(&shape, data)
+}
+
+fn unstack(t: &HostTensor) -> Vec<HostTensor> {
+    let n = t.batch();
+    (0..n).map(|i| {
+        let row = t.numel() / n;
+        let mut shape = t.shape.clone();
+        shape[0] = 1;
+        HostTensor::from_vec(&shape, t.data[i * row..(i + 1) * row].to_vec())
+    }).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let total: usize = args.usize_or("images", 192);
+    let n_workers = 3usize;
+
+    // ---- phase 1: train the router in the simulated cluster ----
+    println!("[1/3] training PPO router in the simulated 3-GPU cluster...");
+    let mut sim_cfg = Config::default();
+    sim_cfg.workload.total_requests = args.usize_or("train-requests", 4000);
+    let mut router = experiments::train_ppo(&sim_cfg, RewardCfg::balanced(),
+                                            args.usize_or("episodes", 5));
+    router.eval_mode();
+    println!(
+        "      {} updates, final reward {:+.3}",
+        router.stats.updates,
+        router.stats.reward_history.last().copied().unwrap_or(0.0)
+    );
+
+    // ---- phase 2: spin up real PJRT workers ----
+    println!("[2/3] starting {n_workers} PJRT CPU workers (compiling artifacts)...");
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+    let mut work_txs = Vec::new();
+    let mut handles = Vec::new();
+    for worker_id in 0..n_workers {
+        let (tx, rx) = mpsc::channel::<Work>();
+        work_txs.push(tx);
+        let done = done_tx.clone();
+        handles.push(thread::spawn(move || -> anyhow::Result<()> {
+            let mut ex = SegmentExecutor::new("artifacts")?;
+            // pre-compile every width so serving measures execution, not
+            // compilation; signal readiness with a sentinel block id
+            ex.warm_all(&[0.25, 0.5, 0.75, 1.0])?;
+            done.send(Done {
+                worker: worker_id,
+                block_id: u64::MAX,
+                output: HostTensor::zeros(&[1]),
+                exec_ms: 0.0,
+            })
+            .ok();
+            while let Ok(w) = rx.recv() {
+                let t0 = Instant::now();
+                let output = ex.execute(w.seg, w.width, &w.batch)?;
+                done.send(Done {
+                    worker: worker_id,
+                    block_id: w.block_id,
+                    output,
+                    exec_ms: t0.elapsed().as_secs_f64() * 1e3,
+                })
+                .ok();
+            }
+            Ok(())
+        }));
+    }
+    drop(done_tx);
+
+    // wait until every worker has compiled its artifact set
+    for _ in 0..n_workers {
+        let ready = done_rx.recv().expect("worker ready");
+        assert_eq!(ready.block_id, u64::MAX);
+    }
+    println!("      all workers warm");
+
+    // ---- phase 3: serve ----
+    println!("[3/3] serving {total} images...\n");
+    let meta = ModelMeta::default();
+    let prior = AccuracyPrior::new();
+    let mut rng = Rng::new(99);
+    let t_start = Instant::now();
+
+    // all requests arrive in one burst (worst case for the router)
+    let (in_shape, _) = meta.seg_io_shapes(0, 1);
+    let mut requests: Vec<LiveRequest> = (0..total)
+        .map(|_| {
+            let mut x = HostTensor::zeros(&in_shape);
+            for v in &mut x.data {
+                *v = rng.normal() as f32 * 0.5;
+            }
+            LiveRequest {
+                arrival: t_start,
+                seg: 0,
+                activation: x,
+                widths_used: [0.0; NUM_SEGMENTS],
+            }
+        })
+        .collect();
+
+    let mut ready: Vec<usize> = (0..total).collect(); // request ids awaiting routing
+    let mut busy = vec![false; n_workers];
+    let mut inflight: std::collections::HashMap<u64, (Vec<usize>, usize, f64)> =
+        std::collections::HashMap::new();
+    let mut queues: Vec<std::collections::VecDeque<(u64, Work, Vec<usize>)>> =
+        (0..n_workers).map(|_| Default::default()).collect();
+    let mut next_block = 0u64;
+    let mut completed = 0usize;
+    let mut e2e = Summary::default();
+    let mut exec_latency = Summary::default();
+    let mut width_count = [0u64; 4];
+    let mut per_worker_blocks = vec![0u64; n_workers];
+    let mut acc_sum = 0.0;
+
+    let widx = |w: f64| -> usize {
+        [0.25, 0.5, 0.75, 1.0].iter().position(|&x| (x - w).abs() < 1e-9).unwrap_or(3)
+    };
+
+    while completed < total {
+        // route everything ready
+        while !ready.is_empty() {
+            let snap = TelemetrySnapshot {
+                fifo_len: ready.len(),
+                done_count: completed as u64,
+                total_requests: total,
+                servers: (0..n_workers)
+                    .map(|i| ServerTelemetry {
+                        queue_len: queues[i].len() + busy[i] as usize,
+                        power_w: 60.0 + 200.0 * (busy[i] as u8 as f64),
+                        util_pct: if busy[i] { 80.0 } else { 5.0 },
+                        mem_util: 0.2,
+                        instances: 4,
+                    })
+                    .collect(),
+            };
+            let head = ready[0];
+            let seg = requests[head].seg;
+            let d = router.route(&snap, 0.5, seg, &mut rng);
+            // collect up to `group` ready requests at the same segment
+            let mut members = Vec::new();
+            let mut rest = Vec::new();
+            for id in ready.drain(..) {
+                if members.len() < d.group.max(1) && requests[id].seg == seg {
+                    members.push(id);
+                } else {
+                    rest.push(id);
+                }
+            }
+            ready = rest;
+            let tensors: Vec<&HostTensor> =
+                members.iter().map(|&id| &requests[id].activation).collect();
+            let work = Work {
+                block_id: next_block,
+                seg,
+                width: d.width,
+                batch: stack(&tensors),
+            };
+            queues[d.server.min(n_workers - 1)].push_back((next_block, work, members));
+            next_block += 1;
+        }
+
+        // dispatch to idle workers
+        for w in 0..n_workers {
+            if !busy[w] {
+                if let Some((block_id, work, members)) = queues[w].pop_front() {
+                    inflight.insert(block_id, (members, work.seg, work.width));
+                    work_txs[w].send(work).expect("worker alive");
+                    busy[w] = true;
+                    per_worker_blocks[w] += 1;
+                }
+            }
+        }
+
+        // wait for a completion
+        let Ok(done) = done_rx.recv() else { break };
+        busy[done.worker] = false;
+        exec_latency.record(done.exec_ms);
+        let (members, seg, width) = inflight.remove(&done.block_id).expect("known block");
+        width_count[widx(width)] += members.len() as u64;
+        let outputs = unstack(&done.output);
+        for (&id, out) in members.iter().zip(outputs) {
+            requests[id].widths_used[seg] = width;
+            requests[id].seg = seg + 1;
+            if seg + 1 < NUM_SEGMENTS {
+                requests[id].activation = out;
+                ready.push(id);
+            } else {
+                completed += 1;
+                acc_sum += prior.lookup(&requests[id].widths_used);
+                e2e.record(requests[id].arrival.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+    }
+
+    let wall = t_start.elapsed().as_secs_f64();
+    drop(work_txs);
+    for h in handles {
+        h.join().expect("worker join").ok();
+    }
+
+    println!("=== serve_cluster results (real PJRT CPU inference) ===");
+    println!("images completed:        {completed} / {total}");
+    println!("wall time:               {wall:.2} s");
+    println!("throughput:              {:.1} img/s", completed as f64 / wall);
+    println!("e2e latency:             mean {:.1} ms  p50 {:.1}  p99 {:.1}",
+             e2e.mean(), e2e.percentile(50.0), e2e.percentile(99.0));
+    println!("segment exec latency:    mean {:.2} ms  p99 {:.2} ms",
+             exec_latency.mean(), exec_latency.percentile(99.0));
+    println!("served width mix:        {width_count:?} (0.25/0.50/0.75/1.00)");
+    println!("per-worker blocks:       {per_worker_blocks:?}");
+    println!("mean accuracy prior:     {:.2}%", acc_sum / completed as f64);
+    assert_eq!(completed, total, "all requests must complete");
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Train the PPO router under both reward weightings and print the
+//! learning curves plus the resulting Tables IV/V-style reports — the
+//! paper's §III-B training pipeline end to end (simulated cluster,
+//! virtual time: ~a minute of wall clock for ~10^5 scheduling steps).
+//!
+//!   cargo run --release --example train_ppo [-- --episodes 10 --requests 8000]
+
+use slim_scheduler::config::{Config, RewardCfg};
+use slim_scheduler::experiments;
+use slim_scheduler::utilx::Args;
+
+fn learning_curve(label: &str, history: &[f64]) {
+    println!("\n{label} learning curve (mean reward per update):");
+    if history.is_empty() {
+        println!("  (no updates)");
+        return;
+    }
+    let min = history.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = history.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let buckets = 20usize.min(history.len());
+    let per = history.len() / buckets;
+    for b in 0..buckets {
+        let chunk = &history[b * per..((b + 1) * per).min(history.len())];
+        let mean = chunk.iter().sum::<f64>() / chunk.len() as f64;
+        let frac = if max > min { (mean - min) / (max - min) } else { 0.5 };
+        let bar = "#".repeat((frac * 46.0) as usize);
+        println!("  [{:>3}] {mean:>+10.4} |{bar}", b * per);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut cfg = Config::default();
+    cfg.workload.total_requests = args.usize_or("requests", 6000);
+    cfg.apply_args(&args);
+    let episodes = args.usize_or("episodes", 8);
+
+    println!(
+        "cluster: {:?}, workload {} req @ {}/s (burst ×{})",
+        cfg.devices, cfg.workload.total_requests, cfg.workload.rate_hz,
+        cfg.workload.burst_factor
+    );
+
+    // baseline for reference
+    let baseline = experiments::run_random_baseline(&cfg);
+    println!("\n== Table III baseline (random routing) ==");
+    print!("{}", baseline.report.to_table());
+
+    // ---- overfit reward (Table IV) ----
+    let (out4, router4) = experiments::run_table4(&cfg, episodes);
+    learning_curve("overfit (β,γ heavy)", &router4.stats.reward_history);
+    println!("\n== Table IV (PPO, overfit) ==");
+    print!("{}", out4.report.to_table());
+    println!("width histogram: {:?}", out4.width_histogram);
+    println!(
+        "Δ vs baseline: latency {:+.2}%, energy {:+.2}%, accuracy {:+.2} pp",
+        experiments::pct_change(
+            baseline.report.latency.mean(),
+            out4.report.latency.mean()
+        ),
+        experiments::pct_change(
+            baseline.report.energy.mean(),
+            out4.report.energy.mean()
+        ),
+        out4.report.accuracy_pct - baseline.report.accuracy_pct,
+    );
+
+    // ---- balanced reward (Table V) ----
+    let (out5, router5) = experiments::run_table5(&cfg, episodes);
+    learning_curve("balanced", &router5.stats.reward_history);
+    println!("\n== Table V (PPO, balanced, online) ==");
+    print!("{}", out5.report.to_table());
+    println!("width histogram: {:?}", out5.width_histogram);
+    println!(
+        "Δ vs baseline: latency {:+.2}%, energy {:+.2}%, accuracy {:+.2} pp",
+        experiments::pct_change(
+            baseline.report.latency.mean(),
+            out5.report.latency.mean()
+        ),
+        experiments::pct_change(
+            baseline.report.energy.mean(),
+            out5.report.energy.mean()
+        ),
+        out5.report.accuracy_pct - baseline.report.accuracy_pct,
+    );
+
+    // checkpoint both policies
+    std::fs::write("ppo_overfit.json", router4.to_json().to_string_pretty())?;
+    std::fs::write("ppo_balanced.json", router5.to_json().to_string_pretty())?;
+    println!("\ncheckpoints: ppo_overfit.json, ppo_balanced.json");
+
+    // sanity: the paper's reward presets produce the paper's trade-off
+    let reward_cfgs = [RewardCfg::overfit(), RewardCfg::balanced()];
+    assert!(reward_cfgs[0].beta > reward_cfgs[1].beta);
+    assert!(out4.report.latency.mean() < baseline.report.latency.mean());
+    assert!(out4.report.accuracy_pct <= out5.report.accuracy_pct);
+    Ok(())
+}

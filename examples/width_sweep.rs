@@ -1,0 +1,82 @@
+//! Width-tuple trade-off sweep on the REAL inference path.
+//!
+//! Regenerates the accuracy-vs-latency trade-off surface that motivates
+//! the paper (§I): for a set of width tuples, measures wall-clock CPU
+//! latency of the AOT-compiled SlimResNet and pairs it with the accuracy
+//! prior. Also validates Table I/II orderings on real compute cost.
+//!
+//!   cargo run --release --example width_sweep
+
+use slim_scheduler::benchx::Table;
+use slim_scheduler::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS, WIDTHS};
+use slim_scheduler::runtime::{HostTensor, SegmentExecutor};
+use slim_scheduler::utilx::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let meta = ModelMeta::default();
+    let prior = AccuracyPrior::new();
+    let mut ex = SegmentExecutor::new("artifacts")?;
+
+    let batch = 16;
+    let (in_shape, _) = meta.seg_io_shapes(0, batch);
+    let mut rng = Rng::new(11);
+    let mut image = HostTensor::zeros(&in_shape);
+    for v in &mut image.data {
+        *v = rng.normal() as f32 * 0.5;
+    }
+
+    // uniform tuples + the paper's Table II tuples + a few extremes
+    let mut tuples: Vec<[f64; NUM_SEGMENTS]> =
+        WIDTHS.iter().map(|&w| [w; NUM_SEGMENTS]).collect();
+    tuples.extend(
+        slim_scheduler::model::accuracy::MIXED_ACC
+            .iter()
+            .map(|&(t, _)| t),
+    );
+    tuples.push([0.25, 0.25, 0.25, 1.00]);
+    tuples.push([1.00, 0.25, 0.25, 0.25]);
+
+    let mut table = Table::new(
+        "Accuracy/latency trade-off surface (real PJRT CPU path, batch 16)",
+        &["w1", "w2", "w3", "w4", "prior_top1", "latency_ms", "sem_gflops"],
+    );
+
+    // warm the pool so timing excludes compilation
+    ex.warm_all(&WIDTHS)?;
+
+    for tuple in &tuples {
+        // median of 3 runs
+        let mut times = Vec::new();
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            let _ = ex.full_forward(tuple, &image)?;
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let flops: u64 = (0..NUM_SEGMENTS)
+            .map(|s| {
+                let wp = if s == 0 { 1.0 } else { tuple[s - 1] };
+                meta.seg_flops(s, tuple[s], wp, batch)
+            })
+            .sum();
+        table.rowf(
+            &[
+                tuple[0],
+                tuple[1],
+                tuple[2],
+                tuple[3],
+                prior.lookup(tuple),
+                times[1],
+                flops as f64 / 1e9,
+            ],
+            3,
+        );
+    }
+    table.print();
+    println!(
+        "\nNote: CPU latency tracks the semantic-FLOP column loosely (the\n\
+         full-interface convention recomputes padded input channels; the\n\
+         simulator charges the semantic cost — DESIGN.md §2)."
+    );
+    Ok(())
+}

@@ -1,0 +1,228 @@
+"""AOT exporter: lower every (segment, width, batch) variant to HLO text.
+
+This is the single build-time entry point (``make artifacts``). It:
+
+  1. initializes the SlimResNet parameters deterministically (seed 42),
+  2. writes them to ``artifacts/weights.bin`` (flat f32 little-endian, in
+     ``model.param_specs`` order),
+  3. lowers ``segment_apply`` for every (seg, width, batch) in the grid to
+     HLO **text** (``seg{s}_w{WW}_b{B}.hlo.txt``),
+  4. lowers a tiny probe computation (runtime smoke test), and
+  5. writes ``manifest.json`` describing everything — the rust side's only
+     source of truth (artifact table, parameter order/offsets, cost model).
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Python never runs at serve time: after this script, the rust binary is
+self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DEFAULT_BATCHES = (1, 4, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(seg: int, width: float, batch: int) -> str:
+    return f"seg{seg}_w{int(round(width * 100)):03d}_b{batch}.hlo.txt"
+
+
+def export_segment(params, seg, width, batch, cfg, out_dir):
+    """Lower one segment variant; returns its manifest entry."""
+    in_shape, out_shape = M.segment_io_shapes(seg, batch, cfg)
+    names = M.segment_param_names(seg, cfg)
+    specs = dict(M.param_specs(cfg))
+    flat_specs = [
+        jax.ShapeDtypeStruct(specs[n], jnp.float32) for n in names
+    ]
+
+    def fn(x, *flat):
+        p = dict(zip(names, flat))
+        return M.segment_apply(p, x, seg, width, cfg, impl="pallas")
+
+    x_spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec, *flat_specs)
+    text = to_hlo_text(lowered)
+    fname = artifact_name(seg, width, batch)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    return {
+        "file": fname,
+        "segment": seg,
+        "width": width,
+        "batch": batch,
+        "input_shape": list(in_shape),
+        "output_shape": list(out_shape),
+        "params": names,
+        "flops_wprev_full": M.segment_flops(seg, width, 1.0, batch, cfg),
+    }
+
+
+def export_goldens(params, cfg, out_dir: str, batches=(1, 4)) -> list:
+    """Golden (input, output) pairs for cross-language numeric validation.
+
+    The rust integration test (`rust/tests/runtime_golden.rs`) loads the
+    HLO artifact, executes it via PJRT, and compares with these outputs —
+    the end-to-end proof that the python-authored network and the
+    rust-served one compute the same function.
+    """
+    goldens = []
+    key = jax.random.PRNGKey(9)
+    for batch in batches:
+        for seg, width in ((0, 0.5), (1, 0.25), (2, 0.75), (3, 1.0)):
+            in_shape, out_shape = M.segment_io_shapes(seg, batch, cfg)
+            key, sub = jax.random.split(key)
+            x = jax.random.normal(sub, in_shape, jnp.float32)
+            if seg > 0:
+                # make the input a realistic full-interface tensor: zeros
+                # above a previous width's active slice
+                c_prev = cfg["base_channels"][seg - 1]
+                x = x.at[..., M.c_active(c_prev, 0.5):].set(0.0)
+            y = M.segment_apply(params, x, seg, width, cfg, impl="ref")
+            xf = f"golden_seg{seg}_b{batch}_in.bin"
+            yf = f"golden_seg{seg}_b{batch}_out.bin"
+            np.asarray(x, dtype=np.float32).tofile(os.path.join(out_dir, xf))
+            np.asarray(y, dtype=np.float32).tofile(os.path.join(out_dir, yf))
+            goldens.append(
+                {
+                    "segment": seg,
+                    "width": width,
+                    "batch": batch,
+                    "artifact": artifact_name(seg, width, batch),
+                    "input_file": xf,
+                    "input_shape": list(in_shape),
+                    "output_file": yf,
+                    "output_shape": list(out_shape),
+                }
+            )
+    return goldens
+
+
+def export_probe(out_dir: str) -> dict:
+    """Tiny matmul+2 probe for runtime smoke tests (mirrors xla-example)."""
+
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    text = to_hlo_text(jax.jit(fn).lower(spec, spec))
+    with open(os.path.join(out_dir, "probe.hlo.txt"), "w") as f:
+        f.write(text)
+    return {"file": "probe.hlo.txt", "input_shape": [2, 2]}
+
+
+def write_weights(params, cfg, out_dir: str) -> dict:
+    """Flat f32 LE dump in param_specs order + offset table."""
+    tensors = []
+    offset = 0
+    chunks = []
+    for name, shape in M.param_specs(cfg):
+        arr = np.asarray(params[name], dtype=np.float32)
+        assert tuple(arr.shape) == tuple(shape), name
+        chunks.append(arr.tobytes())
+        size = arr.size * 4
+        tensors.append(
+            {"name": name, "shape": list(shape), "offset": offset, "bytes": size}
+        )
+        offset += size
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        f.write(b"".join(chunks))
+    return {"file": "weights.bin", "total_bytes": offset, "tensors": tensors}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--scale", default=os.environ.get("SLIM_SCALE", "full"),
+                    choices=["tiny", "small", "full"])
+    ap.add_argument("--batches", default=os.environ.get("SLIM_BATCHES", ""),
+                    help="comma list, default 1,4,16")
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+
+    batches = (
+        tuple(int(b) for b in args.batches.split(",") if b)
+        if args.batches
+        else DEFAULT_BATCHES
+    )
+    cfg = M.make_config(args.scale)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    t0 = time.time()
+    params = M.init_params(cfg, seed=args.seed)
+    weights = write_weights(params, cfg, args.out_dir)
+    print(f"weights.bin: {weights['total_bytes']} bytes "
+          f"({len(weights['tensors'])} tensors)")
+
+    artifacts = []
+    for seg in range(M.NUM_SEGMENTS):
+        for width in cfg["widths"]:
+            for batch in batches:
+                entry = export_segment(params, seg, width, batch, cfg, args.out_dir)
+                artifacts.append(entry)
+                print(f"  lowered {entry['file']} "
+                      f"({time.time() - t0:.1f}s elapsed)")
+
+    probe = export_probe(args.out_dir)
+    goldens = export_goldens(params, cfg, args.out_dir,
+                             batches=tuple(b for b in (1, 4) if b in batches))
+
+    manifest = {
+        "version": 1,
+        "seed": args.seed,
+        "model": cfg,
+        "batches": list(batches),
+        "segments": M.NUM_SEGMENTS,
+        "weights": weights,
+        "probe": probe,
+        "goldens": goldens,
+        "artifacts": artifacts,
+        "segment_weight_bytes": [
+            M.segment_weight_bytes(s, cfg) for s in range(M.NUM_SEGMENTS)
+        ],
+        "segment_activation_bytes": {
+            str(b): [
+                M.segment_activation_bytes(s, b, cfg)
+                for s in range(M.NUM_SEGMENTS)
+            ]
+            for b in batches
+        },
+        "flops": {
+            f"{s}|{w}|{wp}|{b}": M.segment_flops(s, w, wp, b, cfg)
+            for s in range(M.NUM_SEGMENTS)
+            for w in cfg["widths"]
+            for wp in ([1.0] if s == 0 else cfg["widths"])
+            for b in batches
+        },
+    }
+    # manifest.json is written last: it is the Makefile's staleness stamp.
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json: {len(artifacts)} artifacts in "
+          f"{time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Pallas kernels (L1) for the Slim Scheduler SlimResNet backbone."""
+
+from .groupnorm import masked_groupnorm
+from .slim_conv2d import slim_conv2d
+from .slim_matmul import slim_matmul
+
+__all__ = ["masked_groupnorm", "slim_conv2d", "slim_matmul"]

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: masked GroupNorm (+ optional fused ReLU).
+
+The paper uses GroupNorm instead of BatchNorm to avoid cross-width
+statistics drift. With full-size interface tensors (zeros above the active
+slice) a naive GroupNorm would normalize the zero padding to
+``beta`` — leaking nonzeros into channels that must stay exactly zero for
+the next segment's input-slimming identity to hold. This kernel therefore
+normalizes only the active groups and writes exact zeros elsewhere.
+
+Active-channel bookkeeping: ``C`` base channels are split into 8 groups of
+``group_size = C // 8``; width ``w`` activates ``groups_act = 8 * w``
+whole groups (the width set {0.25,0.5,0.75,1.0} always lands on a whole
+group boundary).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_gn_kernel(
+    x_ref, g_ref, b_ref, o_ref, *, groups_act: int, group_size: int,
+    eps: float, relu: bool,
+):
+    x = x_ref[0]  # (H, W, C)
+    h, w_dim, c = x.shape
+    c_act = groups_act * group_size
+    xa = x[..., :c_act].reshape(h * w_dim, groups_act, group_size)
+    mean = xa.mean(axis=(0, 2), keepdims=True)
+    var = ((xa - mean) ** 2).mean(axis=(0, 2), keepdims=True)
+    xn = (xa - mean) * jax.lax.rsqrt(var + eps)
+    out = xn.reshape(h, w_dim, c_act) * g_ref[:c_act] + b_ref[:c_act]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[0] = jnp.pad(out, ((0, 0), (0, 0), (0, c - c_act)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("groups_act", "group_size", "eps", "relu")
+)
+def masked_groupnorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    groups_act: int,
+    group_size: int,
+    eps: float = 1e-5,
+    relu: bool = False,
+) -> jax.Array:
+    """Masked GroupNorm over NHWC x; channels >= groups_act*group_size are
+    exact zeros in the output."""
+    n, h, w_dim, c = x.shape
+    kernel = functools.partial(
+        _masked_gn_kernel,
+        groups_act=groups_act,
+        group_size=group_size,
+        eps=eps,
+        relu=relu,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w_dim, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w_dim, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w_dim, c), jnp.float32),
+        interpret=True,
+    )(x, gamma, beta)

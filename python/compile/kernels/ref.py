@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an exact functional twin here; pytest
+(``python/tests/test_kernels.py``) sweeps shapes/widths with hypothesis and
+asserts allclose between the Pallas (interpret=True) kernel and these
+references. The references are written with ``jax.lax`` convolution
+primitives so they are independent of the kernels' im2col formulation.
+
+Slimming convention (shared with the rust side, see DESIGN.md §2):
+interface tensors are *full* channel count (NHWC); only the first
+``c_act = ceil(width * C)`` channels are live, the rest are exact zeros.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Plain NHWC conv with SAME padding for odd kernels, VALID for 1x1.
+
+    x: (N, H, W, Cin); w: (KH, KW, Cin, Cout). Returns (N, Ho, Wo, Cout).
+    """
+    kh = w.shape[0]
+    pad = (kh - 1) // 2
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def slim_conv2d_ref(
+    x: jax.Array, w: jax.Array, stride: int, c_act: int
+) -> jax.Array:
+    """Slimmed conv: compute only the first ``c_act`` output channels, fill
+    the remaining output channels with exact zeros."""
+    y = conv2d_ref(x, w[..., :c_act], stride)
+    c_out = w.shape[-1]
+    return jnp.pad(y, ((0, 0), (0, 0), (0, 0), (0, c_out - c_act)))
+
+
+def groupnorm_ref(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    groups_act: int,
+    group_size: int,
+    eps: float = 1e-5,
+    relu: bool = False,
+) -> jax.Array:
+    """Masked GroupNorm over the active channel slice only.
+
+    Normalizes per-sample, per-group over the first
+    ``c_act = groups_act * group_size`` channels; channels >= c_act are
+    exact zeros in the output (so ``beta`` never leaks into the padding).
+    """
+    n, h, w_, c = x.shape
+    c_act = groups_act * group_size
+    xa = x[..., :c_act].reshape(n, h * w_, groups_act, group_size)
+    mean = xa.mean(axis=(1, 3), keepdims=True)
+    var = ((xa - mean) ** 2).mean(axis=(1, 3), keepdims=True)
+    xn = (xa - mean) / jnp.sqrt(var + eps)
+    xn = xn.reshape(n, h, w_, c_act) * gamma[:c_act] + beta[:c_act]
+    if relu:
+        xn = jnp.maximum(xn, 0.0)
+    return jnp.pad(xn, ((0, 0), (0, 0), (0, 0), (0, c - c_act)))
+
+
+def slim_matmul_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, f_act: int
+) -> jax.Array:
+    """Slimmed dense head: logits = x[:, :f_act] @ w[:f_act] + b."""
+    return x[:, :f_act] @ w[:f_act, :] + b
+
+
+def avgpool_ref(x: jax.Array) -> jax.Array:
+    """Global average pool NHWC -> NC."""
+    return x.mean(axis=(1, 2))

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: width-slimmed NHWC 2-D convolution.
+
+The paper's compute hot-spot is the slimmable conv stack of SlimResNet;
+slimming means only the first ``c_act = ceil(width * C_out)`` output
+channels are computed, the rest of the (full-size) interface tensor is
+zero-filled. Input-channel slimming comes for free: the previous segment's
+inactive channels are exact zeros, so contracting over the full C_in is
+mathematically identical to slicing at ``w_prev`` (DESIGN.md §2).
+
+Formulation — im2col as KH*KW accumulated matmuls. On a real TPU each
+``(Ho*Wo, C_in) @ (C_in, c_act)`` product maps straight onto the 128x128
+MXU systolic array; the BlockSpec grid walks the batch dimension so one
+image's activation tile lives in VMEM while HBM streams the next
+(DESIGN.md §Hardware-Adaptation / §Perf for the VMEM budget table).
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+compiles and runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _slim_conv2d_kernel(x_ref, w_ref, o_ref, *, stride: int, c_act: int):
+    """One grid step = one batch element.
+
+    x_ref: (1, H, W, Cin) VMEM block; w_ref: (KH, KW, Cin, Cout) resident;
+    o_ref: (1, Ho, Wo, Cout) output block.
+    """
+    x = x_ref[0]  # (H, W, Cin)
+    w = w_ref[...]
+    kh_total, kw_total, c_in, c_out = w.shape
+    h, w_dim, _ = x.shape
+    pad = (kh_total - 1) // 2
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh_total) // stride + 1
+    wo = (w_dim + 2 * pad - kw_total) // stride + 1
+
+    # im2col: accumulate KH*KW shifted matmuls; each one is MXU-shaped
+    # (rows = Ho*Wo output pixels, contraction = Cin, cols = c_act).
+    acc = jnp.zeros((ho * wo, c_act), jnp.float32)
+    for kh in range(kh_total):
+        for kw in range(kw_total):
+            patch = jax.lax.slice(
+                xp,
+                (kh, kw, 0),
+                (kh + (ho - 1) * stride + 1, kw + (wo - 1) * stride + 1, c_in),
+                (stride, stride, 1),
+            )
+            mat = patch.reshape(ho * wo, c_in)
+            acc = acc + mat @ w[kh, kw, :, :c_act]
+
+    out = acc.reshape(ho, wo, c_act)
+    # Zero-fill the slimmed-away channels so the interface stays full-size.
+    out = jnp.pad(out, ((0, 0), (0, 0), (0, c_out - c_act)))
+    o_ref[0] = out
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "c_act"))
+def slim_conv2d(x: jax.Array, w: jax.Array, stride: int, c_act: int) -> jax.Array:
+    """Slimmed conv. x: (N,H,W,Cin) f32, w: (KH,KW,Cin,Cout) f32.
+
+    Returns (N, Ho, Wo, Cout) with channels >= c_act exactly zero.
+    """
+    n, h, w_dim, c_in = x.shape
+    kh, kw, _, c_out = w.shape
+    pad = (kh - 1) // 2
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w_dim + 2 * pad - kw) // stride + 1
+    kernel = functools.partial(_slim_conv2d_kernel, stride=stride, c_act=c_act)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w_dim, c_in), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c_in, c_out), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, c_out), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c_out), jnp.float32),
+        interpret=True,
+    )(x, w)

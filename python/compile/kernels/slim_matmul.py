@@ -1,0 +1,38 @@
+"""L1 Pallas kernel: width-slimmed dense head (classifier).
+
+``logits = x[:, :f_act] @ W[:f_act, :] + b`` — the contraction is sliced to
+the active feature count so the slimmed FLOPs are actually saved; the
+output (class logits) is always full width. Single-program grid: the whole
+(B <= 32, F <= 256, K = 100) problem fits one VMEM tile; on TPU it is one
+MXU pass.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _slim_matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, f_act: int):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    o_ref[...] = x[:, :f_act] @ w[:f_act, :] + b
+
+
+@functools.partial(jax.jit, static_argnames=("f_act",))
+def slim_matmul(
+    x: jax.Array, w: jax.Array, b: jax.Array, f_act: int
+) -> jax.Array:
+    """Slimmed dense: x (N,F), w (F,K), b (K) -> (N,K)."""
+    n, f = x.shape
+    _, k = w.shape
+    kernel = functools.partial(_slim_matmul_kernel, f_act=f_act)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,268 @@
+"""L2: segmented, universally-slimmable SlimResNet (JAX, calls L1 kernels).
+
+The backbone mirrors the paper's setup: four sequential segments, each
+supporting width ratios w in {0.25, 0.50, 0.75, 1.00}, GroupNorm instead of
+BatchNorm. Segment s (CIFAR 32x32x3 input):
+
+  seg0: stem conv3x3 (3 -> C0, stride 1) + GN/ReLU + BasicBlock(C0)   @32x32
+  seg1: down conv3x3 (C0 -> C1, stride 2) + GN/ReLU + BasicBlock(C1)  @16x16
+  seg2: down conv3x3 (C1 -> C2, stride 2) + GN/ReLU + BasicBlock(C2)  @8x8
+  seg3: down conv3x3 (C2 -> C3, stride 2) + GN/ReLU + BasicBlock(C3)  @4x4
+        + global avg pool + slimmed FC -> num_classes logits
+
+Slimming: within segment s at width w, every conv writes only the first
+``c_act = w * C_s`` output channels (whole GroupNorm groups); interface
+tensors stay full-size with exact zeros above c_act, so a segment can
+consume any previous width without re-export (DESIGN.md §2).
+
+Each public entry point takes ``impl`` = "pallas" (L1 kernels, the AOT
+path) or "ref" (pure-jnp oracles) so pytest can diff them end-to-end.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import masked_groupnorm, slim_conv2d, slim_matmul
+from .kernels import ref as R
+
+WIDTHS = (0.25, 0.50, 0.75, 1.00)
+NUM_SEGMENTS = 4
+
+
+def make_config(scale: str = "full") -> dict:
+    """Model configuration. ``full`` is the paper-sized CIFAR backbone;
+    ``tiny`` keeps tests and CI fast."""
+    if scale == "full":
+        base = [32, 64, 128, 256]
+    elif scale == "small":
+        base = [16, 32, 64, 128]
+    elif scale == "tiny":
+        base = [8, 8, 16, 16]
+    else:
+        raise ValueError(f"unknown scale {scale!r}")
+    return {
+        "scale": scale,
+        "img": 32,
+        "in_ch": 3,
+        "num_classes": 100,
+        "base_channels": base,
+        "widths": list(WIDTHS),
+        "groups": 8,
+    }
+
+
+def c_active(c: int, width: float) -> int:
+    """Active channel count for width ratio w (always whole GN groups)."""
+    return int(math.ceil(c * width))
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: dict) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list for every parameter tensor in the model.
+
+    The order is the contract with ``aot.py`` (weights.bin layout) and the
+    rust runtime (artifact parameter order)."""
+    chans = cfg["base_channels"]
+    in_ch = cfg["in_ch"]
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    for s in range(NUM_SEGMENTS):
+        c_in = in_ch if s == 0 else chans[s - 1]
+        c = chans[s]
+        head = "stem" if s == 0 else "down"
+        specs.append((f"s{s}.{head}.w", (3, 3, c_in, c)))
+        specs.append((f"s{s}.{head}.gn.g", (c,)))
+        specs.append((f"s{s}.{head}.gn.b", (c,)))
+        specs.append((f"s{s}.blk.c1.w", (3, 3, c, c)))
+        specs.append((f"s{s}.blk.gn1.g", (c,)))
+        specs.append((f"s{s}.blk.gn1.b", (c,)))
+        specs.append((f"s{s}.blk.c2.w", (3, 3, c, c)))
+        specs.append((f"s{s}.blk.gn2.g", (c,)))
+        specs.append((f"s{s}.blk.gn2.b", (c,)))
+    specs.append(("s3.fc.w", (chans[3], cfg["num_classes"])))
+    specs.append(("s3.fc.b", (cfg["num_classes"],)))
+    return specs
+
+
+def segment_param_names(seg: int, cfg: dict) -> List[str]:
+    """Names (ordered) of the parameters segment ``seg`` consumes."""
+    names = [n for n, _ in param_specs(cfg) if n.startswith(f"s{seg}.")]
+    return names
+
+
+def init_params(cfg: dict, seed: int = 42) -> Dict[str, jax.Array]:
+    """He-normal conv weights, unit gamma / zero beta, zero fc bias."""
+    key = jax.random.PRNGKey(seed)
+    params: Dict[str, jax.Array] = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".w") and len(shape) == 4:  # conv
+            fan_in = shape[0] * shape[1] * shape[2]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * math.sqrt(
+                2.0 / fan_in
+            )
+        elif name.endswith(".w"):  # fc
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * math.sqrt(
+                1.0 / fan_in
+            )
+        elif name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:  # .b (gn beta / fc bias)
+            params[name] = jnp.zeros(shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _conv(x, w, stride, c_act, impl):
+    if impl == "pallas":
+        return slim_conv2d(x, w, stride, c_act)
+    return R.slim_conv2d_ref(x, w, stride, c_act)
+
+
+def _gn(x, g, b, groups_act, group_size, relu, impl):
+    if impl == "pallas":
+        return masked_groupnorm(x, g, b, groups_act, group_size, relu=relu)
+    return R.groupnorm_ref(x, g, b, groups_act, group_size, relu=relu)
+
+
+def _fc(x, w, b, f_act, impl):
+    if impl == "pallas":
+        return slim_matmul(x, w, b, f_act)
+    return R.slim_matmul_ref(x, w, b, f_act)
+
+
+def segment_apply(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    seg: int,
+    width: float,
+    cfg: dict,
+    impl: str = "pallas",
+) -> jax.Array:
+    """Run one segment at one width.
+
+    x: full-size NHWC activation from the previous segment (zeros above the
+    previous segment's active slice — any w_prev works unchanged).
+    Returns the full-size activation for the next segment, or (N, classes)
+    logits for seg 3.
+    """
+    if not 0 <= seg < NUM_SEGMENTS:
+        raise ValueError(f"segment {seg} out of range")
+    if width not in cfg["widths"]:
+        raise ValueError(f"width {width} not in {cfg['widths']}")
+    c = cfg["base_channels"][seg]
+    groups = cfg["groups"]
+    group_size = c // groups
+    c_act = c_active(c, width)
+    groups_act = c_act // group_size
+    p = lambda k: params[f"s{seg}.{k}"]  # noqa: E731
+    head = "stem" if seg == 0 else "down"
+    stride = 1 if seg == 0 else 2
+
+    h = _conv(x, p(f"{head}.w"), stride, c_act, impl)
+    h = _gn(h, p(f"{head}.gn.g"), p(f"{head}.gn.b"), groups_act, group_size, True, impl)
+
+    # BasicBlock with identity residual (same width throughout the segment).
+    r = h
+    h = _conv(h, p("blk.c1.w"), 1, c_act, impl)
+    h = _gn(h, p("blk.gn1.g"), p("blk.gn1.b"), groups_act, group_size, True, impl)
+    h = _conv(h, p("blk.c2.w"), 1, c_act, impl)
+    h = _gn(h, p("blk.gn2.g"), p("blk.gn2.b"), groups_act, group_size, False, impl)
+    h = jnp.maximum(h + r, 0.0)  # zeros + zeros stay zero above c_act
+
+    if seg == 3:
+        pooled = h.mean(axis=(1, 2))  # (N, C3) — zeros above c_act
+        return _fc(pooled, p("fc.w"), p("fc.b"), c_act, impl)
+    return h
+
+
+def full_forward(
+    params: Dict[str, jax.Array],
+    x: jax.Array,
+    widths: Tuple[float, float, float, float],
+    cfg: dict,
+    impl: str = "pallas",
+) -> jax.Array:
+    """Chain all four segments at a per-segment width tuple -> logits."""
+    h = x
+    for s in range(NUM_SEGMENTS):
+        h = segment_apply(params, h, s, widths[s], cfg, impl)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Shapes and cost model (exported into the artifact manifest)
+# ---------------------------------------------------------------------------
+
+def segment_io_shapes(seg: int, batch: int, cfg: dict):
+    """(input_shape, output_shape) of a segment at batch size b (full-size
+    interfaces — width does not change shapes)."""
+    img = cfg["img"]
+    chans = cfg["base_channels"]
+    res = [img, img // 2, img // 4, img // 8]
+    if seg == 0:
+        in_shape = (batch, img, img, cfg["in_ch"])
+        out_shape = (batch, res[0], res[0], chans[0])
+    else:
+        in_shape = (batch, res[seg - 1], res[seg - 1], chans[seg - 1])
+        if seg == 3:
+            out_shape = (batch, cfg["num_classes"])
+        else:
+            out_shape = (batch, res[seg], res[seg], chans[seg])
+    return in_shape, out_shape
+
+
+def segment_flops(
+    seg: int, width: float, w_prev: float, batch: int, cfg: dict
+) -> int:
+    """Active FLOPs for one segment at (width, w_prev, batch).
+
+    This is the *semantic* cost of the slimmed computation — the number the
+    device simulator charges — accounting for input-side slimming that the
+    full-interface HLO does not physically skip (DESIGN.md §2).
+    """
+    chans = cfg["base_channels"]
+    img = cfg["img"]
+    res_in = img if seg == 0 else img // (2 ** (seg - 1))
+    res_out = img if seg == 0 else img // (2 ** seg)
+    c = chans[seg]
+    c_act = c_active(c, width)
+    c_in = cfg["in_ch"] if seg == 0 else c_active(chans[seg - 1], w_prev)
+
+    def conv_flops(ho, wo, k, ci, co):
+        return 2 * batch * ho * wo * k * k * ci * co
+
+    total = conv_flops(res_out, res_out, 3, c_in, c_act)      # stem/down
+    total += 2 * conv_flops(res_out, res_out, 3, c_act, c_act)  # block convs
+    # GroupNorm + ReLU + residual: ~10 flops/element over 4 activations.
+    total += 10 * 4 * batch * res_out * res_out * c_act
+    if seg == 3:
+        total += 2 * batch * c_act * cfg["num_classes"]
+    return int(total)
+
+
+def segment_weight_bytes(seg: int, cfg: dict) -> int:
+    """f32 bytes of the full (unslimmed) weight tensors of one segment —
+    what an instance pins in VRAM."""
+    total = 0
+    for name, shape in param_specs(cfg):
+        if name.startswith(f"s{seg}."):
+            total += 4 * math.prod(shape)
+    return total
+
+
+def segment_activation_bytes(seg: int, batch: int, cfg: dict) -> int:
+    """Peak f32 activation working set (input + output + one temp)."""
+    in_shape, out_shape = segment_io_shapes(seg, batch, cfg)
+    return 4 * (math.prod(in_shape) + 2 * math.prod(out_shape))

@@ -1,0 +1,178 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, widths, strides and kernel sizes; every test
+asserts allclose against ``kernels.ref`` and checks the zero-padding
+invariant that the whole slimming scheme rests on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_groupnorm, slim_conv2d, slim_matmul
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+WIDTHS = [0.25, 0.5, 0.75, 1.0]
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# slim_conv2d
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([4, 5, 8]),
+    c_in=st.sampled_from([3, 8, 16]),
+    c_out=st.sampled_from([8, 16]),
+    k=st.sampled_from([1, 3]),
+    stride=st.sampled_from([1, 2]),
+    width=st.sampled_from(WIDTHS),
+    seed=st.integers(0, 2**16),
+)
+def test_slim_conv2d_matches_ref(n, hw, c_in, c_out, k, stride, width, seed):
+    c_act = int(np.ceil(c_out * width))
+    x = rand(seed, (n, hw, hw, c_in))
+    w = rand(seed + 1, (k, k, c_in, c_out)) * 0.2
+    got = slim_conv2d(x, w, stride, c_act)
+    want = R.slim_conv2d_ref(x, w, stride, c_act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(width=st.sampled_from(WIDTHS), seed=st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_slim_conv2d_zero_padding_invariant(width, seed):
+    c_out = 16
+    c_act = int(np.ceil(c_out * width))
+    x = rand(seed, (2, 6, 6, 8))
+    w = rand(seed + 1, (3, 3, 8, c_out))
+    y = np.asarray(slim_conv2d(x, w, 1, c_act))
+    assert np.all(y[..., c_act:] == 0.0)
+    if c_act > 0:
+        assert np.any(y[..., :c_act] != 0.0)
+
+
+def test_slim_conv2d_input_slimming_identity():
+    """Zeroed input channels above c_prev == physically sliced weights:
+    the invariant that lets one artifact serve every w_prev."""
+    x = rand(0, (2, 8, 8, 16))
+    c_prev = 8
+    x_zeroed = x.at[..., c_prev:].set(0.0)
+    w = rand(1, (3, 3, 16, 16)) * 0.2
+    full = slim_conv2d(x_zeroed, w, 1, 16)
+    sliced = R.conv2d_ref(x_zeroed[..., :c_prev], w[:, :, :c_prev, :], 1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(sliced),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_slim_conv2d_stride2_shape():
+    x = rand(0, (1, 8, 8, 4))
+    w = rand(1, (3, 3, 4, 8))
+    assert slim_conv2d(x, w, 2, 8).shape == (1, 4, 4, 8)
+
+
+def test_slim_conv2d_1x1_shape():
+    x = rand(0, (1, 8, 8, 4))
+    w = rand(1, (1, 1, 4, 8))
+    assert slim_conv2d(x, w, 1, 8).shape == (1, 8, 8, 8)
+
+
+# ---------------------------------------------------------------------------
+# masked_groupnorm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.sampled_from([2, 4, 6]),
+    group_size=st.sampled_from([2, 4]),
+    width=st.sampled_from(WIDTHS),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_groupnorm_matches_ref(n, hw, group_size, width, relu, seed):
+    groups = 8
+    c = groups * group_size
+    groups_act = int(np.ceil(groups * width))
+    x = rand(seed, (n, hw, hw, c))
+    gamma = rand(seed + 1, (c,)) * 0.5 + 1.0
+    beta = rand(seed + 2, (c,)) * 0.5
+    got = masked_groupnorm(x, gamma, beta, groups_act, group_size, relu=relu)
+    want = R.groupnorm_ref(x, gamma, beta, groups_act, group_size, relu=relu)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(width=st.sampled_from(WIDTHS))
+@settings(max_examples=4, deadline=None)
+def test_groupnorm_beta_does_not_leak_into_padding(width):
+    """With nonzero beta, inactive channels must still be EXACT zeros."""
+    groups, group_size = 8, 4
+    c = groups * group_size
+    groups_act = int(np.ceil(groups * width))
+    c_act = groups_act * group_size
+    x = rand(0, (2, 4, 4, c))
+    beta = jnp.full((c,), 3.14, jnp.float32)
+    y = np.asarray(masked_groupnorm(x, jnp.ones(c), beta, groups_act, group_size))
+    assert np.all(y[..., c_act:] == 0.0)
+
+
+def test_groupnorm_normalizes():
+    """Full-width GN output has ~zero mean / unit variance per group."""
+    x = rand(0, (1, 8, 8, 16)) * 5.0 + 3.0
+    y = np.asarray(
+        masked_groupnorm(x, jnp.ones(16), jnp.zeros(16), 8, 2)
+    ).reshape(64, 8, 2)
+    mean = y.mean(axis=(0, 2))
+    var = y.var(axis=(0, 2))
+    np.testing.assert_allclose(mean, 0.0, atol=1e-4)
+    np.testing.assert_allclose(var, 1.0, atol=1e-2)
+
+
+def test_groupnorm_relu_fusion():
+    x = rand(3, (1, 4, 4, 8))
+    y = np.asarray(masked_groupnorm(x, jnp.ones(8), jnp.zeros(8), 8, 1, relu=True))
+    assert np.all(y >= 0.0)
+
+
+# ---------------------------------------------------------------------------
+# slim_matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 8),
+    f=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([10, 100]),
+    width=st.sampled_from(WIDTHS),
+    seed=st.integers(0, 2**16),
+)
+def test_slim_matmul_matches_ref(n, f, k, width, seed):
+    f_act = int(np.ceil(f * width))
+    x = rand(seed, (n, f))
+    w = rand(seed + 1, (f, k)) * 0.1
+    b = rand(seed + 2, (k,))
+    got = slim_matmul(x, w, b, f_act)
+    want = R.slim_matmul_ref(x, w, b, f_act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_slim_matmul_ignores_padded_features():
+    """Features above f_act must not affect logits even if nonzero."""
+    x = rand(0, (4, 16))
+    w = rand(1, (16, 10))
+    b = jnp.zeros((10,), jnp.float32)
+    y1 = np.asarray(slim_matmul(x, w, b, 8))
+    x_garbage = x.at[:, 8:].set(999.0)
+    y2 = np.asarray(slim_matmul(x_garbage, w, b, 8))
+    np.testing.assert_allclose(y1, y2)

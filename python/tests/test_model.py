@@ -1,0 +1,165 @@
+"""L2 correctness: segmented SlimResNet — pallas impl vs ref impl,
+shape contracts, slimming invariants, and the cost model."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.make_config("tiny")
+PARAMS = M.init_params(CFG, seed=42)
+WIDTHS = list(M.WIDTHS)
+
+
+def rand(seed, shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+def seg_input(seg, batch, seed=0):
+    in_shape, _ = M.segment_io_shapes(seg, batch, CFG)
+    return rand(seed, in_shape)
+
+
+# ---------------------------------------------------------------------------
+# impl equivalence
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seg=st.integers(0, 3),
+    width=st.sampled_from(WIDTHS),
+    batch=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 1000),
+)
+def test_segment_pallas_matches_ref(seg, width, batch, seed):
+    x = seg_input(seg, batch, seed)
+    got = M.segment_apply(PARAMS, x, seg, width, CFG, impl="pallas")
+    want = M.segment_apply(PARAMS, x, seg, width, CFG, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    widths=st.tuples(*(st.sampled_from(WIDTHS) for _ in range(4))),
+    seed=st.integers(0, 100),
+)
+def test_full_forward_pallas_matches_ref(widths, seed):
+    x = rand(seed, (2, 32, 32, 3))
+    got = M.full_forward(PARAMS, x, widths, CFG, impl="pallas")
+    want = M.full_forward(PARAMS, x, widths, CFG, impl="ref")
+    assert got.shape == (2, CFG["num_classes"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# shape and slimming contracts
+# ---------------------------------------------------------------------------
+
+def test_segment_shapes_all():
+    for seg in range(4):
+        for batch in (1, 3):
+            x = seg_input(seg, batch)
+            _, out_shape = M.segment_io_shapes(seg, batch, CFG)
+            y = M.segment_apply(PARAMS, x, seg, 1.0, CFG, impl="ref")
+            assert tuple(y.shape) == tuple(out_shape), (seg, batch)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seg=st.integers(0, 2), width=st.sampled_from(WIDTHS))
+def test_segment_output_padding_is_zero(seg, width):
+    x = seg_input(seg, 2)
+    y = np.asarray(M.segment_apply(PARAMS, x, seg, width, CFG, impl="pallas"))
+    c = CFG["base_channels"][seg]
+    c_act = M.c_active(c, width)
+    assert np.all(y[..., c_act:] == 0.0)
+    assert np.any(y[..., :c_act] != 0.0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seg=st.integers(1, 3),
+    w_prev=st.sampled_from(WIDTHS),
+    width=st.sampled_from(WIDTHS),
+)
+def test_wprev_independence(seg, w_prev, width):
+    """A segment artifact must serve ANY previous width: feeding the
+    full-size input produced at w_prev equals feeding the explicit slice."""
+    x_prev = seg_input(seg - 1, 2, seed=7)
+    h = M.segment_apply(PARAMS, x_prev, seg - 1, w_prev, CFG, impl="ref")
+    y = M.segment_apply(PARAMS, h, seg, width, CFG, impl="ref")
+    # zeroing the (already zero) padding again must change nothing
+    c_prev_act = M.c_active(CFG["base_channels"][seg - 1], w_prev)
+    h2 = h.at[..., c_prev_act:].set(0.0)
+    y2 = M.segment_apply(PARAMS, h2, seg, width, CFG, impl="ref")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2))
+
+
+def test_width_changes_output():
+    x = seg_input(0, 1)
+    y25 = np.asarray(M.segment_apply(PARAMS, x, 0, 0.25, CFG, impl="ref"))
+    y100 = np.asarray(M.segment_apply(PARAMS, x, 0, 1.0, CFG, impl="ref"))
+    assert not np.allclose(y25, y100)
+
+
+def test_deterministic_params():
+    p2 = M.init_params(CFG, seed=42)
+    for k in PARAMS:
+        np.testing.assert_array_equal(np.asarray(PARAMS[k]), np.asarray(p2[k]))
+
+
+def test_invalid_segment_and_width_raise():
+    x = seg_input(0, 1)
+    with pytest.raises(ValueError):
+        M.segment_apply(PARAMS, x, 4, 1.0, CFG)
+    with pytest.raises(ValueError):
+        M.segment_apply(PARAMS, x, 0, 0.33, CFG)
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_flops_monotone_in_width():
+    for seg in range(4):
+        f = [M.segment_flops(seg, w, 1.0, 8, CFG) for w in WIDTHS]
+        assert f == sorted(f) and f[0] < f[-1]
+
+
+def test_flops_monotone_in_wprev():
+    for seg in range(1, 4):
+        f = [M.segment_flops(seg, 0.5, wp, 8, CFG) for wp in WIDTHS]
+        assert f == sorted(f) and f[0] < f[-1]
+
+
+def test_flops_linear_in_batch():
+    a = M.segment_flops(1, 0.5, 0.5, 4, CFG)
+    b = M.segment_flops(1, 0.5, 0.5, 8, CFG)
+    assert b == 2 * a
+
+
+def test_weight_bytes_match_param_specs():
+    total = sum(
+        4 * math.prod(shape) for _, shape in M.param_specs(CFG)
+    )
+    segs = sum(M.segment_weight_bytes(s, CFG) for s in range(4))
+    fc = 4 * (CFG["base_channels"][3] * CFG["num_classes"] + CFG["num_classes"])
+    assert segs == total  # fc belongs to s3
+    assert M.segment_weight_bytes(3, CFG) > fc
+
+
+def test_param_specs_cover_all_segments():
+    names = [n for n, _ in M.param_specs(CFG)]
+    assert len(names) == len(set(names))
+    for s in range(4):
+        seg_names = M.segment_param_names(s, CFG)
+        assert seg_names and all(n.startswith(f"s{s}.") for n in seg_names)
+    assert "s3.fc.w" in M.segment_param_names(3, CFG)

@@ -1,0 +1,74 @@
+"""Slimmable-training contracts: the sandwich rule actually learns, at
+every width, and the loss machinery behaves (masked GN keeps widths from
+poisoning each other)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.make_config("tiny")
+
+
+def test_synthetic_dataset_shapes_and_labels():
+    x, y = T.make_synthetic_dataset(CFG, n_classes=5, n_per_class=8)
+    assert x.shape == (40, 32, 32, 3)
+    assert y.shape == (40,)
+    assert set(np.asarray(y).tolist()) == set(range(5))
+
+
+def test_train_and_heldout_splits_share_prototypes():
+    x1, _ = T.make_synthetic_dataset(CFG, 3, 4, noise_seed=0)
+    x2, _ = T.make_synthetic_dataset(CFG, 3, 4, noise_seed=1)
+    # different noise -> different samples...
+    assert not np.allclose(np.asarray(x1), np.asarray(x2))
+    # ...but same prototype scale/structure (correlated class means)
+    m1 = np.asarray(x1).mean()
+    m2 = np.asarray(x2).mean()
+    assert abs(m1 - m2) < 0.1
+
+
+def test_cross_entropy_basics():
+    logits = jnp.array([[10.0, 0.0, 0.0], [0.0, 10.0, 0.0]])
+    labels = jnp.array([0, 1])
+    assert float(T.cross_entropy(logits, labels)) < 0.01
+    wrong = jnp.array([1, 0])
+    assert float(T.cross_entropy(logits, wrong)) > 5.0
+
+
+def test_cosine_lr_schedule():
+    assert T.cosine_lr(0, 100, 1.0, warmup=10) == pytest.approx(0.1)
+    assert T.cosine_lr(9, 100, 1.0, warmup=10) == pytest.approx(1.0)
+    mid = T.cosine_lr(55, 100, 1.0, warmup=10)
+    assert 0.4 < mid < 0.6
+    assert T.cosine_lr(99, 100, 1.0, warmup=10) < 0.01
+
+
+def test_sandwich_training_reduces_loss_at_all_widths():
+    hist = T.train(CFG, steps=40, batch=16, lr=0.05, n_classes=4,
+                   seed=0, log_every=200)
+    losses = hist["loss"]
+    assert losses[-1] < losses[0] * 0.8, f"loss did not drop: {losses}"
+    params = hist["params"]
+    # loss at every uniform width must beat the untrained network
+    fresh = M.init_params(CFG, seed=42)
+    x, y = T.make_synthetic_dataset(CFG, 4, 8, noise_seed=99)
+    for w in CFG["widths"]:
+        trained = float(T.loss_at_width(params, x, y, (w,) * 4, CFG))
+        untrained = float(T.loss_at_width(fresh, x, y, (w,) * 4, CFG))
+        assert trained < untrained, f"w={w}: {trained} !< {untrained}"
+
+
+def test_trained_params_keep_slimming_invariant():
+    hist = T.train(CFG, steps=10, batch=8, lr=0.05, n_classes=3,
+                   seed=1, log_every=200)
+    params = hist["params"]
+    x, _ = T.make_synthetic_dataset(CFG, 3, 2, noise_seed=5)
+    h = M.segment_apply(params, x, 0, 0.5, CFG, impl="ref")
+    c_act = M.c_active(CFG["base_channels"][0], 0.5)
+    assert np.all(np.asarray(h)[..., c_act:] == 0.0)

@@ -1,0 +1,158 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   A. ε-mixed server head ON vs OFF (exploration collapse risk)
+//!   B. scale-up aggressiveness: N_new ∈ {1, 4}
+//!   C. utilization block threshold: U_blk ∈ {50 %, 90 %, 101 %}
+//!   D. reward-weight sweep α ∈ {0.02, 1, 3.5, 8} — traces the
+//!      latency/accuracy trade-off surface between Tables IV and V.
+
+use slim_scheduler::benchx::{Bench, Table};
+use slim_scheduler::config::RewardCfg;
+use slim_scheduler::coordinator::Engine;
+use slim_scheduler::coordinator::router::RandomRouter;
+use slim_scheduler::experiments;
+use slim_scheduler::ppo::PpoRouter;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").is_ok();
+    let requests = if quick { 1500 } else { 4000 };
+    let episodes = if quick { 4 } else { 6 };
+    let mut bench = Bench::from_env();
+
+    // ---- A: epsilon mixing on/off ----
+    let mut table_a = Table::new(
+        "Ablation A — ε-mixed server head (balanced reward)",
+        &["eps", "accuracy", "lat_mean_s", "srv0_blocks", "srv1", "srv2"],
+    );
+    for &(label, eps_max, eps_min) in
+        &[("on", 0.30f64, 0.02f64), ("off", 0.0, 0.0)]
+    {
+        let mut cfg = experiments::paper_cluster_cfg(requests, 42);
+        cfg.ppo.eps_max = eps_max;
+        cfg.ppo.eps_min = eps_min;
+        let mut out = None;
+        bench.once(&format!("ablation_a/eps_{label}"), || {
+            out = Some(experiments::run_ppo_experiment(
+                &cfg,
+                RewardCfg::balanced(),
+                episodes,
+            ));
+        });
+        let (o, _r) = out.unwrap();
+        let blocks: Vec<f64> = o
+            .greedy_stats
+            .iter()
+            .map(|s| s.dispatches as f64)
+            .collect();
+        table_a.rowf(
+            &[
+                eps_max,
+                o.report.accuracy_pct,
+                o.report.latency.mean(),
+                blocks[0],
+                blocks[1],
+                blocks[2],
+            ],
+            3,
+        );
+    }
+    table_a.print();
+
+    // ---- B: scale-up cap ----
+    let mut table_b = Table::new(
+        "Ablation B — scale-up cap N_new (random baseline)",
+        &["n_new", "lat_mean_s", "lat_p99_s", "loads", "requeues"],
+    );
+    for &n_new in &[1usize, 4] {
+        let mut cfg = experiments::paper_cluster_cfg(requests, 42);
+        cfg.scheduler.n_new = n_new;
+        let mut out = None;
+        bench.once(&format!("ablation_b/n_new_{n_new}"), || {
+            out = Some(experiments::run_random_baseline(&cfg));
+        });
+        let o = out.unwrap();
+        let loads: u64 = o.greedy_stats.iter().map(|s| s.loads).sum();
+        let requeues: u64 = o.greedy_stats.iter().map(|s| s.requeues).sum();
+        table_b.rowf(
+            &[
+                n_new as f64,
+                o.report.latency.mean(),
+                o.report.latency.percentile(99.0),
+                loads as f64,
+                requeues as f64,
+            ],
+            3,
+        );
+    }
+    table_b.print();
+
+    // ---- C: utilization block threshold ----
+    let mut table_c = Table::new(
+        "Ablation C — CANLOAD utilization threshold U_blk",
+        &["u_blk", "lat_mean_s", "util_blocked", "loads"],
+    );
+    for &u_blk in &[50.0f64, 90.0, 101.0] {
+        let mut cfg = experiments::paper_cluster_cfg(requests, 42);
+        cfg.scheduler.u_blk_pct = u_blk;
+        let mut out = None;
+        bench.once(&format!("ablation_c/u_blk_{u_blk}"), || {
+            out = Some(experiments::run_random_baseline(&cfg));
+        });
+        let o = out.unwrap();
+        let blocked: u64 = o.greedy_stats.iter().map(|s| s.blocked_by_util).sum();
+        let loads: u64 = o.greedy_stats.iter().map(|s| s.loads).sum();
+        table_c.rowf(
+            &[u_blk, o.report.latency.mean(), blocked as f64, loads as f64],
+            3,
+        );
+    }
+    table_c.print();
+
+    // ---- D: reward-weight trade-off surface ----
+    let mut table_d = Table::new(
+        "Ablation D — α sweep (accuracy weight): Table IV ⇄ Table V surface",
+        &["alpha", "accuracy", "lat_mean_s", "energy_J", "slim_frac"],
+    );
+    for &alpha in &[0.02f64, 1.0, 3.5, 8.0] {
+        let cfg = experiments::paper_cluster_cfg(requests, 42);
+        let mut reward = RewardCfg::balanced();
+        reward.alpha = alpha;
+        if alpha < 0.1 {
+            reward = RewardCfg::overfit();
+        }
+        let mut out = None;
+        bench.once(&format!("ablation_d/alpha_{alpha}"), || {
+            out = Some(experiments::run_ppo_experiment_online(&cfg, reward, episodes));
+        });
+        let (o, _r) = out.unwrap();
+        let total: u64 = o.width_histogram.iter().sum();
+        let slim_frac =
+            (o.width_histogram[0] + o.width_histogram[1]) as f64 / total.max(1) as f64;
+        table_d.rowf(
+            &[
+                alpha,
+                o.report.accuracy_pct,
+                o.report.latency.mean(),
+                o.report.energy.mean(),
+                slim_frac,
+            ],
+            3,
+        );
+    }
+    table_d.print();
+
+    // sanity: PPO decision cost is independent of ablation settings
+    let mut r = PpoRouter::new(
+        3,
+        vec![0.25, 0.5, 0.75, 1.0],
+        experiments::paper_cluster_cfg(10, 1).ppo,
+        3,
+    );
+    r.eval_mode();
+    let _ = Engine::new(
+        experiments::paper_cluster_cfg(50, 1),
+        RandomRouter::new(vec![0.25, 0.5, 0.75, 1.0], true, 8),
+    )
+    .run();
+}

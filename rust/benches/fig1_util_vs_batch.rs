@@ -1,0 +1,40 @@
+//! Fig 1 regenerator — GPU memory utilization vs batch size per width
+//! (RTX 2080 Ti). Prints the series the paper plots and checks its two
+//! shape properties: monotone growth in batch, earlier saturation (higher
+//! footprint) at wider ratios. Also times the device-model evaluation.
+
+use slim_scheduler::benchx::{Bench, Table};
+use slim_scheduler::experiments;
+
+fn main() {
+    let rows = experiments::fig1_rows();
+    let mut table = Table::new(
+        "Fig 1 — GPU memory utilization (%) vs batch size (RTX 2080 Ti)",
+        &["batch", "w=0.25", "w=0.50", "w=0.75", "w=1.00"],
+    );
+    for row in &rows {
+        table.rowf(row, 2);
+    }
+    table.print();
+
+    // shape checks (the paper's qualitative claims)
+    for col in 1..=4 {
+        let series: Vec<f64> = rows.iter().map(|r| r[col]).collect();
+        assert!(
+            series.windows(2).all(|w| w[1] >= w[0]),
+            "col {col} not monotone in batch: {series:?}"
+        );
+    }
+    for row in &rows {
+        assert!(
+            row[1] <= row[2] && row[2] <= row[3] && row[3] <= row[4],
+            "wider must use >= memory: {row:?}"
+        );
+    }
+    println!("shape checks OK: monotone in batch; wider saturates earlier\n");
+
+    let mut bench = Bench::from_env();
+    bench.bench("fig1/full_series", || {
+        std::hint::black_box(experiments::fig1_rows());
+    });
+}

@@ -1,0 +1,42 @@
+//! Fig 2 regenerator — energy vs GPU utilization per width (RTX 2080 Ti).
+//! Prints the series and checks the paper's shape: near-linear to the
+//! ~90–95 % knee, sharply super-linear beyond it.
+
+use slim_scheduler::benchx::{Bench, Table};
+use slim_scheduler::experiments::{self, FIG23_UTILS};
+
+fn main() {
+    let rows = experiments::fig2_rows();
+    let mut table = Table::new(
+        "Fig 2 — energy (J) vs GPU utilization (RTX 2080 Ti)",
+        &["util_pct", "w=0.25", "w=0.50", "w=0.75", "w=1.00"],
+    );
+    for row in &rows {
+        table.rowf(row, 3);
+    }
+    table.print();
+
+    // shape: monotone in util; post-knee slope >> pre-knee slope
+    for col in 1..=4 {
+        let e: Vec<f64> = rows.iter().map(|r| r[col]).collect();
+        assert!(e.windows(2).all(|w| w[1] >= w[0]), "col {col}: {e:?}");
+        // pre-knee slope between 30% and 70%
+        let pre = (e[3] - e[1]) / (FIG23_UTILS[3] - FIG23_UTILS[1]);
+        // post-knee slope between 93% and 99%
+        let post = (e[8] - e[6]) / (FIG23_UTILS[8] - FIG23_UTILS[6]);
+        assert!(
+            post > 5.0 * pre,
+            "col {col}: post-knee slope {post:.4} not >> pre {pre:.4}"
+        );
+    }
+    // wider widths burn more energy at every utilization
+    for row in &rows {
+        assert!(row[1] < row[4], "{row:?}");
+    }
+    println!("shape checks OK: near-linear pre-knee, super-linear post-knee\n");
+
+    let mut bench = Bench::from_env();
+    bench.bench("fig2/full_series", || {
+        std::hint::black_box(experiments::fig2_rows());
+    });
+}

@@ -1,0 +1,38 @@
+//! Fig 3 regenerator — batch latency vs GPU utilization per width
+//! (RTX 2080 Ti), same knee-shape checks as Fig 2 on the latency axis.
+
+use slim_scheduler::benchx::{Bench, Table};
+use slim_scheduler::experiments::{self, FIG23_UTILS};
+
+fn main() {
+    let rows = experiments::fig3_rows();
+    let mut table = Table::new(
+        "Fig 3 — batch latency (s) vs GPU utilization (RTX 2080 Ti)",
+        &["util_pct", "w=0.25", "w=0.50", "w=0.75", "w=1.00"],
+    );
+    for row in &rows {
+        table.rowf(row, 4);
+    }
+    table.print();
+
+    for col in 1..=4 {
+        let l: Vec<f64> = rows.iter().map(|r| r[col]).collect();
+        assert!(l.windows(2).all(|w| w[1] >= w[0]), "col {col}: {l:?}");
+        let pre = (l[3] - l[1]) / (FIG23_UTILS[3] - FIG23_UTILS[1]);
+        let post = (l[8] - l[6]) / (FIG23_UTILS[8] - FIG23_UTILS[6]);
+        assert!(
+            post > 5.0 * pre,
+            "col {col}: post-knee slope {post:.6} not >> pre {pre:.6}"
+        );
+    }
+    // slimmer is faster at every utilization
+    for row in &rows {
+        assert!(row[1] < row[4], "{row:?}");
+    }
+    println!("shape checks OK: latency knee at ~90-95% utilization\n");
+
+    let mut bench = Bench::from_env();
+    bench.bench("fig3/full_series", || {
+        std::hint::black_box(experiments::fig3_rows());
+    });
+}

@@ -1,0 +1,146 @@
+//! Micro-benchmarks of the L3 hot path — the quantities the §Perf pass
+//! optimizes. Covers: keyed-FIFO batch formation, greedy scheduling sweep,
+//! router decisions (random vs PPO inference), policy forward/backward,
+//! device-model step, telemetry snapshot/state-vector, and (when
+//! artifacts are present) the real PJRT segment execution.
+
+use slim_scheduler::benchx::Bench;
+use slim_scheduler::config::{Config, PpoCfg, SchedulerCfg};
+use slim_scheduler::coordinator::queue::{KeyedFifo, Queued};
+use slim_scheduler::coordinator::router::{RandomRouter, Router};
+use slim_scheduler::coordinator::telemetry::{ServerTelemetry, TelemetrySnapshot};
+use slim_scheduler::coordinator::{Engine, GreedyScheduler, Request};
+use slim_scheduler::model::ModelMeta;
+use slim_scheduler::ppo::PpoRouter;
+use slim_scheduler::runtime::artifact::artifacts_available;
+use slim_scheduler::runtime::{HostTensor, SegmentExecutor};
+use slim_scheduler::sim::{profiles, SimDevice};
+use slim_scheduler::utilx::Rng;
+
+fn queued(id: u64, seg: usize, width: f64) -> Queued {
+    let mut req = Request::new(id, 0.0, width);
+    req.seg = seg;
+    Queued { req, width }
+}
+
+fn snapshot(n: usize) -> TelemetrySnapshot {
+    TelemetrySnapshot {
+        fifo_len: 12,
+        done_count: 100,
+        total_requests: 1000,
+        servers: (0..n)
+            .map(|i| ServerTelemetry {
+                queue_len: i * 3,
+                power_w: 120.0,
+                util_pct: 25.0 * i as f64,
+                mem_util: 0.3,
+                instances: 2,
+            })
+            .collect(),
+    }
+}
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let mut rng = Rng::new(1);
+
+    // ---- keyed FIFO ----
+    bench.bench("fifo/push_pop_batch_64", || {
+        let mut fifo = KeyedFifo::new();
+        for i in 0..64 {
+            fifo.push_back(queued(i, (i % 4) as usize, 0.5));
+        }
+        while !fifo.is_empty() {
+            std::hint::black_box(fifo.pop_batch(16));
+        }
+    });
+
+    // ---- greedy scheduler sweep ----
+    bench.bench("greedy/step_32_requests", || {
+        let mut s = GreedyScheduler::new(SchedulerCfg::default(), ModelMeta::default());
+        let mut dev = SimDevice::new(profiles::rtx2080ti());
+        for i in 0..32 {
+            s.enqueue(queued(i, (i % 4) as usize, 0.5));
+        }
+        std::hint::black_box(s.step(0.0, &mut dev));
+    });
+
+    // ---- routers ----
+    let snap = snapshot(3);
+    let mut random = RandomRouter::new(vec![0.25, 0.5, 0.75, 1.0], true, 8);
+    bench.bench("router/random_decision", || {
+        std::hint::black_box(random.route(&snap, 0.5, 0, &mut rng));
+    });
+
+    let mut ppo = PpoRouter::new(3, vec![0.25, 0.5, 0.75, 1.0], PpoCfg::default(), 7);
+    ppo.eval_mode();
+    bench.bench("router/ppo_decision(11->64->64->12 mlp)", || {
+        std::hint::black_box(ppo.route(&snap, 0.5, 0, &mut rng));
+    });
+
+    // ---- policy forward+backward ----
+    let train_ppo =
+        PpoRouter::new(3, vec![0.25, 0.5, 0.75, 1.0], PpoCfg::default(), 8);
+    let state = snap.to_state_vector();
+    bench.bench("policy/evaluate", || {
+        std::hint::black_box(train_ppo.policy.evaluate(&state, None, 0.1));
+    });
+    let (eval, _) = train_ppo.policy.evaluate(&state, None, 0.1);
+    let action = slim_scheduler::ppo::ActionTriple { srv: 1, w: 2, g: 0 };
+    bench.bench("policy/backward_transition", || {
+        let mut grads = train_ppo.policy.mlp.zeros_like();
+        train_ppo
+            .policy
+            .backward_transition(&eval, action, 0.1, -0.5, 0.01, 0.2, &mut grads);
+        std::hint::black_box(grads);
+    });
+
+    // ---- device model ----
+    bench.bench("device/begin_finish_batch", || {
+        let mut d = SimDevice::new(profiles::rtx2080ti());
+        let (id, f) = d.begin_batch(0.0, 1_000_000_000, 10_000_000, 8, 0.5);
+        d.finish_batch(f, id);
+        std::hint::black_box(d.energy_j());
+    });
+
+    // ---- telemetry ----
+    bench.bench("telemetry/state_vector", || {
+        std::hint::black_box(snap.to_state_vector());
+    });
+
+    // ---- end-to-end small sim ----
+    bench.bench("engine/300_request_run", || {
+        let mut cfg = Config::default();
+        cfg.workload.total_requests = 300;
+        cfg.workload.rate_hz = 200.0;
+        let router = RandomRouter::new(cfg.scheduler.widths.clone(), true, 8);
+        std::hint::black_box(Engine::new(cfg, router).run());
+    });
+
+    // ---- real PJRT execution (skipped when artifacts missing) ----
+    if artifacts_available("artifacts") {
+        let mut ex = SegmentExecutor::new("artifacts").expect("executor");
+        ex.warm_all(&[0.25, 1.0]).expect("warm");
+        let meta = ModelMeta::default();
+        let (in_shape, _) = meta.seg_io_shapes(0, 4);
+        let x = HostTensor::from_vec(
+            &in_shape,
+            (0..in_shape.iter().product::<usize>())
+                .map(|i| ((i % 13) as f32 - 6.0) / 6.0)
+                .collect(),
+        );
+        bench.bench("pjrt/seg0_b4_w025", || {
+            std::hint::black_box(ex.execute(0, 0.25, &x).expect("exec"));
+        });
+        bench.bench("pjrt/seg0_b4_w100", || {
+            std::hint::black_box(ex.execute(0, 1.0, &x).expect("exec"));
+        });
+        bench.bench("pjrt/full_forward_b4_w025", || {
+            std::hint::black_box(
+                ex.full_forward(&[0.25, 0.25, 0.25, 0.25], &x).expect("fwd"),
+            );
+        });
+    } else {
+        eprintln!("pjrt benches skipped: run `make artifacts` first");
+    }
+}

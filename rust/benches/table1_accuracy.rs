@@ -1,0 +1,31 @@
+//! Table I regenerator — SlimResNet Top-1 under uniform width ratios.
+//! The accuracy prior reproduces the published numbers exactly (they are
+//! its calibration points); the bench also times the prior lookup, which
+//! sits on the reward hot path.
+
+use slim_scheduler::benchx::{Bench, Table};
+use slim_scheduler::model::accuracy::UNIFORM_ACC;
+use slim_scheduler::model::AccuracyPrior;
+
+fn main() {
+    let prior = AccuracyPrior::new();
+    let mut table = Table::new(
+        "Table I — Top-1 accuracy under uniform widths (CIFAR-100)",
+        &["width", "paper_pct", "ours_pct"],
+    );
+    for &(w, paper) in &UNIFORM_ACC {
+        let ours = prior.lookup(&[w, w, w, w]);
+        table.rowf(&[w, paper, ours], 2);
+        assert!((ours - paper).abs() < 1e-9, "w={w}: {ours} vs {paper}");
+    }
+    table.print();
+    println!("exact match on all four uniform widths\n");
+
+    let mut bench = Bench::from_env();
+    let mut i = 0usize;
+    bench.bench("accuracy_prior/uniform_lookup", || {
+        let w = [0.25, 0.5, 0.75, 1.0][i % 4];
+        i += 1;
+        std::hint::black_box(prior.lookup(&[w, w, w, w]));
+    });
+}

@@ -1,0 +1,45 @@
+//! Table II regenerator — Top-1 under the paper's randomized mixed-width
+//! tuples, plus the additive-model residuals on every published point and
+//! the full 4^4 tuple surface timing.
+
+use slim_scheduler::benchx::{Bench, Table};
+use slim_scheduler::model::accuracy::MIXED_ACC;
+use slim_scheduler::model::{AccuracyPrior, WIDTHS};
+
+fn main() {
+    let prior = AccuracyPrior::new();
+    let mut table = Table::new(
+        "Table II — Top-1 under randomized mixed widths (CIFAR-100)",
+        &["w1", "w2", "w3", "w4", "paper_pct", "ours_pct"],
+    );
+    for &(tuple, paper) in &MIXED_ACC {
+        let ours = prior.lookup(&tuple);
+        table.rowf(&[tuple[0], tuple[1], tuple[2], tuple[3], paper, ours], 2);
+        assert!((ours - paper).abs() < 1e-9);
+    }
+    table.print();
+
+    // the Table II ordering property: later segments matter more
+    let last_heavy = prior.lookup(&[0.25, 0.50, 0.75, 1.00]);
+    let first_heavy = prior.lookup(&[1.00, 0.75, 0.50, 0.25]);
+    assert!(last_heavy > first_heavy);
+    println!(
+        "ordering OK: widening later segments ({last_heavy:.2}%) beats \
+         widening earlier ones ({first_heavy:.2}%)\n"
+    );
+
+    let mut bench = Bench::from_env();
+    bench.bench("accuracy_prior/full_256_tuple_surface", || {
+        let mut acc = 0.0;
+        for &a in &WIDTHS {
+            for &b in &WIDTHS {
+                for &c in &WIDTHS {
+                    for &d in &WIDTHS {
+                        acc += prior.lookup(&[a, b, c, d]);
+                    }
+                }
+            }
+        }
+        std::hint::black_box(acc);
+    });
+}

@@ -1,0 +1,72 @@
+//! Table III regenerator — baseline scheduler (greedy executors, uniform
+//! random routing and random width selection) on the simulated 3-GPU
+//! cluster. Prints the paper's table layout plus our measured row and
+//! checks the baseline's qualitative signature: saturated cluster, high
+//! mean latency/energy, mid-range accuracy.
+
+use slim_scheduler::benchx::{Bench, Table};
+use slim_scheduler::experiments;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").is_ok();
+    let requests = if quick { 2000 } else { 8000 };
+    let cfg = experiments::paper_cluster_cfg(requests, 42);
+
+    let mut bench = Bench::from_env();
+    let mut outcome = None;
+    bench.once(&format!("table3/baseline_run({requests} req)"), || {
+        outcome = Some(experiments::run_random_baseline(&cfg));
+    });
+    let out = outcome.unwrap();
+
+    let mut table = Table::new(
+        "Table III — baseline scheduler (3-GPU cluster): paper vs ours",
+        &["metric", "paper_mean", "paper_std", "ours_mean", "ours_std"],
+    );
+    table.row(&[
+        "Accuracy (%)".into(),
+        "74.43".into(),
+        "".into(),
+        format!("{:.2}", out.report.accuracy_pct),
+        "".into(),
+    ]);
+    table.row(&[
+        "Latency (s)".into(),
+        "8.979".into(),
+        "7.302".into(),
+        format!("{:.3}", out.report.latency.mean()),
+        format!("{:.3}", out.report.latency.std()),
+    ]);
+    table.row(&[
+        "Energy (J)".into(),
+        "1967.94".into(),
+        "1629.53".into(),
+        format!("{:.2}", out.report.energy.mean()),
+        format!("{:.2}", out.report.energy.std()),
+    ]);
+    table.row(&[
+        "GPU Var".into(),
+        "0.0433".into(),
+        "0.0216".into(),
+        format!("{:.4}", out.report.gpu_var.mean()),
+        format!("{:.4}", out.report.gpu_var.std()),
+    ]);
+    table.row(&[
+        "Throughput (img/s)".into(),
+        "-".into(),
+        "".into(),
+        format!("{:.1}", out.report.throughput()),
+        "".into(),
+    ]);
+    table.print();
+
+    // qualitative signature
+    assert_eq!(out.report.completed, requests as u64);
+    assert!(out.report.accuracy_pct > 72.0 && out.report.accuracy_pct < 76.0,
+            "accuracy {}", out.report.accuracy_pct);
+    assert!(out.report.latency.mean() > 0.5,
+            "baseline must be saturated: {}", out.report.latency.mean());
+    assert!(out.report.energy.mean() > 100.0);
+    println!("baseline signature OK: saturated, mid-accuracy, costly\n");
+}

@@ -1,0 +1,80 @@
+//! Table V regenerator — PPO+greedy under balanced weighting, measured
+//! online (the paper attributes this row's variance to the scheduler's
+//! live experimentation with slimming ratios). Shape targets: accuracy
+//! above baseline, mean latency & energy below baseline, throughput below
+//! baseline, latency spread of the same order as its mean.
+
+use slim_scheduler::benchx::{Bench, Table};
+use slim_scheduler::experiments;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").is_ok();
+    let (requests, episodes) = if quick { (2000, 5) } else { (6000, 10) };
+    let cfg = experiments::paper_cluster_cfg(requests, 42);
+
+    let mut bench = Bench::from_env();
+    let mut results = None;
+    bench.once(
+        &format!("table5/train+eval_online({episodes} episodes x {requests} req)"),
+        || {
+            let baseline = experiments::run_random_baseline(&cfg);
+            let (ppo, router) = experiments::run_table5(&cfg, episodes);
+            results = Some((baseline, ppo, router));
+        },
+    );
+    let (baseline, ppo, _router) = results.unwrap();
+
+    let mut table = Table::new(
+        "Table V — PPO+greedy (averaged/balanced, online): paper vs ours",
+        &["metric", "paper_mean", "paper_std", "ours_mean", "ours_std"],
+    );
+    table.row(&["Accuracy (%)".into(), "75.26".into(), "".into(),
+                format!("{:.2}", ppo.report.accuracy_pct), "".into()]);
+    table.row(&["Latency (s)".into(), "6.100".into(), "11.673".into(),
+                format!("{:.3}", ppo.report.latency.mean()),
+                format!("{:.3}", ppo.report.latency.std())]);
+    table.row(&["Energy (J)".into(), "1085.41".into(), "2125.62".into(),
+                format!("{:.2}", ppo.report.energy.mean()),
+                format!("{:.2}", ppo.report.energy.std())]);
+    table.row(&["GPU Var".into(), "0.0815".into(), "0.0374".into(),
+                format!("{:.4}", ppo.report.gpu_var.mean()),
+                format!("{:.4}", ppo.report.gpu_var.std())]);
+    table.print();
+    println!(
+        "baseline for reference: acc {:.2}%, latency {:.3}s, energy {:.1}J, thpt {:.1} img/s",
+        baseline.report.accuracy_pct,
+        baseline.report.latency.mean(),
+        baseline.report.energy.mean(),
+        baseline.report.throughput()
+    );
+    println!("ppo width histogram: {:?}", ppo.width_histogram);
+
+    // shape assertions (Table V's trade-off signature)
+    assert!(
+        ppo.report.accuracy_pct > baseline.report.accuracy_pct,
+        "balanced policy must recover accuracy: {} vs {}",
+        ppo.report.accuracy_pct,
+        baseline.report.accuracy_pct
+    );
+    assert!(
+        ppo.report.latency.mean() < baseline.report.latency.mean(),
+        "mean latency must improve"
+    );
+    assert!(
+        ppo.report.energy.mean() < baseline.report.energy.mean(),
+        "mean energy must improve"
+    );
+    // high variance signature: spread comparable to the mean
+    assert!(
+        ppo.report.latency.std() > 0.5 * ppo.report.latency.mean(),
+        "latency spread should stay large (live width experimentation): σ {} μ {}",
+        ppo.report.latency.std(),
+        ppo.report.latency.mean()
+    );
+    // width mixing, not collapse
+    let total: u64 = ppo.width_histogram.iter().sum();
+    let widest_frac = *ppo.width_histogram.iter().max().unwrap() as f64 / total as f64;
+    assert!(widest_frac < 0.97, "policy collapsed: {:?}", ppo.width_histogram);
+    println!("shape checks OK: accuracy up, means down, spread stays wide\n");
+}

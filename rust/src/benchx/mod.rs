@@ -1,0 +1,250 @@
+//! Mini statistical benchmark harness (criterion substitute).
+//!
+//! Each `[[bench]]` target sets `harness = false` and drives this module:
+//! warmup, timed samples, mean/σ/p50/p99 in adaptive units, and a
+//! `Table`/`Series` printer so every paper table and figure regenerator
+//! emits the same rows the paper reports. Honors `--quick` (fewer samples)
+//! and `BENCH_FILTER=<substr>`.
+
+use std::time::Instant;
+
+use crate::metrics::Summary;
+
+/// Timing result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12}/iter  σ {:>10}  p50 {:>10}  p99 {:>10}  ({} samples × {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.samples,
+            self.iters_per_sample,
+        );
+    }
+}
+
+/// Benchmark driver.
+pub struct Bench {
+    quick: bool,
+    filter: Option<String>,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl Bench {
+    /// Configure from argv + env (`--quick`, `BENCH_FILTER`).
+    pub fn from_env() -> Self {
+        let argv: Vec<String> = std::env::args().collect();
+        // `cargo bench` passes `--bench`; treat `--quick` anywhere.
+        let quick = argv.iter().any(|a| a == "--quick")
+            || std::env::var("BENCH_QUICK").is_ok();
+        let filter = std::env::var("BENCH_FILTER").ok();
+        Bench { quick, filter, results: Vec::new() }
+    }
+
+    fn skip(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => !name.contains(f.as_str()),
+            None => false,
+        }
+    }
+
+    /// Time `f`, auto-calibrating iterations per sample to ~5 ms.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        if self.skip(name) {
+            return;
+        }
+        // Warmup + calibration.
+        let mut iters = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            if dt > 2e6 || iters >= 1 << 20 {
+                let target = 5e6; // 5 ms / sample
+                iters = ((iters as f64) * (target / dt.max(1.0)))
+                    .clamp(1.0, 1e7) as u64;
+                break;
+            }
+            iters *= 4;
+        }
+        let samples = if self.quick { 10 } else { 30 };
+        let mut summary = Summary::default();
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            for _ in 0..iters.max(1) {
+                f();
+            }
+            let per_iter = t0.elapsed().as_nanos() as f64 / iters.max(1) as f64;
+            summary.record(per_iter);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: iters.max(1),
+            mean_ns: summary.mean(),
+            std_ns: summary.std(),
+            p50_ns: summary.percentile(50.0),
+            p99_ns: summary.percentile(99.0),
+        };
+        result.print();
+        self.results.push(result);
+    }
+
+    /// Run a one-shot (non-repeated) measured section — for end-to-end
+    /// simulations where a single run is already statistically aggregated.
+    pub fn once<F: FnOnce()>(&mut self, name: &str, f: F) {
+        if self.skip(name) {
+            return;
+        }
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_nanos() as f64;
+        println!("{:<44} {:>12} (single run)", name, fmt_ns(dt));
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[f64], precision: usize) {
+        self.rows
+            .push(cells.iter().map(|x| format!("{x:.precision$}")).collect());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("\n=== {} ===\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_timing() {
+        let mut b = Bench { quick: true, filter: None, results: vec![] };
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        let r = &b.results()[0];
+        assert!(r.mean_ns > 0.0 && r.mean_ns < 1e6, "mean={}", r.mean_ns);
+        assert!(r.p50_ns > 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bench {
+            quick: true,
+            filter: Some("match-me".into()),
+            results: vec![],
+        };
+        b.bench("other", || {});
+        assert!(b.results().is_empty());
+        b.bench("match-me-1", || {});
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Fig 1", &["batch", "util_025", "util_100"]);
+        t.rowf(&[1.0, 0.05, 0.2], 2);
+        t.rowf(&[32.0, 0.55, 0.99], 2);
+        let s = t.render();
+        assert!(s.contains("Fig 1"));
+        assert!(s.contains("batch"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5.0e4).contains("µs"));
+        assert!(fmt_ns(5.0e7).contains("ms"));
+        assert!(fmt_ns(5.0e9).contains("s"));
+    }
+}

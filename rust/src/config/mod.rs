@@ -1,0 +1,494 @@
+//! Typed configuration system.
+//!
+//! Everything tunable in the paper is a field here: the greedy scheduler
+//! knobs of Algorithm 1 (`r, B_max, M_max, U_blk, t_idle, Q_th, N_new, W`),
+//! the PPO hyper-parameters (§III-B), the reward weights (eq. 7), the
+//! cluster topology (2× RTX 2080 Ti + 1× GTX 980 Ti) and the workload.
+//! Configs load from JSON files, apply CLI overrides, and serialize back
+//! to JSON for run provenance.
+
+use crate::utilx::json::{arr_f64, obj, Json};
+use crate::utilx::Args;
+
+/// The slimming width set W from the paper.
+pub const WIDTHS: [f64; 4] = [0.25, 0.50, 0.75, 1.00];
+
+/// Greedy scheduler knobs (Algorithm 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedulerCfg {
+    /// Batch limit B_max (requests per formed batch).
+    pub b_max: usize,
+    /// VRAM cap M_max in bytes per device.
+    pub m_max_bytes: u64,
+    /// Utilization block threshold U_blk in percent (0-100).
+    pub u_blk_pct: f64,
+    /// Idle unload timeout t_idle in (virtual) seconds.
+    pub t_idle_s: f64,
+    /// Queue-length scale trigger Q_th.
+    pub q_th: usize,
+    /// Scale-up cap N_new (instances per scale event).
+    pub n_new: usize,
+    /// Slimming set W.
+    pub widths: Vec<f64>,
+}
+
+impl Default for SchedulerCfg {
+    fn default() -> Self {
+        SchedulerCfg {
+            b_max: 16,
+            m_max_bytes: 8 * (1 << 30),
+            u_blk_pct: 90.0,
+            t_idle_s: 5.0,
+            q_th: 32,
+            n_new: 2,
+            widths: WIDTHS.to_vec(),
+        }
+    }
+}
+
+/// Reward weights (eq. 7): r = α·p_acc − β·L − γ·E − δ·Var(U) + b.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RewardCfg {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    pub delta: f64,
+    pub bonus: f64,
+    /// Center the accuracy prior at the top-1 mean (zero-mean option).
+    pub center_acc: bool,
+}
+
+impl RewardCfg {
+    /// Heavy latency/energy weighting — the paper's "overfit" policy
+    /// (Table IV): collapses onto the slimmest width. α is kept tiny so
+    /// even the base (uncongested) latency gap between widths dominates
+    /// the accuracy prior.
+    pub fn overfit() -> Self {
+        RewardCfg {
+            alpha: 0.02,
+            beta: 60.0,
+            gamma: 0.05,
+            delta: 0.2,
+            bonus: 0.0,
+            center_acc: false,
+        }
+    }
+
+    /// Balanced weighting — the paper's "averaged" policy (Table V):
+    /// recovers accuracy at the cost of higher latency/energy variance.
+    /// α sits at the boundary where a wide block's accuracy gain roughly
+    /// equals its congested-latency cost, so the learned policy mixes
+    /// widths with load instead of collapsing either way.
+    pub fn balanced() -> Self {
+        RewardCfg {
+            alpha: 3.5,
+            beta: 1.2,
+            gamma: 0.0008,
+            delta: 0.4,
+            bonus: 0.0,
+            center_acc: true,
+        }
+    }
+}
+
+impl Default for RewardCfg {
+    fn default() -> Self {
+        RewardCfg::balanced()
+    }
+}
+
+/// PPO hyper-parameters (§III-B).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PpoCfg {
+    /// Hidden layer sizes of the shared MLP trunk.
+    pub hidden: Vec<usize>,
+    pub lr: f64,
+    /// Clipping ε in eq. 10.
+    pub clip: f64,
+    /// Value-loss coefficient c_v.
+    pub c_v: f64,
+    /// Entropy coefficient c_H.
+    pub c_h: f64,
+    /// Optimization epochs per update (paper: K = 3).
+    pub epochs: usize,
+    /// Gradient-norm clip.
+    pub grad_clip: f64,
+    /// ε-mixing schedule for the server head (eq. 5).
+    pub eps_max: f64,
+    pub eps_min: f64,
+    pub t_dec: f64,
+    /// Rollout length between updates.
+    pub horizon: usize,
+    /// Reward shaping.
+    pub reward: RewardCfg,
+    /// Micro-batch group sizes the g-head chooses from.
+    pub groups: Vec<usize>,
+}
+
+impl Default for PpoCfg {
+    fn default() -> Self {
+        PpoCfg {
+            hidden: vec![64, 64],
+            lr: 3e-4,
+            clip: 0.2,
+            c_v: 0.5,
+            c_h: 0.01,
+            epochs: 3,
+            grad_clip: 0.5,
+            eps_max: 0.30,
+            eps_min: 0.02,
+            t_dec: 20_000.0,
+            horizon: 256,
+            reward: RewardCfg::default(),
+            groups: vec![1, 4, 16],
+        }
+    }
+}
+
+/// One simulated GPU's static profile (see `sim::profiles` for the
+/// calibrated 2080 Ti / 980 Ti instances).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceCfg {
+    pub name: String,
+    /// Peak f32 throughput used by the analytical latency model (FLOP/s).
+    pub peak_flops: f64,
+    /// Memory bandwidth (bytes/s) for the roofline latency term.
+    pub mem_bw: f64,
+    /// Total VRAM bytes.
+    pub vram_bytes: u64,
+    pub idle_power_w: f64,
+    pub max_power_w: f64,
+    /// Utilization where latency/energy go super-linear (Figs 2-3 knee).
+    pub knee_util_pct: f64,
+    /// Strength of the super-linear blow-up past the knee.
+    pub knee_sharpness: f64,
+    /// Per-dispatch fixed overhead (kernel launch, s).
+    pub dispatch_overhead_s: f64,
+}
+
+/// Inter-server link model (the paper used Wi-Fi 5 WLAN).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkCfg {
+    pub base_latency_s: f64,
+    pub jitter_s: f64,
+    pub bandwidth_bytes_per_s: f64,
+}
+
+impl Default for LinkCfg {
+    fn default() -> Self {
+        // Wi-Fi 5 802.11ac-ish: ~2 ms RTT/2, 400 Mbit/s effective.
+        LinkCfg {
+            base_latency_s: 1.0e-3,
+            jitter_s: 0.4e-3,
+            bandwidth_bytes_per_s: 50.0e6,
+        }
+    }
+}
+
+/// Workload generator settings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadCfg {
+    /// Mean arrival rate r (requests/s).
+    pub rate_hz: f64,
+    /// Bursty modulation: rate multiplier during bursts.
+    pub burst_factor: f64,
+    /// Burst period (s) and duty cycle in [0,1].
+    pub burst_period_s: f64,
+    pub burst_duty: f64,
+    /// Total requests to issue.
+    pub total_requests: usize,
+    /// Requested widths distribution (uniform over the scheduler widths
+    /// when empty).
+    pub width_mix: Vec<f64>,
+}
+
+impl Default for WorkloadCfg {
+    fn default() -> Self {
+        WorkloadCfg {
+            // Calibrated against the simulated cluster's capacity (~120
+            // img/s at mixed widths, ~350 img/s all-slim): the mean
+            // offered load of 210 img/s keeps a random-routing baseline
+            // past saturation (the paper's ~9 s mean-latency regime)
+            // while an all-slim policy drains comfortably.
+            rate_hz: 140.0,
+            burst_factor: 3.0,
+            burst_period_s: 10.0,
+            burst_duty: 0.25,
+            total_requests: 20_000,
+            width_mix: vec![],
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub seed: u64,
+    pub artifacts_dir: String,
+    /// Device profile names resolved via `sim::profiles::by_name`.
+    pub devices: Vec<String>,
+    pub scheduler: SchedulerCfg,
+    pub ppo: PpoCfg,
+    pub link: LinkCfg,
+    pub workload: WorkloadCfg,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            seed: 42,
+            artifacts_dir: "artifacts".to_string(),
+            // the paper's heterogeneous 3-GPU cluster
+            devices: vec![
+                "rtx2080ti".to_string(),
+                "rtx2080ti".to_string(),
+                "gtx980ti".to_string(),
+            ],
+            scheduler: SchedulerCfg::default(),
+            ppo: PpoCfg::default(),
+            link: LinkCfg::default(),
+            workload: WorkloadCfg::default(),
+        }
+    }
+}
+
+impl Config {
+    /// Apply CLI overrides (a flat, documented subset — the fields every
+    /// example/bench sweeps).
+    pub fn apply_args(&mut self, args: &Args) {
+        self.seed = args.u64_or("seed", self.seed);
+        self.artifacts_dir = args.str_or("artifacts-dir", &self.artifacts_dir);
+        self.workload.rate_hz = args.f64_or("rate", self.workload.rate_hz);
+        self.workload.total_requests =
+            args.usize_or("requests", self.workload.total_requests);
+        self.workload.burst_factor =
+            args.f64_or("burst-factor", self.workload.burst_factor);
+        self.scheduler.b_max = args.usize_or("b-max", self.scheduler.b_max);
+        self.scheduler.u_blk_pct = args.f64_or("u-blk", self.scheduler.u_blk_pct);
+        self.scheduler.t_idle_s = args.f64_or("t-idle", self.scheduler.t_idle_s);
+        self.scheduler.n_new = args.usize_or("n-new", self.scheduler.n_new);
+        self.ppo.lr = args.f64_or("lr", self.ppo.lr);
+        self.ppo.horizon = args.usize_or("horizon", self.ppo.horizon);
+        self.ppo.c_h = args.f64_or("entropy", self.ppo.c_h);
+        match args.get("reward") {
+            Some("overfit") => self.ppo.reward = RewardCfg::overfit(),
+            Some("balanced") => self.ppo.reward = RewardCfg::balanced(),
+            _ => {}
+        }
+        // fine-grained reward-weight overrides (ablation sweeps)
+        self.ppo.reward.alpha = args.f64_or("alpha", self.ppo.reward.alpha);
+        self.ppo.reward.beta = args.f64_or("beta", self.ppo.reward.beta);
+        self.ppo.reward.gamma = args.f64_or("gamma", self.ppo.reward.gamma);
+        self.ppo.reward.delta = args.f64_or("delta", self.ppo.reward.delta);
+        if let Some(n) = args.get("devices") {
+            self.devices = n.split(',').map(str::to_string).collect();
+        }
+    }
+
+    /// Serialize for run provenance.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("seed", Json::Num(self.seed as f64)),
+            ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
+            (
+                "devices",
+                Json::Arr(self.devices.iter().cloned().map(Json::Str).collect()),
+            ),
+            (
+                "scheduler",
+                obj(vec![
+                    ("b_max", Json::Num(self.scheduler.b_max as f64)),
+                    ("m_max_bytes", Json::Num(self.scheduler.m_max_bytes as f64)),
+                    ("u_blk_pct", Json::Num(self.scheduler.u_blk_pct)),
+                    ("t_idle_s", Json::Num(self.scheduler.t_idle_s)),
+                    ("q_th", Json::Num(self.scheduler.q_th as f64)),
+                    ("n_new", Json::Num(self.scheduler.n_new as f64)),
+                    ("widths", arr_f64(&self.scheduler.widths)),
+                ]),
+            ),
+            (
+                "ppo",
+                obj(vec![
+                    (
+                        "hidden",
+                        Json::Arr(
+                            self.ppo.hidden.iter().map(|&h| Json::Num(h as f64)).collect(),
+                        ),
+                    ),
+                    ("lr", Json::Num(self.ppo.lr)),
+                    ("clip", Json::Num(self.ppo.clip)),
+                    ("c_v", Json::Num(self.ppo.c_v)),
+                    ("c_h", Json::Num(self.ppo.c_h)),
+                    ("epochs", Json::Num(self.ppo.epochs as f64)),
+                    ("horizon", Json::Num(self.ppo.horizon as f64)),
+                    (
+                        "reward",
+                        obj(vec![
+                            ("alpha", Json::Num(self.ppo.reward.alpha)),
+                            ("beta", Json::Num(self.ppo.reward.beta)),
+                            ("gamma", Json::Num(self.ppo.reward.gamma)),
+                            ("delta", Json::Num(self.ppo.reward.delta)),
+                        ]),
+                    ),
+                ]),
+            ),
+            (
+                "workload",
+                obj(vec![
+                    ("rate_hz", Json::Num(self.workload.rate_hz)),
+                    ("burst_factor", Json::Num(self.workload.burst_factor)),
+                    ("burst_period_s", Json::Num(self.workload.burst_period_s)),
+                    ("burst_duty", Json::Num(self.workload.burst_duty)),
+                    (
+                        "total_requests",
+                        Json::Num(self.workload.total_requests as f64),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    /// Load overrides from a JSON config file (fields are optional — the
+    /// file only needs the keys it changes).
+    pub fn from_json(json: &Json) -> Config {
+        let mut cfg = Config::default();
+        if let Some(x) = json.get("seed").and_then(Json::as_f64) {
+            cfg.seed = x as u64;
+        }
+        if let Some(x) = json.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = x.to_string();
+        }
+        if let Some(xs) = json.get("devices").and_then(Json::as_arr) {
+            cfg.devices = xs.iter().filter_map(Json::as_str).map(str::to_string).collect();
+        }
+        if let Some(s) = json.get("scheduler") {
+            if let Some(x) = s.get("b_max").and_then(Json::as_usize) {
+                cfg.scheduler.b_max = x;
+            }
+            if let Some(x) = s.get("m_max_bytes").and_then(Json::as_f64) {
+                cfg.scheduler.m_max_bytes = x as u64;
+            }
+            if let Some(x) = s.get("u_blk_pct").and_then(Json::as_f64) {
+                cfg.scheduler.u_blk_pct = x;
+            }
+            if let Some(x) = s.get("t_idle_s").and_then(Json::as_f64) {
+                cfg.scheduler.t_idle_s = x;
+            }
+            if let Some(x) = s.get("q_th").and_then(Json::as_usize) {
+                cfg.scheduler.q_th = x;
+            }
+            if let Some(x) = s.get("n_new").and_then(Json::as_usize) {
+                cfg.scheduler.n_new = x;
+            }
+            if let Some(x) = s.get("widths").and_then(Json::as_f64_vec) {
+                cfg.scheduler.widths = x;
+            }
+        }
+        if let Some(w) = json.get("workload") {
+            if let Some(x) = w.get("rate_hz").and_then(Json::as_f64) {
+                cfg.workload.rate_hz = x;
+            }
+            if let Some(x) = w.get("total_requests").and_then(Json::as_usize) {
+                cfg.workload.total_requests = x;
+            }
+            if let Some(x) = w.get("burst_factor").and_then(Json::as_f64) {
+                cfg.workload.burst_factor = x;
+            }
+        }
+        if let Some(p) = json.get("ppo") {
+            if let Some(x) = p.get("lr").and_then(Json::as_f64) {
+                cfg.ppo.lr = x;
+            }
+            if let Some(x) = p.get("horizon").and_then(Json::as_usize) {
+                cfg.ppo.horizon = x;
+            }
+            if let Some(x) = p.get("epochs").and_then(Json::as_usize) {
+                cfg.ppo.epochs = x;
+            }
+            if let Some(r) = p.get("reward") {
+                if let Some(x) = r.get("alpha").and_then(Json::as_f64) {
+                    cfg.ppo.reward.alpha = x;
+                }
+                if let Some(x) = r.get("beta").and_then(Json::as_f64) {
+                    cfg.ppo.reward.beta = x;
+                }
+                if let Some(x) = r.get("gamma").and_then(Json::as_f64) {
+                    cfg.ppo.reward.gamma = x;
+                }
+                if let Some(x) = r.get("delta").and_then(Json::as_f64) {
+                    cfg.ppo.reward.delta = x;
+                }
+            }
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utilx::Args;
+
+    #[test]
+    fn default_is_papers_cluster() {
+        let cfg = Config::default();
+        assert_eq!(cfg.devices.len(), 3);
+        assert_eq!(
+            cfg.devices.iter().filter(|d| d.as_str() == "rtx2080ti").count(),
+            2
+        );
+        assert_eq!(cfg.scheduler.widths, WIDTHS.to_vec());
+        assert_eq!(cfg.ppo.epochs, 3); // paper: K = 3
+        assert_eq!(cfg.ppo.clip, 0.2); // paper: ε = 0.2
+        assert_eq!(cfg.ppo.c_v, 0.5); // paper: c_v = 0.5
+    }
+
+    #[test]
+    fn args_override() {
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--rate", "123", "--b-max", "8", "--reward", "overfit",
+             "--devices", "gtx980ti,rtx2080ti"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.workload.rate_hz, 123.0);
+        assert_eq!(cfg.scheduler.b_max, 8);
+        assert_eq!(cfg.ppo.reward, RewardCfg::overfit());
+        assert_eq!(cfg.devices, vec!["gtx980ti", "rtx2080ti"]);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_core_fields() {
+        let mut cfg = Config::default();
+        cfg.seed = 7;
+        cfg.workload.rate_hz = 55.5;
+        cfg.scheduler.b_max = 4;
+        cfg.ppo.reward.beta = 9.0;
+        let json = cfg.to_json();
+        let parsed = Config::from_json(&json);
+        assert_eq!(parsed.seed, 7);
+        assert_eq!(parsed.workload.rate_hz, 55.5);
+        assert_eq!(parsed.scheduler.b_max, 4);
+        assert_eq!(parsed.ppo.reward.beta, 9.0);
+    }
+
+    #[test]
+    fn from_json_accepts_partial_documents() {
+        let json = Json::parse(r#"{"workload": {"rate_hz": 10}}"#).unwrap();
+        let cfg = Config::from_json(&json);
+        assert_eq!(cfg.workload.rate_hz, 10.0);
+        // everything else defaulted
+        assert_eq!(cfg.devices.len(), 3);
+    }
+
+    #[test]
+    fn reward_presets_differ_in_the_right_direction() {
+        let overfit = RewardCfg::overfit();
+        let balanced = RewardCfg::balanced();
+        // overfit punishes latency/energy much harder relative to accuracy
+        assert!(overfit.beta / overfit.alpha > balanced.beta / balanced.alpha);
+        assert!(overfit.gamma / overfit.alpha > balanced.gamma / balanced.alpha);
+    }
+}

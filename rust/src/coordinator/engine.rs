@@ -1,0 +1,588 @@
+//! The multi-server discrete-event engine.
+//!
+//! Binds the whole hierarchy together exactly as the paper describes it:
+//! a leader holds the global FIFO and the router (PPO or algorithmic);
+//! every routed block crosses the WLAN link to its target server, whose
+//! local greedy scheduler (Algorithm 1) batches it onto a loaded instance
+//! of the simulated GPU. Block completions feed reward signals back to
+//! the router — the training loop of §III-B and the measurement loop of
+//! Tables III–V are the same code path.
+//!
+//! Virtual time (discrete events) makes a 20 k-request cluster run finish
+//! in tens of milliseconds, so PPO training over hundreds of thousands of
+//! scheduling steps is practical on one CPU.
+
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::config::Config;
+use crate::metrics::{RunReport, Summary};
+use crate::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS};
+use crate::sim::{profiles, Link, SimDevice, VirtualClock, Workload};
+use crate::utilx::Rng;
+
+use super::greedy::{Dispatch, GreedyScheduler, GreedyStats};
+use super::queue::Queued;
+use super::request::Request;
+use super::router::{BlockFeedback, Router};
+use super::telemetry::{ServerTelemetry, TelemetryLog, TelemetrySnapshot};
+
+const TELEMETRY_DT: f64 = 0.05;
+const UNLOAD_DT: f64 = 0.5;
+
+/// Event kinds (ordering by time, then sequence for determinism).
+#[derive(Debug)]
+enum EvKind {
+    Arrival(Request),
+    BlockArrive { server: usize, entries: Vec<Queued> },
+    BatchDone { server: usize, device_batch: u64, dispatch: Dispatch },
+    TelemetryTick,
+    UnloadTick,
+}
+
+struct Ev {
+    t: f64,
+    seq: u64,
+    kind: EvKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we need earliest-first
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// In-flight routed block (for block-level latency/energy and reward).
+#[derive(Clone, Debug)]
+struct BlockState {
+    routed_at: f64,
+    remaining: usize,
+    width: f64,
+    seg: usize,
+    /// representative width tuple (first request's history + this width)
+    tuple: [f64; NUM_SEGMENTS],
+}
+
+/// Everything a finished run reports.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub report: RunReport,
+    /// End-to-end (arrival → final segment) request latency.
+    pub e2e_latency: Summary,
+    pub telemetry: TelemetryLog,
+    pub greedy_stats: Vec<GreedyStats>,
+    /// Executed-width histogram over all segment executions (W order).
+    pub width_histogram: [u64; 4],
+    pub blocks_completed: u64,
+    pub sim_duration_s: f64,
+    /// Total cluster energy (J) integrated over the run.
+    pub total_energy_j: f64,
+}
+
+/// The engine itself (generic over the router so trained PPO routers can
+/// be recovered after a run; `Box<dyn Router>` also implements [`Router`]
+/// for dynamic use).
+pub struct Engine<R: Router> {
+    pub cfg: Config,
+    pub meta: ModelMeta,
+    prior: AccuracyPrior,
+    devices: Vec<SimDevice>,
+    scheds: Vec<GreedyScheduler>,
+    link: Link,
+    router: R,
+    global_fifo: VecDeque<Request>,
+    blocks: HashMap<u64, BlockState>,
+    events: BinaryHeap<Ev>,
+    clock: VirtualClock,
+    rng: Rng,
+    seq: u64,
+    // metrics
+    done: u64,
+    total: usize,
+    block_latency: Summary,
+    block_energy: Summary,
+    e2e_latency: Summary,
+    acc_sum: f64,
+    telemetry_log: TelemetryLog,
+    width_histogram: [u64; 4],
+    blocks_completed: u64,
+    /// Safety cap for pathological configurations.
+    pub max_sim_time_s: f64,
+}
+
+impl<R: Router> Engine<R> {
+    pub fn new(cfg: Config, router: R) -> Self {
+        let meta = ModelMeta::default();
+        let devices: Vec<SimDevice> = cfg
+            .devices
+            .iter()
+            .map(|name| {
+                SimDevice::new(
+                    profiles::by_name(name)
+                        .unwrap_or_else(|| panic!("unknown device profile {name}")),
+                )
+            })
+            .collect();
+        let scheds = devices
+            .iter()
+            .map(|_| GreedyScheduler::new(cfg.scheduler.clone(), meta.clone()))
+            .collect();
+        let n = devices.len();
+        let total = cfg.workload.total_requests;
+        Engine {
+            link: Link::new(cfg.link),
+            rng: Rng::new(cfg.seed),
+            meta,
+            prior: AccuracyPrior::new(),
+            devices,
+            scheds,
+            router,
+            global_fifo: VecDeque::new(),
+            blocks: HashMap::new(),
+            events: BinaryHeap::new(),
+            clock: VirtualClock::new(),
+            seq: 0,
+            done: 0,
+            total,
+            block_latency: Summary::default(),
+            block_energy: Summary::default(),
+            e2e_latency: Summary::default(),
+            acc_sum: 0.0,
+            telemetry_log: TelemetryLog::new(n),
+            width_histogram: [0; 4],
+            blocks_completed: 0,
+            max_sim_time_s: 3600.0,
+            cfg,
+        }
+    }
+
+    fn push_event(&mut self, t: f64, kind: EvKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.events.push(Ev { t, seq, kind });
+    }
+
+    /// eq. 1 snapshot of the cluster.
+    fn snapshot(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            fifo_len: self.global_fifo.len(),
+            done_count: self.done,
+            total_requests: self.total,
+            servers: self
+                .devices
+                .iter()
+                .zip(&self.scheds)
+                .map(|(d, s)| ServerTelemetry {
+                    queue_len: s.queue_len(),
+                    power_w: d.power_w(),
+                    util_pct: d.util_pct(),
+                    mem_util: d.mem_util(),
+                    instances: s.pool.len(),
+                })
+                .collect(),
+        }
+    }
+
+    fn width_index(&self, w: f64) -> usize {
+        self.cfg
+            .scheduler
+            .widths
+            .iter()
+            .position(|&x| (x - w).abs() < 1e-9)
+            .unwrap_or(0)
+    }
+
+    /// Route every request waiting at the leader.
+    fn route_pending(&mut self) {
+        while !self.global_fifo.is_empty() {
+            let snap = self.snapshot();
+            let head_seg = self.global_fifo[0].seg;
+            let head_w_req = self.global_fifo[0].w_req;
+            let decision =
+                self.router.route(&snap, head_w_req, head_seg, &mut self.rng);
+            let now = self.clock.now();
+
+            // pull a block: consecutive head requests of the same segment
+            let mut entries: Vec<Queued> = Vec::new();
+            while entries.len() < decision.group.max(1) {
+                match self.global_fifo.front() {
+                    Some(r) if r.seg == head_seg => {
+                        let mut req = self.global_fifo.pop_front().unwrap();
+                        req.block_tag = decision.tag;
+                        req.routed_at = now;
+                        req.enqueued_at = now;
+                        entries.push(Queued { req, width: decision.width });
+                    }
+                    _ => break,
+                }
+            }
+            debug_assert!(!entries.is_empty());
+
+            // representative tuple for the partial-accuracy prior:
+            // executed widths so far, this block's width for the current
+            // segment, nearest-neighbour (same width) for the rest.
+            let mut tuple = [decision.width; NUM_SEGMENTS];
+            for s in 0..head_seg {
+                tuple[s] = entries[0].req.widths_used[s];
+            }
+
+            self.blocks.insert(
+                decision.tag,
+                BlockState {
+                    routed_at: now,
+                    remaining: entries.len(),
+                    width: decision.width,
+                    seg: head_seg,
+                    tuple,
+                },
+            );
+
+            // WLAN transfer: charge the slowest member of the block
+            let mut arrive = now;
+            for q in &entries {
+                let bytes = if head_seg == 0 {
+                    // input image
+                    (self.meta.img * self.meta.img * self.meta.in_ch * 4) as u64
+                } else {
+                    let (inp, _) = self.meta.seg_io_shapes(head_seg, 1);
+                    (inp.iter().product::<usize>() * 4) as u64
+                };
+                let dt = match q.req.last_server {
+                    Some(s) if s == decision.server => self.link.local_s(),
+                    _ => self.link.transfer_s(bytes, &mut self.rng),
+                };
+                arrive = arrive.max(now + dt);
+            }
+            let server = decision.server.min(self.devices.len() - 1);
+            self.push_event(arrive, EvKind::BlockArrive { server, entries });
+        }
+    }
+
+    /// Run the greedy scheduler on one server and execute its dispatches.
+    fn pump_server(&mut self, server: usize) {
+        let now = self.clock.now();
+        let dispatches = {
+            let dev = &mut self.devices[server];
+            self.scheds[server].step(now, dev)
+        };
+        for d in dispatches {
+            // semantic cost of the batch: per-request FLOPs at the
+            // instance's width and the request's true w_prev
+            let flops: u64 = d
+                .batch
+                .iter()
+                .map(|q| {
+                    self.meta
+                        .seg_flops(d.key.seg, d.width, q.req.w_prev, 1)
+                })
+                .sum();
+            let mem = (self.meta.seg_mem_bytes(d.key.seg, d.batch.len()) as f64
+                * d.width) as u64;
+            let start = now + d.load_penalty_s;
+            let (device_batch, finish) = self.devices[server].begin_batch(
+                start,
+                flops,
+                mem,
+                d.batch.len(),
+                d.width,
+            );
+            self.push_event(
+                finish,
+                EvKind::BatchDone { server, device_batch, dispatch: d },
+            );
+        }
+    }
+
+    fn handle_batch_done(&mut self, server: usize, device_batch: u64, d: Dispatch) {
+        let now = self.clock.now();
+        self.devices[server].finish_batch(now, device_batch);
+        self.scheds[server].complete(d.instance_id, now);
+        self.width_histogram[self.width_index(d.width)] += d.batch.len() as u64;
+
+        let snap = self.snapshot();
+        for q in d.batch {
+            let mut req = q.req;
+            let tag = req.block_tag;
+            let mut block_finished = false;
+            if let Some(block) = self.blocks.get_mut(&tag) {
+                block.remaining -= 1;
+                if block.remaining == 0 {
+                    block_finished = true;
+                }
+            }
+            if block_finished {
+                let block = self.blocks.remove(&tag).unwrap();
+                let latency = now - block.routed_at;
+                let energy = snap.mean_power_w() * latency;
+                self.block_latency.record(latency);
+                self.block_energy.record(energy);
+                self.blocks_completed += 1;
+                let fb = BlockFeedback {
+                    tag,
+                    acc_prior_norm: self.prior.normalized(&block.tuple),
+                    latency_s: latency,
+                    energy_j: energy,
+                    util_variance: snap.util_variance(),
+                };
+                let _ = (block.width, block.seg);
+                self.router.feedback(&fb);
+            }
+
+            if req.advance(d.width, now, server) {
+                self.global_fifo.push_back(req);
+            } else {
+                self.done += 1;
+                self.e2e_latency.record(now - req.arrival);
+                self.acc_sum += self.prior.lookup(&req.width_tuple());
+            }
+        }
+        // freed instance may unblock queued batches
+        self.pump_server(server);
+        // requests that advanced need routing
+        self.route_pending();
+    }
+
+    /// Run the configured workload to completion; returns the outcome.
+    pub fn run(self) -> RunOutcome {
+        self.run_returning_router().0
+    }
+
+    /// Like [`Engine::run`] but hands the router back — used to train a
+    /// PPO router across multiple episodes and then freeze it for
+    /// evaluation.
+    pub fn run_returning_router(mut self) -> (RunOutcome, R) {
+        let mut workload = Workload::new(
+            self.cfg.workload.clone(),
+            &self.cfg.scheduler.widths,
+            self.rng.split(0xA11),
+        );
+        if let Some(first) = workload.next_event() {
+            let req = Request::new(first.request_id, first.at, first.w_req);
+            self.push_event(first.at, EvKind::Arrival(req));
+        }
+        self.push_event(TELEMETRY_DT, EvKind::TelemetryTick);
+        self.push_event(UNLOAD_DT, EvKind::UnloadTick);
+
+        while let Some(ev) = self.events.pop() {
+            if ev.t > self.max_sim_time_s {
+                break;
+            }
+            self.clock.advance_to(ev.t);
+            match ev.kind {
+                EvKind::Arrival(req) => {
+                    self.global_fifo.push_back(req);
+                    if let Some(next) = workload.next_event() {
+                        let r = Request::new(next.request_id, next.at, next.w_req);
+                        self.push_event(next.at, EvKind::Arrival(r));
+                    }
+                    self.route_pending();
+                }
+                EvKind::BlockArrive { server, entries } => {
+                    for q in entries {
+                        self.scheds[server].enqueue(q);
+                    }
+                    self.pump_server(server);
+                }
+                EvKind::BatchDone { server, device_batch, dispatch } => {
+                    self.handle_batch_done(server, device_batch, dispatch);
+                }
+                EvKind::TelemetryTick => {
+                    let now = self.clock.now();
+                    for d in &mut self.devices {
+                        d.integrate_to(now);
+                    }
+                    let snap = self.snapshot();
+                    self.telemetry_log.record(&snap);
+                    if self.done < self.total as u64 {
+                        self.push_event(now + TELEMETRY_DT, EvKind::TelemetryTick);
+                    }
+                }
+                EvKind::UnloadTick => {
+                    let now = self.clock.now();
+                    for i in 0..self.scheds.len() {
+                        let dev = &mut self.devices[i];
+                        self.scheds[i].unload_idle(now, dev);
+                        // unloads may free VRAM another key was waiting for
+                    }
+                    for i in 0..self.scheds.len() {
+                        self.pump_server(i);
+                    }
+                    if self.done < self.total as u64 {
+                        self.push_event(now + UNLOAD_DT, EvKind::UnloadTick);
+                    }
+                }
+            }
+            if self.done >= self.total as u64 {
+                // drain: all requests served
+                break;
+            }
+        }
+        self.router.end_of_run();
+
+        let now = self.clock.now();
+        for d in &mut self.devices {
+            d.integrate_to(now);
+        }
+        let total_energy: f64 = self.devices.iter().map(|d| d.energy_j()).sum();
+        let accuracy = if self.done > 0 {
+            self.acc_sum / self.done as f64
+        } else {
+            0.0
+        };
+        let outcome = RunOutcome {
+            report: RunReport {
+                label: self.router.name().to_string(),
+                accuracy_pct: accuracy,
+                latency: self.block_latency,
+                energy: self.block_energy,
+                gpu_var: self.telemetry_log.util_variance.clone(),
+                completed: self.done,
+                duration_s: now,
+            },
+            e2e_latency: self.e2e_latency,
+            telemetry: self.telemetry_log,
+            greedy_stats: self.scheds.iter().map(|s| s.stats.clone()).collect(),
+            width_histogram: self.width_histogram,
+            blocks_completed: self.blocks_completed,
+            sim_duration_s: now,
+            total_energy_j: total_energy,
+        };
+        (outcome, self.router)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::{LeastLoadedRouter, RandomRouter, RoundRobinRouter};
+
+    fn small_cfg(requests: usize, rate: f64) -> Config {
+        let mut cfg = Config::default();
+        cfg.workload.total_requests = requests;
+        cfg.workload.rate_hz = rate;
+        cfg.workload.burst_factor = 1.0;
+        cfg.workload.burst_period_s = 0.0;
+        cfg
+    }
+
+    fn run_with(cfg: Config, router: Box<dyn Router>) -> RunOutcome {
+        Engine::new(cfg, router).run()
+    }
+
+    #[test]
+    fn completes_every_request_random_router() {
+        let cfg = small_cfg(300, 200.0);
+        let widths = cfg.scheduler.widths.clone();
+        let out = run_with(cfg, Box::new(RandomRouter::new(widths, false, 4)));
+        assert_eq!(out.report.completed, 300);
+        assert_eq!(out.e2e_latency.count(), 300);
+        assert!(out.blocks_completed > 0);
+        assert!(out.report.latency.mean() > 0.0);
+        assert!(out.report.energy.mean() > 0.0);
+        assert!(out.total_energy_j > 0.0);
+        // every request crossed 4 segments
+        let execs: u64 = out.width_histogram.iter().sum();
+        assert_eq!(execs, 4 * 300);
+    }
+
+    #[test]
+    fn accuracy_within_prior_bounds() {
+        let cfg = small_cfg(200, 200.0);
+        let widths = cfg.scheduler.widths.clone();
+        let out = run_with(cfg, Box::new(RandomRouter::new(widths, true, 4)));
+        assert!(out.report.accuracy_pct >= 69.0 && out.report.accuracy_pct <= 77.0,
+                "{}", out.report.accuracy_pct);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let cfg = small_cfg(150, 300.0);
+            let widths = cfg.scheduler.widths.clone();
+            run_with(cfg, Box::new(RandomRouter::new(widths, true, 4)))
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.report.completed, b.report.completed);
+        assert!((a.report.latency.mean() - b.report.latency.mean()).abs() < 1e-12);
+        assert!((a.total_energy_j - b.total_energy_j).abs() < 1e-9);
+        assert_eq!(a.width_histogram, b.width_histogram);
+    }
+
+    #[test]
+    fn round_robin_and_least_loaded_complete() {
+        let cfg = small_cfg(200, 250.0);
+        let widths = cfg.scheduler.widths.clone();
+        let out_rr =
+            run_with(cfg.clone(), Box::new(RoundRobinRouter::new(widths.clone(), 4)));
+        assert_eq!(out_rr.report.completed, 200);
+        let out_ll = run_with(cfg, Box::new(LeastLoadedRouter::new(widths, 16)));
+        assert_eq!(out_ll.report.completed, 200);
+    }
+
+    #[test]
+    fn slim_widths_are_cheaper() {
+        // force all-slim vs all-wide via the width mix and compare energy
+        let mut slim_cfg = small_cfg(300, 200.0);
+        slim_cfg.workload.width_mix = vec![0.25];
+        let widths = slim_cfg.scheduler.widths.clone();
+        let slim = run_with(
+            slim_cfg,
+            Box::new(RandomRouter::new(widths.clone(), false, 4)),
+        );
+
+        let mut wide_cfg = small_cfg(300, 200.0);
+        wide_cfg.workload.width_mix = vec![1.0];
+        let wide = run_with(wide_cfg, Box::new(RandomRouter::new(widths, false, 4)));
+
+        assert!(slim.report.latency.mean() < wide.report.latency.mean());
+        assert!(slim.report.energy.mean() < wide.report.energy.mean());
+        // and the accuracy ordering is the paper's Table I
+        assert!(slim.report.accuracy_pct < wide.report.accuracy_pct);
+        assert!((slim.report.accuracy_pct - 70.30).abs() < 0.2);
+        assert!((wide.report.accuracy_pct - 76.43).abs() < 0.2);
+    }
+
+    #[test]
+    fn telemetry_sampled_and_instances_loaded() {
+        let cfg = small_cfg(150, 150.0);
+        let widths = cfg.scheduler.widths.clone();
+        let out = run_with(cfg, Box::new(RandomRouter::new(widths, false, 4)));
+        assert!(out.telemetry.samples > 0);
+        let loads: u64 = out.greedy_stats.iter().map(|s| s.loads).sum();
+        assert!(loads > 0);
+    }
+
+    #[test]
+    fn overload_increases_latency() {
+        let widths = Config::default().scheduler.widths.clone();
+        let calm = run_with(
+            small_cfg(300, 100.0),
+            Box::new(RandomRouter::new(widths.clone(), false, 4)),
+        );
+        let slammed = run_with(
+            small_cfg(300, 3000.0),
+            Box::new(RandomRouter::new(widths, false, 4)),
+        );
+        assert!(
+            slammed.report.latency.mean() > calm.report.latency.mean(),
+            "{} vs {}",
+            slammed.report.latency.mean(),
+            calm.report.latency.mean()
+        );
+    }
+}

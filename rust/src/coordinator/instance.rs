@@ -1,0 +1,210 @@
+//! Loaded model instances and the best-fit pool.
+//!
+//! An instance is one (segment, width) executable pinned in a device's
+//! VRAM — in simulation a VRAM-ledger entry, on the real serving path a
+//! compiled PJRT executable. Algorithm 1's FINDFREEBESTFIT picks the free
+//! instance of the right segment with the *smallest* width ≥ the
+//! requested width, so slim requests prefer slim instances but can
+//! upgrade when only wider ones are idle.
+
+use super::request::wkey;
+
+/// One loaded (segment, width) executable.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub id: u64,
+    pub seg: usize,
+    pub width: f64,
+    /// VRAM bytes charged while loaded.
+    pub vram_bytes: u64,
+    pub busy: bool,
+    /// Last time the instance finished work (for t_idle offload).
+    pub t_last: f64,
+    /// Total batches served (telemetry / ablation).
+    pub served: u64,
+}
+
+/// Per-server instance pool.
+#[derive(Clone, Debug, Default)]
+pub struct InstancePool {
+    instances: Vec<Instance>,
+    next_id: u64,
+}
+
+impl InstancePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a freshly loaded instance; returns its id.
+    pub fn load(&mut self, seg: usize, width: f64, vram_bytes: u64, now: f64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.instances.push(Instance {
+            id,
+            seg,
+            width,
+            vram_bytes,
+            busy: false,
+            t_last: now,
+            served: 0,
+        });
+        id
+    }
+
+    /// FINDFREEBESTFIT: free instance with `seg` and minimal width ≥ w_req.
+    pub fn find_free_best_fit(&self, seg: usize, w_req: f64) -> Option<u64> {
+        self.instances
+            .iter()
+            .filter(|i| !i.busy && i.seg == seg && i.width >= w_req - 1e-9)
+            .min_by_key(|i| (wkey(i.width), i.id))
+            .map(|i| i.id)
+    }
+
+    /// Any instance (busy or not) matching (seg, width)? — used to decide
+    /// whether a scale-up would duplicate an existing key.
+    pub fn count_for(&self, seg: usize, width: f64) -> usize {
+        self.instances
+            .iter()
+            .filter(|i| i.seg == seg && wkey(i.width) == wkey(width))
+            .count()
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Instance> {
+        self.instances.iter().find(|i| i.id == id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Instance> {
+        self.instances.iter_mut().find(|i| i.id == id)
+    }
+
+    /// Mark busy and return (width, vram) for dispatch accounting.
+    pub fn checkout(&mut self, id: u64) -> Option<(f64, u64)> {
+        let inst = self.get_mut(id)?;
+        debug_assert!(!inst.busy);
+        inst.busy = true;
+        Some((inst.width, inst.vram_bytes))
+    }
+
+    /// Mark idle after a batch completes.
+    pub fn checkin(&mut self, id: u64, now: f64) {
+        if let Some(inst) = self.get_mut(id) {
+            inst.busy = false;
+            inst.t_last = now;
+            inst.served += 1;
+        }
+    }
+
+    /// Remove all non-busy instances idle since before `now - t_idle`;
+    /// returns the freed (id, vram_bytes) pairs (UNLOADERLOOP).
+    pub fn unload_idle(&mut self, now: f64, t_idle: f64) -> Vec<(u64, u64)> {
+        let mut freed = Vec::new();
+        self.instances.retain(|i| {
+            let stale = !i.busy && now - i.t_last >= t_idle;
+            if stale {
+                freed.push((i.id, i.vram_bytes));
+            }
+            !stale
+        });
+        freed
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    pub fn busy_count(&self) -> usize {
+        self.instances.iter().filter(|i| i.busy).count()
+    }
+
+    pub fn total_vram(&self) -> u64 {
+        self.instances.iter().map(|i| i.vram_bytes).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Instance> {
+        self.instances.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient_width() {
+        let mut pool = InstancePool::new();
+        pool.load(1, 1.0, 100, 0.0);
+        let id_half = pool.load(1, 0.5, 100, 0.0);
+        pool.load(1, 0.75, 100, 0.0);
+        pool.load(0, 0.5, 100, 0.0); // wrong segment
+        assert_eq!(pool.find_free_best_fit(1, 0.5), Some(id_half));
+        assert_eq!(pool.find_free_best_fit(1, 0.3), Some(id_half));
+    }
+
+    #[test]
+    fn best_fit_skips_busy_and_too_narrow() {
+        let mut pool = InstancePool::new();
+        let id_half = pool.load(2, 0.5, 100, 0.0);
+        let id_full = pool.load(2, 1.0, 100, 0.0);
+        pool.checkout(id_half);
+        assert_eq!(pool.find_free_best_fit(2, 0.5), Some(id_full));
+        pool.checkout(id_full);
+        assert_eq!(pool.find_free_best_fit(2, 0.5), None);
+        // narrow instance can't serve a wide request
+        pool.checkin(id_half, 1.0);
+        assert_eq!(pool.find_free_best_fit(2, 0.75), None);
+    }
+
+    #[test]
+    fn checkout_checkin_cycle() {
+        let mut pool = InstancePool::new();
+        let id = pool.load(0, 0.25, 555, 0.0);
+        let (w, vram) = pool.checkout(id).unwrap();
+        assert_eq!(w, 0.25);
+        assert_eq!(vram, 555);
+        assert_eq!(pool.busy_count(), 1);
+        pool.checkin(id, 3.0);
+        assert_eq!(pool.busy_count(), 0);
+        let inst = pool.get(id).unwrap();
+        assert_eq!(inst.t_last, 3.0);
+        assert_eq!(inst.served, 1);
+    }
+
+    #[test]
+    fn unload_idle_frees_only_stale_nonbusy() {
+        let mut pool = InstancePool::new();
+        let id_stale = pool.load(0, 0.5, 100, 0.0);
+        let id_fresh = pool.load(0, 0.5, 200, 9.5);
+        let id_busy = pool.load(0, 1.0, 300, 0.0);
+        pool.checkout(id_busy);
+
+        let freed = pool.unload_idle(10.0, 5.0);
+        assert_eq!(freed, vec![(id_stale, 100)]);
+        assert_eq!(pool.len(), 2);
+        assert!(pool.get(id_fresh).is_some());
+        assert!(pool.get(id_busy).is_some());
+    }
+
+    #[test]
+    fn count_for_matches_key() {
+        let mut pool = InstancePool::new();
+        pool.load(1, 0.5, 1, 0.0);
+        pool.load(1, 0.5, 1, 0.0);
+        pool.load(1, 0.75, 1, 0.0);
+        assert_eq!(pool.count_for(1, 0.5), 2);
+        assert_eq!(pool.count_for(1, 0.75), 1);
+        assert_eq!(pool.count_for(0, 0.5), 0);
+    }
+
+    #[test]
+    fn total_vram_sums() {
+        let mut pool = InstancePool::new();
+        pool.load(0, 1.0, 100, 0.0);
+        pool.load(1, 1.0, 250, 0.0);
+        assert_eq!(pool.total_vram(), 350);
+    }
+}

@@ -1,0 +1,33 @@
+//! The paper's system contribution: hierarchical scheduling for slimmable
+//! multi-server inference.
+//!
+//! * [`request`] — request/block types keyed by `(segment, width, w_prev)`
+//!   exactly as Algorithm 1's queue entries.
+//! * [`queue`] — the keyed FIFO: batches are formed from the head's key.
+//! * [`instance`] — loaded model instances (segment, width, busy, t_last)
+//!   with best-fit lookup.
+//! * [`greedy`] — Algorithm 1: best-fit dispatch, CANLOAD-guarded
+//!   opportunistic scale-up, idle offload.
+//! * [`router`] — the global dispatch layer: Random (Table III baseline),
+//!   RoundRobin / LeastLoaded (algorithmic comparators), and the PPO
+//!   router (Tables IV–V).
+//! * [`telemetry`] — eq. 1's state vector + run-wide sampling.
+//! * [`engine`] — the discrete-event multi-server loop binding workload,
+//!   router, per-server greedy schedulers and simulated devices; produces
+//!   the Tables III–V metrics.
+
+pub mod engine;
+pub mod greedy;
+pub mod instance;
+pub mod queue;
+pub mod request;
+pub mod router;
+pub mod telemetry;
+
+pub use engine::{Engine, RunOutcome};
+pub use greedy::GreedyScheduler;
+pub use instance::{Instance, InstancePool};
+pub use queue::KeyedFifo;
+pub use request::{wkey, BatchKey, Request};
+pub use router::{Decision, Router};
+pub use telemetry::TelemetrySnapshot;

@@ -1,0 +1,242 @@
+//! The keyed FIFO of Algorithm 1.
+//!
+//! A single FIFO holds `(request, granted_width)` entries; batches are
+//! always formed from the *head's* key — the scheduler scans forward
+//! collecting up to `B_max` requests whose key matches the head, leaving
+//! everything else in order. `requeue_front` restores a batch when no
+//! instance can serve it (Algorithm 1 line 9).
+
+use std::collections::VecDeque;
+
+use super::request::{BatchKey, Request};
+
+/// Queue entry: a request plus the width the router granted it.
+#[derive(Clone, Debug)]
+pub struct Queued {
+    pub req: Request,
+    pub width: f64,
+}
+
+impl Queued {
+    pub fn key(&self) -> BatchKey {
+        self.req.key_with(self.width)
+    }
+}
+
+/// FIFO with batch-by-head-key extraction.
+#[derive(Clone, Debug, Default)]
+pub struct KeyedFifo {
+    items: VecDeque<Queued>,
+}
+
+impl KeyedFifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn push_back(&mut self, q: Queued) {
+        self.items.push_back(q);
+    }
+
+    /// Key of the FIFO head (Algorithm 1 line 3: "peek head key").
+    pub fn head_key(&self) -> Option<BatchKey> {
+        self.items.front().map(Queued::key)
+    }
+
+    /// Pop up to `b_max` entries matching the head's key, preserving the
+    /// relative order of everything else.
+    ///
+    /// Fast path (§Perf): blocks are usually enqueued contiguously, so
+    /// when the matching entries form a prefix (followed by no further
+    /// matches, or the batch is already full) we `drain` the prefix
+    /// instead of rebuilding the queue.
+    pub fn pop_batch(&mut self, b_max: usize) -> Vec<Queued> {
+        let Some(key) = self.head_key() else {
+            return Vec::new();
+        };
+        // length of the matching contiguous prefix (≤ b_max)
+        let mut prefix = 0usize;
+        for q in self.items.iter() {
+            if prefix < b_max && q.key() == key {
+                prefix += 1;
+            } else {
+                break;
+            }
+        }
+        let full = prefix == b_max;
+        let more_matches_later =
+            !full && self.items.iter().skip(prefix).any(|q| q.key() == key);
+        if full || !more_matches_later {
+            return self.items.drain(..prefix).collect();
+        }
+        // slow path: matches are scattered — rebuild preserving order
+        let mut batch = Vec::new();
+        let mut rest = VecDeque::with_capacity(self.items.len());
+        while let Some(q) = self.items.pop_front() {
+            if batch.len() < b_max && q.key() == key {
+                batch.push(q);
+            } else {
+                rest.push_back(q);
+            }
+        }
+        self.items = rest;
+        batch
+    }
+
+    /// Put a batch back at the front (keeps batch order).
+    pub fn requeue_front(&mut self, batch: Vec<Queued>) {
+        for q in batch.into_iter().rev() {
+            self.items.push_front(q);
+        }
+    }
+
+    /// Queue length per segment (telemetry).
+    pub fn len_by_segment(&self, num_segments: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; num_segments];
+        for q in &self.items {
+            if q.req.seg < num_segments {
+                counts[q.req.seg] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Oldest enqueue timestamp (age-based overload detection).
+    pub fn oldest_enqueue(&self) -> Option<f64> {
+        self.items.front().map(|q| q.req.enqueued_at)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Queued> {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utilx::Rng;
+
+    fn q(id: u64, seg: usize, width: f64, w_prev: f64) -> Queued {
+        let mut req = Request::new(id, id as f64, width);
+        req.seg = seg;
+        req.w_prev = w_prev;
+        Queued { req, width }
+    }
+
+    #[test]
+    fn batch_takes_only_head_key_up_to_bmax() {
+        let mut fifo = KeyedFifo::new();
+        fifo.push_back(q(0, 0, 0.5, 1.0));
+        fifo.push_back(q(1, 1, 0.5, 0.5)); // different seg
+        fifo.push_back(q(2, 0, 0.5, 1.0));
+        fifo.push_back(q(3, 0, 0.25, 1.0)); // different width
+        fifo.push_back(q(4, 0, 0.5, 1.0));
+
+        let batch = fifo.pop_batch(10);
+        assert_eq!(
+            batch.iter().map(|x| x.req.id).collect::<Vec<_>>(),
+            vec![0, 2, 4]
+        );
+        // remaining order preserved
+        assert_eq!(
+            fifo.iter().map(|x| x.req.id).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+    }
+
+    #[test]
+    fn bmax_limits_batch() {
+        let mut fifo = KeyedFifo::new();
+        for i in 0..6 {
+            fifo.push_back(q(i, 0, 1.0, 1.0));
+        }
+        let batch = fifo.pop_batch(4);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(fifo.len(), 2);
+        // next batch picks up the remainder in order
+        let batch2 = fifo.pop_batch(4);
+        assert_eq!(
+            batch2.iter().map(|x| x.req.id).collect::<Vec<_>>(),
+            vec![4, 5]
+        );
+    }
+
+    #[test]
+    fn requeue_front_restores_order() {
+        let mut fifo = KeyedFifo::new();
+        for i in 0..4 {
+            fifo.push_back(q(i, 0, 1.0, 1.0));
+        }
+        let batch = fifo.pop_batch(2);
+        fifo.requeue_front(batch);
+        assert_eq!(
+            fifo.iter().map(|x| x.req.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+    }
+
+    #[test]
+    fn empty_fifo_behaviour() {
+        let mut fifo = KeyedFifo::new();
+        assert!(fifo.head_key().is_none());
+        assert!(fifo.pop_batch(8).is_empty());
+        assert!(fifo.is_empty());
+    }
+
+    #[test]
+    fn len_by_segment_counts() {
+        let mut fifo = KeyedFifo::new();
+        fifo.push_back(q(0, 0, 1.0, 1.0));
+        fifo.push_back(q(1, 2, 1.0, 1.0));
+        fifo.push_back(q(2, 2, 0.5, 1.0));
+        assert_eq!(fifo.len_by_segment(4), vec![1, 0, 2, 0]);
+    }
+
+    #[test]
+    fn property_pop_batch_is_conservative() {
+        // pop_batch + remainder always partitions the original multiset,
+        // batch is key-homogeneous and starts with the old head.
+        crate::utilx::prop::check("fifo-partition", 50, |rng: &mut Rng| {
+            let mut fifo = KeyedFifo::new();
+            let n = rng.index(30) + 1;
+            let mut ids = Vec::new();
+            for i in 0..n {
+                let seg = rng.index(4);
+                let w = [0.25, 0.5, 0.75, 1.0][rng.index(4)];
+                let wp = [0.25, 0.5, 0.75, 1.0][rng.index(4)];
+                fifo.push_back(q(i as u64, seg, w, wp));
+                ids.push(i as u64);
+            }
+            let head = fifo.head_key().unwrap();
+            let b_max = rng.index(8) + 1;
+            let batch = fifo.pop_batch(b_max);
+            if batch.is_empty() {
+                return Err("batch must be non-empty when fifo non-empty".into());
+            }
+            if batch[0].req.id != ids[0] {
+                return Err("head must open the batch".into());
+            }
+            if !batch.iter().all(|x| x.key() == head) {
+                return Err("batch not key-homogeneous".into());
+            }
+            if batch.len() > b_max {
+                return Err("batch exceeds b_max".into());
+            }
+            let mut seen: Vec<u64> = batch.iter().map(|x| x.req.id).collect();
+            seen.extend(fifo.iter().map(|x| x.req.id));
+            seen.sort_unstable();
+            if seen != ids {
+                return Err("requests lost or duplicated".into());
+            }
+            Ok(())
+        });
+    }
+}

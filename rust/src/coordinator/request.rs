@@ -1,0 +1,161 @@
+//! Request and batch-key types.
+//!
+//! A request is one image working its way through the four SlimResNet
+//! segments. At any moment it sits in some queue waiting for its *current*
+//! segment to execute; Algorithm 1 keys it by `(s, w_req, w_prev)` —
+//! segment index, requested width, and the width the previous segment
+//! actually ran at (which determines the input-side FLOPs).
+
+use crate::model::NUM_SEGMENTS;
+
+/// Quantize a width ratio for use in hashable keys (0.25 -> 25).
+pub fn wkey(w: f64) -> u16 {
+    (w * 100.0).round() as u16
+}
+
+/// Batch compatibility key: requests sharing this key can be batched onto
+/// one instance (paper: k = (s, w_req, w_prev)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BatchKey {
+    pub seg: usize,
+    pub w: u16,
+    pub w_prev: u16,
+}
+
+impl BatchKey {
+    pub fn new(seg: usize, w: f64, w_prev: f64) -> Self {
+        BatchKey { seg, w: wkey(w), w_prev: wkey(w_prev) }
+    }
+
+    pub fn width(&self) -> f64 {
+        self.w as f64 / 100.0
+    }
+
+    pub fn width_prev(&self) -> f64 {
+        self.w_prev as f64 / 100.0
+    }
+}
+
+/// One inference request (an image traversing all four segments).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Wall arrival time at the leader.
+    pub arrival: f64,
+    /// Width the client asked for (minimum acceptable).
+    pub w_req: f64,
+    /// Segment the request currently needs (0..4).
+    pub seg: usize,
+    /// Width the previous segment executed at (1.0 before seg 0).
+    pub w_prev: f64,
+    /// Width actually used per segment (filled as segments complete).
+    pub widths_used: [f64; NUM_SEGMENTS],
+    /// When the request entered the current segment's local queue.
+    pub enqueued_at: f64,
+    /// When the router dispatched the current block (for block latency).
+    pub routed_at: f64,
+    /// Server that executed the previous segment (for link-cost modeling).
+    pub last_server: Option<usize>,
+    /// Tag of the routed block this request currently belongs to.
+    pub block_tag: u64,
+}
+
+impl Request {
+    pub fn new(id: u64, arrival: f64, w_req: f64) -> Self {
+        Request {
+            id,
+            arrival,
+            w_req,
+            seg: 0,
+            w_prev: 1.0,
+            widths_used: [0.0; NUM_SEGMENTS],
+            enqueued_at: arrival,
+            routed_at: arrival,
+            last_server: None,
+            block_tag: 0,
+        }
+    }
+
+    /// Key of the segment execution this request currently waits for,
+    /// given the width the router granted.
+    pub fn key_with(&self, width: f64) -> BatchKey {
+        BatchKey::new(self.seg, width, self.w_prev)
+    }
+
+    /// Record completion of the current segment and advance. Returns true
+    /// while more segments remain.
+    pub fn advance(&mut self, executed_width: f64, now: f64, server: usize) -> bool {
+        self.widths_used[self.seg] = executed_width;
+        self.w_prev = executed_width;
+        self.last_server = Some(server);
+        self.seg += 1;
+        self.enqueued_at = now;
+        self.seg < NUM_SEGMENTS
+    }
+
+    /// Whether every segment has executed.
+    pub fn is_complete(&self) -> bool {
+        self.seg >= NUM_SEGMENTS
+    }
+
+    /// The 4-width tuple (only meaningful once complete).
+    pub fn width_tuple(&self) -> [f64; NUM_SEGMENTS] {
+        self.widths_used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wkey_quantizes_the_width_set() {
+        assert_eq!(wkey(0.25), 25);
+        assert_eq!(wkey(0.50), 50);
+        assert_eq!(wkey(0.75), 75);
+        assert_eq!(wkey(1.00), 100);
+    }
+
+    #[test]
+    fn batch_key_roundtrip() {
+        let k = BatchKey::new(2, 0.75, 0.5);
+        assert_eq!(k.seg, 2);
+        assert_eq!(k.width(), 0.75);
+        assert_eq!(k.width_prev(), 0.5);
+    }
+
+    #[test]
+    fn keys_equal_iff_same_triple() {
+        assert_eq!(BatchKey::new(1, 0.5, 1.0), BatchKey::new(1, 0.5, 1.0));
+        assert_ne!(BatchKey::new(1, 0.5, 1.0), BatchKey::new(1, 0.5, 0.5));
+        assert_ne!(BatchKey::new(1, 0.5, 1.0), BatchKey::new(2, 0.5, 1.0));
+        assert_ne!(BatchKey::new(1, 0.5, 1.0), BatchKey::new(1, 0.75, 1.0));
+    }
+
+    #[test]
+    fn request_lifecycle_through_all_segments() {
+        let mut r = Request::new(7, 1.0, 0.5);
+        assert_eq!(r.seg, 0);
+        assert_eq!(r.w_prev, 1.0);
+        assert!(!r.is_complete());
+
+        assert!(r.advance(0.5, 1.1, 0));
+        assert_eq!(r.seg, 1);
+        assert_eq!(r.w_prev, 0.5);
+        assert_eq!(r.last_server, Some(0));
+
+        assert!(r.advance(0.75, 1.2, 2));
+        assert!(r.advance(0.25, 1.3, 1));
+        assert!(!r.advance(1.0, 1.4, 0)); // last segment
+        assert!(r.is_complete());
+        assert_eq!(r.width_tuple(), [0.5, 0.75, 0.25, 1.0]);
+    }
+
+    #[test]
+    fn key_with_uses_current_state() {
+        let mut r = Request::new(1, 0.0, 0.25);
+        assert_eq!(r.key_with(0.5), BatchKey::new(0, 0.5, 1.0));
+        r.advance(0.5, 0.1, 0);
+        assert_eq!(r.key_with(0.25), BatchKey::new(1, 0.25, 0.5));
+    }
+}

@@ -1,0 +1,320 @@
+//! Global routing policies.
+//!
+//! The router is the top of the hierarchy: given the eq. 1 telemetry
+//! snapshot and the FIFO head, it picks `(server, width, micro-batch
+//! group)` — the factored action of eq. 2. The greedy executor then
+//! realizes the decision locally. Implementations:
+//!
+//! * [`RandomRouter`] — the paper's Table III baseline (uniform random
+//!   task distribution).
+//! * [`RoundRobinRouter`] — classic algorithmic comparator.
+//! * [`LeastLoadedRouter`] — greedy global comparator (min queue).
+//! * `ppo::PpoRouter` (in the [`crate::ppo`] module) — the learned policy
+//!   of Tables IV–V; it implements this same trait so every experiment
+//!   driver is router-agnostic.
+
+use crate::utilx::Rng;
+
+use super::telemetry::TelemetrySnapshot;
+
+/// A routing decision for the next block (eq. 2's factored action).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    pub server: usize,
+    pub width: f64,
+    /// Micro-batch group size: how many head requests ride this decision.
+    pub group: usize,
+    /// Correlation tag echoed in feedback (rollout bookkeeping).
+    pub tag: u64,
+}
+
+/// Post-hoc outcome of a routed block (reward ingredients, eq. 7).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockFeedback {
+    pub tag: u64,
+    /// Accuracy prior p̃_acc ∈ [0,1] of the block's width tuple.
+    pub acc_prior_norm: f64,
+    /// End-to-end block latency L_t (s).
+    pub latency_s: f64,
+    /// Block energy E_t = P̄_t · L_t (J).
+    pub energy_j: f64,
+    /// Var of normalized per-server utilizations at completion.
+    pub util_variance: f64,
+}
+
+/// Routing policy interface (sim and real serving share it).
+pub trait Router: Send {
+    fn name(&self) -> &'static str;
+
+    /// Choose (server, width, group) for the FIFO head.
+    fn route(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        head_w_req: f64,
+        head_seg: usize,
+        rng: &mut Rng,
+    ) -> Decision;
+
+    /// Outcome of an earlier decision (ignored by stateless routers).
+    fn feedback(&mut self, _fb: &BlockFeedback) {}
+
+    /// Called when the run drains (learning routers flush updates).
+    fn end_of_run(&mut self) {}
+}
+
+impl Router for Box<dyn Router> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+    fn route(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        head_w_req: f64,
+        head_seg: usize,
+        rng: &mut Rng,
+    ) -> Decision {
+        (**self).route(snap, head_w_req, head_seg, rng)
+    }
+    fn feedback(&mut self, fb: &BlockFeedback) {
+        (**self).feedback(fb)
+    }
+    fn end_of_run(&mut self) {
+        (**self).end_of_run()
+    }
+}
+
+fn snap_width_up(widths: &[f64], w_req: f64) -> f64 {
+    widths
+        .iter()
+        .cloned()
+        .filter(|w| *w >= w_req - 1e-9)
+        .fold(f64::INFINITY, f64::min)
+        .min(widths.iter().cloned().fold(0.0, f64::max))
+}
+
+/// Table III baseline: uniformly random server; width honors the request
+/// (or is uniformly random when `randomize_width`); fixed group.
+pub struct RandomRouter {
+    pub widths: Vec<f64>,
+    pub randomize_width: bool,
+    pub group: usize,
+    next_tag: u64,
+}
+
+impl RandomRouter {
+    pub fn new(widths: Vec<f64>, randomize_width: bool, group: usize) -> Self {
+        RandomRouter { widths, randomize_width, group, next_tag: 0 }
+    }
+}
+
+impl Router for RandomRouter {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn route(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        head_w_req: f64,
+        _head_seg: usize,
+        rng: &mut Rng,
+    ) -> Decision {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let width = if self.randomize_width {
+            *rng.choice(&self.widths)
+        } else {
+            snap_width_up(&self.widths, head_w_req)
+        };
+        Decision {
+            server: rng.index(snap.servers.len().max(1)),
+            width,
+            group: self.group,
+            tag,
+        }
+    }
+}
+
+/// Strict round-robin over servers.
+pub struct RoundRobinRouter {
+    pub widths: Vec<f64>,
+    pub group: usize,
+    cursor: usize,
+    next_tag: u64,
+}
+
+impl RoundRobinRouter {
+    pub fn new(widths: Vec<f64>, group: usize) -> Self {
+        RoundRobinRouter { widths, group, cursor: 0, next_tag: 0 }
+    }
+}
+
+impl Router for RoundRobinRouter {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        head_w_req: f64,
+        _head_seg: usize,
+        _rng: &mut Rng,
+    ) -> Decision {
+        let n = snap.servers.len().max(1);
+        let server = self.cursor % n;
+        self.cursor = (self.cursor + 1) % n;
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        Decision {
+            server,
+            width: snap_width_up(&self.widths, head_w_req),
+            group: self.group,
+            tag,
+        }
+    }
+}
+
+/// Greedy global comparator: route to the server minimizing a load score
+/// (queue length + utilization), widen groups under backlog.
+pub struct LeastLoadedRouter {
+    pub widths: Vec<f64>,
+    pub max_group: usize,
+    next_tag: u64,
+}
+
+impl LeastLoadedRouter {
+    pub fn new(widths: Vec<f64>, max_group: usize) -> Self {
+        LeastLoadedRouter { widths, max_group, next_tag: 0 }
+    }
+}
+
+impl Router for LeastLoadedRouter {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        head_w_req: f64,
+        _head_seg: usize,
+        _rng: &mut Rng,
+    ) -> Decision {
+        let server = snap
+            .servers
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                let sa = a.queue_len as f64 + a.util_pct / 25.0;
+                let sb = b.queue_len as f64 + b.util_pct / 25.0;
+                sa.partial_cmp(&sb).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let group = if snap.fifo_len > 8 { self.max_group } else { 1 };
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        Decision {
+            server,
+            width: snap_width_up(&self.widths, head_w_req),
+            group,
+            tag,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::telemetry::ServerTelemetry;
+
+    fn snap(queues: &[usize], utils: &[f64]) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            fifo_len: 20,
+            done_count: 0,
+            total_requests: 100,
+            servers: queues
+                .iter()
+                .zip(utils)
+                .map(|(&q, &u)| ServerTelemetry {
+                    queue_len: q,
+                    power_w: 100.0,
+                    util_pct: u,
+                    mem_util: 0.1,
+                    instances: 1,
+                })
+                .collect(),
+        }
+    }
+
+    const W: [f64; 4] = [0.25, 0.5, 0.75, 1.0];
+
+    #[test]
+    fn random_router_covers_all_servers() {
+        let mut r = RandomRouter::new(W.to_vec(), false, 4);
+        let mut rng = Rng::new(1);
+        let s = snap(&[0, 0, 0], &[0.0, 0.0, 0.0]);
+        let mut seen = [false; 3];
+        for _ in 0..100 {
+            let d = r.route(&s, 0.5, 0, &mut rng);
+            seen[d.server] = true;
+            assert_eq!(d.width, 0.5); // honors request
+            assert_eq!(d.group, 4);
+        }
+        assert_eq!(seen, [true; 3]);
+    }
+
+    #[test]
+    fn random_router_randomizes_width_when_asked() {
+        let mut r = RandomRouter::new(W.to_vec(), true, 1);
+        let mut rng = Rng::new(2);
+        let s = snap(&[0], &[0.0]);
+        let mut widths = std::collections::BTreeSet::new();
+        for _ in 0..100 {
+            let d = r.route(&s, 0.25, 0, &mut rng);
+            widths.insert((d.width * 100.0) as u32);
+        }
+        assert_eq!(widths.len(), 4);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = RoundRobinRouter::new(W.to_vec(), 1);
+        let mut rng = Rng::new(3);
+        let s = snap(&[0, 0, 0], &[0.0, 0.0, 0.0]);
+        let servers: Vec<usize> =
+            (0..6).map(|_| r.route(&s, 1.0, 0, &mut rng).server).collect();
+        assert_eq!(servers, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_queue_and_widens_group() {
+        let mut r = LeastLoadedRouter::new(W.to_vec(), 16);
+        let mut rng = Rng::new(4);
+        let s = snap(&[9, 2, 7], &[50.0, 50.0, 50.0]);
+        let d = r.route(&s, 0.75, 1, &mut rng);
+        assert_eq!(d.server, 1);
+        assert_eq!(d.group, 16); // fifo_len 20 > 8
+        // utilization tie-breaks queues
+        let s2 = snap(&[3, 3], &[95.0, 10.0]);
+        assert_eq!(r.route(&s2, 0.75, 1, &mut rng).server, 1);
+    }
+
+    #[test]
+    fn snap_width_up_handles_overflow() {
+        assert_eq!(snap_width_up(&W, 0.6), 0.75);
+        assert_eq!(snap_width_up(&W, 1.0), 1.0);
+        assert_eq!(snap_width_up(&W, 2.0), 1.0); // clamps to widest
+    }
+
+    #[test]
+    fn tags_are_unique_and_increasing() {
+        let mut r = RandomRouter::new(W.to_vec(), false, 1);
+        let mut rng = Rng::new(5);
+        let s = snap(&[0], &[0.0]);
+        let t0 = r.route(&s, 1.0, 0, &mut rng).tag;
+        let t1 = r.route(&s, 1.0, 0, &mut rng).tag;
+        assert!(t1 > t0);
+    }
+}

@@ -1,0 +1,171 @@
+//! Telemetry: eq. 1's compact state vector and run-wide sampling.
+//!
+//! At scheduling step t the router sees
+//! `s_t = [q_fifo, c_done, {(q^i, P^i, U^i)}_{i=1..N}]` — global FIFO
+//! length and completion count plus per-server queue length, power draw
+//! and GPU utilization. `TelemetrySnapshot::to_state_vector` normalizes
+//! these into the PPO observation; `TelemetryLog` samples the same values
+//! on a fixed tick for the GPU-variance metric (Tables III–V) and the
+//! figure regenerators.
+
+use crate::metrics::Summary;
+
+/// Per-server live telemetry.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerTelemetry {
+    pub queue_len: usize,
+    pub power_w: f64,
+    pub util_pct: f64,
+    pub mem_util: f64,
+    pub instances: usize,
+}
+
+/// Full cluster snapshot at one scheduling step (eq. 1).
+#[derive(Clone, Debug, Default)]
+pub struct TelemetrySnapshot {
+    pub fifo_len: usize,
+    pub done_count: u64,
+    pub total_requests: usize,
+    pub servers: Vec<ServerTelemetry>,
+}
+
+impl TelemetrySnapshot {
+    /// State dimension for N servers: 2 global + 3 per server.
+    pub fn state_dim(n_servers: usize) -> usize {
+        2 + 3 * n_servers
+    }
+
+    /// Normalized observation vector for the PPO router.
+    pub fn to_state_vector(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(Self::state_dim(self.servers.len()));
+        v.push((self.fifo_len as f64 / 64.0).min(4.0));
+        v.push(self.done_count as f64 / (self.total_requests.max(1) as f64));
+        for s in &self.servers {
+            v.push((s.queue_len as f64 / 64.0).min(4.0));
+            v.push(s.power_w / 300.0);
+            v.push(s.util_pct / 100.0);
+        }
+        v
+    }
+
+    /// Variance of normalized utilizations — eq. 7's imbalance penalty and
+    /// the "GPU Var" row of Tables III–V.
+    pub fn util_variance(&self) -> f64 {
+        if self.servers.is_empty() {
+            return 0.0;
+        }
+        let us: Vec<f64> = self.servers.iter().map(|s| s.util_pct / 100.0).collect();
+        let mean = us.iter().sum::<f64>() / us.len() as f64;
+        us.iter().map(|u| (u - mean) * (u - mean)).sum::<f64>() / us.len() as f64
+    }
+
+    /// Mean power across servers (the paper's E_t = P̄_t · L_t).
+    pub fn mean_power_w(&self) -> f64 {
+        if self.servers.is_empty() {
+            return 0.0;
+        }
+        self.servers.iter().map(|s| s.power_w).sum::<f64>() / self.servers.len() as f64
+    }
+}
+
+/// Periodic sampling log: feeds GPU-variance statistics and the Fig 1–3
+/// series.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetryLog {
+    pub samples: usize,
+    pub util_variance: Summary,
+    pub per_server_util: Vec<Summary>,
+    pub per_server_mem: Vec<Summary>,
+}
+
+impl TelemetryLog {
+    pub fn new(n_servers: usize) -> Self {
+        TelemetryLog {
+            samples: 0,
+            util_variance: Summary::default(),
+            per_server_util: vec![Summary::default(); n_servers],
+            per_server_mem: vec![Summary::default(); n_servers],
+        }
+    }
+
+    pub fn record(&mut self, snap: &TelemetrySnapshot) {
+        self.samples += 1;
+        self.util_variance.record(snap.util_variance());
+        for (i, s) in snap.servers.iter().enumerate() {
+            if i < self.per_server_util.len() {
+                self.per_server_util[i].record(s.util_pct);
+                self.per_server_mem[i].record(s.mem_util);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(utils: &[f64]) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            fifo_len: 10,
+            done_count: 50,
+            total_requests: 100,
+            servers: utils
+                .iter()
+                .map(|&u| ServerTelemetry {
+                    queue_len: 5,
+                    power_w: 100.0 + u,
+                    util_pct: u,
+                    mem_util: 0.3,
+                    instances: 2,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn state_vector_dimension_and_normalization() {
+        let s = snap(&[50.0, 80.0, 20.0]);
+        let v = s.to_state_vector();
+        assert_eq!(v.len(), TelemetrySnapshot::state_dim(3));
+        assert!(v.iter().all(|x| x.is_finite()));
+        // util entries normalized to [0,1]
+        assert!((v[4] - 0.5).abs() < 1e-12);
+        assert!((v[7] - 0.8).abs() < 1e-12);
+        assert!((v[10] - 0.2).abs() < 1e-12);
+        // done fraction
+        assert!((v[1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn util_variance_zero_when_balanced() {
+        assert!(snap(&[60.0, 60.0, 60.0]).util_variance() < 1e-15);
+        let v = snap(&[0.0, 100.0, 50.0]).util_variance();
+        // var of {0, 1, 0.5} = 0.1666…
+        assert!((v - 1.0 / 6.0).abs() < 1e-9, "{v}");
+    }
+
+    #[test]
+    fn mean_power() {
+        let s = snap(&[0.0, 100.0]);
+        assert!((s.mean_power_w() - 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_accumulates() {
+        let mut log = TelemetryLog::new(2);
+        log.record(&snap(&[10.0, 90.0]));
+        log.record(&snap(&[50.0, 50.0]));
+        assert_eq!(log.samples, 2);
+        assert!(log.util_variance.mean() > 0.0);
+        assert!((log.per_server_util[0].mean() - 30.0).abs() < 1e-9);
+        assert!((log.per_server_util[1].mean() - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_clamp_keeps_state_bounded() {
+        let mut s = snap(&[50.0]);
+        s.fifo_len = 100_000;
+        let v = s.to_state_vector();
+        assert!(v[0] <= 4.0);
+    }
+}

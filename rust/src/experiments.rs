@@ -1,0 +1,228 @@
+//! Experiment drivers shared by the CLI, the examples, and every
+//! table/figure bench — one function per paper experiment so the numbers
+//! printed by `cargo bench`, `repro tables` and EXPERIMENTS.md all come
+//! from identical code paths.
+
+use crate::config::{Config, RewardCfg};
+use crate::coordinator::router::RandomRouter;
+use crate::coordinator::{Engine, RunOutcome};
+use crate::ppo::PpoRouter;
+
+/// Standard evaluation configuration (the paper's 3-GPU cluster) with a
+/// chosen request count.
+pub fn paper_cluster_cfg(total_requests: usize, seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.workload.total_requests = total_requests;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Table III: greedy executors + uniformly random routing (and random
+/// width selection — "purely randomized task distribution").
+pub fn run_random_baseline(cfg: &Config) -> RunOutcome {
+    let router = RandomRouter::new(cfg.scheduler.widths.clone(), true, 8);
+    Engine::new(cfg.clone(), router).run()
+}
+
+/// Train a PPO router online against the simulated cluster for
+/// `episodes` workloads under the given reward weighting, then return it
+/// (still in training mode).
+pub fn train_ppo(cfg: &Config, reward: RewardCfg, episodes: usize) -> PpoRouter {
+    let mut ppo_cfg = cfg.ppo.clone();
+    ppo_cfg.reward = reward;
+    let mut router = PpoRouter::new(
+        cfg.devices.len(),
+        cfg.scheduler.widths.clone(),
+        ppo_cfg,
+        cfg.seed,
+    );
+    for ep in 0..episodes {
+        let mut episode_cfg = cfg.clone();
+        episode_cfg.seed = cfg.seed.wrapping_add(1 + ep as u64 * 7919);
+        let engine = Engine::new(episode_cfg, router);
+        let (_outcome, r) = engine.run_returning_router();
+        router = r;
+    }
+    router
+}
+
+/// Train, freeze, evaluate: the Tables IV/V protocol. Returns the frozen
+/// evaluation outcome plus the trained router (for checkpointing or
+/// policy inspection).
+pub fn run_ppo_experiment(
+    cfg: &Config,
+    reward: RewardCfg,
+    train_episodes: usize,
+) -> (RunOutcome, PpoRouter) {
+    let mut router = train_ppo(cfg, reward, train_episodes);
+    router.eval_mode();
+    let mut eval_cfg = cfg.clone();
+    eval_cfg.seed = cfg.seed.wrapping_add(0xEA1);
+    let (outcome, router) = Engine::new(eval_cfg, router).run_returning_router();
+    (outcome, router)
+}
+
+/// Train, then measure one episode with learning and exploration still
+/// on — the paper's online protocol: Table V's elevated latency/energy
+/// variance is explicitly attributed to "the scheduler's dynamic
+/// experimentation with different slimming ratios", i.e. a policy that
+/// keeps adapting while being measured.
+pub fn run_ppo_experiment_online(
+    cfg: &Config,
+    reward: RewardCfg,
+    train_episodes: usize,
+) -> (RunOutcome, PpoRouter) {
+    let router = train_ppo(cfg, reward, train_episodes.saturating_sub(1));
+    let mut eval_cfg = cfg.clone();
+    eval_cfg.seed = cfg.seed.wrapping_add(0xEA1);
+    let (outcome, router) = Engine::new(eval_cfg, router).run_returning_router();
+    (outcome, router)
+}
+
+/// Table IV: heavy latency/energy penalties (the "overfit" policy —
+/// converged and frozen, hence its tiny spread).
+pub fn run_table4(cfg: &Config, train_episodes: usize) -> (RunOutcome, PpoRouter) {
+    run_ppo_experiment(cfg, RewardCfg::overfit(), train_episodes)
+}
+
+/// Table V: balanced weighting, measured online (the "averaged" policy).
+pub fn run_table5(cfg: &Config, train_episodes: usize) -> (RunOutcome, PpoRouter) {
+    run_ppo_experiment_online(cfg, RewardCfg::balanced(), train_episodes)
+}
+
+/// Percentage change helper for EXPERIMENTS.md-style deltas.
+pub fn pct_change(from: f64, to: f64) -> f64 {
+    if from == 0.0 {
+        0.0
+    } else {
+        (to - from) / from * 100.0
+    }
+}
+
+// ---------------------------------------------------------------------
+// Figure regenerators (shared by `repro figures` and the fig benches)
+// ---------------------------------------------------------------------
+
+use crate::model::{ModelMeta, WIDTHS};
+use crate::sim::{profiles, SimDevice};
+
+/// Fig 1 sweep points (batch sizes) and utilization levels for Figs 2–3.
+pub const FIG1_BATCHES: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+pub const FIG23_UTILS: [f64; 9] =
+    [10.0, 30.0, 50.0, 70.0, 80.0, 90.0, 93.0, 96.0, 99.0];
+
+/// Fig 1 — GPU memory utilization (%) vs batch size, one column per
+/// width (RTX 2080 Ti). Row = [batch, w025, w050, w075, w100].
+pub fn fig1_rows() -> Vec<Vec<f64>> {
+    let meta = ModelMeta::default();
+    let dev = SimDevice::new(profiles::rtx2080ti());
+    FIG1_BATCHES
+        .iter()
+        .map(|&batch| {
+            let mut row = vec![batch as f64];
+            for &w in &WIDTHS {
+                let bytes: u64 = (0..4)
+                    .map(|s| meta.instance_vram_semantic(s, w, batch))
+                    .sum();
+                row.push(bytes as f64 / dev.cfg.vram_bytes as f64 * 100.0);
+            }
+            row
+        })
+        .collect()
+}
+
+/// One (latency s, power W) point of the Figs 2–3 sweep: a width-w
+/// 8-image batch through all four segments at pinned utilization.
+pub fn fig23_point(meta: &ModelMeta, util_pct: f64, w: f64) -> (f64, f64) {
+    let dev = SimDevice::new(profiles::rtx2080ti());
+    let flops: u64 = (0..4).map(|s| meta.seg_flops(s, w, w, 8)).sum();
+    let mem: u64 = (0..4)
+        .map(|s| (meta.seg_mem_bytes(s, 8) as f64 * w) as u64)
+        .sum();
+    let latency = dev.base_exec_time(flops, mem) * dev.congestion(util_pct);
+    let power = dev.cfg.idle_power_w
+        + (dev.cfg.max_power_w - dev.cfg.idle_power_w) * util_pct / 100.0;
+    (latency, power)
+}
+
+/// Fig 2 — energy (J) vs utilization. Row = [util, E(w) per width].
+pub fn fig2_rows() -> Vec<Vec<f64>> {
+    let meta = ModelMeta::default();
+    FIG23_UTILS
+        .iter()
+        .map(|&u| {
+            let mut row = vec![u];
+            for &w in &WIDTHS {
+                let (latency, power) = fig23_point(&meta, u, w);
+                row.push(power * latency);
+            }
+            row
+        })
+        .collect()
+}
+
+/// Fig 3 — batch latency (s) vs utilization. Row = [util, L(w) per width].
+pub fn fig3_rows() -> Vec<Vec<f64>> {
+    let meta = ModelMeta::default();
+    FIG23_UTILS
+        .iter()
+        .map(|&u| {
+            let mut row = vec![u];
+            for &w in &WIDTHS {
+                let (latency, _) = fig23_point(&meta, u, w);
+                row.push(latency);
+            }
+            row
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> Config {
+        // small but saturating enough to expose the trade-off
+        paper_cluster_cfg(1200, 42)
+    }
+
+    #[test]
+    fn baseline_saturates_the_cluster() {
+        let out = run_random_baseline(&quick_cfg());
+        assert_eq!(out.report.completed, 1200);
+        // the random baseline must be operating in the congested regime
+        // (mean block latency far above a single uncongested execution)
+        assert!(
+            out.report.latency.mean() > 0.2,
+            "baseline too fast: {}",
+            out.report.latency.mean()
+        );
+        assert!(out.report.accuracy_pct > 71.0 && out.report.accuracy_pct < 76.0);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "slow without --release; run `cargo test --release`")]
+    fn table4_overfit_collapses_to_slim_and_slashes_latency() {
+        let cfg = paper_cluster_cfg(2500, 42);
+        let baseline = run_random_baseline(&cfg);
+        let (ppo, router) = run_table4(&cfg, 8);
+        assert_eq!(ppo.report.completed, 2500);
+        // latency and energy crushed relative to baseline
+        let lat_red = pct_change(baseline.report.latency.mean(), ppo.report.latency.mean());
+        assert!(lat_red < -60.0, "latency reduction only {lat_red:.1}%");
+        // width histogram concentrates on slim widths
+        let total: u64 = ppo.width_histogram.iter().sum();
+        let slim_frac =
+            (ppo.width_histogram[0] + ppo.width_histogram[1]) as f64 / total as f64;
+        assert!(slim_frac > 0.6, "slim fraction {slim_frac}: {:?}", ppo.width_histogram);
+        // accuracy sinks toward the slimmest model's 70.3
+        assert!(ppo.report.accuracy_pct < baseline.report.accuracy_pct);
+        assert!(router.stats.updates > 0);
+    }
+
+    #[test]
+    fn pct_change_math() {
+        assert!((pct_change(8.98, 0.318) + 96.458).abs() < 0.01);
+        assert_eq!(pct_change(0.0, 5.0), 0.0);
+    }
+}

@@ -1,0 +1,43 @@
+//! # Slim Scheduler
+//!
+//! A reproduction of *"Slim Scheduler: A Runtime-Aware RL and Scheduler
+//! System for Efficient CNN Inference"* as a three-layer rust + JAX +
+//! Pallas stack (AOT via PJRT). Python authors and lowers the slimmable
+//! SlimResNet once (`make artifacts`); this crate is the entire serving
+//! system: the paper's greedy per-server scheduler (Algorithm 1), the PPO
+//! router (eq. 1–13), the heterogeneous GPU cluster simulator that stands
+//! in for the paper's 3-GPU testbed, and the PJRT runtime that executes
+//! the real compiled segments on CPU.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`utilx`] — dependency-free substrates: PCG RNG, JSON, CLI, property
+//!   testing (the offline crate cache has no rand/serde/clap/proptest).
+//! * [`config`] — typed configuration: cluster topology, scheduler knobs,
+//!   PPO hyper-parameters, workload spec.
+//! * [`metrics`] — streaming histograms / run summaries used by every
+//!   table and figure.
+//! * [`model`] — SlimResNet metadata: shapes, FLOP/VRAM cost model,
+//!   width-tuple accuracy prior (paper Tables I–II).
+//! * [`sim`] — virtual clock, GPU device model (Figs 1–3 dynamics),
+//!   WLAN link, workload generators, device profiles.
+//! * [`coordinator`] — keyed FIFO, greedy scheduler, routers
+//!   (Random/RoundRobin/LeastLoaded/PPO), telemetry, multi-server engine.
+//! * [`ppo`] — from-scratch MLP/Adam/factored-categorical PPO.
+//! * [`runtime`] — PJRT artifact loading and execution (the real
+//!   inference path; zero python at serve time).
+//! * [`benchx`] — mini statistical bench harness (criterion substitute).
+
+pub mod benchx;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod metrics;
+pub mod model;
+pub mod ppo;
+pub mod runtime;
+pub mod sim;
+pub mod utilx;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,293 @@
+//! `repro` — the Slim Scheduler CLI.
+//!
+//! Subcommands:
+//!   simulate   run one cluster experiment (choose --router / --reward)
+//!   tables     regenerate paper tables (I, II, III, IV, V)
+//!   figures    regenerate paper figures (1, 2, 3) as data series
+//!   train-ppo  train a PPO router, print learning curve, checkpoint it
+//!   accuracy   query the width-tuple accuracy prior
+//!   serve      real-inference smoke: route batches through PJRT CPU
+//!
+//! Examples:
+//!   repro simulate --router ppo --reward overfit --requests 5000
+//!   repro tables --which 4
+//!   repro figures --which 1
+//!   repro train-ppo --episodes 10 --out ppo.json
+
+use slim_scheduler::benchx::Table;
+use slim_scheduler::config::Config;
+use slim_scheduler::coordinator::router::{LeastLoadedRouter, RoundRobinRouter};
+use slim_scheduler::coordinator::Engine;
+use slim_scheduler::experiments;
+use slim_scheduler::model::{AccuracyPrior, ModelMeta, WIDTHS};
+use slim_scheduler::ppo::router_impl::width_marginal;
+use slim_scheduler::runtime::{HostTensor, SegmentExecutor};
+use slim_scheduler::utilx::{Args, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()
+        .describe("router", "random|round-robin|least-loaded|ppo (simulate)")
+        .describe("reward", "overfit|balanced (ppo reward preset)")
+        .describe("requests", "total requests in the workload")
+        .describe("rate", "mean arrival rate (req/s)")
+        .describe("episodes", "PPO training episodes")
+        .describe("seed", "rng seed")
+        .describe("which", "table/figure number to regenerate")
+        .describe("artifacts-dir", "AOT artifacts directory (serve)")
+        .describe("out", "output path (train-ppo checkpoint)");
+
+    if args.wants_help() {
+        print!("{}", args.help_text("repro <subcommand> [flags]"));
+        return Ok(());
+    }
+
+    match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("tables") => cmd_tables(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("train-ppo") => cmd_train_ppo(&args),
+        Some("accuracy") => cmd_accuracy(&args),
+        Some("serve") => cmd_serve(&args),
+        other => {
+            if let Some(name) = other {
+                eprintln!("unknown subcommand {name:?}");
+            }
+            print!("{}", args.help_text("repro <subcommand> [flags]"));
+            Ok(())
+        }
+    }
+}
+
+fn base_cfg(args: &Args) -> Config {
+    let mut cfg = Config::default();
+    cfg.apply_args(args);
+    cfg
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = base_cfg(args);
+    let router = args.str_or("router", "random");
+    println!(
+        "router={router} requests={} rate={}/s devices={:?}",
+        cfg.workload.total_requests, cfg.workload.rate_hz, cfg.devices
+    );
+    let outcome = match router.as_str() {
+        "random" => experiments::run_random_baseline(&cfg),
+        "round-robin" => Engine::new(
+            cfg.clone(),
+            RoundRobinRouter::new(cfg.scheduler.widths.clone(), 8),
+        )
+        .run(),
+        "least-loaded" => Engine::new(
+            cfg.clone(),
+            LeastLoadedRouter::new(cfg.scheduler.widths.clone(), 16),
+        )
+        .run(),
+        "ppo" => {
+            if let Some(path) = args.get("checkpoint") {
+                // serve a previously trained policy (no training)
+                let text = std::fs::read_to_string(path)?;
+                let json = slim_scheduler::utilx::Json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let mut router = slim_scheduler::ppo::PpoRouter::new(
+                    cfg.devices.len(),
+                    cfg.scheduler.widths.clone(),
+                    cfg.ppo.clone(),
+                    cfg.seed,
+                );
+                anyhow::ensure!(
+                    router.load_weights(&json),
+                    "checkpoint {path} does not match the policy shape"
+                );
+                router.eval_mode();
+                println!("loaded checkpoint {path}");
+                Engine::new(cfg.clone(), router).run()
+            } else {
+                let episodes = args.usize_or("episodes", 8);
+                let reward = cfg.ppo.reward; // preset + --alpha/... overrides
+                let (out, router) =
+                    experiments::run_ppo_experiment(&cfg, reward, episodes);
+                println!(
+                    "ppo: {} updates, final mean reward {:.3}",
+                    router.stats.updates,
+                    router.stats.reward_history.last().copied().unwrap_or(0.0)
+                );
+                out
+            }
+        }
+        other => anyhow::bail!("unknown router {other}"),
+    };
+    print!("{}", outcome.report.to_table());
+    println!(
+        "width histogram (0.25/0.50/0.75/1.00): {:?}",
+        outcome.width_histogram
+    );
+    println!(
+        "e2e latency: mean {:.1} ms  p99 {:.1} ms",
+        outcome.e2e_latency.mean() * 1e3,
+        outcome.e2e_latency.percentile(99.0) * 1e3
+    );
+    println!(
+        "sim duration {:.1}s, total energy {:.0} J",
+        outcome.sim_duration_s, outcome.total_energy_j
+    );
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> anyhow::Result<()> {
+    let which = args.str_or("which", "all");
+    let prior = AccuracyPrior::new();
+    if which == "1" || which == "all" {
+        let mut t = Table::new(
+            "Table I — SlimResNet Top-1 under uniform widths (prior)",
+            &["width", "top1_pct"],
+        );
+        for &w in &WIDTHS {
+            t.rowf(&[w, prior.lookup(&[w, w, w, w])], 2);
+        }
+        t.print();
+    }
+    if which == "2" || which == "all" {
+        let mut t = Table::new(
+            "Table II — Top-1 under randomized mixed widths (prior)",
+            &["w1", "w2", "w3", "w4", "top1_pct"],
+        );
+        for &(tuple, _) in &slim_scheduler::model::accuracy::MIXED_ACC {
+            t.rowf(
+                &[tuple[0], tuple[1], tuple[2], tuple[3], prior.lookup(&tuple)],
+                2,
+            );
+        }
+        t.print();
+    }
+    let cfg = base_cfg(args);
+    if which == "3" || which == "all" {
+        let out = experiments::run_random_baseline(&cfg);
+        print!("{}", out.report.to_table());
+    }
+    if which == "4" || which == "all" {
+        let episodes = args.usize_or("episodes", 10);
+        let (out, _) = experiments::run_table4(&cfg, episodes);
+        print!("{}", out.report.to_table());
+        println!("width histogram: {:?}", out.width_histogram);
+    }
+    if which == "5" || which == "all" {
+        let episodes = args.usize_or("episodes", 10);
+        let (out, _) = experiments::run_table5(&cfg, episodes);
+        print!("{}", out.report.to_table());
+        println!("width histogram: {:?}", out.width_histogram);
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let which = args.str_or("which", "all");
+    if which == "1" || which == "all" {
+        let mut t = Table::new(
+            "Fig 1 — GPU memory utilization (%) vs batch size (RTX 2080 Ti)",
+            &["batch", "w=0.25", "w=0.50", "w=0.75", "w=1.00"],
+        );
+        for row in experiments::fig1_rows() {
+            t.rowf(&row, 2);
+        }
+        t.print();
+    }
+    if which == "2" || which == "all" {
+        let mut t = Table::new(
+            "Fig 2 — energy (J) vs GPU utilization (RTX 2080 Ti)",
+            &["util_pct", "w=0.25", "w=0.50", "w=0.75", "w=1.00"],
+        );
+        for row in experiments::fig2_rows() {
+            t.rowf(&row, 3);
+        }
+        t.print();
+    }
+    if which == "3" || which == "all" {
+        let mut t = Table::new(
+            "Fig 3 — batch latency (s) vs GPU utilization (RTX 2080 Ti)",
+            &["util_pct", "w=0.25", "w=0.50", "w=0.75", "w=1.00"],
+        );
+        for row in experiments::fig3_rows() {
+            t.rowf(&row, 4);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_train_ppo(args: &Args) -> anyhow::Result<()> {
+    let cfg = base_cfg(args);
+    let episodes = args.usize_or("episodes", 10);
+    let reward = cfg.ppo.reward;
+    println!(
+        "training PPO ({episodes} episodes of {} requests)...",
+        cfg.workload.total_requests
+    );
+    let router = experiments::train_ppo(&cfg, reward, episodes);
+    println!("updates: {}", router.stats.updates);
+    let hist = &router.stats.reward_history;
+    for (i, r) in hist.iter().enumerate() {
+        if i % (hist.len() / 20).max(1) == 0 || i + 1 == hist.len() {
+            println!("  update {i:>4}: mean reward {r:+.4}");
+        }
+    }
+    let snap = slim_scheduler::coordinator::TelemetrySnapshot {
+        fifo_len: 8,
+        done_count: 0,
+        total_requests: cfg.workload.total_requests,
+        servers: (0..cfg.devices.len()).map(|_| Default::default()).collect(),
+    };
+    println!("width marginal @idle: {:?}", width_marginal(&router, &snap));
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, router.to_json().to_string_pretty())?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> anyhow::Result<()> {
+    let prior = AccuracyPrior::new();
+    let widths = args.f64_list_or("widths", &[1.0, 1.0, 1.0, 1.0]);
+    anyhow::ensure!(widths.len() == 4, "--widths needs 4 comma-separated values");
+    let tuple = [widths[0], widths[1], widths[2], widths[3]];
+    println!("prior top-1 for {tuple:?}: {:.2}%", prior.lookup(&tuple));
+    println!("normalized: {:.4}", prior.normalized(&tuple));
+    println!("mean over all tuples: {:.2}%", prior.mean_top1());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts-dir", "artifacts");
+    let batch = args.usize_or("batch", 4);
+    let mut ex = SegmentExecutor::new(&dir)?;
+    println!(
+        "artifacts: {} (widths {:?}, batches {:?})",
+        ex.index.artifacts.len(),
+        ex.index.widths,
+        ex.index.batches
+    );
+    let meta = ModelMeta::default();
+    let (inp, _) = meta.seg_io_shapes(0, batch);
+    let mut rng = Rng::new(args.u64_or("seed", 42));
+    let mut x = HostTensor::zeros(&inp);
+    for v in &mut x.data {
+        *v = rng.normal() as f32;
+    }
+    for &w in &WIDTHS {
+        let t0 = std::time::Instant::now();
+        let logits = ex.full_forward(&[w, w, w, w], &x)?;
+        let dt = t0.elapsed();
+        let top1 = logits.data[..meta.num_classes]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        println!(
+            "width {w:>4}: batch {batch} through 4 segments in {dt:?} \
+             (top-1 class of row 0: {top1})"
+        );
+    }
+    println!("executions: {}, compiles: {}", ex.executions, ex.pool.compiles);
+    Ok(())
+}

@@ -1,0 +1,247 @@
+//! SlimResNet metadata: segment shapes, the FLOP/VRAM cost model the
+//! simulator charges, and the width-tuple accuracy prior (paper
+//! Tables I–II). The formulas mirror `python/compile/model.py` exactly —
+//! an integration test cross-checks them against the AOT manifest.
+
+pub mod accuracy;
+
+pub use accuracy::AccuracyPrior;
+
+/// Number of backbone segments (paper: 4).
+pub const NUM_SEGMENTS: usize = 4;
+
+/// The slimming width set W.
+pub const WIDTHS: [f64; 4] = [0.25, 0.50, 0.75, 1.00];
+
+/// Static description of the exported SlimResNet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub img: usize,
+    pub in_ch: usize,
+    pub num_classes: usize,
+    pub base_channels: [usize; NUM_SEGMENTS],
+    pub widths: Vec<f64>,
+}
+
+impl Default for ModelMeta {
+    /// The paper-scale CIFAR backbone (matches `make_config("full")`).
+    fn default() -> Self {
+        ModelMeta {
+            img: 32,
+            in_ch: 3,
+            num_classes: 100,
+            base_channels: [32, 64, 128, 256],
+            widths: WIDTHS.to_vec(),
+        }
+    }
+}
+
+/// Active channels for a width ratio (ceil, same as python's c_active).
+pub fn c_active(c: usize, width: f64) -> usize {
+    (c as f64 * width).ceil() as usize
+}
+
+impl ModelMeta {
+    /// Spatial resolution of segment `seg`'s *output*.
+    pub fn seg_resolution(&self, seg: usize) -> usize {
+        if seg == 0 {
+            self.img
+        } else {
+            self.img >> seg
+        }
+    }
+
+    /// (input_shape, output_shape) of a segment at batch `b` (full-size
+    /// interface tensors — width does not change shapes).
+    pub fn seg_io_shapes(&self, seg: usize, b: usize) -> (Vec<usize>, Vec<usize>) {
+        assert!(seg < NUM_SEGMENTS);
+        let input = if seg == 0 {
+            vec![b, self.img, self.img, self.in_ch]
+        } else {
+            let r = self.seg_resolution(seg - 1);
+            vec![b, r, r, self.base_channels[seg - 1]]
+        };
+        let output = if seg == NUM_SEGMENTS - 1 {
+            vec![b, self.num_classes]
+        } else {
+            let r = self.seg_resolution(seg);
+            vec![b, r, r, self.base_channels[seg]]
+        };
+        (input, output)
+    }
+
+    /// Semantic FLOPs of one segment at (width, w_prev, batch) — the cost
+    /// the device simulator charges (mirrors python `segment_flops`).
+    pub fn seg_flops(&self, seg: usize, width: f64, w_prev: f64, b: usize) -> u64 {
+        assert!(seg < NUM_SEGMENTS);
+        let res_out = self.seg_resolution(seg);
+        let c = self.base_channels[seg];
+        let c_act = c_active(c, width);
+        let c_in = if seg == 0 {
+            self.in_ch
+        } else {
+            c_active(self.base_channels[seg - 1], w_prev)
+        };
+        let conv =
+            |ho: usize, wo: usize, k: usize, ci: usize, co: usize| -> u64 {
+                2 * (b * ho * wo * k * k * ci * co) as u64
+            };
+        let mut total = conv(res_out, res_out, 3, c_in, c_act);
+        total += 2 * conv(res_out, res_out, 3, c_act, c_act);
+        total += (10 * 4 * b * res_out * res_out * c_act) as u64;
+        if seg == NUM_SEGMENTS - 1 {
+            total += 2 * (b * c_act * self.num_classes) as u64;
+        }
+        total
+    }
+
+    /// f32 bytes of the full weight tensors of one segment — what an
+    /// instance pins in VRAM (mirrors python `segment_weight_bytes`).
+    pub fn seg_weight_bytes(&self, seg: usize) -> u64 {
+        assert!(seg < NUM_SEGMENTS);
+        let c = self.base_channels[seg];
+        let c_in = if seg == 0 { self.in_ch } else { self.base_channels[seg - 1] };
+        let mut floats = 3 * 3 * c_in * c; // stem/down conv
+        floats += 2 * (3 * 3 * c * c); // block convs
+        floats += 6 * c; // three GN (gamma, beta) pairs
+        if seg == NUM_SEGMENTS - 1 {
+            floats += c * self.num_classes + self.num_classes;
+        }
+        4 * floats as u64
+    }
+
+    /// Peak f32 activation working set (input + 2×output), mirrors python
+    /// `segment_activation_bytes`.
+    pub fn seg_activation_bytes(&self, seg: usize, b: usize) -> u64 {
+        let (inp, out) = self.seg_io_shapes(seg, b);
+        let p = |v: &[usize]| v.iter().product::<usize>() as u64;
+        4 * (p(&inp) + 2 * p(&out))
+    }
+
+    /// VRAM an instance of (seg, batch) pins: weights + activations.
+    pub fn instance_vram_bytes(&self, seg: usize, b: usize) -> u64 {
+        self.seg_weight_bytes(seg) + self.seg_activation_bytes(seg, b)
+    }
+
+    /// *Semantic* VRAM of a slimmed instance — what a real deployment
+    /// would pin: conv weights scale ~w² (both channel dims sliced),
+    /// activations ~w (channel slice). The simulator's CANLOAD budget and
+    /// the Fig 1 memory-utilization curves charge this; the CPU serving
+    /// path pins full-size buffers (interface convention, DESIGN.md §2).
+    pub fn instance_vram_semantic(&self, seg: usize, width: f64, b: usize) -> u64 {
+        let w2 = (width * width).max(1e-6);
+        (self.seg_weight_bytes(seg) as f64 * w2
+            + self.seg_activation_bytes(seg, b) as f64 * width) as u64
+    }
+
+    /// HBM/VRAM traffic of one segment execution (weights + in + out once),
+    /// for the roofline latency term.
+    pub fn seg_mem_bytes(&self, seg: usize, b: usize) -> u64 {
+        let (inp, out) = self.seg_io_shapes(seg, b);
+        let p = |v: &[usize]| v.iter().product::<usize>() as u64;
+        self.seg_weight_bytes(seg) + 4 * (p(&inp) + p(&out))
+    }
+
+    /// Nearest width in the width set (>= requested if possible — the
+    /// greedy best-fit semantics).
+    pub fn snap_width_up(&self, w_req: f64) -> f64 {
+        let mut best: Option<f64> = None;
+        for &w in &self.widths {
+            if w >= w_req - 1e-9 {
+                best = Some(best.map_or(w, |b: f64| b.min(w)));
+            }
+        }
+        best.unwrap_or_else(|| {
+            self.widths.iter().cloned().fold(0.0, f64::max)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_the_python_contract() {
+        let m = ModelMeta::default();
+        assert_eq!(m.seg_io_shapes(0, 4), (vec![4, 32, 32, 3], vec![4, 32, 32, 32]));
+        assert_eq!(m.seg_io_shapes(1, 1), (vec![1, 32, 32, 32], vec![1, 16, 16, 64]));
+        assert_eq!(m.seg_io_shapes(2, 2), (vec![2, 16, 16, 64], vec![2, 8, 8, 128]));
+        assert_eq!(m.seg_io_shapes(3, 1), (vec![1, 8, 8, 128], vec![1, 100]));
+    }
+
+    #[test]
+    fn c_active_matches_width_set() {
+        assert_eq!(c_active(32, 0.25), 8);
+        assert_eq!(c_active(32, 0.5), 16);
+        assert_eq!(c_active(256, 0.75), 192);
+        assert_eq!(c_active(256, 1.0), 256);
+    }
+
+    #[test]
+    fn flops_monotone_in_width_and_wprev() {
+        let m = ModelMeta::default();
+        for seg in 0..NUM_SEGMENTS {
+            let f: Vec<u64> =
+                WIDTHS.iter().map(|&w| m.seg_flops(seg, w, 1.0, 8)).collect();
+            assert!(f.windows(2).all(|p| p[0] < p[1]), "seg{seg}: {f:?}");
+        }
+        for seg in 1..NUM_SEGMENTS {
+            let f: Vec<u64> =
+                WIDTHS.iter().map(|&wp| m.seg_flops(seg, 0.5, wp, 8)).collect();
+            assert!(f.windows(2).all(|p| p[0] < p[1]), "seg{seg}: {f:?}");
+        }
+    }
+
+    #[test]
+    fn flops_linear_in_batch() {
+        let m = ModelMeta::default();
+        assert_eq!(
+            2 * m.seg_flops(1, 0.5, 0.5, 4),
+            m.seg_flops(1, 0.5, 0.5, 8)
+        );
+    }
+
+    #[test]
+    fn weight_bytes_reasonable() {
+        let m = ModelMeta::default();
+        // seg3 is the heaviest (two 256-channel convs + fc)
+        let w: Vec<u64> = (0..4).map(|s| m.seg_weight_bytes(s)).collect();
+        assert!(w[3] > w[2] && w[2] > w[1] && w[1] > w[0], "{w:?}");
+        // full model a few MB, not KB, not GB
+        let total: u64 = w.iter().sum();
+        assert!(total > 1 << 20 && total < 64 << 20, "{total}");
+    }
+
+    #[test]
+    fn vram_grows_with_batch() {
+        let m = ModelMeta::default();
+        assert!(m.instance_vram_bytes(0, 16) > m.instance_vram_bytes(0, 1));
+    }
+
+    #[test]
+    fn semantic_vram_monotone_in_width_and_below_full() {
+        let m = ModelMeta::default();
+        for seg in 0..NUM_SEGMENTS {
+            let v: Vec<u64> = WIDTHS
+                .iter()
+                .map(|&w| m.instance_vram_semantic(seg, w, 8))
+                .collect();
+            assert!(v.windows(2).all(|p| p[0] < p[1]), "seg{seg}: {v:?}");
+            assert!(v[3] <= m.instance_vram_bytes(seg, 8));
+            // quarter-width conv weights are ~16x smaller
+            assert!(v[0] < v[3] / 3, "seg{seg}: {v:?}");
+        }
+    }
+
+    #[test]
+    fn snap_width_up_best_fit() {
+        let m = ModelMeta::default();
+        assert_eq!(m.snap_width_up(0.25), 0.25);
+        assert_eq!(m.snap_width_up(0.3), 0.5);
+        assert_eq!(m.snap_width_up(0.75), 0.75);
+        assert_eq!(m.snap_width_up(0.9), 1.0);
+        // over the max snaps down to max (serve with the widest model)
+        assert_eq!(m.snap_width_up(1.5), 1.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Adam optimizer over MLP-shaped parameters (Kingma & Ba), with the
+//! bias-corrected moment estimates. Gradients arrive in an `Mlp`-shaped
+//! accumulator (see [`super::mlp::Mlp::zeros_like`]).
+
+use super::mlp::Mlp;
+
+/// Adam state (first/second moments mirror the parameter shapes).
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Mlp,
+    v: Mlp,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(params: &Mlp, lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: params.zeros_like(),
+            v: params.zeros_like(),
+            t: 0,
+        }
+    }
+
+    /// One Adam step: params ← params − lr·m̂/(√v̂+ε).
+    pub fn step(&mut self, params: &mut Mlp, grads: &Mlp) {
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let (beta1, beta2, eps, lr) = (self.beta1, self.beta2, self.eps, self.lr);
+
+        for l in 0..params.w.len() {
+            for i in 0..params.w[l].data.len() {
+                let g = grads.w[l].data[i];
+                let m = &mut self.m.w[l].data[i];
+                let v = &mut self.v.w[l].data[i];
+                *m = beta1 * *m + (1.0 - beta1) * g;
+                *v = beta2 * *v + (1.0 - beta2) * g * g;
+                let mhat = *m / b1t;
+                let vhat = *v / b2t;
+                params.w[l].data[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+            for i in 0..params.b[l].len() {
+                let g = grads.b[l][i];
+                let m = &mut self.m.b[l][i];
+                let v = &mut self.v.b[l][i];
+                *m = beta1 * *m + (1.0 - beta1) * g;
+                *v = beta2 * *v + (1.0 - beta2) * g * g;
+                let mhat = *m / b1t;
+                let vhat = *v / b2t;
+                params.b[l][i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utilx::Rng;
+
+    /// Minimize ||Wx - y||² over a fixed (x, y) pair; Adam should reach
+    /// near-zero loss quickly on this convex toy problem.
+    #[test]
+    fn converges_on_least_squares() {
+        let mut rng = Rng::new(1);
+        let mut mlp = Mlp::new(&[4, 3], &mut rng);
+        let mut adam = Adam::new(&mlp, 0.05);
+        let x = vec![1.0, -0.5, 0.25, 2.0];
+        let target = vec![0.3, -0.7, 1.1];
+
+        let mut last = f64::INFINITY;
+        for _ in 0..300 {
+            let (y, cache) = mlp.forward(&x);
+            let dout: Vec<f64> =
+                y.iter().zip(&target).map(|(yi, ti)| 2.0 * (yi - ti)).collect();
+            let mut grads = mlp.zeros_like();
+            mlp.backward(&cache, &dout, &mut grads);
+            adam.step(&mut mlp, &grads);
+            last = y.iter().zip(&target).map(|(a, b)| (a - b) * (a - b)).sum();
+        }
+        assert!(last < 1e-6, "loss={last}");
+        assert_eq!(adam.steps_taken(), 300);
+    }
+
+    #[test]
+    fn nonconvex_loss_decreases() {
+        let mut rng = Rng::new(2);
+        let mut mlp = Mlp::new(&[6, 16, 1], &mut rng);
+        let mut adam = Adam::new(&mlp, 0.01);
+        let inputs: Vec<Vec<f64>> =
+            (0..16).map(|_| (0..6).map(|_| rng.normal()).collect()).collect();
+        let targets: Vec<f64> =
+            inputs.iter().map(|x| x[0] * x[1] + x[2].sin()).collect();
+
+        let loss_of = |m: &Mlp| -> f64 {
+            inputs
+                .iter()
+                .zip(&targets)
+                .map(|(x, t)| {
+                    let (y, _) = m.forward(x);
+                    (y[0] - t) * (y[0] - t)
+                })
+                .sum::<f64>()
+                / inputs.len() as f64
+        };
+        let initial = loss_of(&mlp);
+        for _ in 0..400 {
+            let mut grads = mlp.zeros_like();
+            for (x, t) in inputs.iter().zip(&targets) {
+                let (y, cache) = mlp.forward(x);
+                mlp.backward(&cache, &[2.0 * (y[0] - t)], &mut grads);
+            }
+            grads.scale(1.0 / inputs.len() as f64);
+            adam.step(&mut mlp, &grads);
+        }
+        let fin = loss_of(&mlp);
+        assert!(fin < initial * 0.2, "initial={initial} final={fin}");
+    }
+
+    #[test]
+    fn zero_gradient_keeps_params() {
+        let mut rng = Rng::new(3);
+        let mut mlp = Mlp::new(&[2, 2], &mut rng);
+        let before = mlp.clone();
+        let zeros = mlp.zeros_like();
+        let mut adam = Adam::new(&mlp, 0.1);
+        adam.step(&mut mlp, &zeros);
+        for l in 0..mlp.w.len() {
+            for (a, b) in mlp.w[l].data.iter().zip(&before.w[l].data) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Rollout storage between PPO updates.
+//!
+//! The router acts at block granularity; the reward for a decision only
+//! materializes when its block completes (possibly many events later), so
+//! transitions are staged in a pending map keyed by the decision tag and
+//! move into the finished rollout when `complete` is called with the
+//! reward. One-step returns: R_t ≡ r_t (eq. 8).
+
+use std::collections::HashMap;
+
+use super::policy::ActionTriple;
+
+/// One finished (state, action, logπ_old, V_old, reward) tuple.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f64>,
+    pub action: ActionTriple,
+    pub logp_old: f64,
+    pub value_old: f64,
+    pub eps: f64,
+    pub reward: f64,
+}
+
+/// Staged + finished transitions.
+#[derive(Clone, Debug, Default)]
+pub struct RolloutBuffer {
+    pending: HashMap<u64, Transition>,
+    finished: Vec<Transition>,
+    /// Rewards observed (for logging).
+    pub reward_sum: f64,
+    pub reward_count: u64,
+}
+
+impl RolloutBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Stage a decision awaiting its block completion.
+    pub fn stage(
+        &mut self,
+        tag: u64,
+        state: Vec<f64>,
+        action: ActionTriple,
+        logp_old: f64,
+        value_old: f64,
+        eps: f64,
+    ) {
+        self.pending.insert(
+            tag,
+            Transition { state, action, logp_old, value_old, eps, reward: 0.0 },
+        );
+    }
+
+    /// Attach the reward and finish the transition. Unknown tags are
+    /// ignored (e.g. blocks completing after a buffer reset).
+    pub fn complete(&mut self, tag: u64, reward: f64) {
+        if let Some(mut t) = self.pending.remove(&tag) {
+            t.reward = reward;
+            self.reward_sum += reward;
+            self.reward_count += 1;
+            self.finished.push(t);
+        }
+    }
+
+    pub fn ready(&self) -> usize {
+        self.finished.len()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Take the finished transitions (leaves staged ones in place).
+    pub fn drain(&mut self) -> Vec<Transition> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn mean_reward(&self) -> f64 {
+        if self.reward_count == 0 {
+            0.0
+        } else {
+            self.reward_sum / self.reward_count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn act() -> ActionTriple {
+        ActionTriple { srv: 0, w: 1, g: 2 }
+    }
+
+    #[test]
+    fn stage_then_complete_moves_to_finished() {
+        let mut buf = RolloutBuffer::new();
+        buf.stage(7, vec![0.1], act(), -1.2, 0.3, 0.1);
+        assert_eq!(buf.pending_len(), 1);
+        assert_eq!(buf.ready(), 0);
+        buf.complete(7, 2.5);
+        assert_eq!(buf.pending_len(), 0);
+        assert_eq!(buf.ready(), 1);
+        let ts = buf.drain();
+        assert_eq!(ts[0].reward, 2.5);
+        assert_eq!(ts[0].logp_old, -1.2);
+        assert_eq!(buf.ready(), 0);
+    }
+
+    #[test]
+    fn unknown_tag_ignored() {
+        let mut buf = RolloutBuffer::new();
+        buf.complete(99, 1.0);
+        assert_eq!(buf.ready(), 0);
+        assert_eq!(buf.reward_count, 0);
+    }
+
+    #[test]
+    fn mean_reward_tracks_completions() {
+        let mut buf = RolloutBuffer::new();
+        for (tag, r) in [(1u64, 1.0), (2, 3.0)] {
+            buf.stage(tag, vec![], act(), 0.0, 0.0, 0.0);
+            buf.complete(tag, r);
+        }
+        assert_eq!(buf.mean_reward(), 2.0);
+    }
+
+    #[test]
+    fn drain_leaves_pending() {
+        let mut buf = RolloutBuffer::new();
+        buf.stage(1, vec![], act(), 0.0, 0.0, 0.0);
+        buf.stage(2, vec![], act(), 0.0, 0.0, 0.0);
+        buf.complete(1, 1.0);
+        let drained = buf.drain();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(buf.pending_len(), 1);
+        buf.complete(2, 1.0);
+        assert_eq!(buf.ready(), 1);
+    }
+}

@@ -1,0 +1,387 @@
+//! Dense MLP with manual forward/backward (no autograd in the offline
+//! crate set). tanh hidden layers, linear output; f64 everywhere — the
+//! networks are tiny (≈11→64→64→12) so precision beats speed here.
+
+use crate::utilx::Rng;
+
+/// Row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// y = W x (W: rows×cols, x: cols) -> rows
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            y[r] = row.iter().zip(x).map(|(w, xi)| w * xi).sum();
+        }
+        y
+    }
+
+    /// y = Wᵀ g (for backprop through the layer input).
+    pub fn matvec_t(&self, g: &[f64]) -> Vec<f64> {
+        debug_assert_eq!(g.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            for (c, w) in row.iter().enumerate() {
+                y[c] += w * g[r];
+            }
+        }
+        y
+    }
+}
+
+/// MLP parameters (and, reused, their gradients).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub sizes: Vec<usize>,
+    pub w: Vec<Mat>,
+    pub b: Vec<Vec<f64>>,
+}
+
+/// Forward cache for one input (activations per layer).
+#[derive(Clone, Debug)]
+pub struct Cache {
+    /// acts[0] = input; acts[i] = post-activation of layer i.
+    pub acts: Vec<Vec<f64>>,
+}
+
+impl Mlp {
+    /// Orthogonal-ish init: scaled He-normal for tanh.
+    pub fn new(sizes: &[usize], rng: &mut Rng) -> Self {
+        assert!(sizes.len() >= 2);
+        let mut w = Vec::new();
+        let mut b = Vec::new();
+        for i in 0..sizes.len() - 1 {
+            let (fan_in, fan_out) = (sizes[i], sizes[i + 1]);
+            let scale = (1.0 / fan_in as f64).sqrt();
+            let mut m = Mat::zeros(fan_out, fan_in);
+            for v in &mut m.data {
+                *v = rng.normal() * scale;
+            }
+            w.push(m);
+            b.push(vec![0.0; fan_out]);
+        }
+        Mlp { sizes: sizes.to_vec(), w, b }
+    }
+
+    /// Zero-shaped clone for gradient accumulation.
+    pub fn zeros_like(&self) -> Self {
+        Mlp {
+            sizes: self.sizes.clone(),
+            w: self.w.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect(),
+            b: self.b.iter().map(|v| vec![0.0; v.len()]).collect(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Allocation-light forward for the serving hot path (no cache): two
+    /// ping-pong buffers instead of one Vec per layer. ~2× faster than
+    /// [`Mlp::forward`] on the router-sized net (see EXPERIMENTS.md §Perf).
+    pub fn forward_nocache(&self, x: &[f64], scratch: &mut (Vec<f64>, Vec<f64>)) {
+        let (a, b) = scratch;
+        a.clear();
+        a.extend_from_slice(x);
+        for l in 0..self.n_layers() {
+            let w = &self.w[l];
+            b.clear();
+            b.resize(w.rows, 0.0);
+            for r in 0..w.rows {
+                let row = &w.data[r * w.cols..(r + 1) * w.cols];
+                let mut z: f64 = self.b[l][r];
+                for (wi, xi) in row.iter().zip(a.iter()) {
+                    z += wi * xi;
+                }
+                b[r] = if l + 1 < self.n_layers() { z.tanh() } else { z };
+            }
+            std::mem::swap(a, b);
+        }
+        // result lives in `a` (post-swap)
+    }
+
+    /// Forward pass; output layer is linear, hiddens are tanh.
+    pub fn forward(&self, x: &[f64]) -> (Vec<f64>, Cache) {
+        debug_assert_eq!(x.len(), self.sizes[0]);
+        let mut acts = vec![x.to_vec()];
+        let mut h = x.to_vec();
+        for l in 0..self.n_layers() {
+            let mut z = self.w[l].matvec(&h);
+            for (zi, bi) in z.iter_mut().zip(&self.b[l]) {
+                *zi += bi;
+            }
+            if l + 1 < self.n_layers() {
+                for zi in &mut z {
+                    *zi = zi.tanh();
+                }
+            }
+            acts.push(z.clone());
+            h = z;
+        }
+        (h, Cache { acts })
+    }
+
+    /// Backward: accumulate dL/dW, dL/db into `grads` given dL/d(output).
+    pub fn backward(&self, cache: &Cache, dout: &[f64], grads: &mut Mlp) {
+        let mut delta = dout.to_vec();
+        for l in (0..self.n_layers()).rev() {
+            // delta currently refers to post-activation of layer l;
+            // apply tanh' for hidden layers (output layer is linear)
+            if l + 1 < self.n_layers() {
+                let a = &cache.acts[l + 1];
+                for (d, ai) in delta.iter_mut().zip(a) {
+                    *d *= 1.0 - ai * ai;
+                }
+            }
+            let input = &cache.acts[l];
+            for r in 0..self.w[l].rows {
+                let g = delta[r];
+                let row =
+                    &mut grads.w[l].data[r * self.w[l].cols..(r + 1) * self.w[l].cols];
+                for (c, xi) in input.iter().enumerate() {
+                    row[c] += g * xi;
+                }
+                grads.b[l][r] += g;
+            }
+            if l > 0 {
+                delta = self.w[l].matvec_t(&delta);
+            }
+        }
+    }
+
+    /// Iterate all parameters mutably alongside another Mlp's (for Adam).
+    pub fn for_each_param(&mut self, other: &Mlp, mut f: impl FnMut(&mut f64, f64)) {
+        for l in 0..self.w.len() {
+            for (p, g) in self.w[l].data.iter_mut().zip(&other.w[l].data) {
+                f(p, *g);
+            }
+            for (p, g) in self.b[l].iter_mut().zip(&other.b[l]) {
+                f(p, *g);
+            }
+        }
+    }
+
+    /// Global L2 norm of all entries (for gradient clipping).
+    pub fn global_norm(&self) -> f64 {
+        let mut s = 0.0;
+        for l in 0..self.w.len() {
+            s += self.w[l].data.iter().map(|x| x * x).sum::<f64>();
+            s += self.b[l].iter().map(|x| x * x).sum::<f64>();
+        }
+        s.sqrt()
+    }
+
+    /// Scale all entries (gradient clipping / averaging).
+    pub fn scale(&mut self, k: f64) {
+        for l in 0..self.w.len() {
+            for v in &mut self.w[l].data {
+                *v *= k;
+            }
+            for v in &mut self.b[l] {
+                *v *= k;
+            }
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w.iter().map(|m| m.data.len()).sum::<usize>()
+            + self.b.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// Serialize to JSON (checkpointing trained routers).
+    pub fn to_json(&self) -> crate::utilx::Json {
+        use crate::utilx::json::{arr_f64, obj, Json};
+        obj(vec![
+            (
+                "sizes",
+                Json::Arr(self.sizes.iter().map(|&s| Json::Num(s as f64)).collect()),
+            ),
+            (
+                "w",
+                Json::Arr(self.w.iter().map(|m| arr_f64(&m.data)).collect()),
+            ),
+            (
+                "b",
+                Json::Arr(self.b.iter().map(|v| arr_f64(v)).collect()),
+            ),
+        ])
+    }
+
+    /// Deserialize from `to_json` output.
+    pub fn from_json(json: &crate::utilx::Json) -> Option<Mlp> {
+        let sizes = json.get("sizes")?.as_usize_vec()?;
+        if sizes.len() < 2 {
+            return None;
+        }
+        let w_arrays = json.get("w")?.as_arr()?;
+        let b_arrays = json.get("b")?.as_arr()?;
+        if w_arrays.len() != sizes.len() - 1 || b_arrays.len() != sizes.len() - 1 {
+            return None;
+        }
+        let mut w = Vec::new();
+        let mut b = Vec::new();
+        for i in 0..sizes.len() - 1 {
+            let data = w_arrays[i].as_f64_vec()?;
+            if data.len() != sizes[i + 1] * sizes[i] {
+                return None;
+            }
+            w.push(Mat { rows: sizes[i + 1], cols: sizes[i], data });
+            let bias = b_arrays[i].as_f64_vec()?;
+            if bias.len() != sizes[i + 1] {
+                return None;
+            }
+            b.push(bias);
+        }
+        Some(Mlp { sizes, w, b })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff_check(sizes: &[usize], seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mlp = Mlp::new(sizes, &mut rng);
+        let x: Vec<f64> = (0..sizes[0]).map(|_| rng.normal()).collect();
+        // scalar loss = sum of squares of outputs
+        let loss = |m: &Mlp| {
+            let (y, _) = m.forward(&x);
+            y.iter().map(|v| v * v).sum::<f64>()
+        };
+        let (y, cache) = mlp.forward(&x);
+        let dout: Vec<f64> = y.iter().map(|v| 2.0 * v).collect();
+        let mut grads = mlp.zeros_like();
+        mlp.backward(&cache, &dout, &mut grads);
+
+        let eps = 1e-6;
+        // check a few random parameters per layer
+        let mut check_rng = Rng::new(seed + 1);
+        for l in 0..mlp.n_layers() {
+            for _ in 0..4 {
+                let idx = check_rng.index(mlp.w[l].data.len());
+                let mut plus = mlp.clone();
+                plus.w[l].data[idx] += eps;
+                let mut minus = mlp.clone();
+                minus.w[l].data[idx] -= eps;
+                let numeric = (loss(&plus) - loss(&minus)) / (2.0 * eps);
+                let analytic = grads.w[l].data[idx];
+                assert!(
+                    (numeric - analytic).abs() < 1e-4 * (1.0 + numeric.abs()),
+                    "layer {l} idx {idx}: numeric {numeric} vs analytic {analytic}"
+                );
+            }
+            let bidx = check_rng.index(mlp.b[l].len());
+            let mut plus = mlp.clone();
+            plus.b[l][bidx] += eps;
+            let mut minus = mlp.clone();
+            minus.b[l][bidx] -= eps;
+            let numeric = (loss(&plus) - loss(&minus)) / (2.0 * eps);
+            let analytic = grads.b[l][bidx];
+            assert!(
+                (numeric - analytic).abs() < 1e-4 * (1.0 + numeric.abs()),
+                "layer {l} bias {bidx}: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        finite_diff_check(&[5, 16, 8], 1);
+        finite_diff_check(&[11, 32, 32, 12], 2);
+        finite_diff_check(&[3, 4], 3); // single linear layer
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let mut rng = Rng::new(4);
+        let mlp = Mlp::new(&[6, 10, 4], &mut rng);
+        let x = vec![0.5; 6];
+        let (y1, _) = mlp.forward(&x);
+        let (y2, _) = mlp.forward(&x);
+        assert_eq!(y1.len(), 4);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn hidden_activations_bounded_by_tanh() {
+        let mut rng = Rng::new(5);
+        let mlp = Mlp::new(&[4, 8, 2], &mut rng);
+        let x = vec![100.0; 4];
+        let (_, cache) = mlp.forward(&x);
+        assert!(cache.acts[1].iter().all(|a| a.abs() <= 1.0));
+    }
+
+    #[test]
+    fn matvec_t_is_transpose() {
+        let mut m = Mat::zeros(2, 3);
+        m.data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(m.matvec(&[1.0, 0.0, 0.0]), vec![1.0, 4.0]);
+        assert_eq!(m.matvec_t(&[1.0, 0.0]), vec![1.0, 2.0, 3.0]);
+        assert_eq!(m.matvec_t(&[0.0, 1.0]), vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn global_norm_and_scale() {
+        let mut rng = Rng::new(6);
+        let mut mlp = Mlp::new(&[2, 2], &mut rng);
+        let n0 = mlp.global_norm();
+        assert!(n0 > 0.0);
+        mlp.scale(0.5);
+        assert!((mlp.global_norm() - 0.5 * n0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn param_count() {
+        let mut rng = Rng::new(7);
+        let mlp = Mlp::new(&[11, 64, 64, 12], &mut rng);
+        assert_eq!(
+            mlp.param_count(),
+            11 * 64 + 64 + 64 * 64 + 64 + 64 * 12 + 12
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_function() {
+        let mut rng = Rng::new(8);
+        let mlp = Mlp::new(&[5, 8, 3], &mut rng);
+        let json = mlp.to_json();
+        let text = json.to_string_compact();
+        let parsed = crate::utilx::Json::parse(&text).unwrap();
+        let restored = Mlp::from_json(&parsed).unwrap();
+        let x = vec![0.1, -0.4, 0.9, 0.0, 2.0];
+        let (y1, _) = mlp.forward(&x);
+        let (y2, _) = restored.forward(&x);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        let bad = crate::utilx::Json::parse(r#"{"sizes":[2,3],"w":[[1,2]],"b":[[0,0,0]]}"#)
+            .unwrap();
+        assert!(Mlp::from_json(&bad).is_none());
+    }
+}

@@ -1,0 +1,30 @@
+//! The PPO router (§III-B), implemented from scratch.
+//!
+//! A shared MLP maps the eq. 1 telemetry state to three categorical heads
+//! (server, width, micro-batch group — eq. 2–4) and a scalar value. The
+//! server head is ε-mixed with a uniform distribution and the mixture is
+//! accounted for in the PPO ratio (eq. 5–6). Rewards follow eq. 7; one-
+//! step advantages with normalization (eq. 8); the update minimizes the
+//! clipped-surrogate + value + entropy objective (eq. 10–13) for K epochs
+//! with gradient-norm clipping — all hyper-parameters in
+//! [`crate::config::PpoCfg`].
+//!
+//! No autograd framework exists in the offline crate set, so
+//! [`mlp`]/[`adam`] implement dense forward/backward and Adam by hand;
+//! [`policy`] adds the factored heads and their analytic gradients;
+//! [`update`] assembles the PPO step; [`router_impl`] adapts everything to
+//! the [`crate::coordinator::Router`] trait so the engine can drive
+//! training and evaluation identically.
+
+pub mod adam;
+pub mod buffer;
+pub mod mlp;
+pub mod policy;
+pub mod router_impl;
+pub mod update;
+
+pub use buffer::{RolloutBuffer, Transition};
+pub use mlp::Mlp;
+pub use policy::{ActionTriple, Policy, PolicyEval};
+pub use router_impl::{PpoRouter, TrainStats};
+pub use update::ppo_update;

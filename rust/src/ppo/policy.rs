@@ -1,0 +1,385 @@
+//! Factored categorical policy (eq. 2–6).
+//!
+//! One shared MLP emits `[logits_srv | logits_w | logits_g | value]`. The
+//! policy factorizes as a product of categoricals (eq. 4); the server head
+//! is ε-mixed with uniform exploration and the mixture enters the
+//! likelihood (eq. 5), so the PPO ratio stays on-policy (eq. 6, 9).
+
+use crate::utilx::Rng;
+
+use super::mlp::{Cache, Mlp};
+
+/// Factored action (indices into the server/width/group sets).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ActionTriple {
+    pub srv: usize,
+    pub w: usize,
+    pub g: usize,
+}
+
+/// Everything the update needs about one state evaluation.
+#[derive(Clone, Debug)]
+pub struct PolicyEval {
+    /// Joint log π̃(a|s) (eq. 6 — server head mixed).
+    pub logp: f64,
+    pub value: f64,
+    /// Σ_head H(π_θ^head) — unmixed, as in eq. 12.
+    pub entropy: f64,
+    pub p_srv: Vec<f64>,
+    pub p_w: Vec<f64>,
+    pub p_g: Vec<f64>,
+    pub cache: Cache,
+}
+
+/// The factored policy network.
+#[derive(Clone, Debug)]
+pub struct Policy {
+    pub mlp: Mlp,
+    pub n_srv: usize,
+    pub n_w: usize,
+    pub n_g: usize,
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(logits: &[f64]) -> Vec<f64> {
+    let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|l| (l - max).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+/// Shannon entropy of a categorical.
+pub fn entropy(p: &[f64]) -> f64 {
+    -p.iter().filter(|&&x| x > 1e-12).map(|&x| x * x.ln()).sum::<f64>()
+}
+
+impl Policy {
+    pub fn new(state_dim: usize, hidden: &[usize], n_srv: usize, n_w: usize,
+               n_g: usize, rng: &mut Rng) -> Self {
+        let mut sizes = vec![state_dim];
+        sizes.extend_from_slice(hidden);
+        sizes.push(n_srv + n_w + n_g + 1);
+        Policy { mlp: Mlp::new(&sizes, rng), n_srv, n_w, n_g }
+    }
+
+    /// Output layout: [srv | w | g | value].
+    fn split<'a>(&self, out: &'a [f64]) -> (&'a [f64], &'a [f64], &'a [f64], f64) {
+        let s = &out[..self.n_srv];
+        let w = &out[self.n_srv..self.n_srv + self.n_w];
+        let g = &out[self.n_srv + self.n_w..self.n_srv + self.n_w + self.n_g];
+        let v = out[self.n_srv + self.n_w + self.n_g];
+        (s, w, g, v)
+    }
+
+    /// ε-mixed server probability (eq. 5).
+    pub fn mixed_srv(&self, p_srv: &[f64], eps: f64) -> Vec<f64> {
+        let n = p_srv.len() as f64;
+        p_srv.iter().map(|&p| (1.0 - eps) * p + eps / n).collect()
+    }
+
+    /// Evaluate a state; compute probabilities, value and (if an action is
+    /// given) its joint mixed log-likelihood.
+    pub fn evaluate(&self, state: &[f64], action: Option<ActionTriple>, eps: f64)
+        -> (PolicyEval, Option<ActionTriple>) {
+        let (out, cache) = self.mlp.forward(state);
+        let (ls, lw, lg, value) = self.split(&out);
+        let p_srv = softmax(ls);
+        let p_w = softmax(lw);
+        let p_g = softmax(lg);
+        let ent = entropy(&p_srv) + entropy(&p_w) + entropy(&p_g);
+        let logp = action.map(|a| {
+            let mixed = self.mixed_srv(&p_srv, eps);
+            mixed[a.srv].max(1e-12).ln()
+                + p_w[a.w].max(1e-12).ln()
+                + p_g[a.g].max(1e-12).ln()
+        });
+        (
+            PolicyEval {
+                logp: logp.unwrap_or(0.0),
+                value,
+                entropy: ent,
+                p_srv,
+                p_w,
+                p_g,
+                cache,
+            },
+            action,
+        )
+    }
+
+    /// Sample an action from the ε-mixed policy (the behaviour policy the
+    /// engine executes).
+    pub fn sample(&self, state: &[f64], eps: f64, rng: &mut Rng)
+        -> (ActionTriple, PolicyEval) {
+        let (mut eval, _) = self.evaluate(state, None, eps);
+        let mixed = self.mixed_srv(&eval.p_srv, eps);
+        let srv = rng.categorical(&mixed);
+        let w = rng.categorical(&eval.p_w);
+        let g = rng.categorical(&eval.p_g);
+        let a = ActionTriple { srv, w, g };
+        eval.logp = mixed[srv].max(1e-12).ln()
+            + eval.p_w[w].max(1e-12).ln()
+            + eval.p_g[g].max(1e-12).ln();
+        (a, eval)
+    }
+
+    /// Allocation-light sampling for the serving hot path (eval mode: no
+    /// cache, no logp/value bookkeeping). `scratch` is reused across
+    /// calls; see EXPERIMENTS.md §Perf.
+    pub fn sample_notrain(
+        &self,
+        state: &[f64],
+        eps: f64,
+        rng: &mut Rng,
+        scratch: &mut (Vec<f64>, Vec<f64>),
+    ) -> ActionTriple {
+        self.mlp.forward_nocache(state, scratch);
+        let out = &scratch.0;
+        let sample_head = |logits: &[f64], mix: Option<f64>, rng: &mut Rng| {
+            // softmax + categorical draw on a stack buffer (heads are ≤ 32)
+            debug_assert!(logits.len() <= 32);
+            let mut exps = [0.0f64; 32];
+            let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut z = 0.0;
+            for (e, &l) in exps.iter_mut().zip(logits) {
+                *e = (l - max).exp();
+                z += *e;
+            }
+            let target = rng.f64();
+            let n = logits.len() as f64;
+            let mut acc = 0.0;
+            for (j, &e) in exps[..logits.len()].iter().enumerate() {
+                let mut p = e / z;
+                if let Some(eps_mix) = mix {
+                    p = (1.0 - eps_mix) * p + eps_mix / n;
+                }
+                acc += p;
+                if target < acc {
+                    return j;
+                }
+            }
+            logits.len() - 1
+        };
+        let srv = sample_head(&out[..self.n_srv], Some(eps), rng);
+        let w = sample_head(&out[self.n_srv..self.n_srv + self.n_w], None, rng);
+        let g = sample_head(
+            &out[self.n_srv + self.n_w..self.n_srv + self.n_w + self.n_g],
+            None,
+            rng,
+        );
+        ActionTriple { srv, w, g }
+    }
+
+    /// Build dJ/d(mlp output) for one transition and backprop it.
+    ///
+    /// * `coef_logp` — ∂J/∂logπ̃ (the clipped-surrogate scalar).
+    /// * `coef_ent`  — entropy weight (−c_H in J, so passing +c_H here
+    ///   *reduces* J along increasing entropy).
+    /// * `dvalue`    — ∂J/∂V (c_v·(V−R)).
+    pub fn backward_transition(
+        &self,
+        eval: &PolicyEval,
+        action: ActionTriple,
+        eps: f64,
+        coef_logp: f64,
+        coef_ent: f64,
+        dvalue: f64,
+        grads: &mut Mlp,
+    ) {
+        let mut dout = vec![0.0; self.n_srv + self.n_w + self.n_g + 1];
+
+        // server head: mixed likelihood gradient (eq. 5)
+        {
+            let p = &eval.p_srv;
+            let a = action.srv;
+            let mixed_a = (1.0 - eps) * p[a] + eps / self.n_srv as f64;
+            let h = entropy(p);
+            for j in 0..self.n_srv {
+                let delta = if j == a { 1.0 } else { 0.0 };
+                let dlogp = (1.0 - eps) * p[a] * (delta - p[j]) / mixed_a.max(1e-12);
+                // J = -L_clip - c_H H  =>  dJ/dl = coef_logp·dlogp + coef_ent·p_j(ln p_j + H)
+                dout[j] = coef_logp * dlogp
+                    + coef_ent * p[j] * (p[j].max(1e-12).ln() + h);
+            }
+        }
+        // width head: plain categorical
+        {
+            let p = &eval.p_w;
+            let a = action.w;
+            let h = entropy(p);
+            for j in 0..self.n_w {
+                let delta = if j == a { 1.0 } else { 0.0 };
+                dout[self.n_srv + j] = coef_logp * (delta - p[j])
+                    + coef_ent * p[j] * (p[j].max(1e-12).ln() + h);
+            }
+        }
+        // group head: plain categorical
+        {
+            let p = &eval.p_g;
+            let a = action.g;
+            let h = entropy(p);
+            for j in 0..self.n_g {
+                let delta = if j == a { 1.0 } else { 0.0 };
+                dout[self.n_srv + self.n_w + j] = coef_logp * (delta - p[j])
+                    + coef_ent * p[j] * (p[j].max(1e-12).ln() + h);
+            }
+        }
+        // value head
+        dout[self.n_srv + self.n_w + self.n_g] = dvalue;
+
+        self.mlp.backward(&eval.cache, &dout, grads);
+    }
+}
+
+/// ε schedule (eq. 5): linear decay from ε_max to ε_min over T_dec steps.
+pub fn eps_at(step: u64, eps_max: f64, eps_min: f64, t_dec: f64) -> f64 {
+    (eps_max + step as f64 / t_dec * (eps_min - eps_max)).max(eps_min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> Policy {
+        let mut rng = Rng::new(1);
+        Policy::new(11, &[32, 32], 3, 4, 3, &mut rng)
+    }
+
+    #[test]
+    fn probabilities_normalize() {
+        let p = policy();
+        let state = vec![0.3; 11];
+        let (eval, _) = p.evaluate(&state, None, 0.1);
+        for probs in [&eval.p_srv, &eval.p_w, &eval.p_g] {
+            assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(probs.iter().all(|&x| x > 0.0));
+        }
+        assert_eq!(eval.p_srv.len(), 3);
+        assert_eq!(eval.p_w.len(), 4);
+        assert_eq!(eval.p_g.len(), 3);
+    }
+
+    #[test]
+    fn mixed_likelihood_formula() {
+        let p = policy();
+        let probs = vec![0.7, 0.2, 0.1];
+        let mixed = p.mixed_srv(&probs, 0.3);
+        assert!((mixed[0] - (0.7 * 0.7 + 0.1)).abs() < 1e-12);
+        assert!((mixed.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // eps=1 => uniform
+        let uni = p.mixed_srv(&probs, 1.0);
+        assert!(uni.iter().all(|&x| (x - 1.0 / 3.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn joint_logp_is_sum_of_heads() {
+        let p = policy();
+        let state = vec![0.1; 11];
+        let a = ActionTriple { srv: 1, w: 2, g: 0 };
+        let (eval, _) = p.evaluate(&state, Some(a), 0.2);
+        let mixed = p.mixed_srv(&eval.p_srv, 0.2);
+        let expect = mixed[1].ln() + eval.p_w[2].ln() + eval.p_g[0].ln();
+        assert!((eval.logp - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampling_matches_probabilities() {
+        let p = policy();
+        let state = vec![0.5; 11];
+        let mut rng = Rng::new(9);
+        let (eval, _) = p.evaluate(&state, None, 0.0);
+        let mut counts = vec![0usize; 4];
+        let n = 40_000;
+        for _ in 0..n {
+            let (a, _) = p.sample(&state, 0.0, &mut rng);
+            counts[a.w] += 1;
+        }
+        for (j, &c) in counts.iter().enumerate() {
+            let emp = c as f64 / n as f64;
+            assert!(
+                (emp - eval.p_w[j]).abs() < 0.015,
+                "head w[{j}]: emp {emp} vs {}",
+                eval.p_w[j]
+            );
+        }
+    }
+
+    #[test]
+    fn exploration_covers_servers_under_eps() {
+        // even with a confident policy, ε-mixing keeps all servers sampled
+        let p = policy();
+        let state = vec![2.0; 11];
+        let mut rng = Rng::new(10);
+        let mut seen = [0usize; 3];
+        for _ in 0..3000 {
+            let (a, _) = p.sample(&state, 0.5, &mut rng);
+            seen[a.srv] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 150), "{seen:?}");
+    }
+
+    #[test]
+    fn entropy_helpers() {
+        let uniform = vec![0.25; 4];
+        assert!((entropy(&uniform) - (4.0f64).ln()).abs() < 1e-12);
+        let peaked = vec![1.0, 0.0, 0.0, 0.0];
+        assert!(entropy(&peaked).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eps_schedule_decays_linearly_with_floor() {
+        assert_eq!(eps_at(0, 0.3, 0.02, 1000.0), 0.3);
+        let mid = eps_at(500, 0.3, 0.02, 1000.0);
+        assert!((mid - 0.16).abs() < 1e-9);
+        assert_eq!(eps_at(100_000, 0.3, 0.02, 1000.0), 0.02);
+    }
+
+    /// Finite-difference check of the full transition gradient: perturb a
+    /// weight, recompute J = -logπ̃·Â - c_H·H + c_v/2 (V-R)², compare.
+    #[test]
+    fn transition_gradient_matches_finite_difference() {
+        let p = policy();
+        let state: Vec<f64> = (0..11).map(|i| (i as f64 * 0.37).sin()).collect();
+        let a = ActionTriple { srv: 2, w: 1, g: 2 };
+        let eps = 0.15;
+        let adv = 0.8; // fixed advantage -> coef_logp = -adv (maximize logp·adv)
+        let ret = 0.5;
+        let (c_h, c_v) = (0.01, 0.5);
+
+        let j_of = |pol: &Policy| -> f64 {
+            let (eval, _) = pol.evaluate(&state, Some(a), eps);
+            -eval.logp * adv - c_h * eval.entropy
+                + 0.5 * c_v * (eval.value - ret) * (eval.value - ret)
+        };
+
+        let (eval, _) = p.evaluate(&state, Some(a), eps);
+        let mut grads = p.mlp.zeros_like();
+        p.backward_transition(
+            &eval,
+            a,
+            eps,
+            -adv,
+            c_h,
+            c_v * (eval.value - ret),
+            &mut grads,
+        );
+
+        let mut rng = Rng::new(77);
+        let h = 1e-6;
+        for l in 0..p.mlp.n_layers() {
+            for _ in 0..3 {
+                let idx = rng.index(p.mlp.w[l].data.len());
+                let mut plus = p.clone();
+                plus.mlp.w[l].data[idx] += h;
+                let mut minus = p.clone();
+                minus.mlp.w[l].data[idx] -= h;
+                let numeric = (j_of(&plus) - j_of(&minus)) / (2.0 * h);
+                let analytic = grads.w[l].data[idx];
+                assert!(
+                    (numeric - analytic).abs() < 1e-4 * (1.0 + numeric.abs()),
+                    "layer {l} idx {idx}: numeric {numeric} analytic {analytic}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,346 @@
+//! [`PpoRouter`] — the learned global policy behind Tables IV–V, adapted
+//! to the engine's [`Router`] trait.
+//!
+//! In training mode every routing decision stages a transition; the
+//! block-completion feedback computes the eq. 7 reward and finishes it;
+//! once `horizon` transitions accumulate, a clipped PPO update runs
+//! in-place (the engine keeps scheduling while the policy learns — the
+//! paper trains the router online against the live cluster). In eval mode
+//! the same object routes greedily from the learned distribution with
+//! exploration off.
+
+use crate::config::PpoCfg;
+use crate::coordinator::router::{BlockFeedback, Decision, Router};
+use crate::coordinator::telemetry::TelemetrySnapshot;
+use crate::utilx::{Json, Rng};
+
+use super::adam::Adam;
+use super::buffer::RolloutBuffer;
+use super::policy::{eps_at, Policy};
+use super::update::{ppo_update, UpdateStats};
+
+/// Aggregated training diagnostics.
+#[derive(Clone, Debug, Default)]
+pub struct TrainStats {
+    pub decisions: u64,
+    pub updates: u64,
+    pub last_update: UpdateStats,
+    pub reward_history: Vec<f64>,
+    pub entropy_history: Vec<f64>,
+}
+
+/// PPO-learned router.
+pub struct PpoRouter {
+    pub policy: Policy,
+    adam: Adam,
+    pub cfg: PpoCfg,
+    widths: Vec<f64>,
+    groups: Vec<usize>,
+    buffer: RolloutBuffer,
+    step: u64,
+    next_tag: u64,
+    pub training: bool,
+    /// Normalized mean prior for the optional zero-mean centering.
+    prior_mean_norm: f64,
+    pub stats: TrainStats,
+    /// Reused forward buffers for the eval-mode hot path (§Perf).
+    scratch: (Vec<f64>, Vec<f64>),
+}
+
+impl PpoRouter {
+    pub fn new(
+        n_servers: usize,
+        widths: Vec<f64>,
+        cfg: PpoCfg,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed ^ 0x9e37);
+        let state_dim = TelemetrySnapshot::state_dim(n_servers);
+        let policy = Policy::new(
+            state_dim,
+            &cfg.hidden.clone(),
+            n_servers,
+            widths.len(),
+            cfg.groups.len(),
+            &mut rng,
+        );
+        let adam = Adam::new(&policy.mlp, cfg.lr);
+        let prior = crate::model::AccuracyPrior::new();
+        let prior_mean_norm = (prior.mean_top1() - 70.30) / (76.43 - 70.30);
+        PpoRouter {
+            policy,
+            adam,
+            groups: cfg.groups.clone(),
+            cfg,
+            widths,
+            buffer: RolloutBuffer::new(),
+            step: 0,
+            next_tag: 0,
+            training: true,
+            prior_mean_norm,
+            stats: TrainStats::default(),
+            scratch: (Vec::new(), Vec::new()),
+        }
+    }
+
+    /// Freeze the policy for evaluation runs.
+    pub fn eval_mode(&mut self) {
+        self.training = false;
+    }
+
+    fn eps(&self) -> f64 {
+        if self.training {
+            eps_at(self.step, self.cfg.eps_max, self.cfg.eps_min, self.cfg.t_dec)
+        } else {
+            0.0
+        }
+    }
+
+    /// eq. 7: r = α·p̃_acc − β·L − γ·E − δ·Var(U) + b.
+    pub fn reward(&self, fb: &BlockFeedback) -> f64 {
+        let r = &self.cfg.reward;
+        let acc = if r.center_acc {
+            fb.acc_prior_norm - self.prior_mean_norm
+        } else {
+            fb.acc_prior_norm
+        };
+        r.alpha * acc - r.beta * fb.latency_s - r.gamma * fb.energy_j
+            - r.delta * fb.util_variance
+            + r.bonus
+    }
+
+    /// Checkpoint the policy weights.
+    pub fn to_json(&self) -> Json {
+        self.policy.mlp.to_json()
+    }
+
+    /// Restore policy weights from a checkpoint (shape-checked).
+    pub fn load_weights(&mut self, json: &Json) -> bool {
+        match super::mlp::Mlp::from_json(json) {
+            Some(mlp) if mlp.sizes == self.policy.mlp.sizes => {
+                self.policy.mlp = mlp;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn maybe_update(&mut self) {
+        if self.training && self.buffer.ready() >= self.cfg.horizon {
+            let batch = self.buffer.drain();
+            let stats = ppo_update(&mut self.policy, &mut self.adam, &batch, &self.cfg);
+            self.stats.updates += 1;
+            self.stats.last_update = stats;
+            self.stats.reward_history.push(stats.mean_reward);
+            self.stats.entropy_history.push(stats.entropy);
+        }
+    }
+}
+
+impl Router for PpoRouter {
+    fn name(&self) -> &'static str {
+        "ppo"
+    }
+
+    fn route(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        _head_w_req: f64,
+        _head_seg: usize,
+        rng: &mut Rng,
+    ) -> Decision {
+        let state = snap.to_state_vector();
+        let eps = self.eps();
+        self.step += 1;
+        self.stats.decisions += 1;
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let action = if self.training {
+            let (action, eval) = self.policy.sample(&state, eps, rng);
+            self.buffer.stage(tag, state, action, eval.logp, eval.value, eps);
+            action
+        } else {
+            // serving hot path: allocation-light forward, no rollout
+            self.policy.sample_notrain(&state, eps, rng, &mut self.scratch)
+        };
+        Decision {
+            server: action.srv.min(snap.servers.len().saturating_sub(1)),
+            width: self.widths[action.w.min(self.widths.len() - 1)],
+            group: self.groups[action.g.min(self.groups.len() - 1)],
+            tag,
+        }
+    }
+
+    fn feedback(&mut self, fb: &BlockFeedback) {
+        if !self.training {
+            return;
+        }
+        let r = self.reward(fb);
+        self.buffer.complete(fb.tag, r);
+        self.maybe_update();
+    }
+
+    fn end_of_run(&mut self) {
+        // flush whatever is ready, even under horizon
+        if self.training && self.buffer.ready() >= 16 {
+            let batch = self.buffer.drain();
+            let stats = ppo_update(&mut self.policy, &mut self.adam, &batch, &self.cfg);
+            self.stats.updates += 1;
+            self.stats.last_update = stats;
+            self.stats.reward_history.push(stats.mean_reward);
+            self.stats.entropy_history.push(stats.entropy);
+        }
+    }
+}
+
+/// Width-index histogram of a trained policy's marginal (diagnostics for
+/// the Table IV collapse check).
+pub fn width_marginal(router: &PpoRouter, snap: &TelemetrySnapshot) -> Vec<f64> {
+    let state = snap.to_state_vector();
+    let (eval, _) = router.policy.evaluate(&state, None, 0.0);
+    eval.p_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PpoCfg, RewardCfg};
+    use crate::coordinator::telemetry::ServerTelemetry;
+
+    fn snap(n: usize) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            fifo_len: 5,
+            done_count: 10,
+            total_requests: 100,
+            servers: (0..n)
+                .map(|i| ServerTelemetry {
+                    queue_len: i,
+                    power_w: 100.0,
+                    util_pct: 30.0 * i as f64,
+                    mem_util: 0.2,
+                    instances: 1,
+                })
+                .collect(),
+        }
+    }
+
+    fn router() -> PpoRouter {
+        PpoRouter::new(3, vec![0.25, 0.5, 0.75, 1.0], PpoCfg::default(), 1)
+    }
+
+    #[test]
+    fn decisions_are_in_range() {
+        let mut r = router();
+        let mut rng = Rng::new(2);
+        let s = snap(3);
+        for _ in 0..200 {
+            let d = r.route(&s, 0.5, 0, &mut rng);
+            assert!(d.server < 3);
+            assert!([0.25, 0.5, 0.75, 1.0].contains(&d.width));
+            assert!([1usize, 4, 16].contains(&d.group));
+        }
+        assert_eq!(r.stats.decisions, 200);
+    }
+
+    #[test]
+    fn reward_follows_eq7_signs() {
+        let mut r = router();
+        r.cfg.reward = RewardCfg {
+            alpha: 2.0,
+            beta: 1.0,
+            gamma: 0.1,
+            delta: 5.0,
+            bonus: 0.25,
+            center_acc: false,
+        };
+        let fb = BlockFeedback {
+            tag: 0,
+            acc_prior_norm: 0.5,
+            latency_s: 0.2,
+            energy_j: 3.0,
+            util_variance: 0.01,
+        };
+        let want = 2.0 * 0.5 - 1.0 * 0.2 - 0.1 * 3.0 - 5.0 * 0.01 + 0.25;
+        assert!((r.reward(&fb) - want).abs() < 1e-12);
+        // higher latency strictly lowers reward
+        let worse = BlockFeedback { latency_s: 1.0, ..fb };
+        assert!(r.reward(&worse) < r.reward(&fb));
+    }
+
+    #[test]
+    fn centering_subtracts_mean_prior() {
+        let mut r = router();
+        r.cfg.reward = RewardCfg { center_acc: true, beta: 0.0, gamma: 0.0,
+                                   delta: 0.0, alpha: 1.0, bonus: 0.0 };
+        let fb = BlockFeedback {
+            tag: 0,
+            acc_prior_norm: r.prior_mean_norm,
+            latency_s: 0.0,
+            energy_j: 0.0,
+            util_variance: 0.0,
+        };
+        assert!(r.reward(&fb).abs() < 1e-9);
+    }
+
+    #[test]
+    fn training_accumulates_and_updates() {
+        let mut r = router();
+        r.cfg.horizon = 32;
+        let mut rng = Rng::new(3);
+        let s = snap(3);
+        for _i in 0..40 {
+            let d = r.route(&s, 0.5, 0, &mut rng);
+            r.feedback(&BlockFeedback {
+                tag: d.tag,
+                acc_prior_norm: 0.5,
+                latency_s: 0.01,
+                energy_j: 1.0,
+                util_variance: 0.001,
+            });
+        }
+        assert!(r.stats.updates >= 1, "updates={}", r.stats.updates);
+        assert!(!r.stats.reward_history.is_empty());
+    }
+
+    #[test]
+    fn eval_mode_stops_learning_and_exploration() {
+        let mut r = router();
+        r.eval_mode();
+        let mut rng = Rng::new(4);
+        let s = snap(3);
+        let d = r.route(&s, 0.5, 0, &mut rng);
+        r.feedback(&BlockFeedback {
+            tag: d.tag,
+            acc_prior_norm: 1.0,
+            latency_s: 0.0,
+            energy_j: 0.0,
+            util_variance: 0.0,
+        });
+        assert_eq!(r.stats.updates, 0);
+        assert_eq!(r.buffer.ready(), 0);
+        assert_eq!(r.eps(), 0.0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let a = router();
+        let ck = a.to_json();
+        let mut b = router();
+        // perturb b so the restore is observable
+        b.policy.mlp.w[0].data[0] += 1.0;
+        assert!(b.load_weights(&ck));
+        let s = snap(3);
+        let (ea, _) = a.policy.evaluate(&s.to_state_vector(), None, 0.0);
+        let (eb, _) = b.policy.evaluate(&s.to_state_vector(), None, 0.0);
+        for (x, y) in ea.p_w.iter().zip(&eb.p_w) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn load_rejects_wrong_shape() {
+        let mut r = router();
+        let other = PpoRouter::new(2, vec![0.5, 1.0], PpoCfg::default(), 9);
+        assert!(!r.load_weights(&other.to_json()));
+    }
+}

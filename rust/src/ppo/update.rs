@@ -1,0 +1,282 @@
+//! The clipped PPO update (eq. 8–13).
+//!
+//! One-step advantages `A_t = r_t − V_old(s_t)`, normalized over the
+//! batch (eq. 8); importance ratio against the *mixed* old likelihood
+//! (eq. 9); clipped surrogate + value loss + entropy bonus minimized for
+//! K epochs with global gradient-norm clipping.
+
+use crate::config::PpoCfg;
+
+use super::adam::Adam;
+use super::buffer::Transition;
+use super::policy::Policy;
+
+/// Diagnostics from one update.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UpdateStats {
+    pub transitions: usize,
+    pub mean_reward: f64,
+    pub mean_advantage_raw: f64,
+    pub policy_loss: f64,
+    pub value_loss: f64,
+    pub entropy: f64,
+    pub clip_fraction: f64,
+    pub grad_norm: f64,
+}
+
+/// Run K epochs of clipped PPO on a finished rollout.
+pub fn ppo_update(
+    policy: &mut Policy,
+    adam: &mut Adam,
+    batch: &[Transition],
+    cfg: &PpoCfg,
+) -> UpdateStats {
+    let n = batch.len();
+    if n == 0 {
+        return UpdateStats::default();
+    }
+
+    // eq. 8: one-step returns & normalized advantages (against V_old)
+    let advantages_raw: Vec<f64> =
+        batch.iter().map(|t| t.reward - t.value_old).collect();
+    let mean_a = advantages_raw.iter().sum::<f64>() / n as f64;
+    let var_a = advantages_raw
+        .iter()
+        .map(|a| (a - mean_a) * (a - mean_a))
+        .sum::<f64>()
+        / n as f64;
+    let std_a = var_a.sqrt();
+    let advantages: Vec<f64> = advantages_raw
+        .iter()
+        .map(|a| (a - mean_a) / (std_a + 1e-8))
+        .collect();
+
+    let mut stats = UpdateStats {
+        transitions: n,
+        mean_reward: batch.iter().map(|t| t.reward).sum::<f64>() / n as f64,
+        mean_advantage_raw: mean_a,
+        ..Default::default()
+    };
+
+    for _epoch in 0..cfg.epochs {
+        let mut grads = policy.mlp.zeros_like();
+        let mut policy_loss = 0.0;
+        let mut value_loss = 0.0;
+        let mut entropy_sum = 0.0;
+        let mut clipped = 0usize;
+
+        for (t, &adv) in batch.iter().zip(&advantages) {
+            let (eval, _) = policy.evaluate(&t.state, Some(t.action), t.eps);
+            let ratio = (eval.logp - t.logp_old).exp();
+            let unclipped = ratio * adv;
+            let ratio_clipped = ratio.clamp(1.0 - cfg.clip, 1.0 + cfg.clip);
+            let clipped_term = ratio_clipped * adv;
+
+            // surrogate L = min(unclipped, clipped); J = -L
+            let (surrogate, coef_logp) = if unclipped <= clipped_term {
+                // gradient flows through the unclipped branch:
+                // dJ/dlogp = -ratio·adv
+                (unclipped, -ratio * adv)
+            } else {
+                clipped += 1;
+                // clipped branch is constant in θ (hard clip)
+                (clipped_term, 0.0)
+            };
+            policy_loss -= surrogate;
+
+            // value loss 0.5 (R - V)^2, dJ/dV = c_v (V - R)
+            let vr = t.reward;
+            value_loss += 0.5 * (vr - eval.value) * (vr - eval.value);
+            let dvalue = cfg.c_v * (eval.value - vr);
+
+            entropy_sum += eval.entropy;
+
+            policy.backward_transition(
+                &eval,
+                t.action,
+                t.eps,
+                coef_logp,
+                cfg.c_h,
+                dvalue,
+                &mut grads,
+            );
+        }
+
+        grads.scale(1.0 / n as f64);
+        let norm = grads.global_norm();
+        if norm > cfg.grad_clip {
+            grads.scale(cfg.grad_clip / norm);
+        }
+        adam.step(&mut policy.mlp, &grads);
+
+        stats.policy_loss = policy_loss / n as f64;
+        stats.value_loss = value_loss / n as f64;
+        stats.entropy = entropy_sum / n as f64;
+        stats.clip_fraction = clipped as f64 / n as f64;
+        stats.grad_norm = norm;
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PpoCfg;
+    use crate::utilx::Rng;
+
+    fn make_policy(seed: u64) -> (Policy, Adam) {
+        let mut rng = Rng::new(seed);
+        let p = Policy::new(4, &[16], 3, 4, 3, &mut rng);
+        let adam = Adam::new(&p.mlp, 5e-3);
+        (p, adam)
+    }
+
+    /// Bandit check: server 1 always pays +1, others −1. After a few
+    /// updates the policy mass should concentrate on server 1.
+    #[test]
+    fn learns_a_contextual_bandit() {
+        let (mut policy, mut adam) = make_policy(1);
+        let mut cfg = PpoCfg::default();
+        cfg.epochs = 3;
+        cfg.c_h = 0.001;
+        let state = vec![0.5, -0.2, 0.1, 0.9];
+        let mut rng = Rng::new(2);
+
+        for _round in 0..60 {
+            let mut batch = Vec::new();
+            for _ in 0..64 {
+                let (a, eval) = policy.sample(&state, 0.1, &mut rng);
+                let reward = if a.srv == 1 { 1.0 } else { -1.0 };
+                batch.push(Transition {
+                    state: state.clone(),
+                    action: a,
+                    logp_old: eval.logp,
+                    value_old: eval.value,
+                    eps: 0.1,
+                    reward,
+                });
+            }
+            ppo_update(&mut policy, &mut adam, &batch, &cfg);
+        }
+        let (eval, _) = policy.evaluate(&state, None, 0.0);
+        assert!(
+            eval.p_srv[1] > 0.8,
+            "policy did not concentrate: {:?}",
+            eval.p_srv
+        );
+    }
+
+    /// Width-head bandit: reward = +1 for width index 0 (slimmest), −1
+    /// otherwise — the Table IV collapse in miniature.
+    #[test]
+    fn width_head_collapses_under_heavy_latency_penalty() {
+        let (mut policy, mut adam) = make_policy(3);
+        let cfg = PpoCfg { c_h: 0.001, ..PpoCfg::default() };
+        let state = vec![0.1, 0.2, 0.3, 0.4];
+        let mut rng = Rng::new(4);
+        for _ in 0..60 {
+            let mut batch = Vec::new();
+            for _ in 0..64 {
+                let (a, eval) = policy.sample(&state, 0.05, &mut rng);
+                let reward = if a.w == 0 { 1.0 } else { -1.0 };
+                batch.push(Transition {
+                    state: state.clone(),
+                    action: a,
+                    logp_old: eval.logp,
+                    value_old: eval.value,
+                    eps: 0.05,
+                    reward,
+                });
+            }
+            ppo_update(&mut policy, &mut adam, &batch, &cfg);
+        }
+        let (eval, _) = policy.evaluate(&state, None, 0.0);
+        assert!(eval.p_w[0] > 0.8, "{:?}", eval.p_w);
+    }
+
+    #[test]
+    fn value_head_regresses_to_reward() {
+        let (mut policy, mut adam) = make_policy(5);
+        let cfg = PpoCfg { c_h: 0.0, ..PpoCfg::default() };
+        let state = vec![0.0, 1.0, 0.0, -1.0];
+        let mut rng = Rng::new(6);
+        for _ in 0..80 {
+            let mut batch = Vec::new();
+            for _ in 0..32 {
+                let (a, eval) = policy.sample(&state, 0.1, &mut rng);
+                batch.push(Transition {
+                    state: state.clone(),
+                    action: a,
+                    logp_old: eval.logp,
+                    value_old: eval.value,
+                    eps: 0.1,
+                    reward: 3.0, // constant reward
+                });
+            }
+            ppo_update(&mut policy, &mut adam, &batch, &cfg);
+        }
+        let (eval, _) = policy.evaluate(&state, None, 0.0);
+        assert!((eval.value - 3.0).abs() < 0.5, "value={}", eval.value);
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let (mut policy, mut adam) = make_policy(7);
+        let before = policy.mlp.clone();
+        let stats = ppo_update(&mut policy, &mut adam, &[], &PpoCfg::default());
+        assert_eq!(stats.transitions, 0);
+        assert_eq!(policy.mlp.w[0].data, before.w[0].data);
+    }
+
+    #[test]
+    fn gradient_clipping_bounds_update() {
+        let (mut policy, mut adam) = make_policy(8);
+        let mut cfg = PpoCfg::default();
+        cfg.grad_clip = 1e-6; // absurdly tight
+        let state = vec![1.0; 4];
+        let mut rng = Rng::new(9);
+        let (a, eval) = policy.sample(&state, 0.1, &mut rng);
+        let batch = vec![Transition {
+            state,
+            action: a,
+            logp_old: eval.logp,
+            value_old: eval.value,
+            eps: 0.1,
+            reward: 100.0,
+        }];
+        let before = policy.mlp.clone();
+        ppo_update(&mut policy, &mut adam, &batch, &cfg);
+        // params moved, but only a hair (Adam step bounded by lr anyway;
+        // the clipped gradient is tiny)
+        let mut max_delta: f64 = 0.0;
+        for l in 0..policy.mlp.w.len() {
+            for (a, b) in policy.mlp.w[l].data.iter().zip(&before.w[l].data) {
+                max_delta = max_delta.max((a - b).abs());
+            }
+        }
+        assert!(max_delta < 0.02, "max_delta={max_delta}");
+    }
+
+    #[test]
+    fn clip_fraction_rises_with_stale_logp() {
+        let (mut policy, mut adam) = make_policy(10);
+        let cfg = PpoCfg::default();
+        let state = vec![0.3; 4];
+        let mut rng = Rng::new(11);
+        let mut batch = Vec::new();
+        for _ in 0..32 {
+            let (a, eval) = policy.sample(&state, 0.1, &mut rng);
+            batch.push(Transition {
+                state: state.clone(),
+                action: a,
+                // deliberately stale: pretend old policy was very different
+                logp_old: eval.logp - 1.0,
+                value_old: eval.value,
+                eps: 0.1,
+                reward: rng.normal(),
+            });
+        }
+        let stats = ppo_update(&mut policy, &mut adam, &batch, &cfg);
+        assert!(stats.clip_fraction > 0.2, "{}", stats.clip_fraction);
+    }
+}

@@ -1,0 +1,322 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust serving path. Parses `manifest.json`, loads `weights.bin`, and
+//! resolves the best artifact for a requested `(segment, width, batch)`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::coordinator::wkey;
+use crate::utilx::Json;
+
+/// One exported HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub segment: usize,
+    pub width: f64,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// Ordered parameter tensor names (after the activation input).
+    pub params: Vec<String>,
+}
+
+/// One golden (input, output) pair for cross-language validation.
+#[derive(Clone, Debug)]
+pub struct GoldenMeta {
+    pub segment: usize,
+    pub width: f64,
+    pub batch: usize,
+    pub artifact: String,
+    pub input_file: String,
+    pub input_shape: Vec<usize>,
+    pub output_file: String,
+    pub output_shape: Vec<usize>,
+}
+
+/// A named weight tensor inside weights.bin.
+#[derive(Clone, Debug)]
+pub struct WeightMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// Parsed manifest + loaded weights.
+#[derive(Clone, Debug)]
+pub struct ArtifactIndex {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub goldens: Vec<GoldenMeta>,
+    pub weights: Vec<WeightMeta>,
+    pub weight_data: Vec<f32>,
+    pub batches: Vec<usize>,
+    pub widths: Vec<f64>,
+    pub num_segments: usize,
+    by_key: HashMap<(usize, u16, usize), usize>,
+}
+
+fn usize_vec(j: &Json, key: &str) -> anyhow::Result<Vec<usize>> {
+    j.get(key)
+        .and_then(Json::as_usize_vec)
+        .ok_or_else(|| anyhow!("manifest: bad '{key}'"))
+}
+
+impl ArtifactIndex {
+    /// Load manifest.json + weights.bin from an artifacts directory.
+    pub fn load(dir: &str) -> anyhow::Result<Self> {
+        let dir = PathBuf::from(dir);
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+
+        let model = json.req("model").map_err(|e| anyhow!("{e}"))?;
+        let widths = model
+            .get("widths")
+            .and_then(Json::as_f64_vec)
+            .ok_or_else(|| anyhow!("manifest: bad model.widths"))?;
+        let batches = usize_vec(&json, "batches")?;
+        let num_segments = json
+            .get("segments")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: bad segments"))?;
+
+        let mut artifacts = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: bad artifacts"))?
+        {
+            artifacts.push(ArtifactMeta {
+                file: a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact: bad file"))?
+                    .to_string(),
+                segment: a
+                    .get("segment")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact: bad segment"))?,
+                width: a
+                    .get("width")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("artifact: bad width"))?,
+                batch: a
+                    .get("batch")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("artifact: bad batch"))?,
+                input_shape: usize_vec(a, "input_shape")?,
+                output_shape: usize_vec(a, "output_shape")?,
+                params: a
+                    .get("params")
+                    .and_then(Json::as_arr)
+                    .map(|xs| {
+                        xs.iter()
+                            .filter_map(Json::as_str)
+                            .map(str::to_string)
+                            .collect()
+                    })
+                    .ok_or_else(|| anyhow!("artifact: bad params"))?,
+            });
+        }
+
+        let mut goldens = Vec::new();
+        if let Some(gs) = json.get("goldens").and_then(Json::as_arr) {
+            for g in gs {
+                goldens.push(GoldenMeta {
+                    segment: g.get("segment").and_then(Json::as_usize).unwrap_or(0),
+                    width: g.get("width").and_then(Json::as_f64).unwrap_or(1.0),
+                    batch: g.get("batch").and_then(Json::as_usize).unwrap_or(1),
+                    artifact: g
+                        .get("artifact")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    input_file: g
+                        .get("input_file")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    input_shape: usize_vec(g, "input_shape")?,
+                    output_file: g
+                        .get("output_file")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    output_shape: usize_vec(g, "output_shape")?,
+                });
+            }
+        }
+
+        // weights
+        let weights_json = json.req("weights").map_err(|e| anyhow!("{e}"))?;
+        let weights_file = weights_json
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest: bad weights.file"))?;
+        let mut weights = Vec::new();
+        for t in weights_json
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: bad weights.tensors"))?
+        {
+            weights.push(WeightMeta {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("weight: bad name"))?
+                    .to_string(),
+                shape: usize_vec(t, "shape")?,
+                offset: t
+                    .get("offset")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("weight: bad offset"))?,
+                bytes: t
+                    .get("bytes")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("weight: bad bytes"))?,
+            });
+        }
+        let blob = std::fs::read(dir.join(weights_file))
+            .with_context(|| format!("reading {weights_file}"))?;
+        let expected: usize = weights.iter().map(|w| w.bytes).sum();
+        if blob.len() != expected {
+            bail!("weights.bin: {} bytes, manifest says {expected}", blob.len());
+        }
+        let weight_data: Vec<f32> = blob
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut by_key = HashMap::new();
+        for (i, a) in artifacts.iter().enumerate() {
+            by_key.insert((a.segment, wkey(a.width), a.batch), i);
+        }
+
+        Ok(ArtifactIndex {
+            dir,
+            artifacts,
+            goldens,
+            weights,
+            weight_data,
+            batches,
+            widths,
+            num_segments,
+            by_key,
+        })
+    }
+
+    /// Exact lookup.
+    pub fn find(&self, seg: usize, width: f64, batch: usize) -> Option<&ArtifactMeta> {
+        self.by_key
+            .get(&(seg, wkey(width), batch))
+            .map(|&i| &self.artifacts[i])
+    }
+
+    /// Smallest exported batch ≥ `n` (requests are padded up to it); falls
+    /// back to the largest exported batch (caller splits).
+    pub fn best_batch(&self, n: usize) -> usize {
+        let mut sorted = self.batches.clone();
+        sorted.sort_unstable();
+        for &b in &sorted {
+            if b >= n {
+                return b;
+            }
+        }
+        *sorted.last().unwrap_or(&1)
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// View of one weight tensor's f32 data.
+    pub fn weight_slice(&self, name: &str) -> Option<&[f32]> {
+        let w = self.weights.iter().find(|w| w.name == name)?;
+        let start = w.offset / 4;
+        Some(&self.weight_data[start..start + w.bytes / 4])
+    }
+
+    /// Shape of one weight tensor.
+    pub fn weight_shape(&self, name: &str) -> Option<&[usize]> {
+        self.weights
+            .iter()
+            .find(|w| w.name == name)
+            .map(|w| w.shape.as_slice())
+    }
+}
+
+/// Convenience: does an artifacts directory look complete?
+pub fn artifacts_available(dir: &str) -> bool {
+    Path::new(dir).join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIR: &str = "artifacts";
+
+    fn index() -> Option<ArtifactIndex> {
+        if !artifacts_available(DIR) {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(ArtifactIndex::load(DIR).expect("manifest parses"))
+    }
+
+    #[test]
+    fn manifest_loads_with_full_grid() {
+        let Some(idx) = index() else { return };
+        assert_eq!(idx.num_segments, 4);
+        assert_eq!(idx.widths, vec![0.25, 0.5, 0.75, 1.0]);
+        assert_eq!(
+            idx.artifacts.len(),
+            idx.num_segments * idx.widths.len() * idx.batches.len()
+        );
+        // every artifact file exists on disk
+        for a in &idx.artifacts {
+            assert!(idx.path_of(&a.file).exists(), "{}", a.file);
+        }
+        assert!(!idx.goldens.is_empty());
+    }
+
+    #[test]
+    fn lookup_and_best_batch() {
+        let Some(idx) = index() else { return };
+        let a = idx.find(0, 0.5, 1).expect("seg0 w050 b1");
+        assert_eq!(a.segment, 0);
+        assert_eq!(a.input_shape[0], 1);
+        assert!(idx.find(0, 0.33, 1).is_none());
+        assert_eq!(idx.best_batch(1), 1);
+        assert_eq!(idx.best_batch(2), 4);
+        assert_eq!(idx.best_batch(5), 16);
+        assert_eq!(idx.best_batch(99), 16); // clamps to max
+    }
+
+    #[test]
+    fn weights_roundtrip_gamma_ones() {
+        let Some(idx) = index() else { return };
+        // every GN gamma is initialized to 1.0 by python init_params
+        let g = idx.weight_slice("s1.down.gn.g").expect("gamma tensor");
+        assert!(!g.is_empty());
+        assert!(g.iter().all(|&x| x == 1.0));
+        let shape = idx.weight_shape("s0.stem.w").expect("stem");
+        assert_eq!(shape, &[3, 3, 3, 32]);
+    }
+
+    #[test]
+    fn artifact_params_resolve_to_weights() {
+        let Some(idx) = index() else { return };
+        for a in &idx.artifacts {
+            for p in &a.params {
+                assert!(idx.weight_slice(p).is_some(), "missing weight {p}");
+            }
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! SegmentExecutor — execute one SlimResNet segment on the PJRT CPU
+//! client. Resolves `(segment, width, batch)` to the exported artifact
+//! (padding the batch up to the nearest exported size), marshals the
+//! activation plus the segment's weight tensors into XLA literals, runs,
+//! and slices the batch back down.
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactIndex, ArtifactMeta};
+use super::pool::ExecutablePool;
+use super::tensor::HostTensor;
+
+/// Real-inference engine over the AOT artifacts.
+pub struct SegmentExecutor {
+    pub index: ArtifactIndex,
+    pub pool: ExecutablePool,
+    /// Cached weight literals per artifact file (built on first use).
+    pub executions: u64,
+}
+
+fn literal_from_tensor(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+fn literal_from_slice(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+impl SegmentExecutor {
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let index = ArtifactIndex::load(artifacts_dir)?;
+        let pool = ExecutablePool::cpu()?;
+        Ok(SegmentExecutor { index, pool, executions: 0 })
+    }
+
+    /// Pre-compile every artifact for the given widths (serving warm-up).
+    pub fn warm_all(&mut self, widths: &[f64]) -> Result<usize> {
+        let paths: Vec<String> = self
+            .index
+            .artifacts
+            .iter()
+            .filter(|a| widths.iter().any(|w| (w - a.width).abs() < 1e-9))
+            .map(|a| self.index.path_of(&a.file).to_string_lossy().into_owned())
+            .collect();
+        self.pool.warm(&paths)
+    }
+
+    fn artifact_for(&self, seg: usize, width: f64, n: usize) -> Result<&ArtifactMeta> {
+        let batch = self.index.best_batch(n);
+        self.index
+            .find(seg, width, batch)
+            .ok_or_else(|| anyhow!("no artifact for seg{seg} w{width} b{batch}"))
+    }
+
+    /// Execute segment `seg` at `width` on a batch activation tensor.
+    ///
+    /// `x` is the full-interface NHWC input (batch, H, W, C_full) — or the
+    /// image tensor for seg 0. Output is the next segment's input (or
+    /// logits for seg 3), sliced back to the true batch size.
+    pub fn execute(&mut self, seg: usize, width: f64, x: &HostTensor) -> Result<HostTensor> {
+        let n = x.batch();
+        if n == 0 {
+            return Err(anyhow!("empty batch"));
+        }
+        let meta = self.artifact_for(seg, width, n)?.clone();
+        if n > meta.batch {
+            // split oversized batches and stitch outputs
+            let first = x.slice_batch(meta.batch);
+            let rest = {
+                let row = x.numel() / n;
+                let mut shape = x.shape.clone();
+                shape[0] = n - meta.batch;
+                HostTensor::from_vec(&shape, x.data[row * meta.batch..].to_vec())
+            };
+            let y1 = self.execute(seg, width, &first)?;
+            let y2 = self.execute(seg, width, &rest)?;
+            let mut shape = y1.shape.clone();
+            shape[0] = n;
+            let mut data = y1.data;
+            data.extend_from_slice(&y2.data);
+            return Ok(HostTensor::from_vec(&shape, data));
+        }
+
+        let padded = x.pad_batch(meta.batch);
+        if padded.shape != meta.input_shape {
+            return Err(anyhow!(
+                "input shape {:?} != artifact {:?}",
+                padded.shape,
+                meta.input_shape
+            ));
+        }
+
+        let mut literals = Vec::with_capacity(1 + meta.params.len());
+        literals.push(literal_from_tensor(&padded)?);
+        for name in &meta.params {
+            let data = self
+                .index
+                .weight_slice(name)
+                .ok_or_else(|| anyhow!("missing weight {name}"))?;
+            let shape = self.index.weight_shape(name).unwrap().to_vec();
+            literals.push(literal_from_slice(data, &shape)?);
+        }
+
+        let path = self.index.path_of(&meta.file).to_string_lossy().into_owned();
+        let exe = self.pool.get(&path)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", meta.file))?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple output")?;
+        let values: Vec<f32> = out.to_vec::<f32>()?;
+        self.executions += 1;
+
+        let full = HostTensor::from_vec(&meta.output_shape, values);
+        Ok(full.slice_batch(n))
+    }
+
+    /// Run all four segments at a width tuple -> logits (quickstart path).
+    pub fn full_forward(
+        &mut self,
+        widths: &[f64; 4],
+        image: &HostTensor,
+    ) -> Result<HostTensor> {
+        let mut h = image.clone();
+        for (seg, &w) in widths.iter().enumerate() {
+            h = self.execute(seg, w, &h)?;
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::artifacts_available;
+
+    fn executor() -> Option<SegmentExecutor> {
+        if !artifacts_available("artifacts") {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(SegmentExecutor::new("artifacts").expect("executor"))
+    }
+
+    fn read_bin(path: &std::path::Path, shape: &[usize]) -> HostTensor {
+        let blob = std::fs::read(path).expect("golden file");
+        let data: Vec<f32> = blob
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        HostTensor::from_vec(shape, data)
+    }
+
+    #[test]
+    fn golden_pairs_match_exactly_enough() {
+        let Some(mut ex) = executor() else { return };
+        let goldens = ex.index.goldens.clone();
+        assert!(!goldens.is_empty());
+        for g in &goldens {
+            let x = read_bin(&ex.index.path_of(&g.input_file), &g.input_shape);
+            let want = read_bin(&ex.index.path_of(&g.output_file), &g.output_shape);
+            let got = ex
+                .execute(g.segment, g.width, &x)
+                .unwrap_or_else(|e| panic!("exec seg{} failed: {e:#}", g.segment));
+            assert_eq!(got.shape, want.shape);
+            let diff = got.max_abs_diff(&want);
+            assert!(
+                diff < 2e-3,
+                "seg{} w{} b{}: max abs diff {diff}",
+                g.segment,
+                g.width,
+                g.batch
+            );
+        }
+    }
+
+    #[test]
+    fn batch_padding_equals_direct_execution() {
+        let Some(mut ex) = executor() else { return };
+        // batch 2 pads to artifact batch 4: results must equal b=2 slice of b=4
+        let g = ex.index.goldens.iter().find(|g| g.segment == 0).unwrap().clone();
+        let x4 = read_bin(&ex.index.path_of(&g.input_file), &g.input_shape).pad_batch(2);
+        let y2 = ex.execute(0, g.width, &x4.slice_batch(2)).expect("b2");
+        let y_direct = ex.execute(0, g.width, &x4).expect("b2 padded");
+        assert_eq!(y2.shape[0], 2);
+        assert_eq!(y_direct.shape[0], 2);
+        assert!(y2.max_abs_diff(&y_direct) < 1e-5);
+    }
+
+    #[test]
+    fn oversized_batch_splits() {
+        let Some(mut ex) = executor() else { return };
+        let max_b = *ex.index.batches.iter().max().unwrap();
+        let (inp, _) = crate::model::ModelMeta::default().seg_io_shapes(0, max_b + 3);
+        let x = HostTensor::zeros(&inp);
+        let y = ex.execute(0, 0.25, &x).expect("split execution");
+        assert_eq!(y.batch(), max_b + 3);
+    }
+
+    #[test]
+    fn full_forward_produces_logits() {
+        let Some(mut ex) = executor() else { return };
+        let meta = crate::model::ModelMeta::default();
+        let (inp, _) = meta.seg_io_shapes(0, 1);
+        let mut x = HostTensor::zeros(&inp);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = ((i % 17) as f32 - 8.0) / 8.0;
+        }
+        let logits = ex
+            .full_forward(&[0.25, 0.5, 0.75, 1.0], &x)
+            .expect("full forward");
+        assert_eq!(logits.shape, vec![1, meta.num_classes]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        // not all equal (the network actually computed something)
+        let first = logits.data[0];
+        assert!(logits.data.iter().any(|&v| (v - first).abs() > 1e-6));
+    }
+
+    #[test]
+    fn zero_padding_invariant_on_real_path() {
+        let Some(mut ex) = executor() else { return };
+        let meta = crate::model::ModelMeta::default();
+        let (inp, _) = meta.seg_io_shapes(0, 1);
+        let x = HostTensor::from_vec(&inp, vec![0.5; inp.iter().product()]);
+        let y = ex.execute(0, 0.5, &x).expect("seg0 at 0.5");
+        // channels >= 16 (0.5 * 32) must be exactly zero
+        let c = *y.shape.last().unwrap();
+        let c_act = 16;
+        for (i, &v) in y.data.iter().enumerate() {
+            if i % c >= c_act {
+                assert_eq!(v, 0.0, "leak at flat index {i}");
+            }
+        }
+    }
+}

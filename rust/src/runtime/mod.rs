@@ -1,0 +1,25 @@
+//! PJRT runtime — the real inference path.
+//!
+//! Loads the HLO-text artifacts `python/compile/aot.py` exported (one per
+//! `(segment, width, batch)`), compiles them on the PJRT CPU client via
+//! the `xla` crate, and executes them with zero python at serve time:
+//!
+//! ```text
+//! manifest.json ──> ArtifactIndex ──┐
+//! weights.bin   ──> WeightStore  ──┼──> SegmentExecutor::execute(seg, w, x)
+//! *.hlo.txt     ──> ExecutablePool ┘        (pad batch → PJRT → slice)
+//! ```
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see aot.py and /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod executor;
+pub mod pool;
+pub mod tensor;
+
+pub use artifact::{ArtifactIndex, ArtifactMeta};
+pub use executor::SegmentExecutor;
+pub use pool::ExecutablePool;
+pub use tensor::HostTensor;

@@ -1,0 +1,99 @@
+//! Lazy compile cache: HLO text → PJRT executable, compiled at most once
+//! per artifact file and shared across instances. Compilation is the
+//! expensive step (tens of ms), execution is the hot path.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+/// Caching wrapper around the PJRT CPU client.
+pub struct ExecutablePool {
+    pub client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub compiles: u64,
+    pub hits: u64,
+}
+
+impl ExecutablePool {
+    /// Create with a fresh PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(ExecutablePool { client, cache: HashMap::new(), compiles: 0, hits: 0 })
+    }
+
+    /// Get (compiling if needed) the executable for an HLO-text file.
+    pub fn get(&mut self, path: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path}"))?;
+            self.cache.insert(path.to_string(), exe);
+            self.compiles += 1;
+        } else {
+            self.hits += 1;
+        }
+        Ok(self.cache.get(path).unwrap())
+    }
+
+    /// Pre-compile a list of artifacts (warm start before serving).
+    pub fn warm(&mut self, paths: &[String]) -> Result<usize> {
+        for p in paths {
+            self.get(p)?;
+        }
+        Ok(self.cache.len())
+    }
+
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::artifacts_available;
+
+    #[test]
+    fn compiles_probe_once_and_caches() {
+        if !artifacts_available("artifacts") {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut pool = ExecutablePool::cpu().expect("cpu client");
+        let path = "artifacts/probe.hlo.txt";
+        pool.get(path).expect("compile probe");
+        assert_eq!(pool.compiles, 1);
+        pool.get(path).expect("cache hit");
+        assert_eq!(pool.compiles, 1);
+        assert_eq!(pool.hits, 1);
+        assert_eq!(pool.cached(), 1);
+    }
+
+    #[test]
+    fn probe_executes_correctly() {
+        if !artifacts_available("artifacts") {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut pool = ExecutablePool::cpu().expect("cpu client");
+        let exe = pool.get("artifacts/probe.hlo.txt").expect("compile");
+        let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]).reshape(&[2, 2]).unwrap();
+        let y = xla::Literal::vec1(&[1f32, 1., 1., 1.]).reshape(&[2, 2]).unwrap();
+        let result = exe.execute::<xla::Literal>(&[x, y]).expect("execute")[0][0]
+            .to_literal_sync()
+            .expect("to literal");
+        let out = result.to_tuple1().expect("unwrap tuple");
+        let values = out.to_vec::<f32>().expect("to vec");
+        assert_eq!(values, vec![5.0, 5.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let mut pool = ExecutablePool::cpu().expect("cpu client");
+        assert!(pool.get("artifacts/definitely_missing.hlo.txt").is_err());
+    }
+}

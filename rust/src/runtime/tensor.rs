@@ -1,0 +1,110 @@
+//! Host-side f32 tensors (NHWC activations, flat weights).
+
+/// A dense f32 tensor on the host.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} != data len {}", data.len());
+        HostTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Leading (batch) dimension.
+    pub fn batch(&self) -> usize {
+        *self.shape.first().unwrap_or(&0)
+    }
+
+    /// Zero-pad the batch dimension up to `target` rows.
+    pub fn pad_batch(&self, target: usize) -> HostTensor {
+        let b = self.batch();
+        assert!(target >= b, "cannot shrink batch {b} -> {target}");
+        if target == b {
+            return self.clone();
+        }
+        let row = self.numel() / b.max(1);
+        let mut shape = self.shape.clone();
+        shape[0] = target;
+        let mut data = vec![0.0f32; row * target];
+        data[..self.data.len()].copy_from_slice(&self.data);
+        HostTensor { shape, data }
+    }
+
+    /// Take the first `n` batch rows.
+    pub fn slice_batch(&self, n: usize) -> HostTensor {
+        let b = self.batch();
+        assert!(n <= b, "cannot take {n} rows from batch {b}");
+        let row = self.numel() / b.max(1);
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        HostTensor { shape, data: self.data[..row * n].to_vec() }
+    }
+
+    /// Max |a-b| against another tensor (test helper).
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_numel() {
+        let t = HostTensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.batch(), 2);
+        let u = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(u.data[3], 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_validates() {
+        HostTensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn pad_batch_zero_fills() {
+        let t = HostTensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let p = t.pad_batch(3);
+        assert_eq!(p.shape, vec![3, 3]);
+        assert_eq!(&p.data[..3], &[1.0, 2.0, 3.0]);
+        assert!(p.data[3..].iter().all(|&x| x == 0.0));
+        // padding to the same size is identity
+        assert_eq!(t.pad_batch(1), t);
+    }
+
+    #[test]
+    fn slice_batch_inverts_pad() {
+        let t = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let round = t.pad_batch(5).slice_batch(2);
+        assert_eq!(round, t);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = HostTensor::from_vec(&[2], vec![1.0, 5.0]);
+        let b = HostTensor::from_vec(&[2], vec![1.5, 4.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

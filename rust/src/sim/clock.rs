@@ -1,0 +1,68 @@
+//! Virtual time. The cluster engine is a discrete-event simulation; all
+//! timestamps are f64 seconds since run start. A virtual clock makes the
+//! Tables III–V experiments deterministic and ~10^4× faster than wall
+//! time; the real-serving path (examples/serve_cluster.rs) swaps in wall
+//! time from `std::time::Instant`.
+
+/// Monotonic virtual clock (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance to an absolute timestamp (monotonicity enforced).
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(
+            t >= self.now - 1e-12,
+            "clock must be monotonic: {} -> {t}",
+            self.now
+        );
+        self.now = self.now.max(t);
+    }
+
+    /// Advance by a delta.
+    pub fn advance_by(&mut self, dt: f64) {
+        assert!(dt >= 0.0);
+        self.now += dt;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero_and_advances() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(1.5);
+        assert_eq!(c.now(), 1.5);
+        c.advance_by(0.5);
+        assert_eq!(c.now(), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "monotonic")]
+    fn rejects_time_travel() {
+        let mut c = VirtualClock::new();
+        c.advance_to(2.0);
+        c.advance_to(1.0);
+    }
+
+    #[test]
+    fn advance_to_same_time_is_fine() {
+        let mut c = VirtualClock::new();
+        c.advance_to(1.0);
+        c.advance_to(1.0);
+        assert_eq!(c.now(), 1.0);
+    }
+}

@@ -1,0 +1,329 @@
+//! Analytical GPU device model.
+//!
+//! Implements the empirical dynamics the paper measures on real hardware:
+//!
+//! * **Fig 1** — memory/compute utilization grows with batch size, and
+//!   wider configurations saturate earlier (occupancy ∝ batch × width).
+//! * **Figs 2–3** — latency and energy are near-linear in utilization up
+//!   to a ~90–95 % knee, then sharply super-linear (queueing delays and
+//!   context-switch overheads dominate).
+//!
+//! A batch executes for `roofline_base × congestion(U)` seconds where the
+//! roofline base is `flops/peak + bytes/bw + dispatch_overhead` and the
+//! congestion multiplier blows up past the knee. Power is affine in
+//! utilization between idle and max draw; energy is integrated exactly
+//! between utilization change-points.
+
+use crate::config::DeviceCfg;
+
+/// One in-flight batch on the device.
+#[derive(Clone, Debug)]
+struct Running {
+    occupancy: f64,
+    finish: f64,
+    id: u64,
+}
+
+/// Simulated GPU.
+#[derive(Clone, Debug)]
+pub struct SimDevice {
+    pub cfg: DeviceCfg,
+    vram_used: u64,
+    running: Vec<Running>,
+    energy_j: f64,
+    last_integration_t: f64,
+    next_batch_id: u64,
+    pub completed_batches: u64,
+}
+
+impl SimDevice {
+    pub fn new(cfg: DeviceCfg) -> Self {
+        SimDevice {
+            cfg,
+            vram_used: 0,
+            running: Vec::new(),
+            energy_j: 0.0,
+            last_integration_t: 0.0,
+            next_batch_id: 0,
+            completed_batches: 0,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // VRAM ledger
+    // ------------------------------------------------------------------
+
+    /// Reserve VRAM; false if it would exceed physical capacity.
+    pub fn try_alloc_vram(&mut self, bytes: u64) -> bool {
+        if self.vram_used + bytes > self.cfg.vram_bytes {
+            return false;
+        }
+        self.vram_used += bytes;
+        true
+    }
+
+    pub fn free_vram(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.vram_used);
+        self.vram_used = self.vram_used.saturating_sub(bytes);
+    }
+
+    pub fn vram_used(&self) -> u64 {
+        self.vram_used
+    }
+
+    /// Memory utilization fraction in [0,1] (Fig 1's y-axis).
+    pub fn mem_util(&self) -> f64 {
+        self.vram_used as f64 / self.cfg.vram_bytes as f64
+    }
+
+    // ------------------------------------------------------------------
+    // Compute utilization & occupancy
+    // ------------------------------------------------------------------
+
+    /// Occupancy one batch of (batch, width) contributes: batches fill the
+    /// device proportionally to active channels × batch size, saturating
+    /// at 1. The reference batch count scales with device capability so
+    /// the 980 Ti saturates ~2.4× earlier than the 2080 Ti (Fig 1 shape).
+    pub fn occupancy(&self, batch: usize, width: f64) -> f64 {
+        let b_ref = self.cfg.peak_flops / 2.0e8; // 2080Ti≈23.5, 980Ti≈9.9
+        ((batch as f64 * width) / b_ref).min(1.0)
+    }
+
+    /// Current compute utilization in percent (Figs 2–3 x-axis; eq. 1's
+    /// U^(i) telemetry).
+    pub fn util_pct(&self) -> f64 {
+        let total: f64 = self.running.iter().map(|r| r.occupancy).sum();
+        100.0 * total.min(1.0)
+    }
+
+    /// Instantaneous power draw (W): affine in utilization.
+    pub fn power_w(&self) -> f64 {
+        let u = self.util_pct() / 100.0;
+        self.cfg.idle_power_w + (self.cfg.max_power_w - self.cfg.idle_power_w) * u
+    }
+
+    /// Congestion multiplier m(U): near-linear before the knee, sharply
+    /// super-linear after it (the Figs 2–3 inflection).
+    pub fn congestion(&self, util_pct: f64) -> f64 {
+        let u = (util_pct / 100.0).clamp(0.0, 1.0);
+        let knee = self.cfg.knee_util_pct / 100.0;
+        let linear = 1.0 + 0.6 * u;
+        let excess = (u - knee).max(0.0);
+        let blowup =
+            self.cfg.knee_sharpness * excess * excess / (1.02 - u).max(0.02);
+        linear + blowup
+    }
+
+    /// Uncongested roofline execution time for (flops, bytes).
+    pub fn base_exec_time(&self, flops: u64, mem_bytes: u64) -> f64 {
+        flops as f64 / self.cfg.peak_flops
+            + mem_bytes as f64 / self.cfg.mem_bw
+            + self.cfg.dispatch_overhead_s
+    }
+
+    // ------------------------------------------------------------------
+    // Energy integration
+    // ------------------------------------------------------------------
+
+    /// Integrate energy up to `now` at the current utilization.
+    pub fn integrate_to(&mut self, now: f64) {
+        let dt = now - self.last_integration_t;
+        if dt > 0.0 {
+            self.energy_j += self.power_w() * dt;
+            self.last_integration_t = now;
+        }
+    }
+
+    /// Total joules consumed so far (including idle draw).
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    // ------------------------------------------------------------------
+    // Batch lifecycle
+    // ------------------------------------------------------------------
+
+    /// Start a batch at `now`; returns (batch_id, finish_time).
+    ///
+    /// The latency is the roofline base scaled by congestion at the
+    /// utilization *including* this batch — operating near saturation is
+    /// disproportionately slow, which is the feedback loop the PPO router
+    /// learns to avoid.
+    pub fn begin_batch(
+        &mut self,
+        now: f64,
+        flops: u64,
+        mem_bytes: u64,
+        batch: usize,
+        width: f64,
+    ) -> (u64, f64) {
+        self.integrate_to(now);
+        let occ = self.occupancy(batch, width);
+        let util_after =
+            (self.util_pct() / 100.0 + occ).min(1.0) * 100.0;
+        let t = self.base_exec_time(flops, mem_bytes) * self.congestion(util_after);
+        let id = self.next_batch_id;
+        self.next_batch_id += 1;
+        self.running.push(Running { occupancy: occ, finish: now + t, id });
+        (id, now + t)
+    }
+
+    /// Complete a batch by id at `now`.
+    pub fn finish_batch(&mut self, now: f64, id: u64) {
+        self.integrate_to(now);
+        if let Some(pos) = self.running.iter().position(|r| r.id == id) {
+            self.running.swap_remove(pos);
+            self.completed_batches += 1;
+        } else {
+            debug_assert!(false, "finish_batch: unknown id {id}");
+        }
+    }
+
+    /// Number of in-flight batches.
+    pub fn inflight(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Earliest scheduled finish time among in-flight batches.
+    pub fn next_finish(&self) -> Option<f64> {
+        self.running
+            .iter()
+            .map(|r| r.finish)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profiles;
+
+    fn dev() -> SimDevice {
+        SimDevice::new(profiles::rtx2080ti())
+    }
+
+    #[test]
+    fn vram_ledger_enforces_capacity() {
+        let mut d = SimDevice::new(profiles::toy_gpu());
+        let cap = d.cfg.vram_bytes;
+        assert!(d.try_alloc_vram(cap / 2));
+        assert!(d.try_alloc_vram(cap / 2));
+        assert!(!d.try_alloc_vram(1));
+        d.free_vram(cap / 2);
+        assert!(d.try_alloc_vram(cap / 4));
+        assert!((d.mem_util() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_monotone_in_batch_and_width_fig1() {
+        let d = dev();
+        // monotone in batch
+        let us: Vec<f64> = [1, 2, 4, 8, 16, 32, 64]
+            .iter()
+            .map(|&b| d.occupancy(b, 1.0))
+            .collect();
+        assert!(us.windows(2).all(|w| w[1] >= w[0]), "{us:?}");
+        // wider saturates earlier: find smallest batch hitting 1.0
+        let sat_batch = |width: f64| {
+            (1..=512).find(|&b| d.occupancy(b, width) >= 1.0).unwrap()
+        };
+        assert!(sat_batch(1.0) < sat_batch(0.5));
+        assert!(sat_batch(0.5) < sat_batch(0.25));
+    }
+
+    #[test]
+    fn heterogeneous_saturation() {
+        let fast = dev();
+        let slow = SimDevice::new(profiles::gtx980ti());
+        assert!(slow.occupancy(8, 1.0) > fast.occupancy(8, 1.0));
+    }
+
+    #[test]
+    fn congestion_linear_then_blows_up_fig23() {
+        let d = dev();
+        // near-linear region: second differences tiny
+        let c50 = d.congestion(50.0);
+        let c60 = d.congestion(60.0);
+        let c70 = d.congestion(70.0);
+        assert!(((c70 - c60) - (c60 - c50)).abs() < 1e-9);
+        // post-knee blow-up: slope explodes
+        let c92 = d.congestion(92.0);
+        let c96 = d.congestion(96.0);
+        let c100 = d.congestion(100.0);
+        assert!(c96 - c92 > 2.0 * (c70 - c50), "{c92} {c96}");
+        assert!(c100 > 2.0 * c92, "{c92} {c100}");
+        // monotone overall
+        let mut prev = 0.0;
+        for u in 0..=100 {
+            let c = d.congestion(u as f64);
+            assert!(c >= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn base_exec_time_roofline_terms() {
+        let d = dev();
+        let t_small = d.base_exec_time(1_000_000, 1_000_000);
+        let t_flops = d.base_exec_time(1_000_000_000_000, 1_000_000);
+        let t_mem = d.base_exec_time(1_000_000, 100_000_000_000);
+        assert!(t_flops > t_small);
+        assert!(t_mem > t_small);
+        assert!(t_small >= d.cfg.dispatch_overhead_s);
+    }
+
+    #[test]
+    fn batch_lifecycle_and_util() {
+        let mut d = dev();
+        assert_eq!(d.util_pct(), 0.0);
+        let (id1, f1) = d.begin_batch(0.0, 1_000_000_000, 10_000_000, 8, 1.0);
+        assert!(d.util_pct() > 0.0);
+        assert!(f1 > 0.0);
+        let (id2, _f2) = d.begin_batch(0.0, 1_000_000_000, 10_000_000, 8, 1.0);
+        let u2 = d.util_pct();
+        d.finish_batch(f1, id1);
+        assert!(d.util_pct() < u2);
+        d.finish_batch(f1, id2);
+        assert_eq!(d.inflight(), 0);
+        assert_eq!(d.completed_batches, 2);
+    }
+
+    #[test]
+    fn latency_increases_under_load() {
+        let mut empty = dev();
+        let (_, f_alone) = empty.begin_batch(0.0, 5_000_000_000, 50_000_000, 8, 1.0);
+
+        let mut busy = dev();
+        // pre-load to ~88% utilization
+        for _ in 0..5 {
+            busy.begin_batch(0.0, 5_000_000_000, 50_000_000, 4, 1.0);
+        }
+        let (_, f_busy) = busy.begin_batch(0.0, 5_000_000_000, 50_000_000, 8, 1.0);
+        assert!(f_busy > f_alone * 1.5, "{f_busy} vs {f_alone}");
+    }
+
+    #[test]
+    fn energy_integrates_power_over_time() {
+        let mut d = dev();
+        // idle for 10 s
+        d.integrate_to(10.0);
+        let idle_e = d.energy_j();
+        assert!((idle_e - d.cfg.idle_power_w * 10.0).abs() < 1e-6);
+        // run a big batch; energy rate must exceed idle
+        let (id, f) = d.begin_batch(10.0, 100_000_000_000, 1_000_000_000, 24, 1.0);
+        d.finish_batch(f, id);
+        let run_e = d.energy_j() - idle_e;
+        assert!(run_e > d.cfg.idle_power_w * (f - 10.0));
+        assert!(run_e <= d.cfg.max_power_w * (f - 10.0) + 1e-6);
+    }
+
+    #[test]
+    fn next_finish_ordering() {
+        let mut d = dev();
+        assert!(d.next_finish().is_none());
+        let (_, f1) = d.begin_batch(0.0, 1_000_000_000, 1_000_000, 2, 0.5);
+        let (_, f2) = d.begin_batch(0.0, 50_000_000_000, 1_000_000, 2, 0.5);
+        assert!(f2 > f1);
+        assert_eq!(d.next_finish(), Some(f1));
+    }
+}

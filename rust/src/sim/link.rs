@@ -1,0 +1,69 @@
+//! Inter-server link model (the paper's Wi-Fi 5 WLAN).
+//!
+//! When consecutive segments of one request execute on different servers,
+//! the full-size interface activation crosses the network; the transfer
+//! delay (base latency + Gaussian jitter + bytes/bandwidth) is charged to
+//! the request's end-to-end latency — this is the cost that makes naive
+//! random routing expensive and gives the PPO router locality signal.
+
+use crate::config::LinkCfg;
+use crate::utilx::Rng;
+
+/// Simulated WLAN link.
+#[derive(Clone, Debug)]
+pub struct Link {
+    cfg: LinkCfg,
+}
+
+impl Link {
+    pub fn new(cfg: LinkCfg) -> Self {
+        Link { cfg }
+    }
+
+    /// Transfer delay for `bytes` between two distinct servers.
+    pub fn transfer_s(&self, bytes: u64, rng: &mut Rng) -> f64 {
+        let jitter = (rng.normal() * self.cfg.jitter_s).max(-self.cfg.base_latency_s * 0.9);
+        self.cfg.base_latency_s + jitter + bytes as f64 / self.cfg.bandwidth_bytes_per_s
+    }
+
+    /// Delay for a same-server hop (device-local handoff): zero network.
+    pub fn local_s(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn link() -> Link {
+        Link::new(LinkCfg::default())
+    }
+
+    #[test]
+    fn transfer_positive_and_grows_with_bytes() {
+        let l = link();
+        let mut rng = Rng::new(1);
+        let small: f64 = (0..100).map(|_| l.transfer_s(1_000, &mut rng)).sum::<f64>() / 100.0;
+        let big: f64 =
+            (0..100).map(|_| l.transfer_s(10_000_000, &mut rng)).sum::<f64>() / 100.0;
+        assert!(small > 0.0);
+        assert!(big > small + 0.1); // 10 MB over 50 MB/s ≈ 0.2 s
+    }
+
+    #[test]
+    fn local_hop_is_free() {
+        assert_eq!(link().local_s(), 0.0);
+    }
+
+    #[test]
+    fn jitter_varies_but_never_negative_delay() {
+        let l = link();
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..200).map(|_| l.transfer_s(0, &mut rng)).collect();
+        assert!(xs.iter().all(|&x| x > 0.0));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let spread = xs.iter().map(|x| (x - mean).abs()).sum::<f64>() / xs.len() as f64;
+        assert!(spread > 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Heterogeneous GPU-cluster simulator.
+//!
+//! Stands in for the paper's physical testbed (2× RTX 2080 Ti + 1× GTX
+//! 980 Ti over Wi-Fi 5). The device model implements the dynamics the
+//! paper measures in Figs 1–3 — utilization grows with batch·width,
+//! latency and energy are near-linear in utilization until a ~90–95 %
+//! knee and sharply super-linear beyond it — so cluster-level experiments
+//! (Tables III–V) exercise the same feedback loop the PPO router learned
+//! on real hardware. See DESIGN.md §Hardware-Adaptation for the
+//! substitution argument.
+
+pub mod clock;
+pub mod device;
+pub mod link;
+pub mod profiles;
+pub mod workload;
+
+pub use clock::VirtualClock;
+pub use device::SimDevice;
+pub use link::Link;
+pub use workload::{Workload, WorkloadEvent};

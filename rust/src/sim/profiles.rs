@@ -1,0 +1,115 @@
+//! Calibrated device profiles for the paper's testbed.
+//!
+//! Two calibration decisions (DESIGN.md §Hardware-Adaptation):
+//!
+//! 1. **Ratios from spec sheets** — the 2080 Ti : 980 Ti capability gap
+//!    (~2.4× compute, ~1.8× bandwidth, VRAM sizes) comes from the real
+//!    cards, so heterogeneity-driven effects (the 980 Ti saturating
+//!    first, routing around it) are faithful.
+//! 2. **Absolute scale from the paper's operating point, not silicon.**
+//!    The paper's cluster served segment batches in the 0.1–1 s range
+//!    (baseline mean latency ≈ 9 s under queueing, per-block energies of
+//!    hundreds of J): eager per-segment PyTorch dispatch + WLAN hops, not
+//!    raw TFLOPs. We therefore scale *effective* throughput down by 10³
+//!    from the 35 %-of-peak figure so the simulated cluster reaches the
+//!    same saturation regime at the paper's request rates. Every
+//!    experiment (Figs 1–3, Tables III–V) depends on the ratio of offered
+//!    load to capacity and on the knee location — both preserved — not on
+//!    absolute TFLOPs.
+
+use crate::config::DeviceCfg;
+
+/// Effective-throughput derating vs. 35 %-of-peak silicon (see module docs).
+const OPERATING_POINT_SCALE: f64 = 1.0e-3;
+
+/// NVIDIA RTX 2080 Ti: 13.45 TFLOPS fp32 peak, 616 GB/s, 11 GB GDDR6.
+pub fn rtx2080ti() -> DeviceCfg {
+    DeviceCfg {
+        name: "rtx2080ti".to_string(),
+        peak_flops: 13.45e12 * 0.35 * OPERATING_POINT_SCALE,
+        mem_bw: 616.0e9 * 0.7 * OPERATING_POINT_SCALE,
+        vram_bytes: 11 * (1 << 30),
+        idle_power_w: 57.0,
+        max_power_w: 260.0,
+        knee_util_pct: 92.0,
+        knee_sharpness: 18.0,
+        dispatch_overhead_s: 8e-3,
+    }
+}
+
+/// NVIDIA GTX 980 Ti: 5.63 TFLOPS fp32 peak, 336 GB/s, 6 GB GDDR5.
+pub fn gtx980ti() -> DeviceCfg {
+    DeviceCfg {
+        name: "gtx980ti".to_string(),
+        peak_flops: 5.63e12 * 0.35 * OPERATING_POINT_SCALE,
+        mem_bw: 336.0e9 * 0.7 * OPERATING_POINT_SCALE,
+        vram_bytes: 6 * (1 << 30),
+        idle_power_w: 52.0,
+        max_power_w: 275.0,
+        knee_util_pct: 90.0,
+        knee_sharpness: 22.0,
+        dispatch_overhead_s: 12e-3,
+    }
+}
+
+/// A deliberately tiny device for failure-injection tests (VRAM pressure,
+/// early saturation).
+pub fn toy_gpu() -> DeviceCfg {
+    DeviceCfg {
+        name: "toy".to_string(),
+        peak_flops: 1.0e9,
+        mem_bw: 2.0e9,
+        vram_bytes: 64 << 20,
+        idle_power_w: 5.0,
+        max_power_w: 25.0,
+        knee_util_pct: 85.0,
+        knee_sharpness: 10.0,
+        dispatch_overhead_s: 20e-3,
+    }
+}
+
+/// Resolve a profile by name (the `Config::devices` strings).
+pub fn by_name(name: &str) -> Option<DeviceCfg> {
+    match name {
+        "rtx2080ti" => Some(rtx2080ti()),
+        "gtx980ti" => Some(gtx980ti()),
+        "toy" => Some(toy_gpu()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heterogeneity_ratios_match_spec_sheets() {
+        let fast = rtx2080ti();
+        let slow = gtx980ti();
+        let flops_ratio = fast.peak_flops / slow.peak_flops;
+        let bw_ratio = fast.mem_bw / slow.mem_bw;
+        assert!((flops_ratio - 2.39).abs() < 0.05, "{flops_ratio}");
+        assert!((bw_ratio - 1.83).abs() < 0.05, "{bw_ratio}");
+        assert!(fast.vram_bytes > slow.vram_bytes);
+    }
+
+    #[test]
+    fn by_name_resolves_paper_cluster() {
+        assert!(by_name("rtx2080ti").is_some());
+        assert!(by_name("gtx980ti").is_some());
+        assert!(by_name("toy").is_some());
+        assert!(by_name("h100").is_none());
+    }
+
+    #[test]
+    fn knees_sit_in_the_papers_band() {
+        for cfg in [rtx2080ti(), gtx980ti()] {
+            assert!(
+                (85.0..=95.0).contains(&cfg.knee_util_pct),
+                "{} knee {}",
+                cfg.name,
+                cfg.knee_util_pct
+            );
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Request arrival generation.
+//!
+//! Poisson arrivals with an optional bursty square-wave modulation (the
+//! paper evaluates "responsive scale-up under bursty load"): during the
+//! burst window the instantaneous rate is `rate × burst_factor`. Each
+//! arrival carries a requested width sampled from the configured mix
+//! (uniform over W by default). A trace mode replays a fixed event list
+//! for reproducible integration tests.
+
+use crate::config::WorkloadCfg;
+use crate::utilx::Rng;
+
+/// One generated arrival.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadEvent {
+    pub at: f64,
+    pub request_id: u64,
+    pub w_req: f64,
+}
+
+/// Arrival generator (iterator-style: `next_event` until exhausted).
+#[derive(Clone, Debug)]
+pub struct Workload {
+    cfg: WorkloadCfg,
+    widths: Vec<f64>,
+    rng: Rng,
+    t: f64,
+    issued: usize,
+}
+
+impl Workload {
+    pub fn new(cfg: WorkloadCfg, widths: &[f64], rng: Rng) -> Self {
+        let width_pool = if cfg.width_mix.is_empty() {
+            widths.to_vec()
+        } else {
+            cfg.width_mix.clone()
+        };
+        Workload { cfg, widths: width_pool, rng, t: 0.0, issued: 0 }
+    }
+
+    /// Instantaneous arrival rate at time t (square-wave burst model).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        if self.cfg.burst_period_s <= 0.0 || self.cfg.burst_factor <= 1.0 {
+            return self.cfg.rate_hz;
+        }
+        let phase = (t / self.cfg.burst_period_s).fract();
+        if phase < self.cfg.burst_duty {
+            self.cfg.rate_hz * self.cfg.burst_factor
+        } else {
+            self.cfg.rate_hz
+        }
+    }
+
+    /// Next arrival, or None once `total_requests` have been issued.
+    pub fn next_event(&mut self) -> Option<WorkloadEvent> {
+        if self.issued >= self.cfg.total_requests {
+            return None;
+        }
+        // thinning-free approach: step with the current window's rate
+        let rate = self.rate_at(self.t).max(1e-9);
+        self.t += self.rng.exponential(rate);
+        let w_req = *self.rng.choice(&self.widths);
+        let ev = WorkloadEvent {
+            at: self.t,
+            request_id: self.issued as u64,
+            w_req,
+        };
+        self.issued += 1;
+        Some(ev)
+    }
+
+    /// Drain the whole trace (for tests and trace export).
+    pub fn collect_all(mut self) -> Vec<WorkloadEvent> {
+        let mut out = Vec::with_capacity(self.cfg.total_requests);
+        while let Some(ev) = self.next_event() {
+            out.push(ev);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadCfg;
+
+    fn base_cfg() -> WorkloadCfg {
+        WorkloadCfg {
+            rate_hz: 100.0,
+            burst_factor: 1.0,
+            burst_period_s: 0.0,
+            burst_duty: 0.0,
+            total_requests: 5000,
+            width_mix: vec![],
+        }
+    }
+
+    #[test]
+    fn emits_exactly_total_requests_in_time_order() {
+        let wl = Workload::new(base_cfg(), &[0.25, 0.5], Rng::new(1));
+        let evs = wl.collect_all();
+        assert_eq!(evs.len(), 5000);
+        assert!(evs.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(evs.windows(2).all(|w| w[0].request_id + 1 == w[1].request_id));
+    }
+
+    #[test]
+    fn mean_rate_close_to_config() {
+        let wl = Workload::new(base_cfg(), &[1.0], Rng::new(2));
+        let evs = wl.collect_all();
+        let span = evs.last().unwrap().at;
+        let rate = evs.len() as f64 / span;
+        assert!((rate - 100.0).abs() < 5.0, "rate={rate}");
+    }
+
+    #[test]
+    fn widths_drawn_from_pool() {
+        let mut cfg = base_cfg();
+        cfg.width_mix = vec![0.25, 0.75];
+        let wl = Workload::new(cfg, &[0.5], Rng::new(3));
+        let evs = wl.collect_all();
+        assert!(evs.iter().all(|e| e.w_req == 0.25 || e.w_req == 0.75));
+        assert!(evs.iter().any(|e| e.w_req == 0.25));
+        assert!(evs.iter().any(|e| e.w_req == 0.75));
+    }
+
+    #[test]
+    fn bursts_concentrate_arrivals() {
+        let mut cfg = base_cfg();
+        cfg.burst_factor = 8.0;
+        cfg.burst_period_s = 2.0;
+        cfg.burst_duty = 0.25; // bursts in [0,0.5), [2,2.5), ...
+        cfg.total_requests = 20_000;
+        let wl = Workload::new(cfg.clone(), &[1.0], Rng::new(4));
+        let evs = wl.collect_all();
+        let in_burst = evs
+            .iter()
+            .filter(|e| (e.at / cfg.burst_period_s).fract() < cfg.burst_duty)
+            .count() as f64
+            / evs.len() as f64;
+        // burst windows are 25% of time but 8x rate => ~73% of arrivals
+        assert!(in_burst > 0.55, "in_burst={in_burst}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Workload::new(base_cfg(), &[0.5], Rng::new(7)).collect_all();
+        let b = Workload::new(base_cfg(), &[0.5], Rng::new(7)).collect_all();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rate_at_respects_burst_window() {
+        let mut cfg = base_cfg();
+        cfg.burst_factor = 4.0;
+        cfg.burst_period_s = 10.0;
+        cfg.burst_duty = 0.3;
+        let wl = Workload::new(cfg, &[1.0], Rng::new(5));
+        assert_eq!(wl.rate_at(1.0), 400.0); // inside burst
+        assert_eq!(wl.rate_at(5.0), 100.0); // outside
+        assert_eq!(wl.rate_at(11.0), 400.0); // next period burst
+    }
+}

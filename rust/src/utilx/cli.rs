@@ -1,0 +1,208 @@
+//! Tiny declarative CLI parser (clap substitute).
+//!
+//! Supports `subcommand --flag value --flag=value --bool-flag` plus
+//! positional arguments, typed getters with defaults, and `--help`
+//! generation from registered flag descriptions.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (if any).
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    positionals: Vec<String>,
+    /// (name, description) pairs registered for --help output.
+    registered: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = argv[1]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// Register a flag for help output; returns self for chaining.
+    pub fn describe(mut self, name: &str, desc: &str) -> Self {
+        self.registered.push((name.to_string(), desc.to_string()));
+        self
+    }
+
+    /// Raw string flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// String flag with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// f64 flag with default; panics with a clear message on bad value.
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    /// usize flag with default.
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// u64 flag with default.
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Boolean flag: present (or =true) => true.
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated f64 list.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad number {s:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Positional arguments (after the subcommand).
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Whether --help was requested.
+    pub fn wants_help(&self) -> bool {
+        self.flag("help")
+    }
+
+    /// Render registered flag help.
+    pub fn help_text(&self, usage: &str) -> String {
+        let mut s = format!("usage: {usage}\n\nflags:\n");
+        for (name, desc) in &self.registered {
+            s.push_str(&format!("  --{name:<24} {desc}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["simulate", "--router", "ppo", "--steps=500", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("router"), Some("ppo"));
+        assert_eq!(a.usize_or("steps", 0), 500);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["serve"]);
+        assert_eq!(a.f64_or("rate", 2.5), 2.5);
+        assert_eq!(a.str_or("dir", "artifacts"), "artifacts");
+        assert_eq!(a.u64_or("seed", 42), 42);
+    }
+
+    #[test]
+    fn equals_and_space_forms_agree() {
+        let a = parse(&["x", "--k=v"]);
+        let b = parse(&["x", "--k", "v"]);
+        assert_eq!(a.get("k"), b.get("k"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&["run", "one", "--f", "2", "two"]);
+        assert_eq!(a.positionals(), &["one".to_string(), "two".to_string()]);
+    }
+
+    #[test]
+    fn f64_list() {
+        let a = parse(&["x", "--widths", "0.25,0.5,1.0"]);
+        assert_eq!(a.f64_list_or("widths", &[]), vec![0.25, 0.5, 1.0]);
+        assert_eq!(a.f64_list_or("other", &[9.0]), vec![9.0]);
+    }
+
+    #[test]
+    fn negative_number_as_flag_value() {
+        // "--bias -3" : "-3" does not start with "--" so it is a value
+        let a = parse(&["x", "--bias", "-3.5"]);
+        assert_eq!(a.f64_or("bias", 0.0), -3.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects a number")]
+    fn bad_number_panics() {
+        let a = parse(&["x", "--rate", "abc"]);
+        a.f64_or("rate", 0.0);
+    }
+
+    #[test]
+    fn help_text_lists_registered() {
+        let a = parse(&["x", "--help"]).describe("rate", "arrival rate");
+        assert!(a.wants_help());
+        let h = a.help_text("repro simulate [flags]");
+        assert!(h.contains("--rate"));
+        assert!(h.contains("arrival rate"));
+    }
+}

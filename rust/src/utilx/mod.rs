@@ -1,0 +1,16 @@
+//! Dependency-free substrates.
+//!
+//! The build environment is fully offline and its crate cache carries only
+//! `xla` + `anyhow`; everything a serving framework usually pulls from the
+//! ecosystem (rand, serde_json, clap, proptest) is implemented here from
+//! scratch, with its own unit tests (DESIGN.md §2, dependency
+//! substitutions).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;

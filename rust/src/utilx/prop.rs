@@ -1,0 +1,88 @@
+//! Mini property-testing driver (proptest substitute).
+//!
+//! `check` runs a property over `cases` seeded inputs; on failure it
+//! reports the failing case index and seed so the case can be replayed
+//! deterministically (`PROP_SEED` env var re-runs a single seed). Shrinking
+//! is intentionally out of scope — failures print the generated scenario,
+//! which for our domains (request traces, width tuples, telemetry vectors)
+//! is already small and readable.
+
+use super::rng::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated cases. Panics (test failure) on the
+/// first counterexample with its replay seed.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> CaseResult,
+{
+    // Replay mode: PROP_SEED=<n> runs exactly one case.
+    if let Ok(seed_text) = std::env::var("PROP_SEED") {
+        if let Ok(seed) = seed_text.parse::<u64>() {
+            let mut rng = Rng::new(seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!("property '{name}' failed on replay seed {seed}: {msg}");
+            }
+            return;
+        }
+    }
+    let base = 0x5eed_0000u64;
+    for case in 0..cases {
+        let seed = base + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed (case {case}/{cases}, replay with \
+                 PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 25, |rng| {
+            count += 1;
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x out of range: {x}"))
+            }
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn prop_assert_macro_returns_err() {
+        fn body(flag: bool) -> CaseResult {
+            prop_assert!(flag, "flag was {}", flag);
+            Ok(())
+        }
+        assert!(body(true).is_ok());
+        assert_eq!(body(false).unwrap_err(), "flag was false");
+    }
+}

@@ -1,0 +1,68 @@
+//! Mini end-to-end integration: a PPO router (trained briefly in the
+//! simulator) drives REAL PJRT CPU inference through the full segment
+//! chain — the same composition `examples/serve_cluster.rs` demonstrates
+//! at larger scale, asserted here as part of `cargo test`.
+
+use slim_scheduler::config::{Config, RewardCfg};
+use slim_scheduler::coordinator::router::Router;
+use slim_scheduler::coordinator::telemetry::{ServerTelemetry, TelemetrySnapshot};
+use slim_scheduler::experiments;
+use slim_scheduler::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS};
+use slim_scheduler::runtime::artifact::artifacts_available;
+use slim_scheduler::runtime::{HostTensor, SegmentExecutor};
+use slim_scheduler::utilx::Rng;
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow without --release")]
+fn ppo_routed_real_inference_end_to_end() {
+    if !artifacts_available("artifacts") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // 1. train a router in the simulator (tiny budget)
+    let mut sim_cfg = Config::default();
+    sim_cfg.workload.total_requests = 800;
+    let mut router = experiments::train_ppo(&sim_cfg, RewardCfg::balanced(), 2);
+    router.eval_mode();
+
+    // 2. serve 12 images for real
+    let meta = ModelMeta::default();
+    let prior = AccuracyPrior::new();
+    let mut ex = SegmentExecutor::new("artifacts").expect("executor");
+    let mut rng = Rng::new(5);
+    let (in_shape, _) = meta.seg_io_shapes(0, 1);
+
+    let snap = TelemetrySnapshot {
+        fifo_len: 12,
+        done_count: 0,
+        total_requests: 12,
+        servers: (0..3)
+            .map(|_| ServerTelemetry::default())
+            .collect(),
+    };
+
+    let mut acc_sum = 0.0;
+    for i in 0..12u64 {
+        let mut x = HostTensor::zeros(&in_shape);
+        for v in &mut x.data {
+            *v = rng.normal() as f32 * 0.5;
+        }
+        let mut widths = [0.0; NUM_SEGMENTS];
+        let mut h = x;
+        for seg in 0..NUM_SEGMENTS {
+            let d = router.route(&snap, 0.5, seg, &mut rng);
+            assert!(d.server < 3);
+            widths[seg] = d.width;
+            h = ex.execute(seg, d.width, &h).expect("segment execution");
+        }
+        assert_eq!(h.shape, vec![1, meta.num_classes], "request {i}");
+        assert!(h.data.iter().all(|v| v.is_finite()));
+        acc_sum += prior.lookup(&widths);
+    }
+    let mean_acc = acc_sum / 12.0;
+    assert!(
+        (70.0..=76.5).contains(&mean_acc),
+        "served accuracy prior out of range: {mean_acc}"
+    );
+    assert!(ex.executions >= 48);
+}

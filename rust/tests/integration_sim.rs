@@ -1,0 +1,167 @@
+//! Cross-module integration tests over the simulated cluster: router ×
+//! engine × greedy × device invariants, cost-model agreement with the
+//! python-exported manifest, and failure injection.
+
+use slim_scheduler::config::{Config, RewardCfg};
+use slim_scheduler::coordinator::router::{
+    LeastLoadedRouter, RandomRouter, RoundRobinRouter,
+};
+use slim_scheduler::coordinator::Engine;
+use slim_scheduler::experiments;
+use slim_scheduler::model::ModelMeta;
+use slim_scheduler::utilx::Json;
+
+fn cfg(requests: usize, rate: f64) -> Config {
+    let mut c = Config::default();
+    c.workload.total_requests = requests;
+    c.workload.rate_hz = rate;
+    c
+}
+
+#[test]
+fn all_routers_complete_and_conserve_requests() {
+    for name in ["random", "rr", "ll"] {
+        let c = cfg(400, 250.0);
+        let widths = c.scheduler.widths.clone();
+        let out = match name {
+            "random" => Engine::new(c, RandomRouter::new(widths, true, 8)).run(),
+            "rr" => Engine::new(c, RoundRobinRouter::new(widths, 8)).run(),
+            _ => Engine::new(c, LeastLoadedRouter::new(widths, 16)).run(),
+        };
+        assert_eq!(out.report.completed, 400, "{name}");
+        assert_eq!(out.width_histogram.iter().sum::<u64>(), 4 * 400, "{name}");
+        assert!(out.report.latency.count() > 0, "{name}");
+        assert!(out.total_energy_j > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn rust_cost_model_matches_python_manifest() {
+    // The manifest's flops table is produced by python/compile/model.py;
+    // ModelMeta::seg_flops must agree exactly on the whole exported grid.
+    let text = match std::fs::read_to_string("artifacts/manifest.json") {
+        Ok(t) => t,
+        Err(_) => {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+    let json = Json::parse(&text).expect("manifest parses");
+    let meta = ModelMeta::default();
+    let flops = json.get("flops").expect("flops table");
+    let map = flops.as_map().expect("flops is an object");
+    assert!(map.len() >= 100, "expected a dense flops grid");
+    for (key, value) in map {
+        let parts: Vec<&str> = key.split('|').collect();
+        let seg: usize = parts[0].parse().unwrap();
+        let w: f64 = parts[1].parse().unwrap();
+        let wp: f64 = parts[2].parse().unwrap();
+        let b: usize = parts[3].parse().unwrap();
+        let want = value.as_f64().unwrap() as u64;
+        let got = meta.seg_flops(seg, w, wp, b);
+        assert_eq!(got, want, "flops mismatch at {key}");
+    }
+
+    // weight bytes as well
+    let seg_bytes = json
+        .get("segment_weight_bytes")
+        .and_then(Json::as_usize_vec)
+        .expect("segment_weight_bytes");
+    for (s, &want) in seg_bytes.iter().enumerate() {
+        assert_eq!(meta.seg_weight_bytes(s) as usize, want, "seg{s} weight bytes");
+    }
+}
+
+#[test]
+fn vram_starved_cluster_still_completes() {
+    // failure injection: shrink the VRAM budget to a single instance's
+    // worth — scale-ups mostly fail, requeues spike, but nothing is lost.
+    let mut c = cfg(150, 100.0);
+    c.scheduler.m_max_bytes = 40 << 20; // 40 MB budget
+    let widths = c.scheduler.widths.clone();
+    let out = Engine::new(c, RandomRouter::new(widths, false, 4)).run();
+    assert_eq!(out.report.completed, 150);
+    let blocked: u64 = out.greedy_stats.iter().map(|s| s.blocked_by_vram).sum();
+    assert!(blocked > 0, "expected VRAM pressure, got none");
+}
+
+#[test]
+fn unloader_reclaims_memory_over_a_long_tail() {
+    let mut c = cfg(300, 400.0);
+    c.scheduler.t_idle_s = 0.5;
+    let widths = c.scheduler.widths.clone();
+    let out = Engine::new(c, RandomRouter::new(widths, true, 4)).run();
+    let unloads: u64 = out.greedy_stats.iter().map(|s| s.unloads).sum();
+    assert!(unloads > 0, "idle unloader never fired");
+}
+
+#[test]
+fn ppo_learns_better_than_random_under_heavy_penalty() {
+    let c = cfg(1500, 140.0);
+    let baseline = experiments::run_random_baseline(&c);
+    let (ppo, router) = experiments::run_ppo_experiment(&c, RewardCfg::overfit(), 5);
+    assert!(router.stats.updates > 0);
+    assert!(
+        ppo.report.latency.mean() < baseline.report.latency.mean() * 0.5,
+        "ppo {} vs baseline {}",
+        ppo.report.latency.mean(),
+        baseline.report.latency.mean()
+    );
+}
+
+#[test]
+fn telemetry_variance_tracks_imbalance() {
+    // round-robin spreads load evenly; a single-server hammer maximizes
+    // imbalance. GPU-var telemetry must reflect that ordering.
+    let c = cfg(500, 300.0);
+    let widths = c.scheduler.widths.clone();
+    let rr = Engine::new(c.clone(), RoundRobinRouter::new(widths.clone(), 8)).run();
+
+    struct PinRouter(slim_scheduler::coordinator::router::RoundRobinRouter);
+    impl slim_scheduler::coordinator::Router for PinRouter {
+        fn name(&self) -> &'static str {
+            "pin"
+        }
+        fn route(
+            &mut self,
+            snap: &slim_scheduler::coordinator::TelemetrySnapshot,
+            w: f64,
+            seg: usize,
+            rng: &mut slim_scheduler::utilx::Rng,
+        ) -> slim_scheduler::coordinator::Decision {
+            let mut d = self.0.route(snap, w, seg, rng);
+            d.server = 0; // hammer one server
+            d
+        }
+    }
+    let pinned = Engine::new(
+        c,
+        PinRouter(RoundRobinRouter::new(widths, 8)),
+    )
+    .run();
+    assert!(
+        pinned.telemetry.util_variance.mean() > rr.telemetry.util_variance.mean(),
+        "pinned {} !> rr {}",
+        pinned.telemetry.util_variance.mean(),
+        rr.telemetry.util_variance.mean()
+    );
+}
+
+#[test]
+fn burst_factor_worsens_tail_latency() {
+    // base rate below cluster capacity so the calm run never saturates;
+    // the bursty run hits 6x spikes that pile up queues
+    let mut calm = cfg(1000, 55.0);
+    calm.workload.burst_factor = 1.0;
+    let mut bursty = cfg(1000, 55.0);
+    bursty.workload.burst_factor = 6.0;
+    let w = calm.scheduler.widths.clone();
+    let out_calm = Engine::new(calm, RandomRouter::new(w.clone(), true, 8)).run();
+    let out_burst = Engine::new(bursty, RandomRouter::new(w, true, 8)).run();
+    assert!(
+        out_burst.e2e_latency.percentile(99.0) > out_calm.e2e_latency.percentile(99.0),
+        "burst p99 {} !> calm p99 {}",
+        out_burst.e2e_latency.percentile(99.0),
+        out_calm.e2e_latency.percentile(99.0)
+    );
+}

@@ -1,0 +1,84 @@
+//! Cross-language golden test: the python-exported HLO artifacts,
+//! executed through the rust PJRT runtime, must reproduce the jax
+//! reference model's numbers bit-nearly. This is the contract that makes
+//! the three-layer architecture trustworthy.
+
+use slim_scheduler::runtime::artifact::artifacts_available;
+use slim_scheduler::runtime::{HostTensor, SegmentExecutor};
+
+fn read_bin(path: &std::path::Path, shape: &[usize]) -> HostTensor {
+    let blob = std::fs::read(path).expect("golden file");
+    let data: Vec<f32> = blob
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    HostTensor::from_vec(shape, data)
+}
+
+#[test]
+fn every_golden_pair_matches() {
+    if !artifacts_available("artifacts") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut ex = SegmentExecutor::new("artifacts").expect("executor");
+    let goldens = ex.index.goldens.clone();
+    assert!(goldens.len() >= 4, "expected golden pairs in the manifest");
+    let mut checked = 0;
+    for g in &goldens {
+        let x = read_bin(&ex.index.path_of(&g.input_file), &g.input_shape);
+        let want = read_bin(&ex.index.path_of(&g.output_file), &g.output_shape);
+        let got = ex
+            .execute(g.segment, g.width, &x)
+            .unwrap_or_else(|e| panic!("seg{} w{} b{}: {e:#}", g.segment, g.width, g.batch));
+        assert_eq!(got.shape, want.shape);
+        let diff = got.max_abs_diff(&want);
+        assert!(
+            diff < 2e-3,
+            "seg{} w{} b{}: max abs diff {diff}",
+            g.segment,
+            g.width,
+            g.batch
+        );
+        checked += 1;
+    }
+    println!("checked {checked} golden pairs");
+}
+
+#[test]
+fn chained_segments_preserve_interface_invariants() {
+    if !artifacts_available("artifacts") {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut ex = SegmentExecutor::new("artifacts").expect("executor");
+    let meta = slim_scheduler::model::ModelMeta::default();
+    let (in_shape, _) = meta.seg_io_shapes(0, 2);
+    let x = HostTensor::from_vec(
+        &in_shape,
+        (0..in_shape.iter().product::<usize>())
+            .map(|i| ((i % 23) as f32 - 11.0) / 11.0)
+            .collect(),
+    );
+    // run a mixed chain and verify the zero-padding invariant between
+    // every pair of segments (the w_prev-independence guarantee)
+    let widths = [0.5, 0.25, 0.75, 0.5];
+    let mut h = x;
+    for seg in 0..3 {
+        h = ex.execute(seg, widths[seg], &h).expect("segment");
+        let c = *h.shape.last().unwrap();
+        let c_act = slim_scheduler::model::c_active(
+            meta.base_channels[seg],
+            widths[seg],
+        );
+        for (i, &v) in h.data.iter().enumerate() {
+            if i % c >= c_act {
+                assert_eq!(v, 0.0, "seg{seg} leaked into padding at {i}");
+            }
+        }
+        assert!(h.data.iter().any(|&v| v != 0.0), "seg{seg} produced zeros");
+    }
+    let logits = ex.execute(3, widths[3], &h).expect("head");
+    assert_eq!(logits.shape, vec![2, meta.num_classes]);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+}
