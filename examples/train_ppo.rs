@@ -3,7 +3,8 @@
 //! paper's §III-B training pipeline end to end (simulated cluster,
 //! virtual time: ~a minute of wall clock for ~10^5 scheduling steps).
 //!
-//!   cargo run --release --example train_ppo [-- --episodes 10 --requests 8000]
+//!   cargo run --release --example train_ppo \
+//!       [-- --episodes 10 --requests 8000 --workers 4 --scenario hetero-mixed]
 
 use slim_scheduler::config::{Config, RewardCfg};
 use slim_scheduler::experiments;
@@ -34,11 +35,12 @@ fn main() -> anyhow::Result<()> {
     cfg.workload.total_requests = args.usize_or("requests", 6000);
     cfg.apply_args(&args);
     let episodes = args.usize_or("episodes", 8);
+    let workers = args.usize_or("workers", 1);
 
     println!(
-        "cluster: {:?}, workload {} req @ {}/s (burst ×{})",
+        "cluster: {:?}, workload {} req @ {}/s (burst ×{}), {} rollout worker(s)",
         cfg.devices, cfg.workload.total_requests, cfg.workload.rate_hz,
-        cfg.workload.burst_factor
+        cfg.workload.burst_factor, workers
     );
 
     // baseline for reference
@@ -47,7 +49,20 @@ fn main() -> anyhow::Result<()> {
     print!("{}", baseline.report.to_table());
 
     // ---- overfit reward (Table IV) ----
-    let (out4, router4) = experiments::run_table4(&cfg, episodes);
+    // --workers N collects the training episodes with N concurrent
+    // seeded engines (merged synchronous updates); the wall-clock print
+    // makes the speedup visible — compare --workers 1 vs 4.
+    let t4 = std::time::Instant::now();
+    let (out4, router4) = experiments::run_ppo_experiment_workers(
+        &cfg,
+        RewardCfg::overfit(),
+        episodes,
+        workers,
+    );
+    println!(
+        "table IV training: {episodes} episodes, {workers} worker(s), {:.2?}",
+        t4.elapsed()
+    );
     learning_curve("overfit (β,γ heavy)", &router4.stats.reward_history);
     println!("\n== Table IV (PPO, overfit) ==");
     print!("{}", out4.report.to_table());
@@ -66,7 +81,17 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- balanced reward (Table V) ----
-    let (out5, router5) = experiments::run_table5(&cfg, episodes);
+    let t5 = std::time::Instant::now();
+    let (out5, router5) = experiments::run_ppo_experiment_online_workers(
+        &cfg,
+        RewardCfg::balanced(),
+        episodes,
+        workers,
+    );
+    println!(
+        "table V training: {episodes} episodes, {workers} worker(s), {:.2?}",
+        t5.elapsed()
+    );
     learning_curve("balanced", &router5.stats.reward_history);
     println!("\n== Table V (PPO, balanced, online) ==");
     print!("{}", out5.report.to_table());

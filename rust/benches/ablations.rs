@@ -28,7 +28,7 @@ fn main() {
     for &(label, eps_max, eps_min) in
         &[("on", 0.30f64, 0.02f64), ("off", 0.0, 0.0)]
     {
-        let mut cfg = experiments::paper_cluster_cfg(requests, 42);
+        let mut cfg = experiments::bench_cfg(requests, 42);
         cfg.ppo.eps_max = eps_max;
         cfg.ppo.eps_min = eps_min;
         let mut out = None;
@@ -65,7 +65,7 @@ fn main() {
         &["n_new", "lat_mean_s", "lat_p99_s", "loads", "requeues"],
     );
     for &n_new in &[1usize, 4] {
-        let mut cfg = experiments::paper_cluster_cfg(requests, 42);
+        let mut cfg = experiments::bench_cfg(requests, 42);
         cfg.scheduler.n_new = n_new;
         let mut out = None;
         bench.once(&format!("ablation_b/n_new_{n_new}"), || {
@@ -93,7 +93,7 @@ fn main() {
         &["u_blk", "lat_mean_s", "util_blocked", "loads"],
     );
     for &u_blk in &[50.0f64, 90.0, 101.0] {
-        let mut cfg = experiments::paper_cluster_cfg(requests, 42);
+        let mut cfg = experiments::bench_cfg(requests, 42);
         cfg.scheduler.u_blk_pct = u_blk;
         let mut out = None;
         bench.once(&format!("ablation_c/u_blk_{u_blk}"), || {
@@ -115,7 +115,7 @@ fn main() {
         &["alpha", "accuracy", "lat_mean_s", "energy_J", "slim_frac"],
     );
     for &alpha in &[0.02f64, 1.0, 3.5, 8.0] {
-        let cfg = experiments::paper_cluster_cfg(requests, 42);
+        let cfg = experiments::bench_cfg(requests, 42);
         let mut reward = RewardCfg::balanced();
         reward.alpha = alpha;
         if alpha < 0.1 {
@@ -155,4 +155,5 @@ fn main() {
         RandomRouter::new(vec![0.25, 0.5, 0.75, 1.0], true, 8),
     )
     .run();
+    bench.emit_json("ablations");
 }

@@ -37,4 +37,5 @@ fn main() {
     bench.bench("fig1/full_series", || {
         std::hint::black_box(experiments::fig1_rows());
     });
+    bench.emit_json("fig1_util_vs_batch");
 }

@@ -39,4 +39,5 @@ fn main() {
     bench.bench("fig2/full_series", || {
         std::hint::black_box(experiments::fig2_rows());
     });
+    bench.emit_json("fig2_energy_vs_util");
 }

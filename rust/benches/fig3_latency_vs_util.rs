@@ -35,4 +35,5 @@ fn main() {
     bench.bench("fig3/full_series", || {
         std::hint::black_box(experiments::fig3_rows());
     });
+    bench.emit_json("fig3_latency_vs_util");
 }

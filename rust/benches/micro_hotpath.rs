@@ -143,4 +143,5 @@ fn main() {
     } else {
         eprintln!("pjrt benches skipped: run `make artifacts` first");
     }
+    bench.emit_json("micro_hotpath");
 }

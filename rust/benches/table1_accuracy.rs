@@ -28,4 +28,5 @@ fn main() {
         i += 1;
         std::hint::black_box(prior.lookup(&[w, w, w, w]));
     });
+    bench.emit_json("table1_accuracy");
 }

@@ -42,4 +42,5 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
+    bench.emit_json("table2_accuracy");
 }

@@ -11,7 +11,9 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick")
         || std::env::var("BENCH_QUICK").is_ok();
     let requests = if quick { 2000 } else { 8000 };
-    let cfg = experiments::paper_cluster_cfg(requests, 42);
+    // BENCH_SCENARIO=<name> re-runs this table on any registered scenario
+    let cfg = experiments::bench_cfg(requests, 42);
+    let paper = cfg.scenario.as_deref().unwrap_or("paper") == "paper";
 
     let mut bench = Bench::from_env();
     let mut outcome = None;
@@ -61,12 +63,19 @@ fn main() {
     ]);
     table.print();
 
-    // qualitative signature
+    // qualitative signature (the saturation band is calibrated to the
+    // paper cluster; other scenarios only check completion)
     assert_eq!(out.report.completed, requests as u64);
-    assert!(out.report.accuracy_pct > 72.0 && out.report.accuracy_pct < 76.0,
-            "accuracy {}", out.report.accuracy_pct);
-    assert!(out.report.latency.mean() > 0.5,
-            "baseline must be saturated: {}", out.report.latency.mean());
-    assert!(out.report.energy.mean() > 100.0);
-    println!("baseline signature OK: saturated, mid-accuracy, costly\n");
+    if paper {
+        assert!(out.report.accuracy_pct > 72.0 && out.report.accuracy_pct < 76.0,
+                "accuracy {}", out.report.accuracy_pct);
+        assert!(out.report.latency.mean() > 0.5,
+                "baseline must be saturated: {}", out.report.latency.mean());
+        assert!(out.report.energy.mean() > 100.0);
+        println!("baseline signature OK: saturated, mid-accuracy, costly\n");
+    } else {
+        println!("scenario {:?}: completion checked, paper bands skipped\n",
+                 cfg.scenario.as_deref().unwrap_or("?"));
+    }
+    bench.emit_json("table3_baseline");
 }

@@ -12,15 +12,24 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick")
         || std::env::var("BENCH_QUICK").is_ok();
     let (requests, episodes) = if quick { (2000, 5) } else { (6000, 10) };
-    let cfg = experiments::paper_cluster_cfg(requests, 42);
+    // BENCH_SCENARIO / BENCH_WORKERS re-run this table per scenario and
+    // with parallel rollout collection
+    let cfg = experiments::bench_cfg(requests, 42);
+    let workers = experiments::bench_workers();
+    let paper = cfg.scenario.as_deref().unwrap_or("paper") == "paper";
 
     let mut bench = Bench::from_env();
     let mut results = None;
     bench.once(
-        &format!("table4/train+eval({episodes} episodes x {requests} req)"),
+        &format!("table4/train+eval({episodes} episodes x {requests} req, {workers} workers)"),
         || {
             let baseline = experiments::run_random_baseline(&cfg);
-            let (ppo, router) = experiments::run_table4(&cfg, episodes);
+            let (ppo, router) = experiments::run_ppo_experiment_workers(
+                &cfg,
+                slim_scheduler::config::RewardCfg::overfit(),
+                episodes,
+                workers,
+            );
             results = Some((baseline, ppo, router));
         },
     );
@@ -57,14 +66,22 @@ fn main() {
     println!("width histogram: {:?}", ppo.width_histogram);
     println!("ppo updates: {}", router.stats.updates);
 
-    // shape assertions
-    assert!((ppo.report.accuracy_pct - 70.30).abs() < 0.8,
-            "accuracy should pin to slimmest: {}", ppo.report.accuracy_pct);
-    assert!(lat_delta < -90.0, "latency delta {lat_delta}%");
-    assert!(energy_delta < -90.0, "energy delta {energy_delta}%");
-    assert!(ppo.report.throughput() > baseline.report.throughput());
-    let total: u64 = ppo.width_histogram.iter().sum();
-    assert!(ppo.width_histogram[0] as f64 / total as f64 > 0.8,
-            "policy must collapse onto 0.25×: {:?}", ppo.width_histogram);
-    println!("shape checks OK: collapse to slimmest, >90% latency & energy cuts\n");
+    // shape assertions (magnitude bands are calibrated to the paper
+    // cluster with sequential online training; scenario / parallel runs
+    // keep the direction checks only)
+    if paper && workers <= 1 {
+        assert!((ppo.report.accuracy_pct - 70.30).abs() < 0.8,
+                "accuracy should pin to slimmest: {}", ppo.report.accuracy_pct);
+        assert!(lat_delta < -90.0, "latency delta {lat_delta}%");
+        assert!(energy_delta < -90.0, "energy delta {energy_delta}%");
+        assert!(ppo.report.throughput() > baseline.report.throughput());
+        let total: u64 = ppo.width_histogram.iter().sum();
+        assert!(ppo.width_histogram[0] as f64 / total as f64 > 0.8,
+                "policy must collapse onto 0.25×: {:?}", ppo.width_histogram);
+        println!("shape checks OK: collapse to slimmest, >90% latency & energy cuts\n");
+    } else {
+        assert!(lat_delta < 0.0, "overfit policy must cut latency: {lat_delta}%");
+        println!("scenario/parallel run: direction checks only\n");
+    }
+    bench.emit_json("table4_ppo_overfit");
 }

@@ -11,7 +11,9 @@ fn main() {
     let quick = std::env::args().any(|a| a == "--quick")
         || std::env::var("BENCH_QUICK").is_ok();
     let (requests, episodes) = if quick { (2000, 5) } else { (6000, 10) };
-    let cfg = experiments::paper_cluster_cfg(requests, 42);
+    // BENCH_SCENARIO=<name> re-runs this table on any registered scenario
+    let cfg = experiments::bench_cfg(requests, 42);
+    let paper = cfg.scenario.as_deref().unwrap_or("paper") == "paper";
 
     let mut bench = Bench::from_env();
     let mut results = None;
@@ -50,31 +52,40 @@ fn main() {
     );
     println!("ppo width histogram: {:?}", ppo.width_histogram);
 
-    // shape assertions (Table V's trade-off signature)
-    assert!(
-        ppo.report.accuracy_pct > baseline.report.accuracy_pct,
-        "balanced policy must recover accuracy: {} vs {}",
-        ppo.report.accuracy_pct,
-        baseline.report.accuracy_pct
-    );
-    assert!(
-        ppo.report.latency.mean() < baseline.report.latency.mean(),
-        "mean latency must improve"
-    );
-    assert!(
-        ppo.report.energy.mean() < baseline.report.energy.mean(),
-        "mean energy must improve"
-    );
-    // high variance signature: spread comparable to the mean
-    assert!(
-        ppo.report.latency.std() > 0.5 * ppo.report.latency.mean(),
-        "latency spread should stay large (live width experimentation): σ {} μ {}",
-        ppo.report.latency.std(),
-        ppo.report.latency.mean()
-    );
-    // width mixing, not collapse
+    // shape assertions (Table V's trade-off signature — calibrated to
+    // the paper cluster; other scenarios check completion + mixing only)
+    if paper {
+        assert!(
+            ppo.report.accuracy_pct > baseline.report.accuracy_pct,
+            "balanced policy must recover accuracy: {} vs {}",
+            ppo.report.accuracy_pct,
+            baseline.report.accuracy_pct
+        );
+        assert!(
+            ppo.report.latency.mean() < baseline.report.latency.mean(),
+            "mean latency must improve"
+        );
+        assert!(
+            ppo.report.energy.mean() < baseline.report.energy.mean(),
+            "mean energy must improve"
+        );
+        // high variance signature: spread comparable to the mean
+        assert!(
+            ppo.report.latency.std() > 0.5 * ppo.report.latency.mean(),
+            "latency spread should stay large (live width experimentation): σ {} μ {}",
+            ppo.report.latency.std(),
+            ppo.report.latency.mean()
+        );
+        println!("shape checks OK: accuracy up, means down, spread stays wide\n");
+    } else {
+        println!(
+            "scenario {:?}: completion + width-mixing checked, paper bands skipped\n",
+            cfg.scenario.as_deref().unwrap_or("?")
+        );
+    }
+    // width mixing, not collapse (holds on every scenario)
     let total: u64 = ppo.width_histogram.iter().sum();
     let widest_frac = *ppo.width_histogram.iter().max().unwrap() as f64 / total as f64;
     assert!(widest_frac < 0.97, "policy collapsed: {:?}", ppo.width_histogram);
-    println!("shape checks OK: accuracy up, means down, spread stays wide\n");
+    bench.emit_json("table5_ppo_averaged");
 }

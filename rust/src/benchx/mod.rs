@@ -9,6 +9,7 @@
 use std::time::Instant;
 
 use crate::metrics::Summary;
+use crate::utilx::json::{obj, Json};
 
 /// Timing result of one benchmark.
 #[derive(Clone, Debug)]
@@ -35,6 +36,19 @@ fn fmt_ns(ns: f64) -> String {
 }
 
 impl BenchResult {
+    /// Machine-readable form for the `BENCH_*.json` perf trajectory.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("samples", Json::Num(self.samples as f64)),
+            ("iters_per_sample", Json::Num(self.iters_per_sample as f64)),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("std_ns", Json::Num(self.std_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p99_ns", Json::Num(self.p99_ns)),
+        ])
+    }
+
     pub fn print(&self) {
         println!(
             "{:<44} {:>12}/iter  σ {:>10}  p50 {:>10}  p99 {:>10}  ({} samples × {} iters)",
@@ -126,6 +140,7 @@ impl Bench {
 
     /// Run a one-shot (non-repeated) measured section — for end-to-end
     /// simulations where a single run is already statistically aggregated.
+    /// Recorded as a one-sample result so it lands in the JSON emission.
     pub fn once<F: FnOnce()>(&mut self, name: &str, f: F) {
         if self.skip(name) {
             return;
@@ -134,10 +149,47 @@ impl Bench {
         f();
         let dt = t0.elapsed().as_nanos() as f64;
         println!("{:<44} {:>12} (single run)", name, fmt_ns(dt));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples: 1,
+            iters_per_sample: 1,
+            mean_ns: dt,
+            std_ns: 0.0,
+            p50_ns: dt,
+            p99_ns: dt,
+        });
     }
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// Write `BENCH_<bench_name>.json` (into `BENCH_JSON_DIR`, default
+    /// cwd) so CI and perf-trajectory tooling can diff runs — every
+    /// bench target calls this after printing its human-readable output.
+    /// Write failures only warn: benches must not fail on a read-only fs.
+    pub fn emit_json(&self, bench_name: &str) {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = format!("{dir}/BENCH_{bench_name}.json");
+        let doc = obj(vec![
+            ("bench", Json::Str(bench_name.to_string())),
+            ("quick", Json::Bool(self.quick)),
+            (
+                "scenario",
+                match std::env::var("BENCH_SCENARIO") {
+                    Ok(s) if !s.is_empty() => Json::Str(s),
+                    _ => Json::Str("paper".to_string()),
+                },
+            ),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(BenchResult::to_json).collect()),
+            ),
+        ]);
+        match std::fs::write(&path, doc.to_string_pretty()) {
+            Ok(()) => println!("bench json: {path}"),
+            Err(e) => eprintln!("bench json: cannot write {path}: {e}"),
+        }
     }
 }
 
@@ -227,6 +279,39 @@ mod tests {
         assert!(b.results().is_empty());
         b.bench("match-me-1", || {});
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn once_records_a_single_sample_result() {
+        let mut b = Bench { quick: true, filter: None, results: vec![] };
+        b.once("one-shot", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(b.results().len(), 1);
+        let r = &b.results()[0];
+        assert_eq!(r.samples, 1);
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.p50_ns, r.mean_ns);
+    }
+
+    #[test]
+    fn bench_result_json_shape() {
+        let r = BenchResult {
+            name: "x/y".into(),
+            samples: 30,
+            iters_per_sample: 100,
+            mean_ns: 1234.5,
+            std_ns: 10.0,
+            p50_ns: 1200.0,
+            p99_ns: 1500.0,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("x/y"));
+        assert_eq!(j.get("mean_ns").and_then(Json::as_f64), Some(1234.5));
+        assert_eq!(j.get("samples").and_then(Json::as_usize), Some(30));
+        // round-trips through the parser (the trajectory tooling's path)
+        let parsed = Json::parse(&j.to_string_pretty()).expect("parses");
+        assert_eq!(parsed.get("p99_ns").and_then(Json::as_f64), Some(1500.0));
     }
 
     #[test]

@@ -195,6 +195,10 @@ pub struct WorkloadCfg {
     /// Burst period (s) and duty cycle in [0,1].
     pub burst_period_s: f64,
     pub burst_duty: f64,
+    /// Diurnal (sinusoidal) rate modulation: cycle length in virtual
+    /// seconds (0 disables) and modulation depth in [0,1).
+    pub diurnal_period_s: f64,
+    pub diurnal_depth: f64,
     /// Total requests to issue.
     pub total_requests: usize,
     /// Requested widths distribution (uniform over the scheduler widths
@@ -214,10 +218,21 @@ impl Default for WorkloadCfg {
             burst_factor: 3.0,
             burst_period_s: 10.0,
             burst_duty: 0.25,
+            diurnal_period_s: 0.0,
+            diurnal_depth: 0.0,
             total_requests: 20_000,
             width_mix: vec![],
         }
     }
+}
+
+/// Mid-run device failure injection: `server` stops accepting work at
+/// virtual time `at_s` (scenario `dropout`; the engine re-routes its
+/// queue and remaps later decisions to surviving servers).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DropoutCfg {
+    pub server: usize,
+    pub at_s: f64,
 }
 
 /// Top-level configuration.
@@ -231,6 +246,11 @@ pub struct Config {
     pub ppo: PpoCfg,
     pub link: LinkCfg,
     pub workload: WorkloadCfg,
+    /// Name of the `sim::scenarios` entry this config came from (run
+    /// provenance; None for hand-built configs).
+    pub scenario: Option<String>,
+    /// Optional mid-run device failure injection.
+    pub dropout: Option<DropoutCfg>,
 }
 
 impl Default for Config {
@@ -248,14 +268,22 @@ impl Default for Config {
             ppo: PpoCfg::default(),
             link: LinkCfg::default(),
             workload: WorkloadCfg::default(),
+            scenario: None,
+            dropout: None,
         }
     }
 }
 
 impl Config {
     /// Apply CLI overrides (a flat, documented subset — the fields every
-    /// example/bench sweeps).
+    /// example/bench sweeps). `--scenario <name>` is applied first, so
+    /// explicit flags override the scenario's baseline.
     pub fn apply_args(&mut self, args: &Args) {
+        if let Some(name) = args.get("scenario") {
+            crate::sim::scenarios::apply_named(name, self).unwrap_or_else(|e| {
+                panic!("--scenario: {e}")
+            });
+        }
         self.seed = args.u64_or("seed", self.seed);
         self.artifacts_dir = args.str_or("artifacts-dir", &self.artifacts_dir);
         self.workload.rate_hz = args.f64_or("rate", self.workload.rate_hz);
@@ -263,6 +291,23 @@ impl Config {
             args.usize_or("requests", self.workload.total_requests);
         self.workload.burst_factor =
             args.f64_or("burst-factor", self.workload.burst_factor);
+        self.workload.diurnal_period_s =
+            args.f64_or("diurnal-period", self.workload.diurnal_period_s);
+        self.workload.diurnal_depth =
+            args.f64_or("diurnal-depth", self.workload.diurnal_depth);
+        if let Some(spec) = args.get("dropout") {
+            // "server@time", e.g. --dropout 0@5.0
+            let parsed = spec.split_once('@').and_then(|(s, t)| {
+                Some(DropoutCfg {
+                    server: s.trim().parse().ok()?,
+                    at_s: t.trim().parse().ok()?,
+                })
+            });
+            match parsed {
+                Some(dp) => self.dropout = Some(dp),
+                None => panic!("--dropout expects server@time (e.g. 0@5.0), got {spec:?}"),
+            }
+        }
         self.scheduler.b_max = args.usize_or("b-max", self.scheduler.b_max);
         self.scheduler.u_blk_pct = args.f64_or("u-blk", self.scheduler.u_blk_pct);
         self.scheduler.t_idle_s = args.f64_or("t-idle", self.scheduler.t_idle_s);
@@ -290,6 +335,23 @@ impl Config {
         obj(vec![
             ("seed", Json::Num(self.seed as f64)),
             ("artifacts_dir", Json::Str(self.artifacts_dir.clone())),
+            (
+                "scenario",
+                match &self.scenario {
+                    Some(s) => Json::Str(s.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "dropout",
+                match self.dropout {
+                    Some(dp) => obj(vec![
+                        ("server", Json::Num(dp.server as f64)),
+                        ("at_s", Json::Num(dp.at_s)),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
             (
                 "devices",
                 Json::Arr(self.devices.iter().cloned().map(Json::Str).collect()),
@@ -339,6 +401,8 @@ impl Config {
                     ("burst_factor", Json::Num(self.workload.burst_factor)),
                     ("burst_period_s", Json::Num(self.workload.burst_period_s)),
                     ("burst_duty", Json::Num(self.workload.burst_duty)),
+                    ("diurnal_period_s", Json::Num(self.workload.diurnal_period_s)),
+                    ("diurnal_depth", Json::Num(self.workload.diurnal_depth)),
                     (
                         "total_requests",
                         Json::Num(self.workload.total_requests as f64),
@@ -360,6 +424,16 @@ impl Config {
         }
         if let Some(xs) = json.get("devices").and_then(Json::as_arr) {
             cfg.devices = xs.iter().filter_map(Json::as_str).map(str::to_string).collect();
+        }
+        if let Some(s) = json.get("scenario").and_then(Json::as_str) {
+            cfg.scenario = Some(s.to_string());
+        }
+        if let Some(dp) = json.get("dropout") {
+            let server = dp.get("server").and_then(Json::as_usize);
+            let at_s = dp.get("at_s").and_then(Json::as_f64);
+            if let (Some(server), Some(at_s)) = (server, at_s) {
+                cfg.dropout = Some(DropoutCfg { server, at_s });
+            }
         }
         if let Some(s) = json.get("scheduler") {
             if let Some(x) = s.get("b_max").and_then(Json::as_usize) {
@@ -393,6 +467,12 @@ impl Config {
             }
             if let Some(x) = w.get("burst_factor").and_then(Json::as_f64) {
                 cfg.workload.burst_factor = x;
+            }
+            if let Some(x) = w.get("diurnal_period_s").and_then(Json::as_f64) {
+                cfg.workload.diurnal_period_s = x;
+            }
+            if let Some(x) = w.get("diurnal_depth").and_then(Json::as_f64) {
+                cfg.workload.diurnal_depth = x;
             }
         }
         if let Some(p) = json.get("ppo") {
@@ -481,6 +561,56 @@ mod tests {
         assert_eq!(cfg.workload.rate_hz, 10.0);
         // everything else defaulted
         assert_eq!(cfg.devices.len(), 3);
+    }
+
+    #[test]
+    fn dropout_and_diurnal_roundtrip() {
+        let mut cfg = Config::default();
+        cfg.dropout = Some(DropoutCfg { server: 1, at_s: 7.5 });
+        cfg.workload.diurnal_period_s = 60.0;
+        cfg.workload.diurnal_depth = 0.5;
+        cfg.scenario = Some("diurnal".to_string());
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.dropout, Some(DropoutCfg { server: 1, at_s: 7.5 }));
+        assert_eq!(parsed.workload.diurnal_period_s, 60.0);
+        assert_eq!(parsed.workload.diurnal_depth, 0.5);
+        assert_eq!(parsed.scenario.as_deref(), Some("diurnal"));
+    }
+
+    #[test]
+    fn dropout_arg_parses_server_at_time() {
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--dropout", "2@4.5"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.dropout, Some(DropoutCfg { server: 2, at_s: 4.5 }));
+    }
+
+    #[test]
+    fn scenario_arg_applies_before_flag_overrides() {
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--scenario", "bursty-extreme", "--rate", "77"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.scenario.as_deref(), Some("bursty-extreme"));
+        // explicit flag wins over the scenario's baseline rate
+        assert_eq!(cfg.workload.rate_hz, 77.0);
+        // scenario's other knobs survive
+        assert!(cfg.workload.burst_factor > 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown scenario")]
+    fn unknown_scenario_panics_with_hint() {
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--scenario", "nope"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
     }
 
     #[test]

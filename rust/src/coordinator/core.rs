@@ -1,0 +1,417 @@
+//! Reusable discrete-event substrate behind the cluster engine.
+//!
+//! The engine used to be a 600-line monolith owning its own event heap,
+//! block bookkeeping and metric accumulators, hard-wired to `SimDevice`
+//! and `GreedyScheduler`. This module factors those substrates out:
+//!
+//! * [`EventQueue`] — the deterministic event heap (earliest timestamp
+//!   first, FIFO sequence tie-break). The tie-break is what makes every
+//!   run reproducible per seed; `tests/determinism.rs` guards it.
+//! * [`DeviceModel`] / [`LocalScheduler`] — the traits the engine drives
+//!   devices and per-server schedulers through, so alternative device
+//!   models (real executors, other simulators) and scheduling policies
+//!   slot in without touching the event loop.
+//! * [`BlockLedger`] — in-flight routed-block accounting.
+//! * [`RunMetrics`] — the per-run measurement bundle (Tables III–V rows).
+//!
+//! With these pieces an [`super::Engine`] instance is cheap to construct
+//! and `Send`, which is what lets `ppo::parallel` run one seeded engine
+//! per worker thread.
+
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::metrics::Summary;
+use crate::model::NUM_SEGMENTS;
+use crate::sim::SimDevice;
+
+use super::greedy::{DeviceGate, Dispatch, GreedyScheduler, GreedyStats};
+use super::queue::Queued;
+use super::telemetry::TelemetryLog;
+
+// ---------------------------------------------------------------------
+// Deterministic event heap
+// ---------------------------------------------------------------------
+
+struct Slot<E> {
+    t: f64,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Slot<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<E> Eq for Slot<E> {}
+impl<E> PartialOrd for Slot<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Slot<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: BinaryHeap is a max-heap, we need earliest-first;
+        // equal timestamps pop in push order (lowest sequence first).
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Min-heap of timestamped events with deterministic FIFO tie-breaking.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Slot<E>>,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    /// Schedule `ev` at absolute virtual time `t`.
+    pub fn push(&mut self, t: f64, ev: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Slot { t, seq, ev });
+    }
+
+    /// Earliest event (ties in push order), or None when drained.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        self.heap.pop().map(|s| (s.t, s.ev))
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn next_t(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Device + scheduler attachment traits
+// ---------------------------------------------------------------------
+
+/// What the engine needs from a device beyond the scheduler-facing
+/// [`DeviceGate`]: batch lifecycle, power/energy accounting, telemetry.
+pub trait DeviceModel: DeviceGate + Send {
+    /// Start a batch at `now`; returns (batch id, finish time).
+    fn begin_batch(
+        &mut self,
+        now: f64,
+        flops: u64,
+        mem_bytes: u64,
+        batch: usize,
+        width: f64,
+    ) -> (u64, f64);
+    /// Complete a batch by id at `now`.
+    fn finish_batch(&mut self, now: f64, id: u64);
+    /// Integrate energy up to `now` at the current utilization.
+    fn integrate_to(&mut self, now: f64);
+    /// Instantaneous power draw (W).
+    fn power_w(&self) -> f64;
+    /// Memory utilization fraction in [0,1].
+    fn mem_util(&self) -> f64;
+    /// Total joules consumed so far.
+    fn energy_j(&self) -> f64;
+}
+
+impl DeviceModel for SimDevice {
+    fn begin_batch(
+        &mut self,
+        now: f64,
+        flops: u64,
+        mem_bytes: u64,
+        batch: usize,
+        width: f64,
+    ) -> (u64, f64) {
+        SimDevice::begin_batch(self, now, flops, mem_bytes, batch, width)
+    }
+    fn finish_batch(&mut self, now: f64, id: u64) {
+        SimDevice::finish_batch(self, now, id)
+    }
+    fn integrate_to(&mut self, now: f64) {
+        SimDevice::integrate_to(self, now)
+    }
+    fn power_w(&self) -> f64 {
+        SimDevice::power_w(self)
+    }
+    fn mem_util(&self) -> f64 {
+        SimDevice::mem_util(self)
+    }
+    fn energy_j(&self) -> f64 {
+        SimDevice::energy_j(self)
+    }
+}
+
+/// The per-server scheduling policy the engine drives (Algorithm 1 by
+/// default, but anything honoring the enqueue/step/complete contract).
+pub trait LocalScheduler: Send {
+    /// Accept a routed request into the local queue.
+    fn enqueue(&mut self, q: Queued);
+    /// One scheduling sweep; returns the dispatches to execute.
+    fn step(&mut self, now: f64, gate: &mut dyn DeviceGate) -> Vec<Dispatch>;
+    /// Batch completion: release the instance.
+    fn complete(&mut self, instance_id: u64, now: f64);
+    /// Offload instances idle past t_idle; returns how many were freed.
+    fn unload_idle(&mut self, now: f64, gate: &mut dyn DeviceGate) -> usize;
+    /// Local queue length (telemetry q_t^(i)).
+    fn queue_len(&self) -> usize;
+    /// Loaded instance count (telemetry).
+    fn instances_loaded(&self) -> usize;
+    /// Counter snapshot for the run report.
+    fn stats(&self) -> GreedyStats;
+    /// Hand every queued entry back (device dropout re-routing).
+    fn drain_queue(&mut self) -> Vec<Queued>;
+}
+
+impl LocalScheduler for GreedyScheduler {
+    fn enqueue(&mut self, q: Queued) {
+        GreedyScheduler::enqueue(self, q)
+    }
+    fn step(&mut self, now: f64, gate: &mut dyn DeviceGate) -> Vec<Dispatch> {
+        GreedyScheduler::step(self, now, gate)
+    }
+    fn complete(&mut self, instance_id: u64, now: f64) {
+        GreedyScheduler::complete(self, instance_id, now)
+    }
+    fn unload_idle(&mut self, now: f64, gate: &mut dyn DeviceGate) -> usize {
+        GreedyScheduler::unload_idle(self, now, gate)
+    }
+    fn queue_len(&self) -> usize {
+        GreedyScheduler::queue_len(self)
+    }
+    fn instances_loaded(&self) -> usize {
+        self.pool.len()
+    }
+    fn stats(&self) -> GreedyStats {
+        self.stats.clone()
+    }
+    fn drain_queue(&mut self) -> Vec<Queued> {
+        self.fifo.drain_all()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Block ledger
+// ---------------------------------------------------------------------
+
+/// In-flight routed block (for block-level latency/energy and reward).
+#[derive(Clone, Debug)]
+pub struct BlockState {
+    pub routed_at: f64,
+    pub remaining: usize,
+    pub width: f64,
+    pub seg: usize,
+    /// Representative width tuple (first request's history + this width).
+    pub tuple: [f64; NUM_SEGMENTS],
+}
+
+/// Tracks every routed block until all its members complete.
+#[derive(Clone, Debug, Default)]
+pub struct BlockLedger {
+    blocks: HashMap<u64, BlockState>,
+}
+
+impl BlockLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a freshly routed block under its decision tag.
+    pub fn open(&mut self, tag: u64, state: BlockState) {
+        self.blocks.insert(tag, state);
+    }
+
+    /// One member of `tag` finished; returns the block state when the
+    /// whole block just completed. Unknown tags (e.g. blocks orphaned by
+    /// a device dropout re-route) are ignored.
+    pub fn note_done(&mut self, tag: u64) -> Option<BlockState> {
+        let finished = match self.blocks.get_mut(&tag) {
+            Some(b) => {
+                b.remaining -= 1;
+                b.remaining == 0
+            }
+            None => false,
+        };
+        if finished {
+            self.blocks.remove(&tag)
+        } else {
+            None
+        }
+    }
+
+    /// Cancel a block outright (its members were re-routed under new
+    /// tags); returns the state if it was still open.
+    pub fn abandon(&mut self, tag: u64) -> Option<BlockState> {
+        self.blocks.remove(&tag)
+    }
+
+    /// Blocks still in flight.
+    pub fn open_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Run metrics
+// ---------------------------------------------------------------------
+
+/// Everything a run measures while events fire (the Tables III–V rows
+/// plus the per-width execution histogram).
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub done: u64,
+    pub total: usize,
+    pub block_latency: Summary,
+    pub block_energy: Summary,
+    pub e2e_latency: Summary,
+    pub acc_sum: f64,
+    pub telemetry_log: TelemetryLog,
+    /// Executed-width histogram over all segment executions (W order).
+    pub width_histogram: [u64; 4],
+    pub blocks_completed: u64,
+}
+
+impl RunMetrics {
+    pub fn new(n_servers: usize, total: usize) -> Self {
+        RunMetrics {
+            done: 0,
+            total,
+            block_latency: Summary::default(),
+            block_energy: Summary::default(),
+            e2e_latency: Summary::default(),
+            acc_sum: 0.0,
+            telemetry_log: TelemetryLog::new(n_servers),
+            width_histogram: [0; 4],
+            blocks_completed: 0,
+        }
+    }
+
+    /// A routed block fully completed.
+    pub fn record_block(&mut self, latency_s: f64, energy_j: f64) {
+        self.block_latency.record(latency_s);
+        self.block_energy.record(energy_j);
+        self.blocks_completed += 1;
+    }
+
+    /// A request crossed its final segment.
+    pub fn record_request_done(&mut self, e2e_latency_s: f64, acc_pct: f64) {
+        self.done += 1;
+        self.e2e_latency.record(e2e_latency_s);
+        self.acc_sum += acc_pct;
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.done >= self.total as u64
+    }
+
+    /// Mean width-tuple accuracy over completed requests.
+    pub fn mean_accuracy(&self) -> f64 {
+        if self.done > 0 {
+            self.acc_sum / self.done as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_queue_pops_earliest_first() {
+        let mut q: EventQueue<&'static str> = EventQueue::new();
+        q.push(2.0, "late");
+        q.push(0.5, "early");
+        q.push(1.0, "mid");
+        assert_eq!(q.next_t(), Some(0.5));
+        assert_eq!(q.pop(), Some((0.5, "early")));
+        assert_eq!(q.pop(), Some((1.0, "mid")));
+        assert_eq!(q.pop(), Some((2.0, "late")));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn equal_timestamps_pop_in_push_order() {
+        // the determinism guarantee the PPO training loop relies on
+        let mut q: EventQueue<usize> = EventQueue::new();
+        for i in 0..64 {
+            q.push(1.0, i);
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_times_and_ties() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        q.push(1.0, 10);
+        q.push(0.0, 0);
+        q.push(1.0, 11);
+        q.push(0.0, 1);
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![0, 1, 10, 11]);
+    }
+
+    #[test]
+    fn block_ledger_counts_down() {
+        let mut l = BlockLedger::new();
+        let st = BlockState {
+            routed_at: 1.0,
+            remaining: 3,
+            width: 0.5,
+            seg: 2,
+            tuple: [0.5; NUM_SEGMENTS],
+        };
+        l.open(7, st);
+        assert_eq!(l.open_blocks(), 1);
+        assert!(l.note_done(7).is_none());
+        assert!(l.note_done(7).is_none());
+        let done = l.note_done(7).expect("third member closes the block");
+        assert_eq!(done.seg, 2);
+        assert!((done.routed_at - 1.0).abs() < 1e-12);
+        assert_eq!(l.open_blocks(), 0);
+        // unknown / already-closed tags are ignored
+        assert!(l.note_done(7).is_none());
+        assert!(l.note_done(99).is_none());
+    }
+
+    #[test]
+    fn run_metrics_accumulate() {
+        let mut m = RunMetrics::new(3, 2);
+        assert!(!m.all_done());
+        m.record_block(0.2, 30.0);
+        m.record_request_done(0.5, 74.0);
+        m.record_request_done(0.7, 70.0);
+        assert!(m.all_done());
+        assert_eq!(m.blocks_completed, 1);
+        assert!((m.mean_accuracy() - 72.0).abs() < 1e-12);
+        assert_eq!(m.e2e_latency.count(), 2);
+    }
+
+    #[test]
+    fn engine_is_send() {
+        // the property ppo::parallel's scoped worker threads require
+        fn assert_send<T: Send>() {}
+        assert_send::<super::super::Engine<super::super::router::RandomRouter>>();
+        assert_send::<EventQueue<u64>>();
+    }
+}

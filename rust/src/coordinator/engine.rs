@@ -8,11 +8,18 @@
 //! the router — the training loop of §III-B and the measurement loop of
 //! Tables III–V are the same code path.
 //!
+//! The event heap, block ledger and metric accumulators live in
+//! [`super::core`]; the router, per-server scheduler and device model
+//! attach through the [`Router`], [`LocalScheduler`] and [`DeviceModel`]
+//! traits, so the engine itself is just the event loop plus the routing
+//! glue. An engine is plain data and `Send` — `ppo::parallel` constructs
+//! one per worker thread for concurrent rollouts.
+//!
 //! Virtual time (discrete events) makes a 20 k-request cluster run finish
 //! in tens of milliseconds, so PPO training over hundreds of thousands of
 //! scheduling steps is practical on one CPU.
 
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::config::Config;
 use crate::metrics::{RunReport, Summary};
@@ -20,6 +27,7 @@ use crate::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS};
 use crate::sim::{profiles, Link, SimDevice, VirtualClock, Workload};
 use crate::utilx::Rng;
 
+use super::core::{BlockLedger, BlockState, DeviceModel, EventQueue, LocalScheduler, RunMetrics};
 use super::greedy::{Dispatch, GreedyScheduler, GreedyStats};
 use super::queue::Queued;
 use super::request::Request;
@@ -29,7 +37,7 @@ use super::telemetry::{ServerTelemetry, TelemetryLog, TelemetrySnapshot};
 const TELEMETRY_DT: f64 = 0.05;
 const UNLOAD_DT: f64 = 0.5;
 
-/// Event kinds (ordering by time, then sequence for determinism).
+/// Event kinds (ordering by time, then sequence — see `core::EventQueue`).
 #[derive(Debug)]
 enum EvKind {
     Arrival(Request),
@@ -37,44 +45,9 @@ enum EvKind {
     BatchDone { server: usize, device_batch: u64, dispatch: Dispatch },
     TelemetryTick,
     UnloadTick,
-}
-
-struct Ev {
-    t: f64,
-    seq: u64,
-    kind: EvKind,
-}
-
-impl PartialEq for Ev {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Ev {}
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // reversed: BinaryHeap is a max-heap, we need earliest-first
-        other
-            .t
-            .total_cmp(&self.t)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-/// In-flight routed block (for block-level latency/energy and reward).
-#[derive(Clone, Debug)]
-struct BlockState {
-    routed_at: f64,
-    remaining: usize,
-    width: f64,
-    seg: usize,
-    /// representative width tuple (first request's history + this width)
-    tuple: [f64; NUM_SEGMENTS],
+    /// Mid-run failure injection: the server stops accepting work
+    /// (scenario `dropout`; `Config::dropout`).
+    DeviceDown { server: usize },
 }
 
 /// Everything a finished run reports.
@@ -93,38 +66,34 @@ pub struct RunOutcome {
     pub total_energy_j: f64,
 }
 
-/// The engine itself (generic over the router so trained PPO routers can
-/// be recovered after a run; `Box<dyn Router>` also implements [`Router`]
-/// for dynamic use).
-pub struct Engine<R: Router> {
+/// The engine itself — generic over the router (so trained PPO routers
+/// can be recovered after a run; `Box<dyn Router>` also implements
+/// [`Router`] for dynamic use), the device model, and the per-server
+/// scheduler. The defaults are the paper configuration: simulated GPUs
+/// driven by Algorithm 1.
+pub struct Engine<R: Router, D: DeviceModel = SimDevice, S: LocalScheduler = GreedyScheduler> {
     pub cfg: Config,
     pub meta: ModelMeta,
     prior: AccuracyPrior,
-    devices: Vec<SimDevice>,
-    scheds: Vec<GreedyScheduler>,
+    devices: Vec<D>,
+    scheds: Vec<S>,
     link: Link,
     router: R,
     global_fifo: VecDeque<Request>,
-    blocks: HashMap<u64, BlockState>,
-    events: BinaryHeap<Ev>,
+    ledger: BlockLedger,
+    events: EventQueue<EvKind>,
     clock: VirtualClock,
     rng: Rng,
-    seq: u64,
-    // metrics
-    done: u64,
-    total: usize,
-    block_latency: Summary,
-    block_energy: Summary,
-    e2e_latency: Summary,
-    acc_sum: f64,
-    telemetry_log: TelemetryLog,
-    width_histogram: [u64; 4],
-    blocks_completed: u64,
+    metrics: RunMetrics,
+    /// Servers knocked out by a `DeviceDown` event.
+    down: Vec<bool>,
     /// Safety cap for pathological configurations.
     pub max_sim_time_s: f64,
 }
 
 impl<R: Router> Engine<R> {
+    /// Standard construction: device profiles resolved by name, one
+    /// greedy scheduler per device.
     pub fn new(cfg: Config, router: R) -> Self {
         let meta = ModelMeta::default();
         let devices: Vec<SimDevice> = cfg
@@ -141,57 +110,74 @@ impl<R: Router> Engine<R> {
             .iter()
             .map(|_| GreedyScheduler::new(cfg.scheduler.clone(), meta.clone()))
             .collect();
+        Engine::with_parts(cfg, router, devices, scheds)
+    }
+}
+
+impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
+    /// Assemble an engine from explicit parts (custom device models or
+    /// scheduling policies).
+    pub fn with_parts(cfg: Config, router: R, devices: Vec<D>, scheds: Vec<S>) -> Self {
+        assert_eq!(devices.len(), scheds.len(), "one scheduler per device");
+        assert!(!devices.is_empty(), "engine needs at least one device");
         let n = devices.len();
         let total = cfg.workload.total_requests;
         Engine {
             link: Link::new(cfg.link),
             rng: Rng::new(cfg.seed),
-            meta,
+            meta: ModelMeta::default(),
             prior: AccuracyPrior::new(),
             devices,
             scheds,
             router,
             global_fifo: VecDeque::new(),
-            blocks: HashMap::new(),
-            events: BinaryHeap::new(),
+            ledger: BlockLedger::new(),
+            events: EventQueue::new(),
             clock: VirtualClock::new(),
-            seq: 0,
-            done: 0,
-            total,
-            block_latency: Summary::default(),
-            block_energy: Summary::default(),
-            e2e_latency: Summary::default(),
-            acc_sum: 0.0,
-            telemetry_log: TelemetryLog::new(n),
-            width_histogram: [0; 4],
-            blocks_completed: 0,
+            metrics: RunMetrics::new(n, total),
+            down: vec![false; n],
             max_sim_time_s: 3600.0,
             cfg,
         }
     }
 
     fn push_event(&mut self, t: f64, kind: EvKind) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.events.push(Ev { t, seq, kind });
+        self.events.push(t, kind);
     }
 
-    /// eq. 1 snapshot of the cluster.
+    /// eq. 1 snapshot of the cluster. A downed server reports a
+    /// saturated-and-powerless signature (util 100 %, huge queue, zero
+    /// power) so telemetry-driven routers — LeastLoaded's load score,
+    /// the PPO state vector — steer away from it instead of seeing an
+    /// attractive idle machine; `alive_server` remains the safety net.
     fn snapshot(&self) -> TelemetrySnapshot {
         TelemetrySnapshot {
             fifo_len: self.global_fifo.len(),
-            done_count: self.done,
-            total_requests: self.total,
+            done_count: self.metrics.done,
+            total_requests: self.metrics.total,
             servers: self
                 .devices
                 .iter()
                 .zip(&self.scheds)
-                .map(|(d, s)| ServerTelemetry {
-                    queue_len: s.queue_len(),
-                    power_w: d.power_w(),
-                    util_pct: d.util_pct(),
-                    mem_util: d.mem_util(),
-                    instances: s.pool.len(),
+                .zip(&self.down)
+                .map(|((d, s), &down)| {
+                    if down {
+                        ServerTelemetry {
+                            queue_len: usize::MAX,
+                            power_w: 0.0,
+                            util_pct: 100.0,
+                            mem_util: 0.0,
+                            instances: 0,
+                        }
+                    } else {
+                        ServerTelemetry {
+                            queue_len: s.queue_len(),
+                            power_w: d.power_w(),
+                            util_pct: d.util_pct(),
+                            mem_util: d.mem_util(),
+                            instances: s.instances_loaded(),
+                        }
+                    }
                 })
                 .collect(),
         }
@@ -204,6 +190,19 @@ impl<R: Router> Engine<R> {
             .iter()
             .position(|&x| (x - w).abs() < 1e-9)
             .unwrap_or(0)
+    }
+
+    /// First alive server at or cyclically after `want` (dropout remap;
+    /// identity while every server is up).
+    fn alive_server(&self, want: usize) -> usize {
+        if !self.down[want] {
+            return want;
+        }
+        let n = self.devices.len();
+        (1..n)
+            .map(|k| (want + k) % n)
+            .find(|&i| !self.down[i])
+            .unwrap_or(want)
     }
 
     /// Route every request waiting at the leader.
@@ -240,7 +239,7 @@ impl<R: Router> Engine<R> {
                 tuple[s] = entries[0].req.widths_used[s];
             }
 
-            self.blocks.insert(
+            self.ledger.open(
                 decision.tag,
                 BlockState {
                     routed_at: now,
@@ -250,6 +249,9 @@ impl<R: Router> Engine<R> {
                     tuple,
                 },
             );
+
+            let server =
+                self.alive_server(decision.server.min(self.devices.len() - 1));
 
             // WLAN transfer: charge the slowest member of the block
             let mut arrive = now;
@@ -262,18 +264,20 @@ impl<R: Router> Engine<R> {
                     (inp.iter().product::<usize>() * 4) as u64
                 };
                 let dt = match q.req.last_server {
-                    Some(s) if s == decision.server => self.link.local_s(),
+                    Some(s) if s == server => self.link.local_s(),
                     _ => self.link.transfer_s(bytes, &mut self.rng),
                 };
                 arrive = arrive.max(now + dt);
             }
-            let server = decision.server.min(self.devices.len() - 1);
             self.push_event(arrive, EvKind::BlockArrive { server, entries });
         }
     }
 
-    /// Run the greedy scheduler on one server and execute its dispatches.
+    /// Run the scheduler on one server and execute its dispatches.
     fn pump_server(&mut self, server: usize) {
+        if self.down[server] {
+            return;
+        }
         let now = self.clock.now();
         let dispatches = {
             let dev = &mut self.devices[server];
@@ -311,26 +315,17 @@ impl<R: Router> Engine<R> {
         let now = self.clock.now();
         self.devices[server].finish_batch(now, device_batch);
         self.scheds[server].complete(d.instance_id, now);
-        self.width_histogram[self.width_index(d.width)] += d.batch.len() as u64;
+        self.metrics.width_histogram[self.width_index(d.width)] +=
+            d.batch.len() as u64;
 
         let snap = self.snapshot();
         for q in d.batch {
             let mut req = q.req;
             let tag = req.block_tag;
-            let mut block_finished = false;
-            if let Some(block) = self.blocks.get_mut(&tag) {
-                block.remaining -= 1;
-                if block.remaining == 0 {
-                    block_finished = true;
-                }
-            }
-            if block_finished {
-                let block = self.blocks.remove(&tag).unwrap();
+            if let Some(block) = self.ledger.note_done(tag) {
                 let latency = now - block.routed_at;
                 let energy = snap.mean_power_w() * latency;
-                self.block_latency.record(latency);
-                self.block_energy.record(energy);
-                self.blocks_completed += 1;
+                self.metrics.record_block(latency, energy);
                 let fb = BlockFeedback {
                     tag,
                     acc_prior_norm: self.prior.normalized(&block.tuple),
@@ -338,22 +333,48 @@ impl<R: Router> Engine<R> {
                     energy_j: energy,
                     util_variance: snap.util_variance(),
                 };
-                let _ = (block.width, block.seg);
                 self.router.feedback(&fb);
             }
 
             if req.advance(d.width, now, server) {
                 self.global_fifo.push_back(req);
             } else {
-                self.done += 1;
-                self.e2e_latency.record(now - req.arrival);
-                self.acc_sum += self.prior.lookup(&req.width_tuple());
+                let acc = self.prior.lookup(&req.width_tuple());
+                self.metrics.record_request_done(now - req.arrival, acc);
             }
         }
         // freed instance may unblock queued batches
         self.pump_server(server);
         // requests that advanced need routing
         self.route_pending();
+    }
+
+    /// Re-admit requests whose routed block never executed (device
+    /// dropout): abandon their old decision tags — close the ledger
+    /// entries and let a learning router drop the staged transitions
+    /// (no reward will ever arrive for them) — then re-route.
+    fn readmit(&mut self, entries: Vec<Queued>) {
+        for q in entries {
+            let tag = q.req.block_tag;
+            if self.ledger.abandon(tag).is_some() {
+                self.router.abandon(tag);
+            }
+            self.global_fifo.push_back(q.req);
+        }
+        self.route_pending();
+    }
+
+    /// A server goes offline: settle its energy at the failure instant
+    /// (a dead machine draws nothing afterwards), stop dispatching
+    /// there, and hand its queued requests back to the leader for
+    /// re-routing. In-flight batches are allowed to finish (their
+    /// `BatchDone` events are already scheduled).
+    fn handle_device_down(&mut self, server: usize) {
+        let now = self.clock.now();
+        self.devices[server].integrate_to(now);
+        self.down[server] = true;
+        let drained = self.scheds[server].drain_queue();
+        self.readmit(drained);
     }
 
     /// Run the configured workload to completion; returns the outcome.
@@ -376,13 +397,21 @@ impl<R: Router> Engine<R> {
         }
         self.push_event(TELEMETRY_DT, EvKind::TelemetryTick);
         self.push_event(UNLOAD_DT, EvKind::UnloadTick);
+        if let Some(dp) = self.cfg.dropout {
+            if dp.server < self.devices.len() {
+                self.push_event(
+                    dp.at_s.max(0.0),
+                    EvKind::DeviceDown { server: dp.server },
+                );
+            }
+        }
 
-        while let Some(ev) = self.events.pop() {
-            if ev.t > self.max_sim_time_s {
+        while let Some((t, ev)) = self.events.pop() {
+            if t > self.max_sim_time_s {
                 break;
             }
-            self.clock.advance_to(ev.t);
-            match ev.kind {
+            self.clock.advance_to(t);
+            match ev {
                 EvKind::Arrival(req) => {
                     self.global_fifo.push_back(req);
                     if let Some(next) = workload.next_event() {
@@ -392,22 +421,31 @@ impl<R: Router> Engine<R> {
                     self.route_pending();
                 }
                 EvKind::BlockArrive { server, entries } => {
-                    for q in entries {
-                        self.scheds[server].enqueue(q);
+                    if self.down[server] {
+                        // the block raced the dropout: re-route its members
+                        self.readmit(entries);
+                    } else {
+                        for q in entries {
+                            self.scheds[server].enqueue(q);
+                        }
+                        self.pump_server(server);
                     }
-                    self.pump_server(server);
                 }
                 EvKind::BatchDone { server, device_batch, dispatch } => {
                     self.handle_batch_done(server, device_batch, dispatch);
                 }
                 EvKind::TelemetryTick => {
                     let now = self.clock.now();
-                    for d in &mut self.devices {
-                        d.integrate_to(now);
+                    for (d, &down) in self.devices.iter_mut().zip(&self.down) {
+                        // a dead server's energy is settled at the
+                        // failure instant, not accrued forever
+                        if !down {
+                            d.integrate_to(now);
+                        }
                     }
                     let snap = self.snapshot();
-                    self.telemetry_log.record(&snap);
-                    if self.done < self.total as u64 {
+                    self.metrics.telemetry_log.record(&snap);
+                    if !self.metrics.all_done() {
                         self.push_event(now + TELEMETRY_DT, EvKind::TelemetryTick);
                     }
                 }
@@ -421,12 +459,15 @@ impl<R: Router> Engine<R> {
                     for i in 0..self.scheds.len() {
                         self.pump_server(i);
                     }
-                    if self.done < self.total as u64 {
+                    if !self.metrics.all_done() {
                         self.push_event(now + UNLOAD_DT, EvKind::UnloadTick);
                     }
                 }
+                EvKind::DeviceDown { server } => {
+                    self.handle_device_down(server);
+                }
             }
-            if self.done >= self.total as u64 {
+            if self.metrics.all_done() {
                 // drain: all requests served
                 break;
             }
@@ -434,30 +475,30 @@ impl<R: Router> Engine<R> {
         self.router.end_of_run();
 
         let now = self.clock.now();
-        for d in &mut self.devices {
-            d.integrate_to(now);
+        for (d, &down) in self.devices.iter_mut().zip(&self.down) {
+            if !down {
+                d.integrate_to(now);
+            }
         }
         let total_energy: f64 = self.devices.iter().map(|d| d.energy_j()).sum();
-        let accuracy = if self.done > 0 {
-            self.acc_sum / self.done as f64
-        } else {
-            0.0
-        };
+        let greedy_stats: Vec<GreedyStats> =
+            self.scheds.iter().map(|s| s.stats()).collect();
+        let m = self.metrics;
         let outcome = RunOutcome {
             report: RunReport {
                 label: self.router.name().to_string(),
-                accuracy_pct: accuracy,
-                latency: self.block_latency,
-                energy: self.block_energy,
-                gpu_var: self.telemetry_log.util_variance.clone(),
-                completed: self.done,
+                accuracy_pct: m.mean_accuracy(),
+                latency: m.block_latency,
+                energy: m.block_energy,
+                gpu_var: m.telemetry_log.util_variance.clone(),
+                completed: m.done,
                 duration_s: now,
             },
-            e2e_latency: self.e2e_latency,
-            telemetry: self.telemetry_log,
-            greedy_stats: self.scheds.iter().map(|s| s.stats.clone()).collect(),
-            width_histogram: self.width_histogram,
-            blocks_completed: self.blocks_completed,
+            e2e_latency: m.e2e_latency,
+            telemetry: m.telemetry_log,
+            greedy_stats,
+            width_histogram: m.width_histogram,
+            blocks_completed: m.blocks_completed,
             sim_duration_s: now,
             total_energy_j: total_energy,
         };
@@ -468,6 +509,7 @@ impl<R: Router> Engine<R> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::DropoutCfg;
     use crate::coordinator::router::{LeastLoadedRouter, RandomRouter, RoundRobinRouter};
 
     fn small_cfg(requests: usize, rate: f64) -> Config {
@@ -583,6 +625,36 @@ mod tests {
             "{} vs {}",
             slammed.report.latency.mean(),
             calm.report.latency.mean()
+        );
+    }
+
+    #[test]
+    fn device_dropout_still_completes_every_request() {
+        let mut cfg = small_cfg(250, 150.0);
+        cfg.dropout = Some(DropoutCfg { server: 0, at_s: 0.3 });
+        let widths = cfg.scheduler.widths.clone();
+        let out = run_with(cfg, Box::new(RandomRouter::new(widths, true, 4)));
+        assert_eq!(out.report.completed, 250);
+        assert_eq!(out.e2e_latency.count(), 250);
+    }
+
+    #[test]
+    fn dropout_shifts_load_off_the_dead_server() {
+        // hammer server 0 via round-robin, kill it early: the survivors
+        // must absorb everything and the run still drains.
+        let mut cfg = small_cfg(300, 200.0);
+        cfg.dropout = Some(DropoutCfg { server: 2, at_s: 0.2 });
+        let widths = cfg.scheduler.widths.clone();
+        let out = run_with(cfg, Box::new(RoundRobinRouter::new(widths, 4)));
+        assert_eq!(out.report.completed, 300);
+        // the dead server stops dispatching after the dropout instant, so
+        // its share of loads is below an even split
+        let loads: Vec<u64> = out.greedy_stats.iter().map(|s| s.loads).collect();
+        let total: u64 = loads.iter().sum();
+        assert!(total > 0);
+        assert!(
+            (loads[2] as f64) < total as f64 / 2.0,
+            "dead server kept working: {loads:?}"
         );
     }
 }

@@ -12,10 +12,14 @@
 //!   RoundRobin / LeastLoaded (algorithmic comparators), and the PPO
 //!   router (Tables IV–V).
 //! * [`telemetry`] — eq. 1's state vector + run-wide sampling.
+//! * [`core`] — the reusable discrete-event substrate: deterministic
+//!   event heap, block ledger, run metrics, and the [`core::DeviceModel`]
+//!   / [`core::LocalScheduler`] attachment traits.
 //! * [`engine`] — the discrete-event multi-server loop binding workload,
-//!   router, per-server greedy schedulers and simulated devices; produces
-//!   the Tables III–V metrics.
+//!   router, per-server schedulers and devices; produces the Tables
+//!   III–V metrics.
 
+pub mod core;
 pub mod engine;
 pub mod greedy;
 pub mod instance;
@@ -24,6 +28,7 @@ pub mod request;
 pub mod router;
 pub mod telemetry;
 
+pub use self::core::{BlockLedger, DeviceModel, EventQueue, LocalScheduler, RunMetrics};
 pub use engine::{Engine, RunOutcome};
 pub use greedy::GreedyScheduler;
 pub use instance::{Instance, InstancePool};

@@ -91,6 +91,11 @@ impl KeyedFifo {
         batch
     }
 
+    /// Take every queued entry, in order (device-dropout re-routing).
+    pub fn drain_all(&mut self) -> Vec<Queued> {
+        self.items.drain(..).collect()
+    }
+
     /// Put a batch back at the front (keeps batch order).
     pub fn requeue_front(&mut self, batch: Vec<Queued>) {
         for q in batch.into_iter().rev() {

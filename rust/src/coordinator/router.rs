@@ -58,6 +58,11 @@ pub trait Router: Send {
     /// Outcome of an earlier decision (ignored by stateless routers).
     fn feedback(&mut self, _fb: &BlockFeedback) {}
 
+    /// A routed block was cancelled before executing (device dropout
+    /// re-route): no feedback will ever arrive for `tag`. Learning
+    /// routers drop the staged transition; stateless routers ignore it.
+    fn abandon(&mut self, _tag: u64) {}
+
     /// Called when the run drains (learning routers flush updates).
     fn end_of_run(&mut self) {}
 }
@@ -77,6 +82,9 @@ impl Router for Box<dyn Router> {
     }
     fn feedback(&mut self, fb: &BlockFeedback) {
         (**self).feedback(fb)
+    }
+    fn abandon(&mut self, tag: u64) {
+        (**self).abandon(tag)
     }
     fn end_of_run(&mut self) {
         (**self).end_of_run()

@@ -17,6 +17,32 @@ pub fn paper_cluster_cfg(total_requests: usize, seed: u64) -> Config {
     cfg
 }
 
+/// Bench configuration: the paper cluster unless `BENCH_SCENARIO=<name>`
+/// selects a `sim::scenarios` entry — the hook that lets every table
+/// bench re-run per scenario without code changes.
+pub fn bench_cfg(total_requests: usize, seed: u64) -> Config {
+    let mut cfg = paper_cluster_cfg(total_requests, seed);
+    if let Ok(name) = std::env::var("BENCH_SCENARIO") {
+        if !name.is_empty() {
+            crate::sim::scenarios::apply_named(&name, &mut cfg)
+                .unwrap_or_else(|e| panic!("BENCH_SCENARIO: {e}"));
+            // the scenario overrides the workload; keep the bench budget
+            cfg.workload.total_requests = total_requests;
+            cfg.seed = seed;
+        }
+    }
+    cfg
+}
+
+/// Worker count for benches/examples: `BENCH_WORKERS=<n>` (default 1,
+/// which preserves the sequential trainer's exact numbers).
+pub fn bench_workers() -> usize {
+    std::env::var("BENCH_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
 /// Table III: greedy executors + uniformly random routing (and random
 /// width selection — "purely randomized task distribution").
 pub fn run_random_baseline(cfg: &Config) -> RunOutcome {
@@ -26,7 +52,8 @@ pub fn run_random_baseline(cfg: &Config) -> RunOutcome {
 
 /// Train a PPO router online against the simulated cluster for
 /// `episodes` workloads under the given reward weighting, then return it
-/// (still in training mode).
+/// (still in training mode). Sequential: one episode at a time, updates
+/// running in-place as the engine schedules (the paper's online loop).
 pub fn train_ppo(cfg: &Config, reward: RewardCfg, episodes: usize) -> PpoRouter {
     let mut ppo_cfg = cfg.ppo.clone();
     ppo_cfg.reward = reward;
@@ -38,12 +65,30 @@ pub fn train_ppo(cfg: &Config, reward: RewardCfg, episodes: usize) -> PpoRouter 
     );
     for ep in 0..episodes {
         let mut episode_cfg = cfg.clone();
-        episode_cfg.seed = cfg.seed.wrapping_add(1 + ep as u64 * 7919);
+        episode_cfg.seed = crate::ppo::parallel::episode_seed(cfg.seed, ep);
         let engine = Engine::new(episode_cfg, router);
         let (_outcome, r) = engine.run_returning_router();
         router = r;
     }
     router
+}
+
+/// Train with a `--workers` knob: `workers <= 1` is the sequential
+/// online trainer above (bit-identical to the seed's numbers);
+/// `workers > 1` runs `ppo::parallel::train_parallel` — concurrent
+/// seeded worker engines with synchronous merged updates. Both are
+/// deterministic per (seed, episodes, workers).
+pub fn train_ppo_workers(
+    cfg: &Config,
+    reward: RewardCfg,
+    episodes: usize,
+    workers: usize,
+) -> PpoRouter {
+    if workers <= 1 {
+        train_ppo(cfg, reward, episodes)
+    } else {
+        crate::ppo::train_parallel(cfg, reward, episodes, workers)
+    }
 }
 
 /// Train, freeze, evaluate: the Tables IV/V protocol. Returns the frozen
@@ -54,7 +99,17 @@ pub fn run_ppo_experiment(
     reward: RewardCfg,
     train_episodes: usize,
 ) -> (RunOutcome, PpoRouter) {
-    let mut router = train_ppo(cfg, reward, train_episodes);
+    run_ppo_experiment_workers(cfg, reward, train_episodes, 1)
+}
+
+/// [`run_ppo_experiment`] with a parallel-rollout worker count.
+pub fn run_ppo_experiment_workers(
+    cfg: &Config,
+    reward: RewardCfg,
+    train_episodes: usize,
+    workers: usize,
+) -> (RunOutcome, PpoRouter) {
+    let mut router = train_ppo_workers(cfg, reward, train_episodes, workers);
     router.eval_mode();
     let mut eval_cfg = cfg.clone();
     eval_cfg.seed = cfg.seed.wrapping_add(0xEA1);
@@ -72,7 +127,20 @@ pub fn run_ppo_experiment_online(
     reward: RewardCfg,
     train_episodes: usize,
 ) -> (RunOutcome, PpoRouter) {
-    let router = train_ppo(cfg, reward, train_episodes.saturating_sub(1));
+    run_ppo_experiment_online_workers(cfg, reward, train_episodes, 1)
+}
+
+/// [`run_ppo_experiment_online`] with a parallel-rollout worker count
+/// for the training episodes; the measured episode itself stays online
+/// (learning + exploration on) by construction.
+pub fn run_ppo_experiment_online_workers(
+    cfg: &Config,
+    reward: RewardCfg,
+    train_episodes: usize,
+    workers: usize,
+) -> (RunOutcome, PpoRouter) {
+    let router =
+        train_ppo_workers(cfg, reward, train_episodes.saturating_sub(1), workers);
     let mut eval_cfg = cfg.clone();
     eval_cfg.seed = cfg.seed.wrapping_add(0xEA1);
     let (outcome, router) = Engine::new(eval_cfg, router).run_returning_router();
@@ -218,6 +286,26 @@ mod tests {
         // accuracy sinks toward the slimmest model's 70.3
         assert!(ppo.report.accuracy_pct < baseline.report.accuracy_pct);
         assert!(router.stats.updates > 0);
+    }
+
+    #[test]
+    fn bench_cfg_defaults_to_paper_cluster() {
+        // (BENCH_SCENARIO is only set by explicit bench invocations)
+        if std::env::var("BENCH_SCENARIO").is_err() {
+            assert_eq!(bench_cfg(100, 7), paper_cluster_cfg(100, 7));
+        }
+        assert!(bench_workers() >= 1 || std::env::var("BENCH_WORKERS").is_ok());
+    }
+
+    #[test]
+    fn workers_flag_routes_both_trainers() {
+        let mut cfg = quick_cfg();
+        cfg.workload.total_requests = 400;
+        cfg.ppo.horizon = 64;
+        let seq = train_ppo_workers(&cfg, RewardCfg::overfit(), 1, 1);
+        assert!(seq.stats.decisions > 0);
+        let par = train_ppo_workers(&cfg, RewardCfg::overfit(), 2, 2);
+        assert!(par.stats.updates > 0);
     }
 
     #[test]

@@ -5,14 +5,17 @@
 //!   tables     regenerate paper tables (I, II, III, IV, V)
 //!   figures    regenerate paper figures (1, 2, 3) as data series
 //!   train-ppo  train a PPO router, print learning curve, checkpoint it
+//!   scenarios  list the registered cluster/workload scenarios
 //!   accuracy   query the width-tuple accuracy prior
 //!   serve      real-inference smoke: route batches through PJRT CPU
 //!
 //! Examples:
 //!   repro simulate --router ppo --reward overfit --requests 5000
-//!   repro tables --which 4
+//!   repro simulate --scenario hetero-mixed --router least-loaded
+//!   repro tables --which 4 --scenario dropout
 //!   repro figures --which 1
-//!   repro train-ppo --episodes 10 --out ppo.json
+//!   repro train-ppo --episodes 10 --workers 4 --out ppo.json
+//!   repro scenarios
 
 use slim_scheduler::benchx::Table;
 use slim_scheduler::config::Config;
@@ -31,6 +34,11 @@ fn main() -> anyhow::Result<()> {
         .describe("requests", "total requests in the workload")
         .describe("rate", "mean arrival rate (req/s)")
         .describe("episodes", "PPO training episodes")
+        .describe("workers", "parallel rollout workers (train-ppo/simulate --router ppo)")
+        .describe("scenario", "named cluster/workload scenario (see `repro scenarios`)")
+        .describe("dropout", "kill server mid-run: server@time, e.g. 0@5.0")
+        .describe("diurnal-period", "sinusoidal load cycle length (s, 0=off)")
+        .describe("diurnal-depth", "sinusoidal load modulation depth [0,1)")
         .describe("seed", "rng seed")
         .describe("which", "table/figure number to regenerate")
         .describe("artifacts-dir", "AOT artifacts directory (serve)")
@@ -46,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         Some("tables") => cmd_tables(&args),
         Some("figures") => cmd_figures(&args),
         Some("train-ppo") => cmd_train_ppo(&args),
+        Some("scenarios") => cmd_scenarios(),
         Some("accuracy") => cmd_accuracy(&args),
         Some("serve") => cmd_serve(&args),
         other => {
@@ -68,8 +77,11 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = base_cfg(args);
     let router = args.str_or("router", "random");
     println!(
-        "router={router} requests={} rate={}/s devices={:?}",
-        cfg.workload.total_requests, cfg.workload.rate_hz, cfg.devices
+        "router={router} scenario={} requests={} rate={}/s devices={:?}",
+        cfg.scenario.as_deref().unwrap_or("paper(default)"),
+        cfg.workload.total_requests,
+        cfg.workload.rate_hz,
+        cfg.devices
     );
     let outcome = match router.as_str() {
         "random" => experiments::run_random_baseline(&cfg),
@@ -104,12 +116,15 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 Engine::new(cfg.clone(), router).run()
             } else {
                 let episodes = args.usize_or("episodes", 8);
+                let workers = args.usize_or("workers", 1);
                 let reward = cfg.ppo.reward; // preset + --alpha/... overrides
-                let (out, router) =
-                    experiments::run_ppo_experiment(&cfg, reward, episodes);
+                let (out, router) = experiments::run_ppo_experiment_workers(
+                    &cfg, reward, episodes, workers,
+                );
                 println!(
-                    "ppo: {} updates, final mean reward {:.3}",
+                    "ppo: {} updates ({} workers), final mean reward {:.3}",
                     router.stats.updates,
+                    workers,
                     router.stats.reward_history.last().copied().unwrap_or(0.0)
                 );
                 out
@@ -215,15 +230,33 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_scenarios() -> anyhow::Result<()> {
+    println!("registered scenarios (select with --scenario <name>):\n");
+    for s in slim_scheduler::sim::scenarios::all() {
+        println!("  {:<16} {}", s.name, s.summary);
+        let cfg = s.config();
+        println!(
+            "  {:<16}   devices {:?}, {} req/s",
+            "", cfg.devices, cfg.workload.rate_hz
+        );
+    }
+    println!("\nbenches honor BENCH_SCENARIO=<name>; flags override scenario fields.");
+    Ok(())
+}
+
 fn cmd_train_ppo(args: &Args) -> anyhow::Result<()> {
     let cfg = base_cfg(args);
     let episodes = args.usize_or("episodes", 10);
+    let workers = args.usize_or("workers", 1);
     let reward = cfg.ppo.reward;
     println!(
-        "training PPO ({episodes} episodes of {} requests)...",
-        cfg.workload.total_requests
+        "training PPO ({episodes} episodes of {} requests, {workers} worker{})...",
+        cfg.workload.total_requests,
+        if workers == 1 { "" } else { "s" }
     );
-    let router = experiments::train_ppo(&cfg, reward, episodes);
+    let t0 = std::time::Instant::now();
+    let router = experiments::train_ppo_workers(&cfg, reward, episodes, workers);
+    println!("trained in {:.2?} wall clock", t0.elapsed());
     println!("updates: {}", router.stats.updates);
     let hist = &router.stats.reward_history;
     for (i, r) in hist.iter().enumerate() {

@@ -52,6 +52,12 @@ impl RolloutBuffer {
         );
     }
 
+    /// Drop a staged transition whose block was cancelled before
+    /// executing (device dropout re-route) — its reward never arrives.
+    pub fn abandon(&mut self, tag: u64) {
+        self.pending.remove(&tag);
+    }
+
     /// Attach the reward and finish the transition. Unknown tags are
     /// ignored (e.g. blocks completing after a buffer reset).
     pub fn complete(&mut self, tag: u64, reward: f64) {
@@ -74,6 +80,16 @@ impl RolloutBuffer {
     /// Take the finished transitions (leaves staged ones in place).
     pub fn drain(&mut self) -> Vec<Transition> {
         std::mem::take(&mut self.finished)
+    }
+
+    /// Merge already-completed transitions from another rollout (the
+    /// parallel workers' harvests), preserving their order.
+    pub fn absorb(&mut self, transitions: Vec<Transition>) {
+        for t in &transitions {
+            self.reward_sum += t.reward;
+            self.reward_count += 1;
+        }
+        self.finished.extend(transitions);
     }
 
     pub fn mean_reward(&self) -> f64 {
@@ -109,6 +125,18 @@ mod tests {
     }
 
     #[test]
+    fn abandon_drops_pending_without_reward() {
+        let mut buf = RolloutBuffer::new();
+        buf.stage(5, vec![0.2], act(), -0.5, 0.1, 0.0);
+        buf.abandon(5);
+        assert_eq!(buf.pending_len(), 0);
+        // a late completion for the abandoned tag is a no-op
+        buf.complete(5, 9.0);
+        assert_eq!(buf.ready(), 0);
+        assert_eq!(buf.reward_count, 0);
+    }
+
+    #[test]
     fn unknown_tag_ignored() {
         let mut buf = RolloutBuffer::new();
         buf.complete(99, 1.0);
@@ -124,6 +152,27 @@ mod tests {
             buf.complete(tag, r);
         }
         assert_eq!(buf.mean_reward(), 2.0);
+    }
+
+    #[test]
+    fn absorb_merges_finished_transitions() {
+        let mut a = RolloutBuffer::new();
+        a.stage(1, vec![], act(), 0.0, 0.0, 0.0);
+        a.complete(1, 1.0);
+
+        let mut b = RolloutBuffer::new();
+        for (tag, r) in [(10u64, 2.0), (11, 4.0)] {
+            b.stage(tag, vec![], act(), 0.0, 0.0, 0.0);
+            b.complete(tag, r);
+        }
+        a.absorb(b.drain());
+        assert_eq!(a.ready(), 3);
+        assert_eq!(a.reward_count, 3);
+        assert!((a.mean_reward() - 7.0 / 3.0).abs() < 1e-12);
+        // worker order preserved after the local transitions
+        let ts = a.drain();
+        assert_eq!(ts[1].reward, 2.0);
+        assert_eq!(ts[2].reward, 4.0);
     }
 
     #[test]

@@ -19,12 +19,14 @@
 pub mod adam;
 pub mod buffer;
 pub mod mlp;
+pub mod parallel;
 pub mod policy;
 pub mod router_impl;
 pub mod update;
 
 pub use buffer::{RolloutBuffer, Transition};
 pub use mlp::Mlp;
+pub use parallel::train_parallel;
 pub use policy::{ActionTriple, Policy, PolicyEval};
 pub use router_impl::{PpoRouter, TrainStats};
 pub use update::ppo_update;

@@ -1,0 +1,186 @@
+//! Parallel PPO rollouts: N seeded worker engines per round, one OS
+//! thread each, merging their transition harvests into the central
+//! router's `RolloutBuffer` for synchronous updates.
+//!
+//! The sequential trainer (`experiments::train_ppo`) threads one router
+//! through one engine at a time, so wall-clock scales linearly with the
+//! episode budget. Engines are cheap to construct and `Send`
+//! (`coordinator::core`), which makes the data-parallel shape natural:
+//!
+//! ```text
+//!   round k:   central policy θ_k
+//!      ├─ worker 0: Engine(seed(ep))   ─ collect transitions ┐
+//!      ├─ worker 1: Engine(seed(ep+1)) ─ collect transitions ┼─ merge
+//!      └─ worker W: Engine(seed(ep+W)) ─ collect transitions ┘   │
+//!                                                  θ_{k+1} ◄─ PPO updates
+//! ```
+//!
+//! Every worker runs a *collector* fork of the central router (same
+//! weights, same ε-schedule position, updates disabled), so within a
+//! round all workers act under the identical policy — the classic
+//! synchronous-PPO setup. Harvests merge in worker-index order and each
+//! worker's engine is independently seeded with the same episode-seed
+//! formula the sequential trainer uses, so a run is deterministic for a
+//! fixed (seed, episodes, workers) triple regardless of thread timing.
+//!
+//! With `workers = 1` the trainer degenerates to one collector per
+//! round; `experiments::train_ppo_workers` routes that case to the
+//! original sequential online trainer instead, which keeps the paper's
+//! Tables IV–V training dynamics bit-identical to the seed.
+
+use std::thread;
+
+use crate::config::{Config, RewardCfg};
+use crate::coordinator::Engine;
+
+use super::buffer::Transition;
+use super::router_impl::PpoRouter;
+
+/// Episode seed formula shared with `experiments::train_ppo`.
+pub fn episode_seed(base: u64, episode: usize) -> u64 {
+    base.wrapping_add(1 + episode as u64 * 7919)
+}
+
+/// One worker's harvest.
+struct Harvest {
+    transitions: Vec<Transition>,
+    decisions: u64,
+    completed: u64,
+}
+
+/// Train a PPO router for `episodes` simulated workloads, running up to
+/// `workers` episodes concurrently per round and updating synchronously
+/// between rounds. Returns the router still in training mode (freeze
+/// with `eval_mode` for Tables IV–V style evaluation).
+pub fn train_parallel(
+    cfg: &Config,
+    reward: RewardCfg,
+    episodes: usize,
+    workers: usize,
+) -> PpoRouter {
+    let workers = workers.max(1);
+    let mut ppo_cfg = cfg.ppo.clone();
+    ppo_cfg.reward = reward;
+    let mut central = PpoRouter::new(
+        cfg.devices.len(),
+        cfg.scheduler.widths.clone(),
+        ppo_cfg,
+        cfg.seed,
+    );
+
+    let mut ep = 0usize;
+    while ep < episodes {
+        let round = workers.min(episodes - ep);
+        let mut harvests: Vec<Harvest> = Vec::with_capacity(round);
+        thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(round);
+            for k in 0..round {
+                let mut worker_cfg = cfg.clone();
+                worker_cfg.seed = episode_seed(cfg.seed, ep + k);
+                let collector = central.fork_collector();
+                handles.push(scope.spawn(move || {
+                    let engine = Engine::new(worker_cfg, collector);
+                    let (outcome, mut router) = engine.run_returning_router();
+                    Harvest {
+                        transitions: router.take_transitions(),
+                        decisions: router.stats.decisions,
+                        completed: outcome.report.completed,
+                    }
+                }));
+            }
+            // join in spawn order: the merge below is deterministic no
+            // matter how the OS interleaved the workers
+            for h in handles {
+                harvests.push(h.join().expect("rollout worker panicked"));
+            }
+        });
+
+        for h in &harvests {
+            debug_assert!(h.completed > 0 || cfg.workload.total_requests == 0);
+        }
+        for h in harvests {
+            central.absorb_rollout(h.transitions, h.decisions);
+        }
+        central.update_from_buffer();
+        ep += round;
+    }
+    central
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::telemetry::{ServerTelemetry, TelemetrySnapshot};
+
+    fn tiny_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.workload.total_requests = 500;
+        cfg.ppo.horizon = 64;
+        cfg
+    }
+
+    fn probe_snapshot(n: usize) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            fifo_len: 6,
+            done_count: 40,
+            total_requests: 500,
+            servers: (0..n)
+                .map(|i| ServerTelemetry {
+                    queue_len: 2 * i,
+                    power_w: 110.0,
+                    util_pct: 20.0 * i as f64,
+                    mem_util: 0.25,
+                    instances: 1,
+                })
+                .collect(),
+        }
+    }
+
+    fn policy_fingerprint(router: &PpoRouter) -> Vec<f64> {
+        let state = probe_snapshot(3).to_state_vector();
+        let (eval, _) = router.policy.evaluate(&state, None, 0.0);
+        let mut v = eval.p_srv;
+        v.extend(eval.p_w);
+        v.extend(eval.p_g);
+        v.push(eval.value);
+        v
+    }
+
+    #[test]
+    fn parallel_training_learns_and_counts_episodes() {
+        let cfg = tiny_cfg();
+        let router = train_parallel(&cfg, RewardCfg::overfit(), 4, 2);
+        assert!(router.stats.updates > 0, "no updates ran");
+        assert!(router.stats.decisions > 0);
+        assert!(!router.stats.reward_history.is_empty());
+    }
+
+    #[test]
+    fn parallel_training_is_deterministic_per_seed() {
+        let cfg = tiny_cfg();
+        let a = train_parallel(&cfg, RewardCfg::balanced(), 4, 2);
+        let b = train_parallel(&cfg, RewardCfg::balanced(), 4, 2);
+        assert_eq!(a.stats.decisions, b.stats.decisions);
+        assert_eq!(a.stats.updates, b.stats.updates);
+        let fa = policy_fingerprint(&a);
+        let fb = policy_fingerprint(&b);
+        for (x, y) in fa.iter().zip(&fb) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn worker_counts_see_the_same_episode_seeds() {
+        // the episode-seed formula is shared with the sequential trainer,
+        // so scenario sweeps stay comparable across --workers settings
+        assert_eq!(episode_seed(42, 0), 42 + 1);
+        assert_eq!(episode_seed(42, 3), 42 + 1 + 3 * 7919);
+    }
+
+    #[test]
+    fn single_worker_round_still_trains() {
+        let cfg = tiny_cfg();
+        let router = train_parallel(&cfg, RewardCfg::overfit(), 2, 1);
+        assert!(router.stats.updates > 0);
+    }
+}

@@ -15,7 +15,7 @@ use crate::coordinator::telemetry::TelemetrySnapshot;
 use crate::utilx::{Json, Rng};
 
 use super::adam::Adam;
-use super::buffer::RolloutBuffer;
+use super::buffer::{RolloutBuffer, Transition};
 use super::policy::{eps_at, Policy};
 use super::update::{ppo_update, UpdateStats};
 
@@ -40,6 +40,9 @@ pub struct PpoRouter {
     step: u64,
     next_tag: u64,
     pub training: bool,
+    /// Collect transitions but never update in-place (parallel rollout
+    /// workers harvest the buffer; the central trainer owns updates).
+    collect_only: bool,
     /// Normalized mean prior for the optional zero-mean centering.
     prior_mean_norm: f64,
     pub stats: TrainStats,
@@ -77,6 +80,7 @@ impl PpoRouter {
             step: 0,
             next_tag: 0,
             training: true,
+            collect_only: false,
             prior_mean_norm,
             stats: TrainStats::default(),
             scratch: (Vec::new(), Vec::new()),
@@ -86,6 +90,60 @@ impl PpoRouter {
     /// Freeze the policy for evaluation runs.
     pub fn eval_mode(&mut self) {
         self.training = false;
+    }
+
+    /// Spawn a rollout collector: same weights, cfg and exploration
+    /// schedule position, but it only stages transitions — `ppo::parallel`
+    /// harvests them with [`PpoRouter::take_transitions`] and the central
+    /// router performs the updates.
+    pub fn fork_collector(&self) -> PpoRouter {
+        let mut worker = PpoRouter::new(
+            self.policy.n_srv,
+            self.widths.clone(),
+            self.cfg.clone(),
+            0,
+        );
+        worker.policy = self.policy.clone();
+        worker.step = self.step;
+        worker.collect_only = true;
+        worker
+    }
+
+    /// Drain the finished transitions collected so far (worker harvest).
+    pub fn take_transitions(&mut self) -> Vec<Transition> {
+        self.buffer.drain()
+    }
+
+    /// Merge a worker's harvested transitions into this router's buffer
+    /// and advance the exploration schedule by the decisions that
+    /// produced them.
+    pub fn absorb_rollout(&mut self, transitions: Vec<Transition>, decisions: u64) {
+        self.step += decisions;
+        self.stats.decisions += decisions;
+        self.buffer.absorb(transitions);
+    }
+
+    /// Run synchronous PPO updates over everything buffered, in rollout
+    /// order, one `horizon`-sized chunk at a time. Chunks below the
+    /// end-of-run flush threshold (16, or the horizon when smaller) are
+    /// dropped — the same noisy-tiny-batch guard `end_of_run` applies.
+    /// Returns how many updates ran.
+    pub fn update_from_buffer(&mut self) -> u64 {
+        let all = self.buffer.drain();
+        let flush_min = 16.min(self.cfg.horizon.max(1));
+        let mut ran = 0;
+        for chunk in all.chunks(self.cfg.horizon.max(1)) {
+            if chunk.len() < flush_min {
+                break;
+            }
+            let stats = ppo_update(&mut self.policy, &mut self.adam, chunk, &self.cfg);
+            self.stats.updates += 1;
+            self.stats.last_update = stats;
+            self.stats.reward_history.push(stats.mean_reward);
+            self.stats.entropy_history.push(stats.entropy);
+            ran += 1;
+        }
+        ran
     }
 
     fn eps(&self) -> f64 {
@@ -126,6 +184,9 @@ impl PpoRouter {
     }
 
     fn maybe_update(&mut self) {
+        if self.collect_only {
+            return;
+        }
         if self.training && self.buffer.ready() >= self.cfg.horizon {
             let batch = self.buffer.drain();
             let stats = ppo_update(&mut self.policy, &mut self.adam, &batch, &self.cfg);
@@ -180,7 +241,15 @@ impl Router for PpoRouter {
         self.maybe_update();
     }
 
+    fn abandon(&mut self, tag: u64) {
+        self.buffer.abandon(tag);
+    }
+
     fn end_of_run(&mut self) {
+        if self.collect_only {
+            // collectors keep their harvest; the central trainer flushes
+            return;
+        }
         // flush whatever is ready, even under horizon
         if self.training && self.buffer.ready() >= 16 {
             let batch = self.buffer.drain();
@@ -319,6 +388,51 @@ mod tests {
         assert_eq!(r.stats.updates, 0);
         assert_eq!(r.buffer.ready(), 0);
         assert_eq!(r.eps(), 0.0);
+    }
+
+    #[test]
+    fn collector_stages_but_never_updates() {
+        let mut central = router();
+        let mut worker = central.fork_collector();
+        let mut rng = Rng::new(5);
+        let s = snap(3);
+        for _ in 0..40 {
+            let d = worker.route(&s, 0.5, 0, &mut rng);
+            worker.feedback(&BlockFeedback {
+                tag: d.tag,
+                acc_prior_norm: 0.5,
+                latency_s: 0.02,
+                energy_j: 1.0,
+                util_variance: 0.001,
+            });
+        }
+        worker.end_of_run();
+        // the collector held its fire even past any horizon
+        assert_eq!(worker.stats.updates, 0);
+        let ts = worker.take_transitions();
+        assert_eq!(ts.len(), 40);
+
+        // central trainer absorbs the harvest and updates synchronously
+        central.absorb_rollout(ts, 40);
+        assert_eq!(central.stats.decisions, 40);
+        assert!(central.update_from_buffer() >= 1);
+        assert!(central.stats.updates >= 1);
+        assert!(!central.stats.reward_history.is_empty());
+    }
+
+    #[test]
+    fn fork_collector_copies_weights_and_schedule() {
+        let mut central = router();
+        central.step = 12_345; // pretend mid-training
+        let worker = central.fork_collector();
+        assert_eq!(worker.step, 12_345);
+        assert!(worker.training);
+        let s = snap(3).to_state_vector();
+        let (ec, _) = central.policy.evaluate(&s, None, 0.0);
+        let (ew, _) = worker.policy.evaluate(&s, None, 0.0);
+        for (a, b) in ec.p_w.iter().zip(&ew.p_w) {
+            assert!((a - b).abs() < 1e-15);
+        }
     }
 
     #[test]

@@ -13,9 +13,11 @@ pub mod clock;
 pub mod device;
 pub mod link;
 pub mod profiles;
+pub mod scenarios;
 pub mod workload;
 
 pub use clock::VirtualClock;
 pub use device::SimDevice;
 pub use link::Link;
+pub use scenarios::Scenario;
 pub use workload::{Workload, WorkloadEvent};

@@ -52,6 +52,38 @@ pub fn gtx980ti() -> DeviceCfg {
     }
 }
 
+/// NVIDIA RTX 3060: 12.74 TFLOPS fp32 peak, 360 GB/s, 12 GB GDDR6 —
+/// a mid-range card for the non-paper heterogeneous scenarios.
+pub fn rtx3060() -> DeviceCfg {
+    DeviceCfg {
+        name: "rtx3060".to_string(),
+        peak_flops: 12.74e12 * 0.35 * OPERATING_POINT_SCALE,
+        mem_bw: 360.0e9 * 0.7 * OPERATING_POINT_SCALE,
+        vram_bytes: 12 * (1 << 30),
+        idle_power_w: 32.0,
+        max_power_w: 170.0,
+        knee_util_pct: 92.0,
+        knee_sharpness: 18.0,
+        dispatch_overhead_s: 8e-3,
+    }
+}
+
+/// NVIDIA GTX 1650: 2.98 TFLOPS fp32 peak, 128 GB/s, 4 GB GDDR5 —
+/// the weak edge node of the `edge-fleet` scenario.
+pub fn gtx1650() -> DeviceCfg {
+    DeviceCfg {
+        name: "gtx1650".to_string(),
+        peak_flops: 2.98e12 * 0.35 * OPERATING_POINT_SCALE,
+        mem_bw: 128.0e9 * 0.7 * OPERATING_POINT_SCALE,
+        vram_bytes: 4 * (1 << 30),
+        idle_power_w: 10.0,
+        max_power_w: 75.0,
+        knee_util_pct: 88.0,
+        knee_sharpness: 20.0,
+        dispatch_overhead_s: 10e-3,
+    }
+}
+
 /// A deliberately tiny device for failure-injection tests (VRAM pressure,
 /// early saturation).
 pub fn toy_gpu() -> DeviceCfg {
@@ -73,6 +105,8 @@ pub fn by_name(name: &str) -> Option<DeviceCfg> {
     match name {
         "rtx2080ti" => Some(rtx2080ti()),
         "gtx980ti" => Some(gtx980ti()),
+        "rtx3060" => Some(rtx3060()),
+        "gtx1650" => Some(gtx1650()),
         "toy" => Some(toy_gpu()),
         _ => None,
     }
@@ -97,8 +131,26 @@ mod tests {
     fn by_name_resolves_paper_cluster() {
         assert!(by_name("rtx2080ti").is_some());
         assert!(by_name("gtx980ti").is_some());
+        assert!(by_name("rtx3060").is_some());
+        assert!(by_name("gtx1650").is_some());
         assert!(by_name("toy").is_some());
         assert!(by_name("h100").is_none());
+    }
+
+    #[test]
+    fn scenario_profiles_preserve_capability_ordering() {
+        // the same spec-sheet-ratio argument as the paper pair: relative
+        // capability must order 1650 < 980ti < 3060 < 2080ti
+        let order = [gtx1650(), gtx980ti(), rtx3060(), rtx2080ti()];
+        for pair in order.windows(2) {
+            assert!(
+                pair[0].peak_flops < pair[1].peak_flops,
+                "{} !< {}",
+                pair[0].name,
+                pair[1].name
+            );
+            assert!(pair[0].mem_bw < pair[1].mem_bw);
+        }
     }
 
     #[test]

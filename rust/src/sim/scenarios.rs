@@ -1,0 +1,254 @@
+//! Scenario registry: named cluster/workload configurations beyond the
+//! paper's fixed 3-GPU testbed.
+//!
+//! The paper's central claim is that hierarchical PPO-plus-greedy
+//! "mitigates overfitting to specific hardware" — which is only testable
+//! against hardware and traffic the policy was *not* tuned on. Every
+//! entry here is a complete, runnable configuration: heterogeneous
+//! device mixes, bursty and diurnal arrival regimes, and mid-run device
+//! dropout. They are selectable from the CLI (`--scenario <name>`,
+//! `repro scenarios` to list), from the benches (`BENCH_SCENARIO=<name>`
+//! via `experiments::bench_cfg`), and programmatically via
+//! [`by_name`] / [`apply_named`], so Tables III–V can be regenerated per
+//! scenario.
+//!
+//! A scenario is a function from the default [`Config`] to a modified
+//! one; explicit CLI flags are applied afterwards and therefore override
+//! the scenario's baseline.
+
+use crate::config::{Config, DropoutCfg};
+
+/// One registered scenario.
+pub struct Scenario {
+    pub name: &'static str,
+    pub summary: &'static str,
+    build: fn(&mut Config),
+}
+
+impl Scenario {
+    /// Overlay this scenario onto `cfg` (records provenance).
+    pub fn apply(&self, cfg: &mut Config) {
+        (self.build)(cfg);
+        cfg.scenario = Some(self.name.to_string());
+    }
+
+    /// A fresh default config with this scenario applied.
+    pub fn config(&self) -> Config {
+        let mut cfg = Config::default();
+        self.apply(&mut cfg);
+        cfg
+    }
+}
+
+fn build_paper(_cfg: &mut Config) {
+    // the default Config IS the paper testbed (2× 2080 Ti + 980 Ti,
+    // bursty 140 req/s) — registered so "the paper setting" is a named,
+    // provenance-tracked scenario like any other
+}
+
+fn build_hetero_mixed(cfg: &mut Config) {
+    // four-way heterogeneous cluster spanning a ~4.5× capability range;
+    // more aggregate capacity than the paper cluster, so a higher rate
+    // keeps the saturation regime comparable
+    cfg.devices = vec![
+        "rtx2080ti".to_string(),
+        "rtx3060".to_string(),
+        "gtx980ti".to_string(),
+        "gtx1650".to_string(),
+    ];
+    cfg.workload.rate_hz = 170.0;
+}
+
+fn build_edge_fleet(cfg: &mut Config) {
+    // homogeneous fleet of weak edge nodes: per-device VRAM budget cut to
+    // fit the 4 GB cards, offered load scaled to their capacity
+    cfg.devices = vec!["gtx1650".to_string(); 4];
+    cfg.scheduler.m_max_bytes = 3 * (1 << 30);
+    cfg.workload.rate_hz = 55.0;
+    cfg.workload.burst_factor = 2.0;
+}
+
+fn build_bursty_extreme(cfg: &mut Config) {
+    // short, violent bursts: 8× rate for 15% of every 4 s window — the
+    // regime where responsive scale-up (Q_th / N_new) earns its keep
+    cfg.workload.rate_hz = 110.0;
+    cfg.workload.burst_factor = 8.0;
+    cfg.workload.burst_period_s = 4.0;
+    cfg.workload.burst_duty = 0.15;
+}
+
+fn build_diurnal(cfg: &mut Config) {
+    // sinusoidal day/night cycle (±80% around the mean, 40 s virtual
+    // period) with the square-wave bursts disabled so the diurnal shape
+    // is the only modulation
+    cfg.workload.rate_hz = 130.0;
+    cfg.workload.burst_factor = 1.0;
+    cfg.workload.burst_period_s = 0.0;
+    cfg.workload.diurnal_period_s = 40.0;
+    cfg.workload.diurnal_depth = 0.8;
+}
+
+fn build_dropout(cfg: &mut Config) {
+    // one of the fast servers dies 8 virtual seconds in; the survivors
+    // (1× 2080 Ti + 980 Ti) must absorb the re-routed queue. Offered
+    // load sized so the degraded cluster still drains.
+    cfg.workload.rate_hz = 90.0;
+    cfg.dropout = Some(DropoutCfg { server: 0, at_s: 8.0 });
+}
+
+static SCENARIOS: &[Scenario] = &[
+    Scenario {
+        name: "paper",
+        summary: "the paper's 3-GPU testbed and bursty 140 req/s workload (the default)",
+        build: build_paper,
+    },
+    Scenario {
+        name: "hetero-mixed",
+        summary: "4-way heterogeneous cluster (2080Ti/3060/980Ti/1650), 170 req/s",
+        build: build_hetero_mixed,
+    },
+    Scenario {
+        name: "edge-fleet",
+        summary: "4x GTX 1650 edge nodes, 3 GiB VRAM budget, 55 req/s",
+        build: build_edge_fleet,
+    },
+    Scenario {
+        name: "bursty-extreme",
+        summary: "8x arrival bursts, 15% duty over 4 s windows",
+        build: build_bursty_extreme,
+    },
+    Scenario {
+        name: "diurnal",
+        summary: "sinusoidal day/night load, +/-80% around 130 req/s",
+        build: build_diurnal,
+    },
+    Scenario {
+        name: "dropout",
+        summary: "paper cluster; server 0 (a 2080 Ti) dies at t=8s",
+        build: build_dropout,
+    },
+];
+
+/// Every registered scenario.
+pub fn all() -> &'static [Scenario] {
+    SCENARIOS
+}
+
+/// Registered scenario names, registry order.
+pub fn names() -> Vec<&'static str> {
+    SCENARIOS.iter().map(|s| s.name).collect()
+}
+
+/// Look a scenario up by name.
+pub fn by_name(name: &str) -> Option<&'static Scenario> {
+    SCENARIOS.iter().find(|s| s.name == name)
+}
+
+/// Overlay the named scenario onto `cfg`; Err lists valid names.
+pub fn apply_named(name: &str, cfg: &mut Config) -> Result<(), String> {
+    match by_name(name) {
+        Some(s) => {
+            s.apply(cfg);
+            Ok(())
+        }
+        None => Err(format!(
+            "unknown scenario {name:?} (known: {})",
+            names().join(", ")
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::RandomRouter;
+    use crate::coordinator::Engine;
+    use crate::sim::profiles;
+
+    #[test]
+    fn registry_has_paper_plus_at_least_three_more() {
+        assert!(by_name("paper").is_some());
+        let non_paper = all().iter().filter(|s| s.name != "paper").count();
+        assert!(non_paper >= 3, "only {non_paper} non-paper scenarios");
+    }
+
+    #[test]
+    fn names_are_unique_and_resolve() {
+        let ns = names();
+        let mut dedup = ns.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ns.len(), "duplicate scenario names");
+        for n in ns {
+            assert!(by_name(n).is_some());
+        }
+    }
+
+    #[test]
+    fn every_scenario_builds_a_valid_config() {
+        for s in all() {
+            let cfg = s.config();
+            assert_eq!(cfg.scenario.as_deref(), Some(s.name), "{}", s.name);
+            assert!(!cfg.devices.is_empty(), "{}", s.name);
+            for d in &cfg.devices {
+                assert!(
+                    profiles::by_name(d).is_some(),
+                    "{}: unresolvable device {d}",
+                    s.name
+                );
+            }
+            assert!(cfg.workload.rate_hz > 0.0, "{}", s.name);
+            assert!(cfg.workload.total_requests > 0, "{}", s.name);
+            if let Some(dp) = cfg.dropout {
+                assert!(dp.server < cfg.devices.len(), "{}", s.name);
+                assert!(dp.at_s >= 0.0, "{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn every_scenario_runs_a_short_workload_to_completion() {
+        // end-to-end: each scenario's cluster drains a small request
+        // budget without hanging against max_sim_time_s
+        for s in all() {
+            let mut cfg = s.config();
+            cfg.workload.total_requests = 200;
+            let widths = cfg.scheduler.widths.clone();
+            let engine = Engine::new(cfg, RandomRouter::new(widths, true, 4));
+            let max_t = engine.max_sim_time_s;
+            let out = engine.run();
+            assert_eq!(out.report.completed, 200, "{} did not complete", s.name);
+            assert_eq!(out.e2e_latency.count(), 200, "{}", s.name);
+            assert!(
+                out.sim_duration_s < max_t,
+                "{} ran into the safety cap",
+                s.name
+            );
+            assert!(out.total_energy_j > 0.0, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn apply_named_reports_unknown_names() {
+        let mut cfg = Config::default();
+        let err = apply_named("marsbase", &mut cfg).unwrap_err();
+        assert!(err.contains("unknown scenario"), "{err}");
+        assert!(err.contains("paper"), "{err}");
+        assert!(cfg.scenario.is_none());
+    }
+
+    #[test]
+    fn scenarios_change_what_they_claim() {
+        assert_eq!(by_name("hetero-mixed").unwrap().config().devices.len(), 4);
+        assert!(by_name("dropout").unwrap().config().dropout.is_some());
+        assert!(by_name("diurnal").unwrap().config().workload.diurnal_period_s > 0.0);
+        let bursty = by_name("bursty-extreme").unwrap().config();
+        assert!(bursty.workload.burst_factor >= 8.0);
+        let edge = by_name("edge-fleet").unwrap().config();
+        assert!(edge.devices.iter().all(|d| d == "gtx1650"));
+        // paper scenario is the default config plus provenance
+        let mut want = Config::default();
+        want.scenario = Some("paper".to_string());
+        assert_eq!(by_name("paper").unwrap().config(), want);
+    }
+}

@@ -38,17 +38,24 @@ impl Workload {
         Workload { cfg, widths: width_pool, rng, t: 0.0, issued: 0 }
     }
 
-    /// Instantaneous arrival rate at time t (square-wave burst model).
+    /// Instantaneous arrival rate at time t: base rate, optionally
+    /// modulated by a diurnal sinusoid (`diurnal_*`) and a square-wave
+    /// burst window (`burst_*`). The modulations compose (a bursty
+    /// day/night cycle is `diurnal × burst`).
     pub fn rate_at(&self, t: f64) -> f64 {
-        if self.cfg.burst_period_s <= 0.0 || self.cfg.burst_factor <= 1.0 {
-            return self.cfg.rate_hz;
+        let mut rate = self.cfg.rate_hz;
+        if self.cfg.diurnal_period_s > 0.0 && self.cfg.diurnal_depth > 0.0 {
+            let phase = t / self.cfg.diurnal_period_s * std::f64::consts::TAU;
+            rate *= 1.0 + self.cfg.diurnal_depth.min(0.99) * phase.sin();
+            rate = rate.max(self.cfg.rate_hz * 1e-2);
         }
-        let phase = (t / self.cfg.burst_period_s).fract();
-        if phase < self.cfg.burst_duty {
-            self.cfg.rate_hz * self.cfg.burst_factor
-        } else {
-            self.cfg.rate_hz
+        if self.cfg.burst_period_s > 0.0 && self.cfg.burst_factor > 1.0 {
+            let phase = (t / self.cfg.burst_period_s).fract();
+            if phase < self.cfg.burst_duty {
+                rate *= self.cfg.burst_factor;
+            }
         }
+        rate
     }
 
     /// Next arrival, or None once `total_requests` have been issued.
@@ -90,6 +97,8 @@ mod tests {
             burst_factor: 1.0,
             burst_period_s: 0.0,
             burst_duty: 0.0,
+            diurnal_period_s: 0.0,
+            diurnal_depth: 0.0,
             total_requests: 5000,
             width_mix: vec![],
         }
@@ -147,6 +156,41 @@ mod tests {
         let a = Workload::new(base_cfg(), &[0.5], Rng::new(7)).collect_all();
         let b = Workload::new(base_cfg(), &[0.5], Rng::new(7)).collect_all();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn diurnal_rate_oscillates_around_the_mean() {
+        let mut cfg = base_cfg();
+        cfg.diurnal_period_s = 40.0;
+        cfg.diurnal_depth = 0.8;
+        let wl = Workload::new(cfg, &[1.0], Rng::new(21));
+        // quarter-period peak, three-quarter trough
+        let peak = wl.rate_at(10.0);
+        let trough = wl.rate_at(30.0);
+        assert!((peak - 180.0).abs() < 1e-6, "peak={peak}");
+        assert!((trough - 20.0).abs() < 1e-6, "trough={trough}");
+        // zero crossings sit at the base rate
+        assert!((wl.rate_at(0.0) - 100.0).abs() < 1e-6);
+        assert!((wl.rate_at(20.0) - 100.0).abs() < 1e-6);
+        // rate never goes non-positive even at depth ~1
+        assert!(wl.rate_at(30.0) > 0.0);
+    }
+
+    #[test]
+    fn diurnal_concentrates_arrivals_in_the_day_half() {
+        let mut cfg = base_cfg();
+        cfg.diurnal_period_s = 20.0;
+        cfg.diurnal_depth = 0.9;
+        cfg.total_requests = 20_000;
+        let wl = Workload::new(cfg.clone(), &[1.0], Rng::new(22));
+        let evs = wl.collect_all();
+        // "day" = first half of each period, where sin >= 0
+        let day = evs
+            .iter()
+            .filter(|e| (e.at / cfg.diurnal_period_s).fract() < 0.5)
+            .count() as f64
+            / evs.len() as f64;
+        assert!(day > 0.6, "day fraction {day}");
     }
 
     #[test]

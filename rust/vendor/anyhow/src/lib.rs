@@ -1,0 +1,154 @@
+//! Minimal, dependency-free reimplementation of the `anyhow` API surface
+//! this workspace uses: [`Error`], [`Result`], the [`anyhow!`], [`bail!`]
+//! and [`ensure!`] macros, and the [`Context`] extension trait. The build
+//! environment is fully offline, so vendoring the ~hundred lines we need
+//! keeps `cargo build` hermetic while preserving source compatibility
+//! with the real crate.
+
+use std::fmt;
+
+/// Boxed error with a human-readable chain, like `anyhow::Error`.
+///
+/// Deliberately does **not** implement `std::error::Error`, which is what
+/// makes the blanket `From<E: std::error::Error>` impl coherent (same
+/// trick as the real crate).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context line, most-recent first (mirrors the `{:#}` /
+    /// chain rendering of the real crate closely enough for logs).
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("...")` — format a new [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — early-return a formatted error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `ensure!(cond, "...")` — bail unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_display() {
+        let e: Error = io_err().into();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: Result<()> = Err(io_err()).context("reading manifest");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("reading manifest"), "{msg}");
+        assert!(msg.contains("gone"));
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(7);
+        let r = ok.with_context(|| panic!("must not evaluate"));
+        assert_eq!(r.unwrap(), 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        assert!(none.context("missing").is_err());
+    }
+
+    #[test]
+    fn macros() {
+        fn inner(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(true).unwrap(), 1);
+        assert!(inner(false).unwrap_err().to_string().contains("false"));
+        let e = anyhow!("code {}", 42);
+        assert_eq!(e.to_string(), "code 42");
+    }
+}

@@ -1,0 +1,151 @@
+//! Type-level shim of the `xla` (xla-rs) PJRT surface used by
+//! `slim_scheduler::runtime`. The offline build environment has no XLA
+//! shared library, so this crate keeps the runtime module compiling and
+//! fails loudly at *runtime* if real PJRT execution is requested. All
+//! runtime tests gate on `artifacts_available(..)`, which is false until
+//! `make artifacts` runs, so `cargo test` passes without ever hitting
+//! these paths. Replace this path dependency with the real `xla` crate to
+//! serve compiled HLO for real.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error`.
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: slim_scheduler was built against the offline xla shim \
+             (no PJRT runtime); link the real xla crate to execute artifacts"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host literal (shape + f32 payload).
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from an f32 slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: data.to_vec() }
+    }
+
+    /// Reshape in place (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Unwrap a 1-tuple result (identity in the shim).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    /// Copy out as a typed vec (f32 only in the shim).
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+}
+
+/// Parsed HLO module (never constructible without the real runtime).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident result buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("materializing a PJRT buffer"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("executing a PJRT computation"))
+    }
+}
+
+/// PJRT client handle. Construction succeeds (callers probe for missing
+/// artifact files before ever compiling); parse/compile/execute fail.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compiling an XLA computation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims, vec![4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims, vec![2, 2]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        let v: Vec<f32> = r.to_vec().unwrap();
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn runtime_entries_fail_loudly() {
+        // client creation succeeds; actually touching the runtime fails
+        let client = PjRtClient::cpu().expect("shim client");
+        assert!(client.compile(&XlaComputation).is_err());
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("offline xla shim"), "{msg}");
+        assert!(msg.contains("x.hlo.txt"), "{msg}");
+    }
+}
