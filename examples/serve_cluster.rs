@@ -192,7 +192,8 @@ fn main() -> anyhow::Result<()> {
             };
             let head = ready[0];
             let seg = requests[head].seg;
-            let d = router.route(&snap, 0.5, seg, &mut rng);
+            let view = slim_scheduler::coordinator::HeadView::new(0.5, seg);
+            let d = router.route_one(&snap, &view, &mut rng);
             // collect up to `group` ready requests at the same segment
             let mut members = Vec::new();
             let mut rest = Vec::new();

@@ -126,9 +126,7 @@ fn main() {
             out = Some(experiments::run_ppo_experiment_online(&cfg, reward, episodes));
         });
         let (o, _r) = out.unwrap();
-        let total: u64 = o.width_histogram.iter().sum();
-        let slim_frac =
-            (o.width_histogram[0] + o.width_histogram[1]) as f64 / total.max(1) as f64;
+        let slim_frac = o.width_frac_at_most(0.5);
         table_d.rowf(
             &[
                 alpha,

@@ -1,13 +1,15 @@
 //! Micro-benchmarks of the L3 hot path — the quantities the §Perf pass
 //! optimizes. Covers: keyed-FIFO batch formation, greedy scheduling sweep,
-//! router decisions (random vs PPO inference), policy forward/backward,
-//! device-model step, telemetry snapshot/state-vector, and (when
-//! artifacts are present) the real PJRT segment execution.
+//! router decisions (random vs PPO inference, per-head vs batched plan),
+//! policy forward/backward, device-model step, telemetry snapshot/state-
+//! vector, and (when artifacts are present) the real PJRT segment
+//! execution. Emits the batched-vs-per-head PPO evaluation speedup as a
+//! derived metric in `BENCH_micro_hotpath.json`.
 
 use slim_scheduler::benchx::Bench;
 use slim_scheduler::config::{Config, PpoCfg, SchedulerCfg};
 use slim_scheduler::coordinator::queue::{KeyedFifo, Queued};
-use slim_scheduler::coordinator::router::{RandomRouter, Router};
+use slim_scheduler::coordinator::router::{HeadView, RandomRouter, Router};
 use slim_scheduler::coordinator::telemetry::{ServerTelemetry, TelemetrySnapshot};
 use slim_scheduler::coordinator::{Engine, GreedyScheduler, Request};
 use slim_scheduler::model::ModelMeta;
@@ -67,16 +69,73 @@ fn main() {
 
     // ---- routers ----
     let snap = snapshot(3);
+    let head = HeadView::new(0.5, 0);
     let mut random = RandomRouter::new(vec![0.25, 0.5, 0.75, 1.0], true, 8);
     bench.bench("router/random_decision", || {
-        std::hint::black_box(random.route(&snap, 0.5, 0, &mut rng));
+        std::hint::black_box(random.route_one(&snap, &head, &mut rng));
     });
 
     let mut ppo = PpoRouter::new(3, vec![0.25, 0.5, 0.75, 1.0], PpoCfg::default(), 7);
     ppo.eval_mode();
     bench.bench("router/ppo_decision(11->64->64->12 mlp)", || {
-        std::hint::black_box(ppo.route(&snap, 0.5, 0, &mut rng));
+        std::hint::black_box(ppo.route_one(&snap, &head, &mut rng));
     });
+
+    // windowed plan: 16 heads through one batched matrix forward
+    let heads16: Vec<HeadView> = (0..16)
+        .map(|i| HeadView {
+            fifo_index: i,
+            w_req: 0.5,
+            seg: i % 4,
+            age_s: 0.0,
+            slack_s: 1.0,
+        })
+        .collect();
+    bench.bench("router/ppo_plan_window16", || {
+        std::hint::black_box(ppo.plan(&snap, &heads16, &mut rng));
+    });
+
+    // ---- per-head vs batched PPO evaluation (the plan-API payoff) ----
+    let batch_n = 16usize;
+    let base_state = snap.to_state_vector();
+    let dim = base_state.len();
+    let mut states = Vec::with_capacity(batch_n * dim);
+    for k in 0..batch_n {
+        let mut s = base_state.clone();
+        s[0] = ((batch_n - k) as f64 / 64.0).min(4.0); // queue position
+        states.extend_from_slice(&s);
+    }
+    let eps = vec![0.0; batch_n];
+    let mut scratch_a = (Vec::new(), Vec::new());
+    let mut scratch_b = (Vec::new(), Vec::new());
+    let per_head_name = "policy/sample_x16_per_head";
+    bench.bench(per_head_name, || {
+        for k in 0..batch_n {
+            std::hint::black_box(ppo.policy.sample_notrain(
+                &states[k * dim..(k + 1) * dim],
+                0.0,
+                &mut rng,
+                &mut scratch_a,
+            ));
+        }
+    });
+    let batched_name = "policy/sample_batch16(one matrix fwd)";
+    bench.bench(batched_name, || {
+        std::hint::black_box(ppo.policy.sample_batch(
+            &states,
+            batch_n,
+            &eps,
+            &mut rng,
+            &mut scratch_b,
+        ));
+    });
+    if let (Some(per_head), Some(batched)) = (
+        bench.mean_ns_of(per_head_name),
+        bench.mean_ns_of(batched_name),
+    ) {
+        // >1 means the batched path wins; tracked in the perf trajectory
+        bench.metric("ppo_batch16_speedup_x", per_head / batched);
+    }
 
     // ---- policy forward+backward ----
     let train_ppo =

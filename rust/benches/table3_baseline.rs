@@ -13,7 +13,8 @@ fn main() {
     let requests = if quick { 2000 } else { 8000 };
     // BENCH_SCENARIO=<name> re-runs this table on any registered scenario
     let cfg = experiments::bench_cfg(requests, 42);
-    let paper = cfg.scenario.as_deref().unwrap_or("paper") == "paper";
+    let paper = cfg.scenario.as_deref().unwrap_or("paper") == "paper"
+        && cfg.router.route_window == 1; // paper bands assume the per-head loop
 
     let mut bench = Bench::from_env();
     let mut outcome = None;

@@ -13,7 +13,8 @@ fn main() {
     let (requests, episodes) = if quick { (2000, 5) } else { (6000, 10) };
     // BENCH_SCENARIO=<name> re-runs this table on any registered scenario
     let cfg = experiments::bench_cfg(requests, 42);
-    let paper = cfg.scenario.as_deref().unwrap_or("paper") == "paper";
+    let paper = cfg.scenario.as_deref().unwrap_or("paper") == "paper"
+        && cfg.router.route_window == 1; // paper bands assume the per-head loop
 
     let mut bench = Bench::from_env();
     let mut results = None;
@@ -84,8 +85,9 @@ fn main() {
         );
     }
     // width mixing, not collapse (holds on every scenario)
-    let total: u64 = ppo.width_histogram.iter().sum();
-    let widest_frac = *ppo.width_histogram.iter().max().unwrap() as f64 / total as f64;
+    let total = ppo.width_execs();
+    let widest = ppo.width_histogram.iter().map(|&(_, c)| c).max().unwrap_or(0);
+    let widest_frac = widest as f64 / total.max(1) as f64;
     assert!(widest_frac < 0.97, "policy collapsed: {:?}", ppo.width_histogram);
     bench.emit_json("table5_ppo_averaged");
 }

@@ -68,6 +68,9 @@ pub struct Bench {
     quick: bool,
     filter: Option<String>,
     results: Vec<BenchResult>,
+    /// Named derived scalars (ratios, speedups) carried into the JSON
+    /// emission alongside the raw timings.
+    metrics: Vec<(String, f64)>,
 }
 
 impl Default for Bench {
@@ -84,7 +87,7 @@ impl Bench {
         let quick = argv.iter().any(|a| a == "--quick")
             || std::env::var("BENCH_QUICK").is_ok();
         let filter = std::env::var("BENCH_FILTER").ok();
-        Bench { quick, filter, results: Vec::new() }
+        Bench { quick, filter, results: Vec::new(), metrics: Vec::new() }
     }
 
     fn skip(&self, name: &str) -> bool {
@@ -164,6 +167,18 @@ impl Bench {
         &self.results
     }
 
+    /// Mean time of an already-recorded bench by exact name.
+    pub fn mean_ns_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|r| r.name == name).map(|r| r.mean_ns)
+    }
+
+    /// Record a named derived scalar (e.g. a batched-vs-per-head
+    /// speedup ratio); emitted under `"metrics"` in the bench JSON.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("{name:<44} {value:>12.3}  (derived metric)");
+        self.metrics.push((name.to_string(), value));
+    }
+
     /// Write `BENCH_<bench_name>.json` (into `BENCH_JSON_DIR`, default
     /// cwd) so CI and perf-trajectory tooling can diff runs — every
     /// bench target calls this after printing its human-readable output.
@@ -184,6 +199,15 @@ impl Bench {
             (
                 "results",
                 Json::Arr(self.results.iter().map(BenchResult::to_json).collect()),
+            ),
+            (
+                "metrics",
+                Json::Obj(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
             ),
         ]);
         match std::fs::write(&path, doc.to_string_pretty()) {
@@ -258,7 +282,7 @@ mod tests {
 
     #[test]
     fn bench_produces_sane_timing() {
-        let mut b = Bench { quick: true, filter: None, results: vec![] };
+        let mut b = Bench { quick: true, filter: None, results: vec![], metrics: vec![] };
         let mut acc = 0u64;
         b.bench("noop-ish", || {
             acc = acc.wrapping_add(std::hint::black_box(1));
@@ -274,6 +298,7 @@ mod tests {
             quick: true,
             filter: Some("match-me".into()),
             results: vec![],
+            metrics: vec![],
         };
         b.bench("other", || {});
         assert!(b.results().is_empty());
@@ -283,7 +308,7 @@ mod tests {
 
     #[test]
     fn once_records_a_single_sample_result() {
-        let mut b = Bench { quick: true, filter: None, results: vec![] };
+        let mut b = Bench { quick: true, filter: None, results: vec![], metrics: vec![] };
         b.once("one-shot", || {
             std::hint::black_box(1 + 1);
         });
@@ -292,6 +317,20 @@ mod tests {
         assert_eq!(r.samples, 1);
         assert!(r.mean_ns > 0.0);
         assert_eq!(r.p50_ns, r.mean_ns);
+    }
+
+    #[test]
+    fn metrics_and_lookup() {
+        let mut b = Bench { quick: true, filter: None, results: vec![], metrics: vec![] };
+        b.bench("a/fast", || {
+            std::hint::black_box(1 + 1);
+        });
+        let mean = b.mean_ns_of("a/fast").expect("recorded");
+        assert!(mean > 0.0);
+        assert!(b.mean_ns_of("missing").is_none());
+        b.metric("a/speedup_x", 2.5);
+        assert_eq!(b.metrics.len(), 1);
+        assert_eq!(b.metrics[0].0, "a/speedup_x");
     }
 
     #[test]

@@ -46,6 +46,25 @@ impl Default for SchedulerCfg {
     }
 }
 
+/// Leader routing-plan knobs (the windowed `Router::plan` API).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RouterCfg {
+    /// Maximum FIFO heads planned per routing event. `1` (the default)
+    /// is the paper's per-head loop and reproduces the pre-plan engine
+    /// bit-identically per seed; larger windows amortize one policy
+    /// invocation across the queue (batched PPO inference).
+    pub route_window: usize,
+    /// Nominal per-request soft SLA (s) used to derive
+    /// `HeadView::slack_s` for deadline-aware routers.
+    pub sla_s: f64,
+}
+
+impl Default for RouterCfg {
+    fn default() -> Self {
+        RouterCfg { route_window: 1, sla_s: 1.0 }
+    }
+}
+
 /// Reward weights (eq. 7): r = α·p_acc − β·L − γ·E − δ·Var(U) + b.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RewardCfg {
@@ -242,6 +261,7 @@ pub struct Config {
     pub artifacts_dir: String,
     /// Device profile names resolved via `sim::profiles::by_name`.
     pub devices: Vec<String>,
+    pub router: RouterCfg,
     pub scheduler: SchedulerCfg,
     pub ppo: PpoCfg,
     pub link: LinkCfg,
@@ -264,6 +284,7 @@ impl Default for Config {
                 "rtx2080ti".to_string(),
                 "gtx980ti".to_string(),
             ],
+            router: RouterCfg::default(),
             scheduler: SchedulerCfg::default(),
             ppo: PpoCfg::default(),
             link: LinkCfg::default(),
@@ -308,6 +329,9 @@ impl Config {
                 None => panic!("--dropout expects server@time (e.g. 0@5.0), got {spec:?}"),
             }
         }
+        self.router.route_window =
+            args.usize_or("route-window", self.router.route_window).max(1);
+        self.router.sla_s = args.f64_or("sla", self.router.sla_s);
         self.scheduler.b_max = args.usize_or("b-max", self.scheduler.b_max);
         self.scheduler.u_blk_pct = args.f64_or("u-blk", self.scheduler.u_blk_pct);
         self.scheduler.t_idle_s = args.f64_or("t-idle", self.scheduler.t_idle_s);
@@ -355,6 +379,13 @@ impl Config {
             (
                 "devices",
                 Json::Arr(self.devices.iter().cloned().map(Json::Str).collect()),
+            ),
+            (
+                "router",
+                obj(vec![
+                    ("route_window", Json::Num(self.router.route_window as f64)),
+                    ("sla_s", Json::Num(self.router.sla_s)),
+                ]),
             ),
             (
                 "scheduler",
@@ -433,6 +464,14 @@ impl Config {
             let at_s = dp.get("at_s").and_then(Json::as_f64);
             if let (Some(server), Some(at_s)) = (server, at_s) {
                 cfg.dropout = Some(DropoutCfg { server, at_s });
+            }
+        }
+        if let Some(r) = json.get("router") {
+            if let Some(x) = r.get("route_window").and_then(Json::as_usize) {
+                cfg.router.route_window = x.max(1);
+            }
+            if let Some(x) = r.get("sla_s").and_then(Json::as_f64) {
+                cfg.router.sla_s = x;
             }
         }
         if let Some(s) = json.get("scheduler") {
@@ -611,6 +650,35 @@ mod tests {
             ["simulate", "--scenario", "nope"].iter().map(|s| s.to_string()),
         );
         cfg.apply_args(&args);
+    }
+
+    #[test]
+    fn route_window_defaults_parses_and_roundtrips() {
+        let cfg = Config::default();
+        assert_eq!(cfg.router.route_window, 1); // per-head, paper-faithful
+        assert!(cfg.router.sla_s > 0.0);
+
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--route-window", "8", "--sla", "0.5"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.router.route_window, 8);
+        assert_eq!(cfg.router.sla_s, 0.5);
+
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.router.route_window, 8);
+        assert_eq!(parsed.router.sla_s, 0.5);
+
+        // a pathological 0 floors at 1 (the engine always needs progress)
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--route-window", "0"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.router.route_window, 1);
     }
 
     #[test]

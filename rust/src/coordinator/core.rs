@@ -283,13 +283,15 @@ pub struct RunMetrics {
     pub e2e_latency: Summary,
     pub acc_sum: f64,
     pub telemetry_log: TelemetryLog,
-    /// Executed-width histogram over all segment executions (W order).
-    pub width_histogram: [u64; 4],
+    /// Executed-width histogram over all segment executions, one counter
+    /// per member of the scenario's width set W (W order) — sized at
+    /// construction so |W| ≠ 4 scenarios report correctly.
+    pub width_histogram: Vec<u64>,
     pub blocks_completed: u64,
 }
 
 impl RunMetrics {
-    pub fn new(n_servers: usize, total: usize) -> Self {
+    pub fn new(n_servers: usize, total: usize, n_widths: usize) -> Self {
         RunMetrics {
             done: 0,
             total,
@@ -298,7 +300,7 @@ impl RunMetrics {
             e2e_latency: Summary::default(),
             acc_sum: 0.0,
             telemetry_log: TelemetryLog::new(n_servers),
-            width_histogram: [0; 4],
+            width_histogram: vec![0; n_widths],
             blocks_completed: 0,
         }
     }
@@ -396,7 +398,8 @@ mod tests {
 
     #[test]
     fn run_metrics_accumulate() {
-        let mut m = RunMetrics::new(3, 2);
+        let mut m = RunMetrics::new(3, 2, 4);
+        assert_eq!(m.width_histogram.len(), 4);
         assert!(!m.all_done());
         m.record_block(0.2, 30.0);
         m.record_request_done(0.5, 74.0);

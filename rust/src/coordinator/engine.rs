@@ -29,13 +29,18 @@ use crate::utilx::Rng;
 
 use super::core::{BlockLedger, BlockState, DeviceModel, EventQueue, LocalScheduler, RunMetrics};
 use super::greedy::{Dispatch, GreedyScheduler, GreedyStats};
-use super::queue::Queued;
+use super::queue::{head_runs, HeadRun, Queued};
 use super::request::Request;
-use super::router::{BlockFeedback, Router};
+use super::router::{width_eq, BlockFeedback, HeadView, PlanError, Router};
 use super::telemetry::{ServerTelemetry, TelemetryLog, TelemetrySnapshot};
 
 const TELEMETRY_DT: f64 = 0.05;
 const UNLOAD_DT: f64 = 0.5;
+/// Per-run scan budget for windowed head discovery — comfortably above
+/// every micro-batch group size in use (≤ 16), so it never shortens a
+/// block, while keeping each planning event's FIFO scan bounded at
+/// `route_window · RUN_SCAN_CAP` entries on deep same-segment backlogs.
+const RUN_SCAN_CAP: usize = 64;
 
 /// Event kinds (ordering by time, then sequence — see `core::EventQueue`).
 #[derive(Debug)]
@@ -58,12 +63,45 @@ pub struct RunOutcome {
     pub e2e_latency: Summary,
     pub telemetry: TelemetryLog,
     pub greedy_stats: Vec<GreedyStats>,
-    /// Executed-width histogram over all segment executions (W order).
-    pub width_histogram: [u64; 4],
+    /// Executed-width histogram over all segment executions, keyed by
+    /// the scenario's width set: `(width, count)` pairs in W order, so
+    /// scenarios with |W| ≠ 4 report correctly.
+    pub width_histogram: Vec<(f64, u64)>,
     pub blocks_completed: u64,
     pub sim_duration_s: f64,
     /// Total cluster energy (J) integrated over the run.
     pub total_energy_j: f64,
+}
+
+impl RunOutcome {
+    /// Total segment executions across all widths.
+    pub fn width_execs(&self) -> u64 {
+        self.width_histogram.iter().map(|&(_, c)| c).sum()
+    }
+
+    /// Executions at exactly width `w` (0 when `w` is not in W).
+    pub fn width_count(&self, w: f64) -> u64 {
+        self.width_histogram
+            .iter()
+            .find(|&&(x, _)| width_eq(x, w))
+            .map(|&(_, c)| c)
+            .unwrap_or(0)
+    }
+
+    /// Fraction of executions at widths ≤ `w` (0 when nothing executed).
+    pub fn width_frac_at_most(&self, w: f64) -> f64 {
+        let total = self.width_execs();
+        if total == 0 {
+            return 0.0;
+        }
+        let at_most: u64 = self
+            .width_histogram
+            .iter()
+            .filter(|&&(x, _)| x <= w + 1e-9)
+            .map(|&(_, c)| c)
+            .sum();
+        at_most as f64 / total as f64
+    }
 }
 
 /// The engine itself — generic over the router (so trained PPO routers
@@ -134,7 +172,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             ledger: BlockLedger::new(),
             events: EventQueue::new(),
             clock: VirtualClock::new(),
-            metrics: RunMetrics::new(n, total),
+            metrics: RunMetrics::new(n, total, cfg.scheduler.widths.len()),
             down: vec![false; n],
             max_sim_time_s: 3600.0,
             cfg,
@@ -188,7 +226,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             .scheduler
             .widths
             .iter()
-            .position(|&x| (x - w).abs() < 1e-9)
+            .position(|&x| width_eq(x, w))
             .unwrap_or(0)
     }
 
@@ -205,71 +243,144 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             .unwrap_or(want)
     }
 
-    /// Route every request waiting at the leader.
+    /// Route every request waiting at the leader: present up to
+    /// `RouterCfg::route_window` FIFO heads (one per consecutive
+    /// same-segment run) to a single `Router::plan` call, apply the plan
+    /// atomically, repeat until the FIFO drains. With `route_window = 1`
+    /// this is the pre-plan per-head loop, bit-identical per seed.
     fn route_pending(&mut self) {
+        let window = self.cfg.router.route_window.max(1);
         while !self.global_fifo.is_empty() {
             let snap = self.snapshot();
-            let head_seg = self.global_fifo[0].seg;
-            let head_w_req = self.global_fifo[0].w_req;
-            let decision =
-                self.router.route(&snap, head_w_req, head_seg, &mut self.rng);
             let now = self.clock.now();
+            let runs = if window == 1 {
+                // fast path: the single head needs no run-length scan —
+                // block extraction below is bounded by the segment check,
+                // so a deep same-segment backlog costs O(group), not
+                // O(backlog), per routing event
+                let front = &self.global_fifo[0];
+                vec![HeadRun { start: 0, len: usize::MAX, seg: front.seg }]
+            } else {
+                head_runs(&self.global_fifo, window, RUN_SCAN_CAP)
+            };
+            let heads: Vec<HeadView> = runs
+                .iter()
+                .map(|run| {
+                    let req = &self.global_fifo[run.start];
+                    let age = now - req.arrival;
+                    HeadView {
+                        fifo_index: run.start,
+                        w_req: req.w_req,
+                        seg: run.seg,
+                        age_s: age,
+                        slack_s: self.cfg.router.sla_s - age,
+                    }
+                })
+                .collect();
 
-            // pull a block: consecutive head requests of the same segment
-            let mut entries: Vec<Queued> = Vec::new();
-            while entries.len() < decision.group.max(1) {
-                match self.global_fifo.front() {
-                    Some(r) if r.seg == head_seg => {
-                        let mut req = self.global_fifo.pop_front().unwrap();
-                        req.block_tag = decision.tag;
+            let plan = self.router.plan(&snap, &heads, &mut self.rng);
+            let plan = match plan.validate(
+                heads.len(),
+                self.devices.len(),
+                &self.cfg.scheduler.widths,
+            ) {
+                // the common case: a valid plan passes through untouched
+                // (seeds stay bit-identical)
+                Ok(()) => plan,
+                // arity is a router contract violation, not routable data
+                Err(e @ PlanError::WrongArity { .. }) => {
+                    panic!("router {}: {e}", self.router.name())
+                }
+                // out-of-range servers/widths/groups are repairable:
+                // clamp explicitly instead of indexing out of bounds
+                Err(_) => {
+                    plan.clamp(self.devices.len(), &self.cfg.scheduler.widths).0
+                }
+            };
+            let decisions = plan.into_decisions();
+
+            // apply atomically: one ranged drain per decision (up to
+            // `group` members of each head's run), processed back to
+            // front so earlier runs' offsets stay valid; sub-group
+            // leftovers never leave the queue
+            let mut blocks: Vec<Vec<Queued>> =
+                Vec::with_capacity(decisions.len());
+            for k in (0..decisions.len()).rev() {
+                let run = &runs[k];
+                let d = &decisions[k];
+                let want = d.group.max(1);
+                // count this block's members (consecutive same-segment
+                // entries from the run start, capped by the group)
+                let mut take = 0usize;
+                while take < want
+                    && take < run.len
+                    && self
+                        .global_fifo
+                        .get(run.start + take)
+                        .map_or(false, |r| r.seg == run.seg)
+                {
+                    take += 1;
+                }
+                let entries: Vec<Queued> = self
+                    .global_fifo
+                    .drain(run.start..run.start + take)
+                    .map(|mut req| {
+                        req.block_tag = d.tag;
                         req.routed_at = now;
                         req.enqueued_at = now;
-                        entries.push(Queued { req, width: decision.width });
-                    }
-                    _ => break,
+                        Queued { req, width: d.width }
+                    })
+                    .collect();
+                blocks.push(entries);
+            }
+            blocks.reverse();
+
+            for ((decision, run), entries) in
+                decisions.iter().zip(&runs).zip(blocks)
+            {
+                debug_assert!(!entries.is_empty());
+                let head_seg = run.seg;
+
+                // representative tuple for the partial-accuracy prior:
+                // executed widths so far, this block's width for the
+                // current segment, nearest-neighbour for the rest.
+                let mut tuple = [decision.width; NUM_SEGMENTS];
+                for s in 0..head_seg {
+                    tuple[s] = entries[0].req.widths_used[s];
                 }
+
+                self.ledger.open(
+                    decision.tag,
+                    BlockState {
+                        routed_at: now,
+                        remaining: entries.len(),
+                        width: decision.width,
+                        seg: head_seg,
+                        tuple,
+                    },
+                );
+
+                let server = self
+                    .alive_server(decision.server.min(self.devices.len() - 1));
+
+                // WLAN transfer: charge the slowest member of the block
+                let mut arrive = now;
+                for q in &entries {
+                    let bytes = if head_seg == 0 {
+                        // input image
+                        (self.meta.img * self.meta.img * self.meta.in_ch * 4) as u64
+                    } else {
+                        let (inp, _) = self.meta.seg_io_shapes(head_seg, 1);
+                        (inp.iter().product::<usize>() * 4) as u64
+                    };
+                    let dt = match q.req.last_server {
+                        Some(s) if s == server => self.link.local_s(),
+                        _ => self.link.transfer_s(bytes, &mut self.rng),
+                    };
+                    arrive = arrive.max(now + dt);
+                }
+                self.push_event(arrive, EvKind::BlockArrive { server, entries });
             }
-            debug_assert!(!entries.is_empty());
-
-            // representative tuple for the partial-accuracy prior:
-            // executed widths so far, this block's width for the current
-            // segment, nearest-neighbour (same width) for the rest.
-            let mut tuple = [decision.width; NUM_SEGMENTS];
-            for s in 0..head_seg {
-                tuple[s] = entries[0].req.widths_used[s];
-            }
-
-            self.ledger.open(
-                decision.tag,
-                BlockState {
-                    routed_at: now,
-                    remaining: entries.len(),
-                    width: decision.width,
-                    seg: head_seg,
-                    tuple,
-                },
-            );
-
-            let server =
-                self.alive_server(decision.server.min(self.devices.len() - 1));
-
-            // WLAN transfer: charge the slowest member of the block
-            let mut arrive = now;
-            for q in &entries {
-                let bytes = if head_seg == 0 {
-                    // input image
-                    (self.meta.img * self.meta.img * self.meta.in_ch * 4) as u64
-                } else {
-                    let (inp, _) = self.meta.seg_io_shapes(head_seg, 1);
-                    (inp.iter().product::<usize>() * 4) as u64
-                };
-                let dt = match q.req.last_server {
-                    Some(s) if s == server => self.link.local_s(),
-                    _ => self.link.transfer_s(bytes, &mut self.rng),
-                };
-                arrive = arrive.max(now + dt);
-            }
-            self.push_event(arrive, EvKind::BlockArrive { server, entries });
         }
     }
 
@@ -484,6 +595,14 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         let greedy_stats: Vec<GreedyStats> =
             self.scheds.iter().map(|s| s.stats()).collect();
         let m = self.metrics;
+        let width_histogram: Vec<(f64, u64)> = self
+            .cfg
+            .scheduler
+            .widths
+            .iter()
+            .cloned()
+            .zip(m.width_histogram.iter().cloned())
+            .collect();
         let outcome = RunOutcome {
             report: RunReport {
                 label: self.router.name().to_string(),
@@ -497,7 +616,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             e2e_latency: m.e2e_latency,
             telemetry: m.telemetry_log,
             greedy_stats,
-            width_histogram: m.width_histogram,
+            width_histogram,
             blocks_completed: m.blocks_completed,
             sim_duration_s: now,
             total_energy_j: total_energy,
@@ -537,8 +656,56 @@ mod tests {
         assert!(out.report.energy.mean() > 0.0);
         assert!(out.total_energy_j > 0.0);
         // every request crossed 4 segments
-        let execs: u64 = out.width_histogram.iter().sum();
-        assert_eq!(execs, 4 * 300);
+        assert_eq!(out.width_execs(), 4 * 300);
+    }
+
+    #[test]
+    fn width_histogram_keys_follow_the_scenario_width_set() {
+        // |W| = 2 scenario: the histogram must carry exactly those keys
+        let mut cfg = small_cfg(120, 150.0);
+        cfg.scheduler.widths = vec![0.25, 1.0];
+        let widths = cfg.scheduler.widths.clone();
+        let out = run_with(cfg, Box::new(RandomRouter::new(widths, true, 4)));
+        assert_eq!(out.report.completed, 120);
+        let keys: Vec<f64> = out.width_histogram.iter().map(|&(w, _)| w).collect();
+        assert_eq!(keys, vec![0.25, 1.0]);
+        assert_eq!(out.width_execs(), 4 * 120);
+        assert_eq!(
+            out.width_count(0.25) + out.width_count(1.0),
+            out.width_execs()
+        );
+        assert_eq!(out.width_count(0.5), 0); // not in this W
+        let f = out.width_frac_at_most(0.25);
+        assert!((0.0..=1.0).contains(&f));
+    }
+
+    #[test]
+    fn windowed_routing_completes_and_conserves() {
+        for window in [2usize, 4, 16] {
+            let mut cfg = small_cfg(300, 250.0);
+            cfg.router.route_window = window;
+            let widths = cfg.scheduler.widths.clone();
+            let out =
+                run_with(cfg, Box::new(RandomRouter::new(widths, true, 4)));
+            assert_eq!(out.report.completed, 300, "window={window}");
+            assert_eq!(out.e2e_latency.count(), 300, "window={window}");
+            assert_eq!(out.width_execs(), 4 * 300, "window={window}");
+        }
+    }
+
+    #[test]
+    fn windowed_routing_is_deterministic() {
+        let mk = || {
+            let mut cfg = small_cfg(200, 300.0);
+            cfg.router.route_window = 4;
+            let widths = cfg.scheduler.widths.clone();
+            run_with(cfg, Box::new(RandomRouter::new(widths, true, 4)))
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.width_histogram, b.width_histogram);
+        assert_eq!(a.report.latency.mean().to_bits(), b.report.latency.mean().to_bits());
+        assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
     }
 
     #[test]

@@ -8,9 +8,10 @@
 //!   with best-fit lookup.
 //! * [`greedy`] — Algorithm 1: best-fit dispatch, CANLOAD-guarded
 //!   opportunistic scale-up, idle offload.
-//! * [`router`] — the global dispatch layer: Random (Table III baseline),
-//!   RoundRobin / LeastLoaded (algorithmic comparators), and the PPO
-//!   router (Tables IV–V).
+//! * [`router`] — the global dispatch layer behind the windowed
+//!   `Router::plan` API: Random (Table III baseline), RoundRobin /
+//!   LeastLoaded (algorithmic comparators), and the PPO router (Tables
+//!   IV–V) with its batched inference path.
 //! * [`telemetry`] — eq. 1's state vector + run-wide sampling.
 //! * [`core`] — the reusable discrete-event substrate: deterministic
 //!   event heap, block ledger, run metrics, and the [`core::DeviceModel`]
@@ -32,7 +33,7 @@ pub use self::core::{BlockLedger, DeviceModel, EventQueue, LocalScheduler, RunMe
 pub use engine::{Engine, RunOutcome};
 pub use greedy::GreedyScheduler;
 pub use instance::{Instance, InstancePool};
-pub use queue::KeyedFifo;
+pub use queue::{head_runs, HeadRun, KeyedFifo};
 pub use request::{wkey, BatchKey, Request};
-pub use router::{Decision, Router};
+pub use router::{Decision, HeadView, PlanError, Router, RoutingPlan};
 pub use telemetry::TelemetrySnapshot;

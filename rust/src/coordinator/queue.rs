@@ -10,6 +10,55 @@ use std::collections::VecDeque;
 
 use super::request::{BatchKey, Request};
 
+/// One run of consecutive same-segment requests at the front of the
+/// leader's global FIFO — the unit `Router::plan` decides over (each run
+/// yields one `HeadView`, and a decision's micro-batch group is drawn
+/// from its run).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HeadRun {
+    /// FIFO index of the run's first request.
+    pub start: usize,
+    /// Consecutive same-segment requests in the run.
+    pub len: usize,
+    /// Segment every member of the run needs.
+    pub seg: usize,
+}
+
+/// Scan the global FIFO front for up to `max_runs` segment runs, each
+/// counted up to `run_cap` entries. A run normally ends where the next
+/// request needs a different segment; a run that reaches `run_cap` ends
+/// the whole scan (its overflow — and any runs behind it — simply wait
+/// for the next planning event, which a deep backlog needs anyway).
+/// The cap bounds the scan at `max_runs · run_cap` entries, so routing
+/// a deep same-segment backlog stays linear instead of re-walking the
+/// backlog on every planning event.
+pub fn head_runs(
+    fifo: &VecDeque<Request>,
+    max_runs: usize,
+    run_cap: usize,
+) -> Vec<HeadRun> {
+    let run_cap = run_cap.max(1);
+    let mut runs: Vec<HeadRun> = Vec::new();
+    for (i, req) in fifo.iter().enumerate() {
+        match runs.last_mut() {
+            Some(run) if run.seg == req.seg && run.len < run_cap => {
+                run.len += 1;
+            }
+            // the current run hit the cap and continues in reality:
+            // stop scanning — anything past it is unknowable without
+            // walking the run to its true end
+            Some(run) if run.seg == req.seg => break,
+            _ => {
+                if runs.len() == max_runs {
+                    break;
+                }
+                runs.push(HeadRun { start: i, len: 1, seg: req.seg });
+            }
+        }
+    }
+    runs
+}
+
 /// Queue entry: a request plus the width the router granted it.
 #[derive(Clone, Debug)]
 pub struct Queued {
@@ -203,6 +252,67 @@ mod tests {
         fifo.push_back(q(1, 2, 1.0, 1.0));
         fifo.push_back(q(2, 2, 0.5, 1.0));
         assert_eq!(fifo.len_by_segment(4), vec![1, 0, 2, 0]);
+    }
+
+    fn fifo_of_segs(segs: &[usize]) -> VecDeque<Request> {
+        segs.iter()
+            .enumerate()
+            .map(|(i, &seg)| {
+                let mut r = Request::new(i as u64, 0.0, 1.0);
+                r.seg = seg;
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn head_runs_splits_on_segment_boundaries() {
+        let fifo = fifo_of_segs(&[0, 0, 1, 1, 1, 0, 2]);
+        let runs = head_runs(&fifo, 8, 64);
+        assert_eq!(
+            runs,
+            vec![
+                HeadRun { start: 0, len: 2, seg: 0 },
+                HeadRun { start: 2, len: 3, seg: 1 },
+                HeadRun { start: 5, len: 1, seg: 0 },
+                HeadRun { start: 6, len: 1, seg: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn head_runs_honors_the_window() {
+        let fifo = fifo_of_segs(&[0, 1, 2, 3]);
+        let runs = head_runs(&fifo, 2, 64);
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[1], HeadRun { start: 1, len: 1, seg: 1 });
+        assert!(head_runs(&fifo, 1, 64).len() == 1);
+        assert!(head_runs(&VecDeque::new(), 4, 64).is_empty());
+    }
+
+    #[test]
+    fn head_runs_caps_deep_runs_and_stops_the_scan() {
+        // a deep same-segment backlog: the scan is bounded by the cap
+        // and runs behind the capped run wait for the next event
+        let mut segs = vec![0usize; 10];
+        segs.extend_from_slice(&[1, 1]);
+        let fifo = fifo_of_segs(&segs);
+        let runs = head_runs(&fifo, 4, 3);
+        assert_eq!(runs, vec![HeadRun { start: 0, len: 3, seg: 0 }]);
+        // a run that ends naturally at exactly the cap doesn't block
+        // the next run from being reported
+        let fifo = fifo_of_segs(&[0, 0, 0, 1, 1]);
+        let runs = head_runs(&fifo, 4, 3);
+        assert_eq!(
+            runs,
+            vec![
+                HeadRun { start: 0, len: 3, seg: 0 },
+                HeadRun { start: 3, len: 2, seg: 1 },
+            ]
+        );
+        // degenerate cap floors at 1
+        let fifo = fifo_of_segs(&[0, 0]);
+        assert_eq!(head_runs(&fifo, 4, 0), vec![HeadRun { start: 0, len: 1, seg: 0 }]);
     }
 
     #[test]

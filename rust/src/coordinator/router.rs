@@ -1,17 +1,48 @@
-//! Global routing policies.
+//! Global routing policies — the windowed *plan* API.
 //!
 //! The router is the top of the hierarchy: given the eq. 1 telemetry
-//! snapshot and the FIFO head, it picks `(server, width, micro-batch
-//! group)` — the factored action of eq. 2. The greedy executor then
-//! realizes the decision locally. Implementations:
+//! snapshot and a **window of visible FIFO heads**, it picks `(server,
+//! width, micro-batch group)` — the factored action of eq. 2 — for every
+//! head in one call. The greedy executor then realizes each decision
+//! locally. Implementations:
 //!
 //! * [`RandomRouter`] — the paper's Table III baseline (uniform random
 //!   task distribution).
 //! * [`RoundRobinRouter`] — classic algorithmic comparator.
 //! * [`LeastLoadedRouter`] — greedy global comparator (min queue).
 //! * `ppo::PpoRouter` (in the [`crate::ppo`] module) — the learned policy
-//!   of Tables IV–V; it implements this same trait so every experiment
-//!   driver is router-agnostic.
+//!   of Tables IV–V; its batched path evaluates every head of the window
+//!   in a single matrix forward pass.
+//!
+//! ## Migration note (per-head `route` → windowed `plan`)
+//!
+//! Pre-redesign signature (one policy invocation per queued head):
+//!
+//! ```text
+//! fn route(&mut self, snap: &TelemetrySnapshot, head_w_req: f64,
+//!          head_seg: usize, rng: &mut Rng) -> Decision
+//! ```
+//!
+//! New signature (one invocation per routing event, covering up to
+//! `RouterCfg::route_window` compatible heads):
+//!
+//! ```text
+//! fn plan(&mut self, snap: &TelemetrySnapshot, heads: &[HeadView],
+//!         rng: &mut Rng) -> RoutingPlan
+//! ```
+//!
+//! A [`HeadView`] carries what the old scalar pair did (requested width,
+//! segment) plus queue position, age and deadline slack. A
+//! [`RoutingPlan`] is a typed, validated set of per-head [`Decision`]s:
+//! arity mismatches surface as a [`PlanError`] and out-of-range
+//! servers/widths go through an explicit clamp path instead of silent
+//! indexing. With `route_window = 1` (the default) the engine presents
+//! exactly one head per event and every router reproduces the
+//! pre-redesign decision stream bit-identically per seed
+//! (`tests/plan_equivalence.rs`). Callers that routed a single synthetic
+//! head (benches, the serve example) use [`Router::route_one`].
+
+use std::fmt;
 
 use crate::utilx::Rng;
 
@@ -26,6 +57,165 @@ pub struct Decision {
     pub group: usize,
     /// Correlation tag echoed in feedback (rollout bookkeeping).
     pub tag: u64,
+}
+
+/// One visible FIFO head presented to [`Router::plan`]: the first request
+/// of a run of consecutive same-segment entries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HeadView {
+    /// Position of this head in the global FIFO (0 = front).
+    pub fifo_index: usize,
+    /// Width the client asked for (minimum acceptable).
+    pub w_req: f64,
+    /// Segment the head currently needs.
+    pub seg: usize,
+    /// Time since the request arrived at the leader (s).
+    pub age_s: f64,
+    /// Remaining slack against the nominal SLA (`RouterCfg::sla_s`), in
+    /// seconds; negative once the head is already late.
+    pub slack_s: f64,
+}
+
+impl HeadView {
+    /// Synthetic head for single-decision callers (benches, serving
+    /// shims): front of the queue, zero age, and no deadline pressure
+    /// (infinite slack — a deadline-aware router must never treat a
+    /// synthetic head as due-now).
+    pub fn new(w_req: f64, seg: usize) -> Self {
+        HeadView {
+            fifo_index: 0,
+            w_req,
+            seg,
+            age_s: 0.0,
+            slack_s: f64::INFINITY,
+        }
+    }
+}
+
+/// Why a [`RoutingPlan`] failed validation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PlanError {
+    /// The plan does not carry exactly one decision per presented head.
+    WrongArity { expected: usize, got: usize },
+    /// A decision names a server outside `0..n_servers`.
+    ServerOutOfRange { head: usize, server: usize, n_servers: usize },
+    /// A decision's width is not in the scenario's width set W.
+    WidthNotInSet { head: usize, width: f64 },
+    /// A decision asks for an empty micro-batch group.
+    ZeroGroup { head: usize },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            PlanError::WrongArity { expected, got } => {
+                write!(f, "plan has {got} decisions for {expected} heads")
+            }
+            PlanError::ServerOutOfRange { head, server, n_servers } => {
+                write!(f, "head {head}: server {server} out of range (cluster has {n_servers})")
+            }
+            PlanError::WidthNotInSet { head, width } => {
+                write!(f, "head {head}: width {width} not in the scenario width set")
+            }
+            PlanError::ZeroGroup { head } => {
+                write!(f, "head {head}: micro-batch group must be >= 1")
+            }
+        }
+    }
+}
+
+/// A typed set of per-head decisions, index-aligned with the `heads`
+/// slice handed to [`Router::plan`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoutingPlan {
+    decisions: Vec<Decision>,
+}
+
+impl RoutingPlan {
+    pub fn new(decisions: Vec<Decision>) -> Self {
+        RoutingPlan { decisions }
+    }
+
+    pub fn len(&self) -> usize {
+        self.decisions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.decisions.is_empty()
+    }
+
+    pub fn decisions(&self) -> &[Decision] {
+        &self.decisions
+    }
+
+    pub fn into_decisions(self) -> Vec<Decision> {
+        self.decisions
+    }
+
+    /// Strict validation against the cluster shape: exactly one decision
+    /// per head, servers in range, widths in the scenario set, non-empty
+    /// groups. First violation wins.
+    pub fn validate(
+        &self,
+        n_heads: usize,
+        n_servers: usize,
+        widths: &[f64],
+    ) -> Result<(), PlanError> {
+        if self.decisions.len() != n_heads {
+            return Err(PlanError::WrongArity {
+                expected: n_heads,
+                got: self.decisions.len(),
+            });
+        }
+        for (head, d) in self.decisions.iter().enumerate() {
+            if d.server >= n_servers.max(1) {
+                return Err(PlanError::ServerOutOfRange {
+                    head,
+                    server: d.server,
+                    n_servers,
+                });
+            }
+            if !widths.iter().any(|&w| width_eq(w, d.width)) {
+                return Err(PlanError::WidthNotInSet { head, width: d.width });
+            }
+            if d.group == 0 {
+                return Err(PlanError::ZeroGroup { head });
+            }
+        }
+        Ok(())
+    }
+
+    /// Repair path for out-of-range decisions: servers clamp into range,
+    /// widths snap to the nearest member of W, groups floor at 1. A plan
+    /// that already validates is returned unchanged (bit-identical).
+    /// Returns the repaired plan plus how many fields were clamped.
+    pub fn clamp(mut self, n_servers: usize, widths: &[f64]) -> (RoutingPlan, usize) {
+        let mut clamped = 0usize;
+        for d in &mut self.decisions {
+            if d.server >= n_servers.max(1) {
+                d.server = n_servers.saturating_sub(1);
+                clamped += 1;
+            }
+            if !widths.is_empty()
+                && !widths.iter().any(|&w| width_eq(w, d.width))
+            {
+                let nearest = widths
+                    .iter()
+                    .cloned()
+                    .min_by(|a, b| {
+                        (a - d.width).abs().total_cmp(&(b - d.width).abs())
+                    })
+                    .unwrap();
+                d.width = nearest;
+                clamped += 1;
+            }
+            if d.group == 0 {
+                d.group = 1;
+                clamped += 1;
+            }
+        }
+        (self, clamped)
+    }
 }
 
 /// Post-hoc outcome of a routed block (reward ingredients, eq. 7).
@@ -46,14 +236,30 @@ pub struct BlockFeedback {
 pub trait Router: Send {
     fn name(&self) -> &'static str;
 
-    /// Choose (server, width, group) for the FIFO head.
-    fn route(
+    /// Choose (server, width, group) for every visible FIFO head. The
+    /// returned plan must carry exactly one decision per head, in head
+    /// order; the engine validates arity and clamps out-of-range fields.
+    fn plan(
         &mut self,
         snap: &TelemetrySnapshot,
-        head_w_req: f64,
-        head_seg: usize,
+        heads: &[HeadView],
         rng: &mut Rng,
-    ) -> Decision;
+    ) -> RoutingPlan;
+
+    /// Single-head convenience wrapper over [`Router::plan`] (benches,
+    /// serving shims, tests).
+    fn route_one(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        head: &HeadView,
+        rng: &mut Rng,
+    ) -> Decision {
+        self.plan(snap, std::slice::from_ref(head), rng)
+            .into_decisions()
+            .into_iter()
+            .next()
+            .expect("router returned an empty plan for one head")
+    }
 
     /// Outcome of an earlier decision (ignored by stateless routers).
     fn feedback(&mut self, _fb: &BlockFeedback) {}
@@ -71,14 +277,13 @@ impl Router for Box<dyn Router> {
     fn name(&self) -> &'static str {
         (**self).name()
     }
-    fn route(
+    fn plan(
         &mut self,
         snap: &TelemetrySnapshot,
-        head_w_req: f64,
-        head_seg: usize,
+        heads: &[HeadView],
         rng: &mut Rng,
-    ) -> Decision {
-        (**self).route(snap, head_w_req, head_seg, rng)
+    ) -> RoutingPlan {
+        (**self).plan(snap, heads, rng)
     }
     fn feedback(&mut self, fb: &BlockFeedback) {
         (**self).feedback(fb)
@@ -91,7 +296,13 @@ impl Router for Box<dyn Router> {
     }
 }
 
-fn snap_width_up(widths: &[f64], w_req: f64) -> f64 {
+/// Width-set membership tolerance, shared by plan validation/clamping
+/// and the run-outcome histogram so they can never drift apart.
+pub(crate) fn width_eq(a: f64, b: f64) -> bool {
+    (a - b).abs() < 1e-9
+}
+
+pub(crate) fn snap_width_up(widths: &[f64], w_req: f64) -> f64 {
     widths
         .iter()
         .cloned()
@@ -120,26 +331,33 @@ impl Router for RandomRouter {
         "random"
     }
 
-    fn route(
+    fn plan(
         &mut self,
         snap: &TelemetrySnapshot,
-        head_w_req: f64,
-        _head_seg: usize,
+        heads: &[HeadView],
         rng: &mut Rng,
-    ) -> Decision {
-        let tag = self.next_tag;
-        self.next_tag += 1;
-        let width = if self.randomize_width {
-            *rng.choice(&self.widths)
-        } else {
-            snap_width_up(&self.widths, head_w_req)
-        };
-        Decision {
-            server: rng.index(snap.servers.len().max(1)),
-            width,
-            group: self.group,
-            tag,
-        }
+    ) -> RoutingPlan {
+        let decisions = heads
+            .iter()
+            .map(|head| {
+                let tag = self.next_tag;
+                self.next_tag += 1;
+                // draw order (width, then server) matches the per-head
+                // route() this replaced — seeds reproduce bit-identically
+                let width = if self.randomize_width {
+                    *rng.choice(&self.widths)
+                } else {
+                    snap_width_up(&self.widths, head.w_req)
+                };
+                Decision {
+                    server: rng.index(snap.servers.len().max(1)),
+                    width,
+                    group: self.group,
+                    tag,
+                }
+            })
+            .collect();
+        RoutingPlan::new(decisions)
     }
 }
 
@@ -162,24 +380,29 @@ impl Router for RoundRobinRouter {
         "round-robin"
     }
 
-    fn route(
+    fn plan(
         &mut self,
         snap: &TelemetrySnapshot,
-        head_w_req: f64,
-        _head_seg: usize,
+        heads: &[HeadView],
         _rng: &mut Rng,
-    ) -> Decision {
+    ) -> RoutingPlan {
         let n = snap.servers.len().max(1);
-        let server = self.cursor % n;
-        self.cursor = (self.cursor + 1) % n;
-        let tag = self.next_tag;
-        self.next_tag += 1;
-        Decision {
-            server,
-            width: snap_width_up(&self.widths, head_w_req),
-            group: self.group,
-            tag,
-        }
+        let decisions = heads
+            .iter()
+            .map(|head| {
+                let server = self.cursor % n;
+                self.cursor = (self.cursor + 1) % n;
+                let tag = self.next_tag;
+                self.next_tag += 1;
+                Decision {
+                    server,
+                    width: snap_width_up(&self.widths, head.w_req),
+                    group: self.group,
+                    tag,
+                }
+            })
+            .collect();
+        RoutingPlan::new(decisions)
     }
 }
 
@@ -202,33 +425,65 @@ impl Router for LeastLoadedRouter {
         "least-loaded"
     }
 
-    fn route(
+    fn plan(
         &mut self,
         snap: &TelemetrySnapshot,
-        head_w_req: f64,
-        _head_seg: usize,
+        heads: &[HeadView],
         _rng: &mut Rng,
-    ) -> Decision {
-        let server = snap
-            .servers
-            .iter()
-            .enumerate()
-            .min_by(|(_, a), (_, b)| {
-                let sa = a.queue_len as f64 + a.util_pct / 25.0;
-                let sb = b.queue_len as f64 + b.util_pct / 25.0;
-                sa.partial_cmp(&sb).unwrap()
-            })
-            .map(|(i, _)| i)
-            .unwrap_or(0);
+    ) -> RoutingPlan {
+        // NaN-safe ordering throughout (total_cmp): a poisoned telemetry
+        // sample must not panic the leader mid-run.
         let group = if snap.fifo_len > 8 { self.max_group } else { 1 };
-        let tag = self.next_tag;
-        self.next_tag += 1;
-        Decision {
-            server,
-            width: snap_width_up(&self.widths, head_w_req),
-            group,
-            tag,
+        let score = |s: &super::telemetry::ServerTelemetry| {
+            s.queue_len as f64 + s.util_pct / 25.0
+        };
+        if let [head] = heads {
+            // per-head hot path (route_window = 1): allocation-free scan,
+            // the pre-plan body verbatim
+            let server = snap
+                .servers
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| score(a).total_cmp(&score(b)))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            return RoutingPlan::new(vec![Decision {
+                server,
+                width: snap_width_up(&self.widths, head.w_req),
+                group,
+                tag,
+            }]);
         }
+        // Windowed path — live load image: assigning a block raises its
+        // target's score, so a wide window spreads over the cluster
+        // instead of herding every head onto the server that was least
+        // loaded at snapshot time.
+        let mut scores: Vec<f64> = snap.servers.iter().map(score).collect();
+        let decisions = heads
+            .iter()
+            .map(|head| {
+                let server = scores
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| a.total_cmp(b))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                if let Some(sc) = scores.get_mut(server) {
+                    *sc += group as f64;
+                }
+                let tag = self.next_tag;
+                self.next_tag += 1;
+                Decision {
+                    server,
+                    width: snap_width_up(&self.widths, head.w_req),
+                    group,
+                    tag,
+                }
+            })
+            .collect();
+        RoutingPlan::new(decisions)
     }
 }
 
@@ -265,7 +520,7 @@ mod tests {
         let s = snap(&[0, 0, 0], &[0.0, 0.0, 0.0]);
         let mut seen = [false; 3];
         for _ in 0..100 {
-            let d = r.route(&s, 0.5, 0, &mut rng);
+            let d = r.route_one(&s, &HeadView::new(0.5, 0), &mut rng);
             seen[d.server] = true;
             assert_eq!(d.width, 0.5); // honors request
             assert_eq!(d.group, 4);
@@ -280,7 +535,7 @@ mod tests {
         let s = snap(&[0], &[0.0]);
         let mut widths = std::collections::BTreeSet::new();
         for _ in 0..100 {
-            let d = r.route(&s, 0.25, 0, &mut rng);
+            let d = r.route_one(&s, &HeadView::new(0.25, 0), &mut rng);
             widths.insert((d.width * 100.0) as u32);
         }
         assert_eq!(widths.len(), 4);
@@ -291,8 +546,9 @@ mod tests {
         let mut r = RoundRobinRouter::new(W.to_vec(), 1);
         let mut rng = Rng::new(3);
         let s = snap(&[0, 0, 0], &[0.0, 0.0, 0.0]);
-        let servers: Vec<usize> =
-            (0..6).map(|_| r.route(&s, 1.0, 0, &mut rng).server).collect();
+        let servers: Vec<usize> = (0..6)
+            .map(|_| r.route_one(&s, &HeadView::new(1.0, 0), &mut rng).server)
+            .collect();
         assert_eq!(servers, vec![0, 1, 2, 0, 1, 2]);
     }
 
@@ -301,12 +557,40 @@ mod tests {
         let mut r = LeastLoadedRouter::new(W.to_vec(), 16);
         let mut rng = Rng::new(4);
         let s = snap(&[9, 2, 7], &[50.0, 50.0, 50.0]);
-        let d = r.route(&s, 0.75, 1, &mut rng);
+        let d = r.route_one(&s, &HeadView::new(0.75, 1), &mut rng);
         assert_eq!(d.server, 1);
         assert_eq!(d.group, 16); // fifo_len 20 > 8
         // utilization tie-breaks queues
         let s2 = snap(&[3, 3], &[95.0, 10.0]);
-        assert_eq!(r.route(&s2, 0.75, 1, &mut rng).server, 1);
+        assert_eq!(r.route_one(&s2, &HeadView::new(0.75, 1), &mut rng).server, 1);
+    }
+
+    #[test]
+    fn least_loaded_spreads_a_wide_window() {
+        // six equal-cost blocks over three idle servers must not herd
+        // onto the single snapshot-time minimum
+        let mut r = LeastLoadedRouter::new(W.to_vec(), 4);
+        let mut rng = Rng::new(9);
+        let s = snap(&[0, 0, 0], &[0.0, 0.0, 0.0]); // fifo_len 20 > 8
+        let plan = r.plan(&s, &heads(6), &mut rng);
+        let mut per_server = [0usize; 3];
+        for d in plan.decisions() {
+            per_server[d.server] += 1;
+        }
+        assert_eq!(per_server, [2, 2, 2], "window herded: {per_server:?}");
+    }
+
+    #[test]
+    fn least_loaded_survives_nan_telemetry() {
+        // a poisoned sample (NaN util) must not panic the leader; the
+        // NaN-scored server simply never wins the min
+        let mut r = LeastLoadedRouter::new(W.to_vec(), 16);
+        let mut rng = Rng::new(5);
+        let mut s = snap(&[9, 2, 7], &[50.0, 50.0, 50.0]);
+        s.servers[1].util_pct = f64::NAN;
+        let d = r.route_one(&s, &HeadView::new(0.5, 0), &mut rng);
+        assert!(d.server < 3);
+        assert_ne!(d.server, 1, "NaN-scored server must sort last");
     }
 
     #[test]
@@ -321,8 +605,101 @@ mod tests {
         let mut r = RandomRouter::new(W.to_vec(), false, 1);
         let mut rng = Rng::new(5);
         let s = snap(&[0], &[0.0]);
-        let t0 = r.route(&s, 1.0, 0, &mut rng).tag;
-        let t1 = r.route(&s, 1.0, 0, &mut rng).tag;
+        let t0 = r.route_one(&s, &HeadView::new(1.0, 0), &mut rng).tag;
+        let t1 = r.route_one(&s, &HeadView::new(1.0, 0), &mut rng).tag;
         assert!(t1 > t0);
+    }
+
+    fn heads(n: usize) -> Vec<HeadView> {
+        (0..n)
+            .map(|i| HeadView {
+                fifo_index: i,
+                w_req: W[i % 4],
+                seg: i % 4,
+                age_s: 0.01 * i as f64,
+                slack_s: 1.0 - 0.01 * i as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_router_plans_one_decision_per_head() {
+        let s = snap(&[3, 1, 2], &[10.0, 20.0, 30.0]);
+        let hs = heads(5);
+        let mut rng = Rng::new(6);
+        let mut routers: Vec<Box<dyn Router>> = vec![
+            Box::new(RandomRouter::new(W.to_vec(), true, 4)),
+            Box::new(RoundRobinRouter::new(W.to_vec(), 4)),
+            Box::new(LeastLoadedRouter::new(W.to_vec(), 16)),
+        ];
+        for r in &mut routers {
+            let plan = r.plan(&s, &hs, &mut rng);
+            assert_eq!(plan.len(), hs.len(), "{}", r.name());
+            assert!(plan.validate(hs.len(), 3, &W).is_ok(), "{}", r.name());
+        }
+    }
+
+    #[test]
+    fn multi_head_plan_matches_repeated_single_head_plans() {
+        // for stateful-but-snapshot-driven routers the windowed plan is
+        // the same decision sequence the per-head loop would produce
+        let s = snap(&[3, 1, 2], &[10.0, 20.0, 30.0]);
+        let hs = heads(6);
+
+        let mut rng_a = Rng::new(7);
+        let mut rng_b = rng_a.clone();
+        let mut a = RandomRouter::new(W.to_vec(), true, 4);
+        let mut b = RandomRouter::new(W.to_vec(), true, 4);
+        let windowed = a.plan(&s, &hs, &mut rng_a).into_decisions();
+        let per_head: Vec<Decision> =
+            hs.iter().map(|h| b.route_one(&s, h, &mut rng_b)).collect();
+        assert_eq!(windowed, per_head);
+
+        let mut rng = Rng::new(8);
+        let mut a = RoundRobinRouter::new(W.to_vec(), 4);
+        let mut b = RoundRobinRouter::new(W.to_vec(), 4);
+        let windowed = a.plan(&s, &hs, &mut rng).into_decisions();
+        let per_head: Vec<Decision> =
+            hs.iter().map(|h| b.route_one(&s, h, &mut rng)).collect();
+        assert_eq!(windowed, per_head);
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        let d = Decision { server: 0, width: 0.5, group: 1, tag: 0 };
+        let plan = RoutingPlan::new(vec![d]);
+        assert_eq!(
+            plan.validate(2, 3, &W),
+            Err(PlanError::WrongArity { expected: 2, got: 1 })
+        );
+        let plan = RoutingPlan::new(vec![Decision { server: 9, ..d }]);
+        assert_eq!(
+            plan.validate(1, 3, &W),
+            Err(PlanError::ServerOutOfRange { head: 0, server: 9, n_servers: 3 })
+        );
+        let plan = RoutingPlan::new(vec![Decision { width: 0.33, ..d }]);
+        assert!(matches!(
+            plan.validate(1, 3, &W),
+            Err(PlanError::WidthNotInSet { head: 0, .. })
+        ));
+        let plan = RoutingPlan::new(vec![Decision { group: 0, ..d }]);
+        assert_eq!(plan.validate(1, 3, &W), Err(PlanError::ZeroGroup { head: 0 }));
+        let plan = RoutingPlan::new(vec![d]);
+        assert!(plan.validate(1, 3, &W).is_ok());
+    }
+
+    #[test]
+    fn clamp_repairs_out_of_range_fields_and_keeps_valid_plans() {
+        let good = Decision { server: 1, width: 0.75, group: 4, tag: 1 };
+        let bad = Decision { server: 7, width: 0.6, group: 0, tag: 2 };
+        let (plan, clamped) =
+            RoutingPlan::new(vec![good, bad]).clamp(3, &W);
+        assert_eq!(clamped, 3);
+        let ds = plan.into_decisions();
+        assert_eq!(ds[0], good); // untouched
+        assert_eq!(ds[1].server, 2);
+        assert_eq!(ds[1].width, 0.5); // nearest member of W
+        assert_eq!(ds[1].group, 1);
+        assert!(RoutingPlan::new(ds).validate(2, 3, &W).is_ok());
     }
 }

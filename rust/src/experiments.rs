@@ -20,6 +20,8 @@ pub fn paper_cluster_cfg(total_requests: usize, seed: u64) -> Config {
 /// Bench configuration: the paper cluster unless `BENCH_SCENARIO=<name>`
 /// selects a `sim::scenarios` entry — the hook that lets every table
 /// bench re-run per scenario without code changes.
+/// `BENCH_ROUTE_WINDOW=<n>` widens the leader's routing window (default
+/// 1 = the paper-faithful per-head loop).
 pub fn bench_cfg(total_requests: usize, seed: u64) -> Config {
     let mut cfg = paper_cluster_cfg(total_requests, seed);
     if let Ok(name) = std::env::var("BENCH_SCENARIO") {
@@ -29,6 +31,14 @@ pub fn bench_cfg(total_requests: usize, seed: u64) -> Config {
             // the scenario overrides the workload; keep the bench budget
             cfg.workload.total_requests = total_requests;
             cfg.seed = seed;
+        }
+    }
+    if let Ok(w) = std::env::var("BENCH_ROUTE_WINDOW") {
+        if !w.is_empty() {
+            let w: usize = w
+                .parse()
+                .unwrap_or_else(|e| panic!("BENCH_ROUTE_WINDOW: {e}"));
+            cfg.router.route_window = w.max(1);
         }
     }
     cfg
@@ -279,9 +289,7 @@ mod tests {
         let lat_red = pct_change(baseline.report.latency.mean(), ppo.report.latency.mean());
         assert!(lat_red < -60.0, "latency reduction only {lat_red:.1}%");
         // width histogram concentrates on slim widths
-        let total: u64 = ppo.width_histogram.iter().sum();
-        let slim_frac =
-            (ppo.width_histogram[0] + ppo.width_histogram[1]) as f64 / total as f64;
+        let slim_frac = ppo.width_frac_at_most(0.5);
         assert!(slim_frac > 0.6, "slim fraction {slim_frac}: {:?}", ppo.width_histogram);
         // accuracy sinks toward the slimmest model's 70.3
         assert!(ppo.report.accuracy_pct < baseline.report.accuracy_pct);

@@ -36,6 +36,8 @@ fn main() -> anyhow::Result<()> {
         .describe("episodes", "PPO training episodes")
         .describe("workers", "parallel rollout workers (train-ppo/simulate --router ppo)")
         .describe("scenario", "named cluster/workload scenario (see `repro scenarios`)")
+        .describe("route-window", "FIFO heads planned per routing event (1 = paper per-head loop)")
+        .describe("sla", "soft per-request SLA (s) exposed to routers as deadline slack")
         .describe("dropout", "kill server mid-run: server@time, e.g. 0@5.0")
         .describe("diurnal-period", "sinusoidal load cycle length (s, 0=off)")
         .describe("diurnal-depth", "sinusoidal load modulation depth [0,1)")
@@ -77,11 +79,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = base_cfg(args);
     let router = args.str_or("router", "random");
     println!(
-        "router={router} scenario={} requests={} rate={}/s devices={:?}",
+        "router={router} scenario={} requests={} rate={}/s devices={:?} route_window={}",
         cfg.scenario.as_deref().unwrap_or("paper(default)"),
         cfg.workload.total_requests,
         cfg.workload.rate_hz,
-        cfg.devices
+        cfg.devices,
+        cfg.router.route_window
     );
     let outcome = match router.as_str() {
         "random" => experiments::run_random_baseline(&cfg),
@@ -133,10 +136,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown router {other}"),
     };
     print!("{}", outcome.report.to_table());
-    println!(
-        "width histogram (0.25/0.50/0.75/1.00): {:?}",
-        outcome.width_histogram
-    );
+    println!("width histogram (width, execs): {:?}", outcome.width_histogram);
     println!(
         "e2e latency: mean {:.1} ms  p99 {:.1} ms",
         outcome.e2e_latency.mean() * 1e3,

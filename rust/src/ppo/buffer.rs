@@ -92,6 +92,15 @@ impl RolloutBuffer {
         self.finished.extend(transitions);
     }
 
+    /// Re-buffer transitions this buffer already accounted for (the
+    /// sub-horizon remainder of an update round, carried across round
+    /// seams). Unlike [`RolloutBuffer::absorb`] this does **not** touch
+    /// the reward statistics — the transitions were counted when they
+    /// first completed or were absorbed.
+    pub fn carry(&mut self, transitions: Vec<Transition>) {
+        self.finished.extend(transitions);
+    }
+
     pub fn mean_reward(&self) -> f64 {
         if self.reward_count == 0 {
             0.0
@@ -173,6 +182,32 @@ mod tests {
         let ts = a.drain();
         assert_eq!(ts[1].reward, 2.0);
         assert_eq!(ts[2].reward, 4.0);
+    }
+
+    #[test]
+    fn carry_requeues_without_recounting_rewards() {
+        let mut buf = RolloutBuffer::new();
+        for (tag, r) in [(1u64, 2.0), (2, 4.0), (3, 6.0)] {
+            buf.stage(tag, vec![], act(), 0.0, 0.0, 0.0);
+            buf.complete(tag, r);
+        }
+        let mut drained = buf.drain();
+        assert_eq!(buf.ready(), 0);
+        let tail = drained.split_off(2);
+        buf.carry(tail);
+        assert_eq!(buf.ready(), 1);
+        // reward stats unchanged by the carry
+        assert_eq!(buf.reward_count, 3);
+        assert!((buf.mean_reward() - 4.0).abs() < 1e-12);
+        // the carried transition precedes anything absorbed later
+        let mut other = RolloutBuffer::new();
+        other.stage(9, vec![], act(), 0.0, 0.0, 0.0);
+        other.complete(9, 8.0);
+        buf.absorb(other.drain());
+        let ts = buf.drain();
+        assert_eq!(ts[0].reward, 6.0);
+        assert_eq!(ts[1].reward, 8.0);
+        assert_eq!(buf.reward_count, 4);
     }
 
     #[test]

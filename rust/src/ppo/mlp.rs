@@ -121,6 +121,46 @@ impl Mlp {
         // result lives in `a` (post-swap)
     }
 
+    /// Matrix forward over `n` stacked inputs (row-major `[n, in_dim]`
+    /// in `xs`): every layer is computed into one shared activation
+    /// buffer, with the weight row streamed once across all samples —
+    /// the batched path `Router::plan` amortizes policy inference with.
+    /// Outputs land in `scratch.0` as row-major `[n, out_dim]`.
+    pub fn forward_batch(
+        &self,
+        xs: &[f64],
+        n: usize,
+        scratch: &mut (Vec<f64>, Vec<f64>),
+    ) {
+        debug_assert_eq!(xs.len(), n * self.sizes[0]);
+        let (a, b) = scratch;
+        a.clear();
+        a.extend_from_slice(xs);
+        let mut width_in = self.sizes[0];
+        for l in 0..self.n_layers() {
+            let w = &self.w[l];
+            let rows = w.rows;
+            let last = l + 1 == self.n_layers();
+            b.clear();
+            b.resize(n * rows, 0.0);
+            for r in 0..rows {
+                let row = &w.data[r * w.cols..(r + 1) * w.cols];
+                let bias = self.b[l][r];
+                for s in 0..n {
+                    let x = &a[s * width_in..(s + 1) * width_in];
+                    let mut z: f64 = bias;
+                    for (wi, xi) in row.iter().zip(x) {
+                        z += wi * xi;
+                    }
+                    b[s * rows + r] = if last { z } else { z.tanh() };
+                }
+            }
+            std::mem::swap(a, b);
+            width_in = rows;
+        }
+        // result lives in `a` (post-swap)
+    }
+
     /// Forward pass; output layer is linear, hiddens are tanh.
     pub fn forward(&self, x: &[f64]) -> (Vec<f64>, Cache) {
         debug_assert_eq!(x.len(), self.sizes[0]);
@@ -322,6 +362,39 @@ mod tests {
         let (y2, _) = mlp.forward(&x);
         assert_eq!(y1.len(), 4);
         assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn forward_batch_rows_match_single_forward() {
+        let mut rng = Rng::new(11);
+        let mlp = Mlp::new(&[6, 12, 5], &mut rng);
+        let n = 7;
+        let xs: Vec<f64> = (0..n * 6).map(|_| rng.normal()).collect();
+        let mut scratch = (Vec::new(), Vec::new());
+        mlp.forward_batch(&xs, n, &mut scratch);
+        assert_eq!(scratch.0.len(), n * 5);
+        let mut single = (Vec::new(), Vec::new());
+        for s in 0..n {
+            // same accumulation order as forward_nocache → bit-identical
+            mlp.forward_nocache(&xs[s * 6..(s + 1) * 6], &mut single);
+            for (r, &want) in single.0.iter().enumerate() {
+                let got = scratch.0[s * 5 + r];
+                assert_eq!(got.to_bits(), want.to_bits(), "row {s} out {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_batch_of_one_matches_forward() {
+        let mut rng = Rng::new(12);
+        let mlp = Mlp::new(&[4, 8, 3], &mut rng);
+        let x: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        let mut scratch = (Vec::new(), Vec::new());
+        mlp.forward_batch(&x, 1, &mut scratch);
+        let (y, _) = mlp.forward(&x);
+        for (a, b) in scratch.0.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -27,6 +27,6 @@ pub mod update;
 pub use buffer::{RolloutBuffer, Transition};
 pub use mlp::Mlp;
 pub use parallel::train_parallel;
-pub use policy::{ActionTriple, Policy, PolicyEval};
+pub use policy::{ActionTriple, BatchHeadEval, Policy, PolicyEval};
 pub use router_impl::{PpoRouter, TrainStats};
 pub use update::ppo_update;

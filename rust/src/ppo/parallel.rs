@@ -23,6 +23,13 @@
 //! formula the sequential trainer uses, so a run is deterministic for a
 //! fixed (seed, episodes, workers) triple regardless of thread timing.
 //!
+//! Updates consume full-`horizon` chunks in rollout order; the
+//! sub-horizon remainder of each round **carries** into the next round's
+//! buffer instead of being dropped (`RolloutBuffer::carry`), so no
+//! collected transition is lost at round seams. A final end-of-training
+//! flush trains any tail at or above the 16-transition noise floor; a
+//! smaller tail stays buffered (accounted, deliberately untrained).
+//!
 //! With `workers = 1` the trainer degenerates to one collector per
 //! round; `experiments::train_ppo_workers` routes that case to the
 //! original sequential online trainer instead, which keeps the paper's
@@ -31,7 +38,7 @@
 use std::thread;
 
 use crate::config::{Config, RewardCfg};
-use crate::coordinator::Engine;
+use crate::coordinator::{Engine, Router};
 
 use super::buffer::Transition;
 use super::router_impl::PpoRouter;
@@ -104,6 +111,9 @@ pub fn train_parallel(
         central.update_from_buffer();
         ep += round;
     }
+    // flush the carried tail (≥ the end-of-run noise floor) so the last
+    // round's remainder still informs the returned policy
+    central.end_of_run();
     central
 }
 
@@ -182,5 +192,27 @@ mod tests {
         let cfg = tiny_cfg();
         let router = train_parallel(&cfg, RewardCfg::overfit(), 2, 1);
         assert!(router.stats.updates > 0);
+    }
+
+    #[test]
+    fn no_transition_is_lost_at_round_seams() {
+        // every decision of a drained episode completes into exactly one
+        // transition, so across rounds the trained + still-buffered
+        // counts must equal the decision count — the old per-round
+        // tail-drop broke this whenever an episode wasn't a multiple of
+        // the horizon
+        let mut cfg = tiny_cfg();
+        cfg.workload.total_requests = 300;
+        cfg.ppo.horizon = 128; // guarantees a sub-horizon tail per round
+        let router = train_parallel(&cfg, RewardCfg::balanced(), 3, 2);
+        assert!(router.stats.decisions > 0);
+        assert_eq!(
+            router.stats.transitions_trained
+                + router.buffered_transitions() as u64,
+            router.stats.decisions,
+            "transitions vanished at a round seam"
+        );
+        // the final flush leaves at most the noise floor buffered
+        assert!(router.buffered_transitions() < 16);
     }
 }

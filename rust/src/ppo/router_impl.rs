@@ -1,16 +1,23 @@
 //! [`PpoRouter`] — the learned global policy behind Tables IV–V, adapted
-//! to the engine's [`Router`] trait.
+//! to the engine's windowed [`Router`] plan API.
 //!
-//! In training mode every routing decision stages a transition; the
+//! In training mode every routed head stages a transition; the
 //! block-completion feedback computes the eq. 7 reward and finishes it;
 //! once `horizon` transitions accumulate, a clipped PPO update runs
 //! in-place (the engine keeps scheduling while the policy learns — the
 //! paper trains the router online against the live cluster). In eval mode
 //! the same object routes greedily from the learned distribution with
 //! exploration off.
+//!
+//! A one-head plan takes the original scalar path (bit-identical to the
+//! pre-plan router per seed); wider windows featurize every head into
+//! one stacked state buffer and run a single `Policy::sample_batch`
+//! matrix forward, amortizing the MLP cost across the queue.
 
 use crate::config::PpoCfg;
-use crate::coordinator::router::{BlockFeedback, Decision, Router};
+use crate::coordinator::router::{
+    BlockFeedback, Decision, HeadView, Router, RoutingPlan,
+};
 use crate::coordinator::telemetry::TelemetrySnapshot;
 use crate::utilx::{Json, Rng};
 
@@ -24,6 +31,9 @@ use super::update::{ppo_update, UpdateStats};
 pub struct TrainStats {
     pub decisions: u64,
     pub updates: u64,
+    /// Transitions consumed by PPO updates (conservation check: together
+    /// with the buffered remainder this accounts for every completion).
+    pub transitions_trained: u64,
     pub last_update: UpdateStats,
     pub reward_history: Vec<f64>,
     pub entropy_history: Vec<f64>,
@@ -114,6 +124,12 @@ impl PpoRouter {
         self.buffer.drain()
     }
 
+    /// Finished transitions waiting for the next update (carry-over
+    /// remainder between parallel-trainer rounds).
+    pub fn buffered_transitions(&self) -> usize {
+        self.buffer.ready()
+    }
+
     /// Merge a worker's harvested transitions into this router's buffer
     /// and advance the exploration schedule by the decisions that
     /// produced them.
@@ -124,26 +140,40 @@ impl PpoRouter {
     }
 
     /// Run synchronous PPO updates over everything buffered, in rollout
-    /// order, one `horizon`-sized chunk at a time. Chunks below the
-    /// end-of-run flush threshold (16, or the horizon when smaller) are
-    /// dropped — the same noisy-tiny-batch guard `end_of_run` applies.
-    /// Returns how many updates ran.
+    /// order, one full-`horizon` chunk at a time. The sub-horizon tail
+    /// is **carried** back into the buffer for the next round instead of
+    /// being dropped, so no collected transition is ever lost at round
+    /// seams. [`PpoRouter::end_of_run`] flushes a final remainder of 16+
+    /// transitions; a smaller one stays buffered (accounted, untrained —
+    /// the same noisy-tiny-batch guard as before). Returns how many
+    /// updates ran.
     pub fn update_from_buffer(&mut self) -> u64 {
-        let all = self.buffer.drain();
-        let flush_min = 16.min(self.cfg.horizon.max(1));
+        let mut all = self.buffer.drain();
+        let horizon = self.cfg.horizon.max(1);
         let mut ran = 0;
-        for chunk in all.chunks(self.cfg.horizon.max(1)) {
-            if chunk.len() < flush_min {
-                break;
-            }
-            let stats = ppo_update(&mut self.policy, &mut self.adam, chunk, &self.cfg);
-            self.stats.updates += 1;
-            self.stats.last_update = stats;
-            self.stats.reward_history.push(stats.mean_reward);
-            self.stats.entropy_history.push(stats.entropy);
+        let mut idx = 0usize;
+        while all.len() - idx >= horizon {
+            self.run_update(&all[idx..idx + horizon]);
+            idx += horizon;
             ran += 1;
         }
+        if idx < all.len() {
+            // leftover sub-horizon transitions ride into the next round
+            self.buffer.carry(all.split_off(idx));
+        }
         ran
+    }
+
+    /// One clipped PPO update over `batch`, with the shared diagnostics
+    /// bookkeeping (update/transition counters, reward & entropy
+    /// curves) every update site must keep consistent.
+    fn run_update(&mut self, batch: &[Transition]) {
+        let stats = ppo_update(&mut self.policy, &mut self.adam, batch, &self.cfg);
+        self.stats.updates += 1;
+        self.stats.transitions_trained += batch.len() as u64;
+        self.stats.last_update = stats;
+        self.stats.reward_history.push(stats.mean_reward);
+        self.stats.entropy_history.push(stats.entropy);
     }
 
     fn eps(&self) -> f64 {
@@ -189,27 +219,14 @@ impl PpoRouter {
         }
         if self.training && self.buffer.ready() >= self.cfg.horizon {
             let batch = self.buffer.drain();
-            let stats = ppo_update(&mut self.policy, &mut self.adam, &batch, &self.cfg);
-            self.stats.updates += 1;
-            self.stats.last_update = stats;
-            self.stats.reward_history.push(stats.mean_reward);
-            self.stats.entropy_history.push(stats.entropy);
+            self.run_update(&batch);
         }
     }
-}
 
-impl Router for PpoRouter {
-    fn name(&self) -> &'static str {
-        "ppo"
-    }
-
-    fn route(
-        &mut self,
-        snap: &TelemetrySnapshot,
-        _head_w_req: f64,
-        _head_seg: usize,
-        rng: &mut Rng,
-    ) -> Decision {
+    /// The original scalar path: one head, one `Policy::sample` /
+    /// `sample_notrain` invocation — bit-identical to the pre-plan
+    /// router per seed.
+    fn route_head(&mut self, snap: &TelemetrySnapshot, rng: &mut Rng) -> Decision {
         let state = snap.to_state_vector();
         let eps = self.eps();
         self.step += 1;
@@ -229,6 +246,85 @@ impl Router for PpoRouter {
             width: self.widths[action.w.min(self.widths.len() - 1)],
             group: self.groups[action.g.min(self.groups.len() - 1)],
             tag,
+        }
+    }
+
+    /// The batched path: featurize every head into one stacked state
+    /// buffer and sample all actions from a single matrix forward pass,
+    /// staging one transition per head in training mode.
+    fn plan_batched(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        heads: &[HeadView],
+        rng: &mut Rng,
+    ) -> RoutingPlan {
+        let n = heads.len();
+        let base = snap.to_state_vector();
+        let dim = base.len();
+        let mut states = Vec::with_capacity(n * dim);
+        for head in heads {
+            let start = states.len();
+            states.extend_from_slice(&base);
+            // queue-position signal: a deeper head sees fewer pending
+            // entries ahead of it, mirroring the sequential loop where
+            // each routed block shrank the next snapshot's fifo_len
+            let remaining = snap.fifo_len.saturating_sub(head.fifo_index);
+            states[start] = (remaining as f64 / 64.0).min(4.0);
+        }
+        let eps: Vec<f64> = (0..n)
+            .map(|k| {
+                if self.training {
+                    eps_at(
+                        self.step + k as u64,
+                        self.cfg.eps_max,
+                        self.cfg.eps_min,
+                        self.cfg.t_dec,
+                    )
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        self.step += n as u64;
+        self.stats.decisions += n as u64;
+        let sampled =
+            self.policy
+                .sample_batch(&states, n, &eps, rng, &mut self.scratch);
+        let mut decisions = Vec::with_capacity(n);
+        for (k, (action, logp, value)) in sampled.into_iter().enumerate() {
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            if self.training {
+                let state = states[k * dim..(k + 1) * dim].to_vec();
+                self.buffer.stage(tag, state, action, logp, value, eps[k]);
+            }
+            decisions.push(Decision {
+                server: action.srv.min(snap.servers.len().saturating_sub(1)),
+                width: self.widths[action.w.min(self.widths.len() - 1)],
+                group: self.groups[action.g.min(self.groups.len() - 1)],
+                tag,
+            });
+        }
+        RoutingPlan::new(decisions)
+    }
+}
+
+impl Router for PpoRouter {
+    fn name(&self) -> &'static str {
+        "ppo"
+    }
+
+    fn plan(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        heads: &[HeadView],
+        rng: &mut Rng,
+    ) -> RoutingPlan {
+        match heads.len() {
+            0 => RoutingPlan::new(Vec::new()),
+            // route_window = 1: the pre-plan scalar path, bit-identical
+            1 => RoutingPlan::new(vec![self.route_head(snap, rng)]),
+            _ => self.plan_batched(snap, heads, rng),
         }
     }
 
@@ -253,11 +349,7 @@ impl Router for PpoRouter {
         // flush whatever is ready, even under horizon
         if self.training && self.buffer.ready() >= 16 {
             let batch = self.buffer.drain();
-            let stats = ppo_update(&mut self.policy, &mut self.adam, &batch, &self.cfg);
-            self.stats.updates += 1;
-            self.stats.last_update = stats;
-            self.stats.reward_history.push(stats.mean_reward);
-            self.stats.entropy_history.push(stats.entropy);
+            self.run_update(&batch);
         }
     }
 }
@@ -303,7 +395,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let s = snap(3);
         for _ in 0..200 {
-            let d = r.route(&s, 0.5, 0, &mut rng);
+            let d = r.route_one(&s, &HeadView::new(0.5, 0), &mut rng);
             assert!(d.server < 3);
             assert!([0.25, 0.5, 0.75, 1.0].contains(&d.width));
             assert!([1usize, 4, 16].contains(&d.group));
@@ -358,7 +450,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let s = snap(3);
         for _i in 0..40 {
-            let d = r.route(&s, 0.5, 0, &mut rng);
+            let d = r.route_one(&s, &HeadView::new(0.5, 0), &mut rng);
             r.feedback(&BlockFeedback {
                 tag: d.tag,
                 acc_prior_norm: 0.5,
@@ -377,7 +469,7 @@ mod tests {
         r.eval_mode();
         let mut rng = Rng::new(4);
         let s = snap(3);
-        let d = r.route(&s, 0.5, 0, &mut rng);
+        let d = r.route_one(&s, &HeadView::new(0.5, 0), &mut rng);
         r.feedback(&BlockFeedback {
             tag: d.tag,
             acc_prior_norm: 1.0,
@@ -397,7 +489,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let s = snap(3);
         for _ in 0..40 {
-            let d = worker.route(&s, 0.5, 0, &mut rng);
+            let d = worker.route_one(&s, &HeadView::new(0.5, 0), &mut rng);
             worker.feedback(&BlockFeedback {
                 tag: d.tag,
                 acc_prior_norm: 0.5,
@@ -412,12 +504,113 @@ mod tests {
         let ts = worker.take_transitions();
         assert_eq!(ts.len(), 40);
 
-        // central trainer absorbs the harvest and updates synchronously
+        // central trainer absorbs the harvest and updates synchronously;
+        // the sub-horizon tail carries instead of being dropped
+        central.cfg.horizon = 32;
         central.absorb_rollout(ts, 40);
         assert_eq!(central.stats.decisions, 40);
-        assert!(central.update_from_buffer() >= 1);
-        assert!(central.stats.updates >= 1);
+        assert_eq!(central.update_from_buffer(), 1);
+        assert_eq!(central.stats.updates, 1);
+        assert_eq!(central.stats.transitions_trained, 32);
+        assert_eq!(central.buffered_transitions(), 8); // carried, not lost
         assert!(!central.stats.reward_history.is_empty());
+    }
+
+    #[test]
+    fn update_from_buffer_carries_subhorizon_leftovers() {
+        let mut central = router();
+        central.cfg.horizon = 16;
+        let mut worker = central.fork_collector();
+        let mut rng = Rng::new(6);
+        let s = snap(3);
+        // two "rounds" of 24 completions each: each round leaves an
+        // 8-transition remainder that must survive into the next one
+        for round in 0..2u64 {
+            for _ in 0..24 {
+                let d = worker.route_one(&s, &HeadView::new(0.5, 0), &mut rng);
+                worker.feedback(&BlockFeedback {
+                    tag: d.tag,
+                    acc_prior_norm: 0.5,
+                    latency_s: 0.02,
+                    energy_j: 1.0,
+                    util_variance: 0.001,
+                });
+            }
+            central.absorb_rollout(worker.take_transitions(), 24);
+            central.update_from_buffer();
+            // conservation at every round seam
+            assert_eq!(
+                central.stats.transitions_trained
+                    + central.buffered_transitions() as u64,
+                24 * (round + 1),
+                "round {round}"
+            );
+        }
+        // round 1: 24 → one chunk of 16, carry 8.
+        // round 2: 8 + 24 = 32 → two chunks, carry 0.
+        assert_eq!(central.stats.updates, 3);
+        assert_eq!(central.stats.transitions_trained, 48);
+        assert_eq!(central.buffered_transitions(), 0);
+    }
+
+    #[test]
+    fn batched_plan_stages_one_transition_per_head() {
+        let mut r = router();
+        r.cfg.horizon = 10_000; // keep everything staged
+        let mut rng = Rng::new(7);
+        let s = snap(3);
+        let heads: Vec<HeadView> = (0..5)
+            .map(|i| HeadView {
+                fifo_index: i,
+                w_req: 0.5,
+                seg: i % 4,
+                age_s: 0.0,
+                slack_s: 1.0,
+            })
+            .collect();
+        let plan = r.plan(&s, &heads, &mut rng);
+        assert_eq!(plan.len(), 5);
+        assert!(plan.validate(5, 3, &[0.25, 0.5, 0.75, 1.0]).is_ok());
+        assert_eq!(r.stats.decisions, 5);
+        assert_eq!(r.buffer.pending_len(), 5);
+        // completing every tag finishes every staged transition
+        for d in plan.decisions() {
+            r.feedback(&BlockFeedback {
+                tag: d.tag,
+                acc_prior_norm: 0.5,
+                latency_s: 0.01,
+                energy_j: 1.0,
+                util_variance: 0.0,
+            });
+        }
+        assert_eq!(r.buffer.ready(), 5);
+        // tags are distinct
+        let mut tags: Vec<u64> = plan.decisions().iter().map(|d| d.tag).collect();
+        tags.dedup();
+        assert_eq!(tags.len(), 5);
+    }
+
+    #[test]
+    fn batched_plan_matches_eval_distribution_in_eval_mode() {
+        // in eval mode a window of identical-position heads samples from
+        // the same learned distribution as the scalar path
+        let mut r = router();
+        r.eval_mode();
+        let mut rng = Rng::new(8);
+        let s = snap(3);
+        let heads: Vec<HeadView> =
+            (0..8).map(|_| HeadView::new(0.5, 0)).collect();
+        let mut widths_seen = std::collections::BTreeSet::new();
+        for _ in 0..60 {
+            let plan = r.plan(&s, &heads, &mut rng);
+            assert_eq!(plan.len(), 8);
+            for d in plan.decisions() {
+                assert!(d.server < 3);
+                widths_seen.insert((d.width * 100.0) as u32);
+            }
+        }
+        assert!(widths_seen.len() >= 2, "no width diversity: {widths_seen:?}");
+        assert_eq!(r.buffer.pending_len(), 0); // eval mode stages nothing
     }
 
     #[test]

@@ -144,6 +144,41 @@ fn parallel_workers_cover_the_same_episode_seeds_as_sequential() {
 }
 
 #[test]
+fn windowed_baseline_is_a_pure_function_of_the_seed() {
+    // the batched plan path must be as deterministic as the per-head one
+    for window in [4usize, 16] {
+        let run = || {
+            let mut cfg = quick_cfg(42);
+            cfg.router.route_window = window;
+            experiments::run_random_baseline(&cfg)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.report.completed, 800, "window={window}");
+        assert_identical(&a, &b);
+    }
+}
+
+#[test]
+fn windowed_ppo_training_is_deterministic_across_worker_counts() {
+    // batched PPO inference (route_window > 1) must stay a pure function
+    // of (seed, episodes, workers) for every worker count
+    for workers in [1usize, 2] {
+        let run = || {
+            let mut cfg = quick_cfg(42);
+            cfg.router.route_window = 4;
+            experiments::train_ppo_workers(&cfg, RewardCfg::overfit(), 2, workers)
+        };
+        let a = run();
+        let b = run();
+        assert!(a.stats.decisions > 0, "workers={workers}");
+        assert_eq!(a.stats.decisions, b.stats.decisions, "workers={workers}");
+        assert_eq!(a.stats.updates, b.stats.updates, "workers={workers}");
+        assert_eq!(fingerprint(&a), fingerprint(&b), "workers={workers}");
+    }
+}
+
+#[test]
 fn frozen_eval_after_training_is_deterministic() {
     let cfg = quick_cfg(11);
     let (a, _) = experiments::run_ppo_experiment_workers(

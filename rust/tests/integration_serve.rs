@@ -50,7 +50,8 @@ fn ppo_routed_real_inference_end_to_end() {
         let mut widths = [0.0; NUM_SEGMENTS];
         let mut h = x;
         for seg in 0..NUM_SEGMENTS {
-            let d = router.route(&snap, 0.5, seg, &mut rng);
+            let head = slim_scheduler::coordinator::HeadView::new(0.5, seg);
+            let d = router.route_one(&snap, &head, &mut rng);
             assert!(d.server < 3);
             widths[seg] = d.width;
             h = ex.execute(seg, d.width, &h).expect("segment execution");

@@ -29,7 +29,7 @@ fn all_routers_complete_and_conserve_requests() {
             _ => Engine::new(c, LeastLoadedRouter::new(widths, 16)).run(),
         };
         assert_eq!(out.report.completed, 400, "{name}");
-        assert_eq!(out.width_histogram.iter().sum::<u64>(), 4 * 400, "{name}");
+        assert_eq!(out.width_execs(), 4 * 400, "{name}");
         assert!(out.report.latency.count() > 0, "{name}");
         assert!(out.total_energy_j > 0.0, "{name}");
     }
@@ -122,16 +122,17 @@ fn telemetry_variance_tracks_imbalance() {
         fn name(&self) -> &'static str {
             "pin"
         }
-        fn route(
+        fn plan(
             &mut self,
             snap: &slim_scheduler::coordinator::TelemetrySnapshot,
-            w: f64,
-            seg: usize,
+            heads: &[slim_scheduler::coordinator::HeadView],
             rng: &mut slim_scheduler::utilx::Rng,
-        ) -> slim_scheduler::coordinator::Decision {
-            let mut d = self.0.route(snap, w, seg, rng);
-            d.server = 0; // hammer one server
-            d
+        ) -> slim_scheduler::coordinator::RoutingPlan {
+            let mut decisions = self.0.plan(snap, heads, rng).into_decisions();
+            for d in &mut decisions {
+                d.server = 0; // hammer one server
+            }
+            slim_scheduler::coordinator::RoutingPlan::new(decisions)
         }
     }
     let pinned = Engine::new(

@@ -1,0 +1,376 @@
+//! Plan-API equivalence suite.
+//!
+//! The PR 2 redesign replaced the per-head `Router::route(&snap, w_req,
+//! seg, rng) -> Decision` with the windowed `Router::plan(&snap, heads,
+//! rng) -> RoutingPlan`. The contract: with `route_window = 1` (the
+//! default) every router must reproduce the pre-redesign decision stream
+//! — and therefore every run metric — **bit-identically per seed**.
+//!
+//! These tests pin that contract against *legacy reference routers*:
+//! verbatim re-implementations of the pre-plan per-head `route` bodies,
+//! adapted to the new trait by planning exactly the first head. Running
+//! the engine with a legacy reference and with the ported router under
+//! the same seed must produce byte-equal outcomes. The PPO router's
+//! scalar path is checked at the decision-stream level for both the
+//! training (`Policy::sample`) and serving (`sample_notrain`) paths.
+
+use slim_scheduler::config::Config;
+use slim_scheduler::coordinator::router::{
+    LeastLoadedRouter, RandomRouter, RoundRobinRouter,
+};
+use slim_scheduler::coordinator::{
+    Decision, Engine, HeadView, Router, RoutingPlan, RunOutcome,
+    TelemetrySnapshot,
+};
+use slim_scheduler::coordinator::telemetry::ServerTelemetry;
+use slim_scheduler::ppo::policy::eps_at;
+use slim_scheduler::ppo::PpoRouter;
+use slim_scheduler::utilx::Rng;
+
+// ---------------------------------------------------------------------
+// Legacy per-head reference implementations (pre-plan `route` bodies)
+// ---------------------------------------------------------------------
+
+fn legacy_snap_width_up(widths: &[f64], w_req: f64) -> f64 {
+    widths
+        .iter()
+        .cloned()
+        .filter(|w| *w >= w_req - 1e-9)
+        .fold(f64::INFINITY, f64::min)
+        .min(widths.iter().cloned().fold(0.0, f64::max))
+}
+
+struct LegacyRandom {
+    widths: Vec<f64>,
+    randomize_width: bool,
+    group: usize,
+    next_tag: u64,
+}
+
+impl Router for LegacyRandom {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+    fn plan(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        heads: &[HeadView],
+        rng: &mut Rng,
+    ) -> RoutingPlan {
+        // the pre-redesign body, one head at a time (the engine at
+        // route_window = 1 presents exactly one)
+        let decisions = heads
+            .iter()
+            .map(|head| {
+                let tag = self.next_tag;
+                self.next_tag += 1;
+                let width = if self.randomize_width {
+                    *rng.choice(&self.widths)
+                } else {
+                    legacy_snap_width_up(&self.widths, head.w_req)
+                };
+                Decision {
+                    server: rng.index(snap.servers.len().max(1)),
+                    width,
+                    group: self.group,
+                    tag,
+                }
+            })
+            .collect();
+        RoutingPlan::new(decisions)
+    }
+}
+
+struct LegacyRoundRobin {
+    widths: Vec<f64>,
+    group: usize,
+    cursor: usize,
+    next_tag: u64,
+}
+
+impl Router for LegacyRoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+    fn plan(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        heads: &[HeadView],
+        _rng: &mut Rng,
+    ) -> RoutingPlan {
+        let n = snap.servers.len().max(1);
+        let decisions = heads
+            .iter()
+            .map(|head| {
+                let server = self.cursor % n;
+                self.cursor = (self.cursor + 1) % n;
+                let tag = self.next_tag;
+                self.next_tag += 1;
+                Decision {
+                    server,
+                    width: legacy_snap_width_up(&self.widths, head.w_req),
+                    group: self.group,
+                    tag,
+                }
+            })
+            .collect();
+        RoutingPlan::new(decisions)
+    }
+}
+
+struct LegacyLeastLoaded {
+    widths: Vec<f64>,
+    max_group: usize,
+    next_tag: u64,
+}
+
+impl Router for LegacyLeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+    fn plan(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        heads: &[HeadView],
+        _rng: &mut Rng,
+    ) -> RoutingPlan {
+        // note: the legacy body used partial_cmp(..).unwrap(); scores are
+        // finite here, where total_cmp orders identically
+        let decisions = heads
+            .iter()
+            .map(|head| {
+                let server = snap
+                    .servers
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        let sa = a.queue_len as f64 + a.util_pct / 25.0;
+                        let sb = b.queue_len as f64 + b.util_pct / 25.0;
+                        sa.partial_cmp(&sb).unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                let group = if snap.fifo_len > 8 { self.max_group } else { 1 };
+                let tag = self.next_tag;
+                self.next_tag += 1;
+                Decision {
+                    server,
+                    width: legacy_snap_width_up(&self.widths, head.w_req),
+                    group,
+                    tag,
+                }
+            })
+            .collect();
+        RoutingPlan::new(decisions)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine-level bit-identity at route_window = 1
+// ---------------------------------------------------------------------
+
+fn small_cfg(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.seed = seed;
+    cfg.workload.total_requests = 400;
+    cfg.workload.rate_hz = 250.0;
+    assert_eq!(cfg.router.route_window, 1, "default must stay per-head");
+    cfg
+}
+
+/// Byte-equality over every reported metric.
+fn assert_bit_identical(a: &RunOutcome, b: &RunOutcome) {
+    assert_eq!(a.report.completed, b.report.completed);
+    assert_eq!(a.blocks_completed, b.blocks_completed);
+    assert_eq!(a.width_histogram, b.width_histogram);
+    assert_eq!(a.report.accuracy_pct.to_bits(), b.report.accuracy_pct.to_bits());
+    assert_eq!(
+        a.report.latency.mean().to_bits(),
+        b.report.latency.mean().to_bits()
+    );
+    assert_eq!(
+        a.report.energy.mean().to_bits(),
+        b.report.energy.mean().to_bits()
+    );
+    assert_eq!(a.e2e_latency.mean().to_bits(), b.e2e_latency.mean().to_bits());
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    assert_eq!(a.sim_duration_s.to_bits(), b.sim_duration_s.to_bits());
+}
+
+#[test]
+fn random_router_window1_matches_legacy_per_head_route() {
+    for seed in [7u64, 42, 1234] {
+        let cfg = small_cfg(seed);
+        let widths = cfg.scheduler.widths.clone();
+        let new = Engine::new(
+            cfg.clone(),
+            RandomRouter::new(widths.clone(), true, 8),
+        )
+        .run();
+        let legacy = Engine::new(
+            cfg,
+            LegacyRandom {
+                widths,
+                randomize_width: true,
+                group: 8,
+                next_tag: 0,
+            },
+        )
+        .run();
+        assert_bit_identical(&new, &legacy);
+    }
+}
+
+#[test]
+fn round_robin_window1_matches_legacy_per_head_route() {
+    let cfg = small_cfg(42);
+    let widths = cfg.scheduler.widths.clone();
+    let new =
+        Engine::new(cfg.clone(), RoundRobinRouter::new(widths.clone(), 4)).run();
+    let legacy = Engine::new(
+        cfg,
+        LegacyRoundRobin { widths, group: 4, cursor: 0, next_tag: 0 },
+    )
+    .run();
+    assert_bit_identical(&new, &legacy);
+}
+
+#[test]
+fn least_loaded_window1_matches_legacy_per_head_route() {
+    let cfg = small_cfg(42);
+    let widths = cfg.scheduler.widths.clone();
+    let new =
+        Engine::new(cfg.clone(), LeastLoadedRouter::new(widths.clone(), 16)).run();
+    let legacy = Engine::new(
+        cfg,
+        LegacyLeastLoaded { widths, max_group: 16, next_tag: 0 },
+    )
+    .run();
+    assert_bit_identical(&new, &legacy);
+}
+
+// ---------------------------------------------------------------------
+// PPO scalar-path equivalence (decision streams)
+// ---------------------------------------------------------------------
+
+fn probe_snap(n: usize, fifo_len: usize) -> TelemetrySnapshot {
+    TelemetrySnapshot {
+        fifo_len,
+        done_count: 25,
+        total_requests: 400,
+        servers: (0..n)
+            .map(|i| ServerTelemetry {
+                queue_len: 2 * i,
+                power_w: 110.0 + 5.0 * i as f64,
+                util_pct: 22.0 * i as f64,
+                mem_util: 0.3,
+                instances: 1,
+            })
+            .collect(),
+    }
+}
+
+const W: [f64; 4] = [0.25, 0.5, 0.75, 1.0];
+
+#[test]
+fn ppo_training_plan_window1_matches_legacy_sample_path() {
+    // the legacy body: state = snapshot vector, ε from the schedule at
+    // the pre-increment step, one Policy::sample draw, widths/groups
+    // indexed by the action
+    let cfg = slim_scheduler::config::PpoCfg::default();
+    let mut router = PpoRouter::new(3, W.to_vec(), cfg.clone(), 9);
+    let twin = PpoRouter::new(3, W.to_vec(), cfg.clone(), 9);
+    let mut rng_a = Rng::new(31);
+    let mut rng_b = rng_a.clone();
+    let mut step = 0u64;
+    let mut next_tag = 0u64;
+    for i in 0..150usize {
+        let snap = probe_snap(3, 4 + i % 9);
+        let head = HeadView::new(W[i % 4], i % 4);
+        let got = router.route_one(&snap, &head, &mut rng_a);
+
+        let state = snap.to_state_vector();
+        let eps = eps_at(step, cfg.eps_max, cfg.eps_min, cfg.t_dec);
+        step += 1;
+        let tag = next_tag;
+        next_tag += 1;
+        let (action, _eval) = twin.policy.sample(&state, eps, &mut rng_b);
+        let want = Decision {
+            server: action.srv.min(snap.servers.len().saturating_sub(1)),
+            width: W[action.w.min(W.len() - 1)],
+            group: cfg.groups[action.g.min(cfg.groups.len() - 1)],
+            tag,
+        };
+        assert_eq!(got, want, "step {i}");
+    }
+}
+
+#[test]
+fn ppo_eval_plan_window1_matches_legacy_notrain_path() {
+    let cfg = slim_scheduler::config::PpoCfg::default();
+    let mut router = PpoRouter::new(3, W.to_vec(), cfg.clone(), 9);
+    router.eval_mode();
+    let twin = PpoRouter::new(3, W.to_vec(), cfg.clone(), 9);
+    let mut rng_a = Rng::new(32);
+    let mut rng_b = rng_a.clone();
+    let mut scratch = (Vec::new(), Vec::new());
+    let mut next_tag = 0u64;
+    for i in 0..150usize {
+        let snap = probe_snap(3, 2 + i % 13);
+        let head = HeadView::new(W[i % 4], i % 4);
+        let got = router.route_one(&snap, &head, &mut rng_a);
+
+        let state = snap.to_state_vector();
+        let tag = next_tag;
+        next_tag += 1;
+        let action =
+            twin.policy.sample_notrain(&state, 0.0, &mut rng_b, &mut scratch);
+        let want = Decision {
+            server: action.srv.min(snap.servers.len().saturating_sub(1)),
+            width: W[action.w.min(W.len() - 1)],
+            group: cfg.groups[action.g.min(cfg.groups.len() - 1)],
+            tag,
+        };
+        assert_eq!(got, want, "step {i}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Windowed plans stay valid and complete
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_router_completes_under_a_wide_window() {
+    for window in [4usize, 16] {
+        let mut cfg = small_cfg(42);
+        cfg.router.route_window = window;
+        let widths = cfg.scheduler.widths.clone();
+
+        let out = Engine::new(
+            cfg.clone(),
+            RandomRouter::new(widths.clone(), true, 8),
+        )
+        .run();
+        assert_eq!(out.report.completed, 400, "random w={window}");
+
+        let out =
+            Engine::new(cfg.clone(), RoundRobinRouter::new(widths.clone(), 4))
+                .run();
+        assert_eq!(out.report.completed, 400, "rr w={window}");
+
+        let out =
+            Engine::new(cfg.clone(), LeastLoadedRouter::new(widths.clone(), 16))
+                .run();
+        assert_eq!(out.report.completed, 400, "ll w={window}");
+
+        let mut ppo = PpoRouter::new(
+            cfg.devices.len(),
+            widths.clone(),
+            cfg.ppo.clone(),
+            cfg.seed,
+        );
+        ppo.eval_mode();
+        let out = Engine::new(cfg, ppo).run();
+        assert_eq!(out.report.completed, 400, "ppo w={window}");
+    }
+}
