@@ -2,9 +2,14 @@
 //! random routing and random width selection) on the simulated 3-GPU
 //! cluster. Prints the paper's table layout plus our measured row and
 //! checks the baseline's qualitative signature: saturated cluster, high
-//! mean latency/energy, mid-range accuracy.
+//! mean latency/energy, mid-range accuracy. Also runs the deadline-aware
+//! EDF comparator on the same configuration (an extra "ours" row beyond
+//! the paper) and surfaces both runs' plan-clamp counts in the bench
+//! JSON, so silently-repaired routers are visible in the trajectory.
 
 use slim_scheduler::benchx::{Bench, Table};
+use slim_scheduler::coordinator::router::EdfRouter;
+use slim_scheduler::coordinator::sharded_engine;
 use slim_scheduler::experiments;
 
 fn main() {
@@ -22,6 +27,15 @@ fn main() {
         outcome = Some(experiments::run_random_baseline(&cfg));
     });
     let out = outcome.unwrap();
+
+    // deadline-aware comparator on the identical configuration: EDF
+    // orders each routing window by SLA slack and gives the latest head
+    // the emptiest server (stays None when BENCH_FILTER skips it)
+    let mut edf_outcome = None;
+    bench.once(&format!("table3/edf_run({requests} req)"), || {
+        let router = EdfRouter::new(cfg.scheduler.widths.clone(), 16);
+        edf_outcome = Some(sharded_engine(cfg.clone(), router).run());
+    });
 
     let mut table = Table::new(
         "Table III — baseline scheduler (3-GPU cluster): paper vs ours",
@@ -63,6 +77,41 @@ fn main() {
         "".into(),
     ]);
     table.print();
+
+    if let Some(edf) = &edf_outcome {
+        let mut edf_table = Table::new(
+            "Table III+ — deadline-aware EDF comparator (same cluster, ours only)",
+            &["metric", "random", "edf"],
+        );
+        edf_table.row(&[
+            "Accuracy (%)".into(),
+            format!("{:.2}", out.report.accuracy_pct),
+            format!("{:.2}", edf.report.accuracy_pct),
+        ]);
+        edf_table.row(&[
+            "Latency (s)".into(),
+            format!("{:.3}", out.report.latency.mean()),
+            format!("{:.3}", edf.report.latency.mean()),
+        ]);
+        edf_table.row(&[
+            "e2e p99 (s)".into(),
+            format!("{:.3}", out.e2e_latency.percentile(99.0)),
+            format!("{:.3}", edf.e2e_latency.percentile(99.0)),
+        ]);
+        edf_table.row(&[
+            "Energy (J)".into(),
+            format!("{:.2}", out.report.energy.mean()),
+            format!("{:.2}", edf.report.energy.mean()),
+        ]);
+        edf_table.print();
+        assert_eq!(edf.report.completed, requests as u64);
+
+        // clamp counts ride into the bench JSON: a non-zero value means a
+        // router emitted out-of-range fields that were silently repaired
+        bench.metric("baseline_plan_clamps", out.plan_clamps as f64);
+        bench.metric("edf_plan_clamps", edf.plan_clamps as f64);
+        bench.metric("edf_e2e_p99_s", edf.e2e_latency.percentile(99.0));
+    }
 
     // qualitative signature (the saturation band is calibrated to the
     // paper cluster; other scenarios only check completion)

@@ -90,6 +90,12 @@ impl Bench {
         Bench { quick, filter, results: Vec::new(), metrics: Vec::new() }
     }
 
+    /// Whether quick mode (`--quick` / `BENCH_QUICK`) is active — the
+    /// single source of truth for benches that size their own workloads.
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
     fn skip(&self, name: &str) -> bool {
         match &self.filter {
             Some(f) => !name.contains(f.as_str()),

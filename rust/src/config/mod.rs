@@ -65,6 +65,67 @@ impl Default for RouterCfg {
     }
 }
 
+/// Request→shard assignment policy for the multi-leader coordinator
+/// (`coordinator::shard`). Both are deterministic per seed and worker
+/// count: `Hash` is a pure function of the request id, `RoundRobin`
+/// cycles a cursor in (deterministic) enqueue order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardAssignKind {
+    Hash,
+    RoundRobin,
+}
+
+impl ShardAssignKind {
+    /// Parse a CLI/JSON spelling (`hash` | `round-robin`).
+    pub fn parse(s: &str) -> Option<ShardAssignKind> {
+        match s {
+            "hash" => Some(ShardAssignKind::Hash),
+            "round-robin" | "rr" => Some(ShardAssignKind::RoundRobin),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardAssignKind::Hash => "hash",
+            ShardAssignKind::RoundRobin => "round-robin",
+        }
+    }
+}
+
+/// Multi-leader sharding knobs (`coordinator::shard`'s `ShardedEngine`,
+/// built via `sharded_engine`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardCfg {
+    /// Leader shards the global FIFO is split across. `1` (the default)
+    /// is the paper's single-leader hierarchy and reproduces the
+    /// pre-shard engine bit-identically per seed.
+    pub leaders: usize,
+    /// Request→shard assignment policy.
+    pub assign: ShardAssignKind,
+    /// Cross-shard rebalance trigger: migrate the deepest shard's head
+    /// run to the shallowest shard when their FIFO depths differ by more
+    /// than this many requests. `0` disables rebalancing.
+    pub rebalance_threshold: usize,
+    /// Leader routing service time per routed head (s). `0` (the
+    /// default) models an infinitely fast leader — the pre-shard
+    /// behaviour; a positive value caps each leader shard's routing
+    /// throughput at `1/leader_service_s` heads per second, which is
+    /// what makes multi-leader scaling measurable.
+    pub leader_service_s: f64,
+}
+
+impl Default for ShardCfg {
+    fn default() -> Self {
+        ShardCfg {
+            leaders: 1,
+            assign: ShardAssignKind::Hash,
+            rebalance_threshold: 0,
+            leader_service_s: 0.0,
+        }
+    }
+}
+
 /// Reward weights (eq. 7): r = α·p_acc − β·L − γ·E − δ·Var(U) + b.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RewardCfg {
@@ -262,6 +323,7 @@ pub struct Config {
     /// Device profile names resolved via `sim::profiles::by_name`.
     pub devices: Vec<String>,
     pub router: RouterCfg,
+    pub shard: ShardCfg,
     pub scheduler: SchedulerCfg,
     pub ppo: PpoCfg,
     pub link: LinkCfg,
@@ -285,6 +347,7 @@ impl Default for Config {
                 "gtx980ti".to_string(),
             ],
             router: RouterCfg::default(),
+            shard: ShardCfg::default(),
             scheduler: SchedulerCfg::default(),
             ppo: PpoCfg::default(),
             link: LinkCfg::default(),
@@ -332,6 +395,16 @@ impl Config {
         self.router.route_window =
             args.usize_or("route-window", self.router.route_window).max(1);
         self.router.sla_s = args.f64_or("sla", self.router.sla_s);
+        self.shard.leaders = args.usize_or("leaders", self.shard.leaders).max(1);
+        self.shard.rebalance_threshold =
+            args.usize_or("rebalance", self.shard.rebalance_threshold);
+        self.shard.leader_service_s =
+            args.f64_or("leader-service", self.shard.leader_service_s);
+        if let Some(kind) = args.get("shard-assign") {
+            self.shard.assign = ShardAssignKind::parse(kind).unwrap_or_else(|| {
+                panic!("--shard-assign expects hash|round-robin, got {kind:?}")
+            });
+        }
         self.scheduler.b_max = args.usize_or("b-max", self.scheduler.b_max);
         self.scheduler.u_blk_pct = args.f64_or("u-blk", self.scheduler.u_blk_pct);
         self.scheduler.t_idle_s = args.f64_or("t-idle", self.scheduler.t_idle_s);
@@ -385,6 +458,18 @@ impl Config {
                 obj(vec![
                     ("route_window", Json::Num(self.router.route_window as f64)),
                     ("sla_s", Json::Num(self.router.sla_s)),
+                ]),
+            ),
+            (
+                "shard",
+                obj(vec![
+                    ("leaders", Json::Num(self.shard.leaders as f64)),
+                    ("assign", Json::Str(self.shard.assign.as_str().to_string())),
+                    (
+                        "rebalance_threshold",
+                        Json::Num(self.shard.rebalance_threshold as f64),
+                    ),
+                    ("leader_service_s", Json::Num(self.shard.leader_service_s)),
                 ]),
             ),
             (
@@ -472,6 +557,22 @@ impl Config {
             }
             if let Some(x) = r.get("sla_s").and_then(Json::as_f64) {
                 cfg.router.sla_s = x;
+            }
+        }
+        if let Some(sh) = json.get("shard") {
+            if let Some(x) = sh.get("leaders").and_then(Json::as_usize) {
+                cfg.shard.leaders = x.max(1);
+            }
+            if let Some(x) = sh.get("assign").and_then(Json::as_str) {
+                if let Some(kind) = ShardAssignKind::parse(x) {
+                    cfg.shard.assign = kind;
+                }
+            }
+            if let Some(x) = sh.get("rebalance_threshold").and_then(Json::as_usize) {
+                cfg.shard.rebalance_threshold = x;
+            }
+            if let Some(x) = sh.get("leader_service_s").and_then(Json::as_f64) {
+                cfg.shard.leader_service_s = x;
             }
         }
         if let Some(s) = json.get("scheduler") {
@@ -679,6 +780,52 @@ mod tests {
         );
         cfg.apply_args(&args);
         assert_eq!(cfg.router.route_window, 1);
+    }
+
+    #[test]
+    fn shard_defaults_parse_and_roundtrip() {
+        let cfg = Config::default();
+        assert_eq!(cfg.shard.leaders, 1); // single leader, paper-faithful
+        assert_eq!(cfg.shard.assign, ShardAssignKind::Hash);
+        assert_eq!(cfg.shard.rebalance_threshold, 0); // rebalance off
+        assert_eq!(cfg.shard.leader_service_s, 0.0); // infinitely fast leader
+
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--leaders", "4", "--rebalance", "24",
+             "--shard-assign", "round-robin", "--leader-service", "0.0015"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.shard.leaders, 4);
+        assert_eq!(cfg.shard.rebalance_threshold, 24);
+        assert_eq!(cfg.shard.assign, ShardAssignKind::RoundRobin);
+        assert_eq!(cfg.shard.leader_service_s, 0.0015);
+
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.shard, cfg.shard);
+
+        // a pathological 0 floors at 1 (the coordinator needs a leader)
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--leaders", "0"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.shard.leaders, 1);
+    }
+
+    #[test]
+    fn shard_assign_kind_spellings() {
+        assert_eq!(ShardAssignKind::parse("hash"), Some(ShardAssignKind::Hash));
+        assert_eq!(
+            ShardAssignKind::parse("round-robin"),
+            Some(ShardAssignKind::RoundRobin)
+        );
+        assert_eq!(ShardAssignKind::parse("rr"), Some(ShardAssignKind::RoundRobin));
+        assert_eq!(ShardAssignKind::parse("nope"), None);
+        assert_eq!(ShardAssignKind::Hash.as_str(), "hash");
+        assert_eq!(ShardAssignKind::RoundRobin.as_str(), "round-robin");
     }
 
     #[test]

@@ -288,6 +288,10 @@ pub struct RunMetrics {
     /// construction so |W| ≠ 4 scenarios report correctly.
     pub width_histogram: Vec<u64>,
     pub blocks_completed: u64,
+    /// Plan fields repaired by the explicit `RoutingPlan::clamp` path —
+    /// surfaced in `RunOutcome` so silently-corrected routers are
+    /// visible instead of vanishing into the repair.
+    pub plan_clamps: u64,
 }
 
 impl RunMetrics {
@@ -302,6 +306,7 @@ impl RunMetrics {
             telemetry_log: TelemetryLog::new(n_servers),
             width_histogram: vec![0; n_widths],
             blocks_completed: 0,
+            plan_clamps: 0,
         }
     }
 

@@ -1,12 +1,21 @@
 //! The multi-server discrete-event engine.
 //!
 //! Binds the whole hierarchy together exactly as the paper describes it:
-//! a leader holds the global FIFO and the router (PPO or algorithmic);
-//! every routed block crosses the WLAN link to its target server, whose
-//! local greedy scheduler (Algorithm 1) batches it onto a loaded instance
-//! of the simulated GPU. Block completions feed reward signals back to
-//! the router — the training loop of §III-B and the measurement loop of
-//! Tables III–V are the same code path.
+//! a leader tier holds the global FIFO and the router (PPO or
+//! algorithmic); every routed block crosses the WLAN link to its target
+//! server, whose local greedy scheduler (Algorithm 1) batches it onto a
+//! loaded instance of the simulated GPU. Block completions feed reward
+//! signals back to the router — the training loop of §III-B and the
+//! measurement loop of Tables III–V are the same code path.
+//!
+//! Since the multi-leader refactor the leader tier is a set of
+//! [`LeaderShard`]s (`coordinator::shard`): each shard owns a slice of
+//! the global FIFO and a router replica, requests land on shards through
+//! a deterministic [`ShardAssign`] policy, and an optional cross-shard
+//! rebalance step migrates head runs from the deepest to the shallowest
+//! FIFO. A single-shard engine (`Engine::new`, the default) is the
+//! paper's one-leader hierarchy, bit-identical per seed to the pre-shard
+//! engine; `shard::sharded_engine` builds the N-leader configuration.
 //!
 //! The event heap, block ledger and metric accumulators live in
 //! [`super::core`]; the router, per-server scheduler and device model
@@ -19,8 +28,6 @@
 //! in tens of milliseconds, so PPO training over hundreds of thousands of
 //! scheduling steps is practical on one CPU.
 
-use std::collections::VecDeque;
-
 use crate::config::Config;
 use crate::metrics::{RunReport, Summary};
 use crate::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS};
@@ -32,6 +39,10 @@ use super::greedy::{Dispatch, GreedyScheduler, GreedyStats};
 use super::queue::{head_runs, HeadRun, Queued};
 use super::request::Request;
 use super::router::{width_eq, BlockFeedback, HeadView, PlanError, Router};
+use super::shard::{
+    assigner_for, global_tag, rebalance, split_tag, LeaderShard, ShardAssign,
+    ShardStats,
+};
 use super::telemetry::{ServerTelemetry, TelemetryLog, TelemetrySnapshot};
 
 const TELEMETRY_DT: f64 = 0.05;
@@ -53,6 +64,9 @@ enum EvKind {
     /// Mid-run failure injection: the server stops accepting work
     /// (scenario `dropout`; `Config::dropout`).
     DeviceDown { server: usize },
+    /// A shard's leader finished routing its backlog window and can plan
+    /// again (only scheduled when `ShardCfg::leader_service_s > 0`).
+    LeaderFree { shard: usize },
 }
 
 /// Everything a finished run reports.
@@ -71,6 +85,13 @@ pub struct RunOutcome {
     pub sim_duration_s: f64,
     /// Total cluster energy (J) integrated over the run.
     pub total_energy_j: f64,
+    /// Per-leader-shard counters (one entry per shard; single-leader
+    /// runs report exactly one).
+    pub shard_stats: Vec<ShardStats>,
+    /// Plan fields repaired by the explicit `RoutingPlan::clamp` path
+    /// across the run — non-zero means a router emitted out-of-range
+    /// servers/widths/groups that were silently corrected.
+    pub plan_clamps: u64,
 }
 
 impl RunOutcome {
@@ -116,8 +137,12 @@ pub struct Engine<R: Router, D: DeviceModel = SimDevice, S: LocalScheduler = Gre
     devices: Vec<D>,
     scheds: Vec<S>,
     link: Link,
-    router: R,
-    global_fifo: VecDeque<Request>,
+    /// Leader tier: one FIFO slice + router replica per shard
+    /// (`coordinator::shard`). `Engine::new` builds exactly one shard —
+    /// the paper's single-leader hierarchy.
+    shards: Vec<LeaderShard<R>>,
+    /// Deterministic request→shard placement.
+    assign: Box<dyn ShardAssign>,
     ledger: BlockLedger,
     events: EventQueue<EvKind>,
     clock: VirtualClock,
@@ -129,37 +154,75 @@ pub struct Engine<R: Router, D: DeviceModel = SimDevice, S: LocalScheduler = Gre
     pub max_sim_time_s: f64,
 }
 
+/// Resolve the configured device profiles and build one greedy
+/// scheduler per device — the standard parts both [`Engine::new`] and
+/// [`super::shard::sharded_engine`] assemble engines from (one
+/// definition, so single- and multi-leader runs can never build
+/// different clusters).
+pub(crate) fn default_parts(cfg: &Config) -> (Vec<SimDevice>, Vec<GreedyScheduler>) {
+    let meta = ModelMeta::default();
+    let devices: Vec<SimDevice> = cfg
+        .devices
+        .iter()
+        .map(|name| {
+            SimDevice::new(
+                profiles::by_name(name)
+                    .unwrap_or_else(|| panic!("unknown device profile {name}")),
+            )
+        })
+        .collect();
+    let scheds = devices
+        .iter()
+        .map(|_| GreedyScheduler::new(cfg.scheduler.clone(), meta.clone()))
+        .collect();
+    (devices, scheds)
+}
+
 impl<R: Router> Engine<R> {
     /// Standard construction: device profiles resolved by name, one
     /// greedy scheduler per device.
     pub fn new(cfg: Config, router: R) -> Self {
-        let meta = ModelMeta::default();
-        let devices: Vec<SimDevice> = cfg
-            .devices
-            .iter()
-            .map(|name| {
-                SimDevice::new(
-                    profiles::by_name(name)
-                        .unwrap_or_else(|| panic!("unknown device profile {name}")),
-                )
-            })
-            .collect();
-        let scheds = devices
-            .iter()
-            .map(|_| GreedyScheduler::new(cfg.scheduler.clone(), meta.clone()))
-            .collect();
+        let (devices, scheds) = default_parts(&cfg);
         Engine::with_parts(cfg, router, devices, scheds)
     }
 }
 
 impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
-    /// Assemble an engine from explicit parts (custom device models or
-    /// scheduling policies).
+    /// Assemble a single-leader engine from explicit parts (custom device
+    /// models or scheduling policies). Note this always builds one leader
+    /// shard regardless of `cfg.shard.leaders` — multi-leader engines go
+    /// through [`super::shard::sharded_engine`] /
+    /// [`Engine::with_shard_parts`], which need one router replica per
+    /// shard.
     pub fn with_parts(cfg: Config, router: R, devices: Vec<D>, scheds: Vec<S>) -> Self {
+        Engine::with_shard_parts(cfg, vec![router], devices, scheds)
+    }
+
+    /// Assemble an engine whose leader tier is sharded across
+    /// `routers.len()` replicas (assignment/rebalance/service knobs come
+    /// from `cfg.shard`). One router yields the classic single-leader
+    /// engine, bit-identical per seed to the pre-shard code.
+    pub fn with_shard_parts(
+        cfg: Config,
+        routers: Vec<R>,
+        devices: Vec<D>,
+        scheds: Vec<S>,
+    ) -> Self {
         assert_eq!(devices.len(), scheds.len(), "one scheduler per device");
         assert!(!devices.is_empty(), "engine needs at least one device");
+        assert!(!routers.is_empty(), "engine needs at least one leader shard");
+        // the tag namespace reserves the top byte for the shard index
+        // (`shard::global_tag`); more shards would silently collide tags
+        assert!(
+            routers.len() <= 256,
+            "at most 256 leader shards (tag namespace), got {}",
+            routers.len()
+        );
         let n = devices.len();
         let total = cfg.workload.total_requests;
+        let mut metrics = RunMetrics::new(n, total, cfg.scheduler.widths.len());
+        metrics.telemetry_log.shard_depths =
+            vec![Summary::default(); routers.len()];
         Engine {
             link: Link::new(cfg.link),
             rng: Rng::new(cfg.seed),
@@ -167,12 +230,12 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             prior: AccuracyPrior::new(),
             devices,
             scheds,
-            router,
-            global_fifo: VecDeque::new(),
+            assign: assigner_for(cfg.shard.assign),
+            shards: routers.into_iter().map(LeaderShard::new).collect(),
             ledger: BlockLedger::new(),
             events: EventQueue::new(),
             clock: VirtualClock::new(),
-            metrics: RunMetrics::new(n, total, cfg.scheduler.widths.len()),
+            metrics,
             down: vec![false; n],
             max_sim_time_s: 3600.0,
             cfg,
@@ -190,7 +253,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
     /// attractive idle machine; `alive_server` remains the safety net.
     fn snapshot(&self) -> TelemetrySnapshot {
         TelemetrySnapshot {
-            fifo_len: self.global_fifo.len(),
+            fifo_len: self.shards.iter().map(|s| s.fifo.len()).sum(),
             done_count: self.metrics.done,
             total_requests: self.metrics.total,
             servers: self
@@ -243,30 +306,77 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             .unwrap_or(want)
     }
 
-    /// Route every request waiting at the leader: present up to
-    /// `RouterCfg::route_window` FIFO heads (one per consecutive
-    /// same-segment run) to a single `Router::plan` call, apply the plan
-    /// atomically, repeat until the FIFO drains. With `route_window = 1`
-    /// this is the pre-plan per-head loop, bit-identical per seed.
+    /// Place a request on its leader shard (deterministic assignment).
+    fn enqueue_leader(&mut self, req: Request) {
+        let si = self.assign.assign(&req, self.shards.len());
+        self.shards[si].stats.assigned += 1;
+        self.shards[si].fifo.push_back(req);
+    }
+
+    /// Cross-shard rebalance (no-op unless configured and multi-leader).
+    fn maybe_rebalance(&mut self) {
+        let th = self.cfg.shard.rebalance_threshold;
+        if th > 0 && self.shards.len() > 1 {
+            rebalance(&mut self.shards, th, RUN_SCAN_CAP);
+        }
+    }
+
+    /// Route every request waiting at the leader tier: rebalance if
+    /// configured, then drain each shard's FIFO in shard order. With one
+    /// shard this is the pre-shard routing loop, bit-identical per seed.
     fn route_pending(&mut self) {
+        self.maybe_rebalance();
+        for si in 0..self.shards.len() {
+            self.route_shard(si);
+        }
+    }
+
+    /// Route shard `si`'s backlog: present up to `RouterCfg::route_window`
+    /// FIFO heads (one per consecutive same-segment run) to a single
+    /// `Router::plan` call on the shard's router replica, apply the plan
+    /// atomically, repeat until the shard FIFO drains. When
+    /// `ShardCfg::leader_service_s > 0` the shard's leader has finite
+    /// routing capacity: planning defers while it is busy and a
+    /// `LeaderFree` event resumes the loop, so backlog genuinely accrues
+    /// in the FIFO slice. With `route_window = 1` (and the default
+    /// infinitely fast leader) this is the pre-plan per-head loop.
+    fn route_shard(&mut self, si: usize) {
         let window = self.cfg.router.route_window.max(1);
-        while !self.global_fifo.is_empty() {
-            let snap = self.snapshot();
+        let service = self.cfg.shard.leader_service_s;
+        while !self.shards[si].fifo.is_empty() {
             let now = self.clock.now();
+            if service > 0.0 && self.shards[si].busy_until > now {
+                // the leader is still routing earlier heads: defer and
+                // wake up exactly when it frees
+                if !self.shards[si].wake_scheduled {
+                    self.shards[si].wake_scheduled = true;
+                    let at = self.shards[si].busy_until;
+                    self.push_event(at, EvKind::LeaderFree { shard: si });
+                }
+                return;
+            }
+            let depth = self.shards[si].fifo.len();
+            if depth > self.shards[si].stats.max_depth {
+                self.shards[si].stats.max_depth = depth;
+            }
+            let mut snap = self.snapshot();
+            // the router sees its own shard's backlog as the FIFO-length
+            // signal (equal to the global length at one leader)
+            snap.fifo_len = depth;
             let runs = if window == 1 {
                 // fast path: the single head needs no run-length scan —
                 // block extraction below is bounded by the segment check,
                 // so a deep same-segment backlog costs O(group), not
                 // O(backlog), per routing event
-                let front = &self.global_fifo[0];
+                let front = &self.shards[si].fifo[0];
                 vec![HeadRun { start: 0, len: usize::MAX, seg: front.seg }]
             } else {
-                head_runs(&self.global_fifo, window, RUN_SCAN_CAP)
+                head_runs(&self.shards[si].fifo, window, RUN_SCAN_CAP)
             };
             let heads: Vec<HeadView> = runs
                 .iter()
                 .map(|run| {
-                    let req = &self.global_fifo[run.start];
+                    let req = &self.shards[si].fifo[run.start];
                     let age = now - req.arrival;
                     HeadView {
                         fifo_index: run.start,
@@ -278,7 +388,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 })
                 .collect();
 
-            let plan = self.router.plan(&snap, &heads, &mut self.rng);
+            let plan = self.shards[si].router.plan(&snap, &heads, &mut self.rng);
             let plan = match plan.validate(
                 heads.len(),
                 self.devices.len(),
@@ -289,12 +399,17 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 Ok(()) => plan,
                 // arity is a router contract violation, not routable data
                 Err(e @ PlanError::WrongArity { .. }) => {
-                    panic!("router {}: {e}", self.router.name())
+                    panic!("router {}: {e}", self.shards[si].router.name())
                 }
                 // out-of-range servers/widths/groups are repairable:
-                // clamp explicitly instead of indexing out of bounds
+                // clamp explicitly instead of indexing out of bounds,
+                // and surface the correction count instead of dropping it
                 Err(_) => {
-                    plan.clamp(self.devices.len(), &self.cfg.scheduler.widths).0
+                    let (repaired, clamped) = plan
+                        .clamp(self.devices.len(), &self.cfg.scheduler.widths);
+                    self.metrics.plan_clamps += clamped as u64;
+                    self.shards[si].stats.plan_clamps += clamped as u64;
+                    repaired
                 }
             };
             let decisions = plan.into_decisions();
@@ -314,18 +429,22 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 let mut take = 0usize;
                 while take < want
                     && take < run.len
-                    && self
-                        .global_fifo
+                    && self.shards[si]
+                        .fifo
                         .get(run.start + take)
                         .map_or(false, |r| r.seg == run.seg)
                 {
                     take += 1;
                 }
-                let entries: Vec<Queued> = self
-                    .global_fifo
+                // per-shard routers keep local tag counters; namespace
+                // them so ledger tags stay globally unique (identity at
+                // shard 0)
+                let gtag = global_tag(si, d.tag);
+                let entries: Vec<Queued> = self.shards[si]
+                    .fifo
                     .drain(run.start..run.start + take)
                     .map(|mut req| {
-                        req.block_tag = d.tag;
+                        req.block_tag = gtag;
                         req.routed_at = now;
                         req.enqueued_at = now;
                         Queued { req, width: d.width }
@@ -335,10 +454,12 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             }
             blocks.reverse();
 
+            let mut routed_heads = 0usize;
             for ((decision, run), entries) in
                 decisions.iter().zip(&runs).zip(blocks)
             {
                 debug_assert!(!entries.is_empty());
+                routed_heads += entries.len();
                 let head_seg = run.seg;
 
                 // representative tuple for the partial-accuracy prior:
@@ -350,7 +471,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 }
 
                 self.ledger.open(
-                    decision.tag,
+                    global_tag(si, decision.tag),
                     BlockState {
                         routed_at: now,
                         remaining: entries.len(),
@@ -379,7 +500,14 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                     };
                     arrive = arrive.max(now + dt);
                 }
+                self.shards[si].stats.blocks += 1;
                 self.push_event(arrive, EvKind::BlockArrive { server, entries });
+            }
+            self.shards[si].stats.routed_heads += routed_heads as u64;
+            if service > 0.0 && routed_heads > 0 {
+                // the leader spent `service` per routed head; it can plan
+                // again once that virtual work is done
+                self.shards[si].busy_until = now + service * routed_heads as f64;
             }
         }
     }
@@ -437,18 +565,25 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 let latency = now - block.routed_at;
                 let energy = snap.mean_power_w() * latency;
                 self.metrics.record_block(latency, energy);
+                // reward flows back to the shard that made the decision,
+                // under the router's own (local) tag. The engine minted
+                // every tag via global_tag(si < shards.len()), so an
+                // out-of-range shard index can only mean tag corruption
+                // — index directly and fail loudly rather than train an
+                // unrelated shard's router on a foreign reward.
+                let (fsi, ltag) = split_tag(tag);
                 let fb = BlockFeedback {
-                    tag,
+                    tag: ltag,
                     acc_prior_norm: self.prior.normalized(&block.tuple),
                     latency_s: latency,
                     energy_j: energy,
                     util_variance: snap.util_variance(),
                 };
-                self.router.feedback(&fb);
+                self.shards[fsi].router.feedback(&fb);
             }
 
             if req.advance(d.width, now, server) {
-                self.global_fifo.push_back(req);
+                self.enqueue_leader(req);
             } else {
                 let acc = self.prior.lookup(&req.width_tuple());
                 self.metrics.record_request_done(now - req.arrival, acc);
@@ -468,9 +603,12 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         for q in entries {
             let tag = q.req.block_tag;
             if self.ledger.abandon(tag).is_some() {
-                self.router.abandon(tag);
+                // engine-minted tags always decode to a live shard; an
+                // out-of-range index is corruption and must panic
+                let (asi, ltag) = split_tag(tag);
+                self.shards[asi].router.abandon(ltag);
             }
-            self.global_fifo.push_back(q.req);
+            self.enqueue_leader(q.req);
         }
         self.route_pending();
     }
@@ -524,7 +662,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             self.clock.advance_to(t);
             match ev {
                 EvKind::Arrival(req) => {
-                    self.global_fifo.push_back(req);
+                    self.enqueue_leader(req);
                     if let Some(next) = workload.next_event() {
                         let r = Request::new(next.request_id, next.at, next.w_req);
                         self.push_event(next.at, EvKind::Arrival(r));
@@ -556,6 +694,9 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                     }
                     let snap = self.snapshot();
                     self.metrics.telemetry_log.record(&snap);
+                    let depths: Vec<usize> =
+                        self.shards.iter().map(|s| s.fifo.len()).collect();
+                    self.metrics.telemetry_log.record_shard_depths(&depths);
                     if !self.metrics.all_done() {
                         self.push_event(now + TELEMETRY_DT, EvKind::TelemetryTick);
                     }
@@ -577,13 +718,21 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 EvKind::DeviceDown { server } => {
                     self.handle_device_down(server);
                 }
+                EvKind::LeaderFree { shard } => {
+                    self.shards[shard].wake_scheduled = false;
+                    // the freed leader resumes its backlog; rebalance may
+                    // also hand some of it to idle shards first
+                    self.route_pending();
+                }
             }
             if self.metrics.all_done() {
                 // drain: all requests served
                 break;
             }
         }
-        self.router.end_of_run();
+        for sh in &mut self.shards {
+            sh.router.end_of_run();
+        }
 
         let now = self.clock.now();
         for (d, &down) in self.devices.iter_mut().zip(&self.down) {
@@ -594,6 +743,9 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         let total_energy: f64 = self.devices.iter().map(|d| d.energy_j()).sum();
         let greedy_stats: Vec<GreedyStats> =
             self.scheds.iter().map(|s| s.stats()).collect();
+        let label = self.shards[0].router.name().to_string();
+        let shard_stats: Vec<ShardStats> =
+            self.shards.iter().map(|s| s.stats.clone()).collect();
         let m = self.metrics;
         let width_histogram: Vec<(f64, u64)> = self
             .cfg
@@ -605,7 +757,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             .collect();
         let outcome = RunOutcome {
             report: RunReport {
-                label: self.router.name().to_string(),
+                label,
                 accuracy_pct: m.mean_accuracy(),
                 latency: m.block_latency,
                 energy: m.block_energy,
@@ -620,8 +772,19 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             blocks_completed: m.blocks_completed,
             sim_duration_s: now,
             total_energy_j: total_energy,
+            shard_stats,
+            plan_clamps: m.plan_clamps,
         };
-        (outcome, self.router)
+        // shard 0's router is the one handed back: for single-leader runs
+        // it is *the* router; for shared-policy PPO every replica is a
+        // handle onto the same underlying router anyway
+        let router = self
+            .shards
+            .into_iter()
+            .next()
+            .expect("engine always has at least one shard")
+            .router;
+        (outcome, router)
     }
 }
 
@@ -629,7 +792,10 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
 mod tests {
     use super::*;
     use crate::config::DropoutCfg;
-    use crate::coordinator::router::{LeastLoadedRouter, RandomRouter, RoundRobinRouter};
+    use crate::coordinator::router::{
+        snap_width_up, Decision, LeastLoadedRouter, RandomRouter,
+        RoundRobinRouter, RoutingPlan,
+    };
 
     fn small_cfg(requests: usize, rate: f64) -> Config {
         let mut cfg = Config::default();
@@ -793,6 +959,67 @@ mod tests {
             slammed.report.latency.mean(),
             calm.report.latency.mean()
         );
+    }
+
+    /// Emits a server index one past the cluster on every head: every
+    /// decision goes through the clamp path exactly once.
+    struct OutOfRangeRouter {
+        widths: Vec<f64>,
+        next_tag: u64,
+    }
+
+    impl Router for OutOfRangeRouter {
+        fn name(&self) -> &'static str {
+            "out-of-range"
+        }
+        fn plan(
+            &mut self,
+            snap: &TelemetrySnapshot,
+            heads: &[HeadView],
+            _rng: &mut Rng,
+        ) -> RoutingPlan {
+            let decisions = heads
+                .iter()
+                .map(|head| {
+                    let tag = self.next_tag;
+                    self.next_tag += 1;
+                    Decision {
+                        server: snap.servers.len(), // one past the end
+                        width: snap_width_up(&self.widths, head.w_req),
+                        group: 4,
+                        tag,
+                    }
+                })
+                .collect();
+            RoutingPlan::new(decisions)
+        }
+    }
+
+    #[test]
+    fn clamp_corrections_are_surfaced_not_dropped() {
+        // modest load: every decision clamps onto the slowest server, so
+        // the whole cluster collapses to one GTX 980 Ti
+        let cfg = small_cfg(120, 60.0);
+        let widths = cfg.scheduler.widths.clone();
+        let out = Engine::new(cfg, OutOfRangeRouter { widths, next_tag: 0 })
+            .run();
+        assert_eq!(out.report.completed, 120);
+        // every routed block had exactly one repaired field (the server)
+        assert!(out.plan_clamps > 0, "clamp count vanished");
+        let per_shard: u64 =
+            out.shard_stats.iter().map(|s| s.plan_clamps).sum();
+        assert_eq!(out.plan_clamps, per_shard);
+        let blocks: u64 = out.shard_stats.iter().map(|s| s.blocks).sum();
+        assert_eq!(out.plan_clamps, blocks);
+    }
+
+    #[test]
+    fn well_behaved_routers_report_zero_clamps() {
+        let cfg = small_cfg(150, 150.0);
+        let widths = cfg.scheduler.widths.clone();
+        let out = run_with(cfg, Box::new(RandomRouter::new(widths, true, 4)));
+        assert_eq!(out.plan_clamps, 0);
+        assert!(out.shard_stats.iter().all(|s| s.plan_clamps == 0));
     }
 
     #[test]

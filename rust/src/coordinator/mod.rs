@@ -10,8 +10,13 @@
 //!   opportunistic scale-up, idle offload.
 //! * [`router`] — the global dispatch layer behind the windowed
 //!   `Router::plan` API: Random (Table III baseline), RoundRobin /
-//!   LeastLoaded (algorithmic comparators), and the PPO router (Tables
-//!   IV–V) with its batched inference path.
+//!   LeastLoaded (algorithmic comparators), Edf (deadline-aware
+//!   slack-ordered comparator), and the PPO router (Tables IV–V) with
+//!   its batched inference path.
+//! * [`shard`] — multi-leader sharding of the global FIFO: leader
+//!   shards with router replicas, deterministic request→shard
+//!   assignment (`ShardAssign`), cross-shard rebalancing, and the
+//!   `sharded_engine` constructor.
 //! * [`telemetry`] — eq. 1's state vector + run-wide sampling.
 //! * [`core`] — the reusable discrete-event substrate: deterministic
 //!   event heap, block ledger, run metrics, and the [`core::DeviceModel`]
@@ -27,6 +32,7 @@ pub mod instance;
 pub mod queue;
 pub mod request;
 pub mod router;
+pub mod shard;
 pub mod telemetry;
 
 pub use self::core::{BlockLedger, DeviceModel, EventQueue, LocalScheduler, RunMetrics};
@@ -35,5 +41,9 @@ pub use greedy::GreedyScheduler;
 pub use instance::{Instance, InstancePool};
 pub use queue::{head_runs, HeadRun, KeyedFifo};
 pub use request::{wkey, BatchKey, Request};
-pub use router::{Decision, HeadView, PlanError, Router, RoutingPlan};
+pub use router::{Decision, EdfRouter, HeadView, PlanError, Router, RoutingPlan};
+pub use shard::{
+    sharded_engine, HashAssign, RoundRobinAssign, ShardAssign, ShardStats,
+    ShardedEngine,
+};
 pub use telemetry::TelemetrySnapshot;

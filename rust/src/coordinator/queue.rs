@@ -316,6 +316,61 @@ mod tests {
     }
 
     #[test]
+    fn head_runs_empty_fifo_yields_no_runs() {
+        let empty: VecDeque<Request> = VecDeque::new();
+        assert!(head_runs(&empty, 1, 1).is_empty());
+        assert!(head_runs(&empty, 8, 64).is_empty());
+        assert!(head_runs(&empty, usize::MAX, usize::MAX).is_empty());
+    }
+
+    #[test]
+    fn head_runs_run_exactly_at_cap_with_nothing_behind() {
+        // a run whose natural end coincides with the cap must be
+        // reported whole, and an exactly-cap-length FIFO must not scan
+        // past its end
+        let cap = 5usize;
+        let fifo = fifo_of_segs(&[0; 5]);
+        let runs = head_runs(&fifo, 4, cap);
+        assert_eq!(runs, vec![HeadRun { start: 0, len: 5, seg: 0 }]);
+        // one more same-segment entry: the capped run now truncates and
+        // ends the scan (the overflow waits for the next planning event)
+        let fifo = fifo_of_segs(&[0; 6]);
+        let runs = head_runs(&fifo, 4, cap);
+        assert_eq!(runs, vec![HeadRun { start: 0, len: 5, seg: 0 }]);
+        // a different segment right at the cap boundary starts a new run
+        let fifo = fifo_of_segs(&[0, 0, 0, 0, 0, 1]);
+        let runs = head_runs(&fifo, 4, cap);
+        assert_eq!(
+            runs,
+            vec![
+                HeadRun { start: 0, len: 5, seg: 0 },
+                HeadRun { start: 5, len: 1, seg: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn head_runs_interleaved_segments_one_run_each() {
+        // fully interleaved segments degenerate to length-1 runs, one
+        // per window slot, offsets exact
+        let fifo = fifo_of_segs(&[0, 1, 0, 1, 2, 3]);
+        let runs = head_runs(&fifo, 4, 64);
+        assert_eq!(
+            runs,
+            vec![
+                HeadRun { start: 0, len: 1, seg: 0 },
+                HeadRun { start: 1, len: 1, seg: 1 },
+                HeadRun { start: 2, len: 1, seg: 0 },
+                HeadRun { start: 3, len: 1, seg: 1 },
+            ]
+        );
+        // widening the window exposes the tail runs too
+        let runs = head_runs(&fifo, 8, 64);
+        assert_eq!(runs.len(), 6);
+        assert_eq!(runs[5], HeadRun { start: 5, len: 1, seg: 3 });
+    }
+
+    #[test]
     fn property_pop_batch_is_conservative() {
         // pop_batch + remainder always partitions the original multiset,
         // batch is key-homogeneous and starts with the old head.

@@ -313,6 +313,7 @@ pub(crate) fn snap_width_up(widths: &[f64], w_req: f64) -> f64 {
 
 /// Table III baseline: uniformly random server; width honors the request
 /// (or is uniformly random when `randomize_width`); fixed group.
+#[derive(Clone)]
 pub struct RandomRouter {
     pub widths: Vec<f64>,
     pub randomize_width: bool,
@@ -362,6 +363,7 @@ impl Router for RandomRouter {
 }
 
 /// Strict round-robin over servers.
+#[derive(Clone)]
 pub struct RoundRobinRouter {
     pub widths: Vec<f64>,
     pub group: usize,
@@ -406,8 +408,28 @@ impl Router for RoundRobinRouter {
     }
 }
 
+/// Load score shared by the telemetry-driven comparators (LeastLoaded,
+/// Edf): queue length plus scaled utilization. One definition, so a
+/// recalibration can never make the comparators drift apart silently.
+fn load_score(s: &super::telemetry::ServerTelemetry) -> f64 {
+    s.queue_len as f64 + s.util_pct / 25.0
+}
+
+/// Index of the minimum of a live load image — NaN-safe via `total_cmp`
+/// (a poisoned telemetry sample must not panic the leader; NaN sorts
+/// last and simply never wins).
+fn pick_min(scores: &[f64]) -> usize {
+    scores
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.total_cmp(b))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// Greedy global comparator: route to the server minimizing a load score
 /// (queue length + utilization), widen groups under backlog.
+#[derive(Clone)]
 pub struct LeastLoadedRouter {
     pub widths: Vec<f64>,
     pub max_group: usize,
@@ -431,12 +453,9 @@ impl Router for LeastLoadedRouter {
         heads: &[HeadView],
         _rng: &mut Rng,
     ) -> RoutingPlan {
-        // NaN-safe ordering throughout (total_cmp): a poisoned telemetry
-        // sample must not panic the leader mid-run.
+        // NaN-safe ordering throughout (total_cmp via `pick_min`): a
+        // poisoned telemetry sample must not panic the leader mid-run.
         let group = if snap.fifo_len > 8 { self.max_group } else { 1 };
-        let score = |s: &super::telemetry::ServerTelemetry| {
-            s.queue_len as f64 + s.util_pct / 25.0
-        };
         if let [head] = heads {
             // per-head hot path (route_window = 1): allocation-free scan,
             // the pre-plan body verbatim
@@ -444,7 +463,9 @@ impl Router for LeastLoadedRouter {
                 .servers
                 .iter()
                 .enumerate()
-                .min_by(|(_, a), (_, b)| score(a).total_cmp(&score(b)))
+                .min_by(|(_, a), (_, b)| {
+                    load_score(a).total_cmp(&load_score(b))
+                })
                 .map(|(i, _)| i)
                 .unwrap_or(0);
             let tag = self.next_tag;
@@ -460,16 +481,11 @@ impl Router for LeastLoadedRouter {
         // target's score, so a wide window spreads over the cluster
         // instead of herding every head onto the server that was least
         // loaded at snapshot time.
-        let mut scores: Vec<f64> = snap.servers.iter().map(score).collect();
+        let mut scores: Vec<f64> = snap.servers.iter().map(load_score).collect();
         let decisions = heads
             .iter()
             .map(|head| {
-                let server = scores
-                    .iter()
-                    .enumerate()
-                    .min_by(|(_, a), (_, b)| a.total_cmp(b))
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
+                let server = pick_min(&scores);
                 if let Some(sc) = scores.get_mut(server) {
                     *sc += group as f64;
                 }
@@ -484,6 +500,72 @@ impl Router for LeastLoadedRouter {
             })
             .collect();
         RoutingPlan::new(decisions)
+    }
+}
+
+/// Deadline-aware comparator: Earliest-Deadline-First over the visible
+/// window. Heads are processed in ascending `HeadView::slack_s` order
+/// (the latest head first), each taking the currently least-loaded
+/// server under a live per-plan load image — so under deadline pressure
+/// the most-overdue work gets the emptiest machine instead of whatever
+/// the FIFO order handed it. Widths honor the request; the micro-batch
+/// group widens for heads that are already late (negative slack) or when
+/// the leader backlog is deep, to clear overdue runs in one dispatch.
+#[derive(Clone)]
+pub struct EdfRouter {
+    pub widths: Vec<f64>,
+    pub max_group: usize,
+    next_tag: u64,
+}
+
+impl EdfRouter {
+    pub fn new(widths: Vec<f64>, max_group: usize) -> Self {
+        EdfRouter { widths, max_group, next_tag: 0 }
+    }
+}
+
+impl Router for EdfRouter {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn plan(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        heads: &[HeadView],
+        _rng: &mut Rng,
+    ) -> RoutingPlan {
+        let n = heads.len();
+        // least slack first; total_cmp keeps a poisoned slack (NaN) from
+        // panicking the leader — NaN sorts last and ties keep head order
+        // (sort_by is stable), so the ordering is deterministic
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| heads[a].slack_s.total_cmp(&heads[b].slack_s));
+        let mut scores: Vec<f64> = snap.servers.iter().map(load_score).collect();
+        let mut decisions: Vec<Option<Decision>> = vec![None; n];
+        for &k in &order {
+            let head = &heads[k];
+            let server = pick_min(&scores);
+            let late = head.slack_s <= 0.0;
+            let group = if late || snap.fifo_len > 8 { self.max_group } else { 1 };
+            if let Some(sc) = scores.get_mut(server) {
+                *sc += group as f64;
+            }
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            decisions[k] = Some(Decision {
+                server,
+                width: snap_width_up(&self.widths, head.w_req),
+                group,
+                tag,
+            });
+        }
+        RoutingPlan::new(
+            decisions
+                .into_iter()
+                .map(|d| d.expect("every head planned exactly once"))
+                .collect(),
+        )
     }
 }
 
@@ -594,6 +676,66 @@ mod tests {
     }
 
     #[test]
+    fn edf_gives_the_latest_head_the_emptiest_server() {
+        let mut r = EdfRouter::new(W.to_vec(), 8);
+        let mut rng = Rng::new(11);
+        let s = snap(&[6, 0, 3], &[50.0, 10.0, 30.0]); // server 1 emptiest
+        let hs = vec![
+            HeadView { fifo_index: 0, w_req: 0.5, seg: 0, age_s: 0.1, slack_s: 0.9 },
+            HeadView { fifo_index: 1, w_req: 0.5, seg: 1, age_s: 1.5, slack_s: -0.5 },
+            HeadView { fifo_index: 2, w_req: 0.5, seg: 2, age_s: 0.4, slack_s: 0.6 },
+        ];
+        let plan = r.plan(&s, &hs, &mut rng);
+        assert_eq!(plan.len(), 3);
+        let ds = plan.decisions();
+        // head 1 is overdue: it planned first and took server 1, with the
+        // widened late-head group
+        assert_eq!(ds[1].server, 1);
+        assert_eq!(ds[1].group, 8);
+        // decisions stay index-aligned with the heads slice
+        assert!(plan.validate(3, 3, &W).is_ok());
+    }
+
+    #[test]
+    fn edf_on_time_heads_fall_back_to_load_order() {
+        let mut r = EdfRouter::new(W.to_vec(), 8);
+        let mut rng = Rng::new(12);
+        let mut s = snap(&[0, 0, 0], &[0.0, 0.0, 0.0]);
+        s.fifo_len = 2; // calm leader: groups stay 1
+        let hs: Vec<HeadView> = (0..3)
+            .map(|i| HeadView {
+                fifo_index: i,
+                w_req: 0.25,
+                seg: 0,
+                age_s: 0.01 * i as f64,
+                slack_s: 1.0 - 0.01 * i as f64,
+            })
+            .collect();
+        let plan = r.plan(&s, &hs, &mut rng);
+        // three equal-cost on-time heads spread over three idle servers
+        let mut seen: Vec<usize> =
+            plan.decisions().iter().map(|d| d.server).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert!(plan.decisions().iter().all(|d| d.group == 1));
+        assert!(plan.decisions().iter().all(|d| d.width == 0.25));
+    }
+
+    #[test]
+    fn edf_survives_nan_slack() {
+        let mut r = EdfRouter::new(W.to_vec(), 4);
+        let mut rng = Rng::new(13);
+        let s = snap(&[1, 2], &[10.0, 20.0]);
+        let hs = vec![
+            HeadView { fifo_index: 0, w_req: 0.5, seg: 0, age_s: 0.0, slack_s: f64::NAN },
+            HeadView { fifo_index: 1, w_req: 0.5, seg: 1, age_s: 0.0, slack_s: 0.2 },
+        ];
+        let plan = r.plan(&s, &hs, &mut rng);
+        assert_eq!(plan.len(), 2);
+        assert!(plan.validate(2, 2, &W).is_ok());
+    }
+
+    #[test]
     fn snap_width_up_handles_overflow() {
         assert_eq!(snap_width_up(&W, 0.6), 0.75);
         assert_eq!(snap_width_up(&W, 1.0), 1.0);
@@ -631,6 +773,7 @@ mod tests {
             Box::new(RandomRouter::new(W.to_vec(), true, 4)),
             Box::new(RoundRobinRouter::new(W.to_vec(), 4)),
             Box::new(LeastLoadedRouter::new(W.to_vec(), 16)),
+            Box::new(EdfRouter::new(W.to_vec(), 16)),
         ];
         for r in &mut routers {
             let plan = r.plan(&s, &hs, &mut rng);

@@ -1,0 +1,393 @@
+//! Multi-leader sharding of the global FIFO.
+//!
+//! The paper's hierarchy has **one** leader holding the global FIFO and
+//! the router, which caps the whole reproduction at single-leader
+//! routing throughput. This module splits the leader tier into N shards:
+//! each [`LeaderShard`] owns a slice of the global FIFO, a router
+//! replica (algorithmic routers are cloned; the PPO router is shared
+//! across shards behind `ppo::SharedPpoRouter`, so training still sees
+//! every shard's transitions in one rollout buffer), a routing-capacity
+//! clock, and per-shard telemetry counters.
+//!
+//! * [`ShardAssign`] — deterministic request→shard placement, with
+//!   [`HashAssign`] (pure function of the request id) and
+//!   [`RoundRobinAssign`] (cursor in enqueue order) behind it. Both are
+//!   pure functions of the (seeded, deterministic) event stream, so
+//!   sharded runs stay reproducible across `--workers` counts.
+//! * [`rebalance`] — the optional cross-shard step: when the deepest and
+//!   shallowest FIFOs differ by more than a threshold, whole
+//!   same-segment head runs migrate deepest → shallowest.
+//! * [`global_tag`] / [`split_tag`] — per-shard routers keep their own
+//!   tag counters; the engine namespaces them into globally unique
+//!   block tags (shard index in the top byte) so the block ledger never
+//!   collides. Shard 0 is the identity mapping, which is what keeps
+//!   `--leaders 1` bit-identical to the pre-shard engine.
+//! * [`sharded_engine`] — the construction entry point: builds an
+//!   [`Engine`](super::Engine) whose leader tier carries
+//!   `cfg.shard.leaders` replicas of the given router.
+//!
+//! With `ShardCfg::leader_service_s > 0` each shard's leader is a
+//! finite-capacity server (`1/leader_service_s` routed heads per
+//! second): planning defers while the leader is busy, backlog accrues in
+//! the shard's FIFO slice, and a `LeaderFree` event resumes routing.
+//! That is what makes the multi-leader scaling *measurable* — the
+//! `shard_scaling` section of the `micro_hotpath` bench reports
+//! `leaders4_speedup_x` on the `sharded-hot` scenario. At the default
+//! `leader_service_s = 0` the leader is infinitely fast and the engine
+//! reproduces the pre-shard event stream exactly.
+
+use std::collections::VecDeque;
+
+use crate::config::{Config, ShardAssignKind};
+use crate::sim::SimDevice;
+
+use super::engine::Engine;
+use super::greedy::GreedyScheduler;
+use super::queue::head_runs;
+use super::request::Request;
+use super::router::Router;
+
+/// Shard index occupies the top byte of a block tag; router-local tag
+/// counters own the low 56 bits (far beyond any run's decision count).
+const TAG_SHARD_SHIFT: u32 = 56;
+
+/// Namespace a router-local decision tag under its shard. Shard 0 is the
+/// identity, so single-leader runs keep their historical tag values.
+pub fn global_tag(shard: usize, local: u64) -> u64 {
+    debug_assert!(local < 1u64 << TAG_SHARD_SHIFT, "local tag overflow");
+    ((shard as u64) << TAG_SHARD_SHIFT) | local
+}
+
+/// Recover `(shard, local_tag)` from a namespaced block tag.
+pub fn split_tag(tag: u64) -> (usize, u64) {
+    (
+        (tag >> TAG_SHARD_SHIFT) as usize,
+        tag & ((1u64 << TAG_SHARD_SHIFT) - 1),
+    )
+}
+
+/// Deterministic request→shard placement policy.
+pub trait ShardAssign: Send {
+    fn name(&self) -> &'static str;
+    /// Shard for `req` among `n_shards` (callers guarantee
+    /// `n_shards >= 1`; the result must be `< n_shards`).
+    fn assign(&mut self, req: &Request, n_shards: usize) -> usize;
+}
+
+/// splitmix64 — a well-mixed pure function of the request id, so a
+/// request keeps its shard across segments and across runs.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+/// Hash placement: shard = mix64(request id) mod N. Stateless — the
+/// same request always lands on the same shard, so a request's four
+/// segment routings stay on one leader (no cross-leader handoff).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HashAssign;
+
+impl ShardAssign for HashAssign {
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+    fn assign(&mut self, req: &Request, n_shards: usize) -> usize {
+        (mix64(req.id) % n_shards.max(1) as u64) as usize
+    }
+}
+
+/// Round-robin placement: a cursor advanced on every enqueue (arrival
+/// and segment re-entry alike), in deterministic event order.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundRobinAssign {
+    cursor: usize,
+}
+
+impl ShardAssign for RoundRobinAssign {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+    fn assign(&mut self, _req: &Request, n_shards: usize) -> usize {
+        let n = n_shards.max(1);
+        let s = self.cursor % n;
+        self.cursor = (self.cursor + 1) % n;
+        s
+    }
+}
+
+/// Build the configured assignment policy.
+pub fn assigner_for(kind: ShardAssignKind) -> Box<dyn ShardAssign> {
+    match kind {
+        ShardAssignKind::Hash => Box::new(HashAssign),
+        ShardAssignKind::RoundRobin => Box::new(RoundRobinAssign::default()),
+    }
+}
+
+/// Per-shard telemetry counters (surfaced in `RunOutcome::shard_stats`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardStats {
+    /// Requests placed on this shard (arrivals + segment re-entries).
+    pub assigned: u64,
+    /// FIFO heads routed by this shard's leader.
+    pub routed_heads: u64,
+    /// Blocks dispatched by this shard's leader.
+    pub blocks: u64,
+    /// Requests migrated in/out by the cross-shard rebalancer.
+    pub migrated_in: u64,
+    pub migrated_out: u64,
+    /// Plan fields repaired by the explicit clamp path.
+    pub plan_clamps: u64,
+    /// Peak FIFO depth observed at planning time.
+    pub max_depth: usize,
+}
+
+/// One leader shard: a slice of the global FIFO plus its router replica.
+pub struct LeaderShard<R: Router> {
+    pub fifo: VecDeque<Request>,
+    pub router: R,
+    /// Virtual time until which this shard's leader is busy routing
+    /// (only advanced when `leader_service_s > 0`).
+    pub busy_until: f64,
+    /// Whether a `LeaderFree` wake-up event is already scheduled.
+    pub wake_scheduled: bool,
+    pub stats: ShardStats,
+}
+
+impl<R: Router> LeaderShard<R> {
+    pub fn new(router: R) -> Self {
+        LeaderShard {
+            fifo: VecDeque::new(),
+            router,
+            busy_until: 0.0,
+            wake_scheduled: false,
+            stats: ShardStats::default(),
+        }
+    }
+}
+
+/// Cap on run migrations per rebalance invocation (the rebalancer runs
+/// on every routing event, so a small budget converges quickly without
+/// ever turning one event into an O(backlog) reshuffle).
+const MAX_MIGRATIONS_PER_STEP: usize = 4;
+
+/// One cross-shard rebalance step over the leader FIFOs: while the
+/// deepest and shallowest FIFOs differ by more than `threshold`
+/// requests, migrate the deepest shard's whole same-segment head run to
+/// the back of the shallowest FIFO. A run only moves when it is at most
+/// half the imbalance (`2·len <= diff`), so the depth gap shrinks but
+/// never changes sign — a migration can never invert the imbalance it
+/// is fixing (no ping-pong). Ties break on the lowest shard index;
+/// migration order is therefore deterministic. Returns the number of
+/// requests migrated, and records per-shard in/out counters.
+pub fn rebalance<R: Router>(
+    shards: &mut [LeaderShard<R>],
+    threshold: usize,
+    run_cap: usize,
+) -> usize {
+    if threshold == 0 || shards.len() < 2 {
+        return 0;
+    }
+    let mut moved_total = 0usize;
+    for _ in 0..MAX_MIGRATIONS_PER_STEP {
+        let deep = (0..shards.len())
+            .max_by_key(|&i| (shards[i].fifo.len(), shards.len() - i))
+            .unwrap();
+        let shallow = (0..shards.len())
+            .min_by_key(|&i| (shards[i].fifo.len(), i))
+            .unwrap();
+        let diff = shards[deep].fifo.len() - shards[shallow].fifo.len();
+        if diff <= threshold {
+            break;
+        }
+        let runs = head_runs(&shards[deep].fifo, 1, run_cap);
+        let take = match runs.first() {
+            Some(run) if 2 * run.len <= diff => run.len,
+            _ => break, // whole-run move would invert the gap; leave it
+        };
+        let moved: Vec<Request> =
+            shards[deep].fifo.drain(..take).collect();
+        shards[deep].stats.migrated_out += take as u64;
+        shards[shallow].stats.migrated_in += take as u64;
+        shards[shallow].fifo.extend(moved);
+        moved_total += take;
+    }
+    moved_total
+}
+
+/// The multi-leader coordinator. Since the shard refactor the engine
+/// itself is shard-structured — `Engine::new` is simply the one-shard
+/// special case — so `ShardedEngine` is `Engine` viewed through its
+/// multi-leader construction path ([`sharded_engine`] /
+/// [`Engine::with_shard_parts`]).
+pub type ShardedEngine<R, D = SimDevice, S = GreedyScheduler> = Engine<R, D, S>;
+
+/// Build a [`ShardedEngine`] whose leader tier is sharded per
+/// `cfg.shard`: the router is replicated once per leader (`leaders <= 1`
+/// yields the classic single-leader engine, bit-identical per seed to
+/// `Engine::new`). Algorithmic routers clone cheaply; for PPO pass a
+/// `ppo::SharedPpoRouter`, whose clones share one policy and rollout
+/// buffer.
+pub fn sharded_engine<R: Router + Clone>(cfg: Config, router: R) -> ShardedEngine<R> {
+    let n = cfg.shard.leaders.max(1);
+    let mut routers = Vec::with_capacity(n);
+    for _ in 0..n.saturating_sub(1) {
+        routers.push(router.clone());
+    }
+    routers.push(router);
+    let (devices, scheds) = super::engine::default_parts(&cfg);
+    Engine::with_shard_parts(cfg, routers, devices, scheds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::RandomRouter;
+
+    fn req(id: u64, seg: usize) -> Request {
+        let mut r = Request::new(id, 0.0, 1.0);
+        r.seg = seg;
+        r
+    }
+
+    fn shard_of_segs(segs: &[usize], base_id: u64) -> LeaderShard<RandomRouter> {
+        let mut sh = LeaderShard::new(RandomRouter::new(
+            vec![0.25, 0.5, 0.75, 1.0],
+            false,
+            4,
+        ));
+        for (i, &seg) in segs.iter().enumerate() {
+            sh.fifo.push_back(req(base_id + i as u64, seg));
+        }
+        sh
+    }
+
+    #[test]
+    fn tag_namespace_roundtrips_and_shard0_is_identity() {
+        assert_eq!(global_tag(0, 12345), 12345);
+        assert_eq!(split_tag(12345), (0, 12345));
+        for shard in [0usize, 1, 3, 7] {
+            for local in [0u64, 1, 999_999] {
+                assert_eq!(split_tag(global_tag(shard, local)), (shard, local));
+            }
+        }
+    }
+
+    #[test]
+    fn hash_assign_is_a_pure_function_of_the_id() {
+        // determinism across instances and call order — the property
+        // that keeps sharded runs reproducible across --workers counts
+        let mut a = HashAssign;
+        let mut b = HashAssign;
+        let forward: Vec<usize> =
+            (0..64u64).map(|id| a.assign(&req(id, 0), 4)).collect();
+        let backward: Vec<usize> =
+            (0..64u64).rev().map(|id| b.assign(&req(id, 0), 4)).collect();
+        let backward: Vec<usize> = backward.into_iter().rev().collect();
+        assert_eq!(forward, backward);
+        // covers every shard and respects the range
+        assert!(forward.iter().all(|&s| s < 4));
+        for s in 0..4 {
+            assert!(forward.contains(&s), "shard {s} never hit");
+        }
+        // one shard degenerates to 0
+        assert_eq!(a.assign(&req(7, 2), 1), 0);
+    }
+
+    #[test]
+    fn hash_assign_is_stable_across_segments() {
+        let mut a = HashAssign;
+        for id in 0..32u64 {
+            let home = a.assign(&req(id, 0), 4);
+            for seg in 1..4 {
+                assert_eq!(a.assign(&req(id, seg), 4), home, "id {id} seg {seg}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_assign_cycles() {
+        let mut rr = RoundRobinAssign::default();
+        let got: Vec<usize> =
+            (0..7u64).map(|id| rr.assign(&req(id, 0), 3)).collect();
+        assert_eq!(got, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(rr.assign(&req(9, 0), 1), 0);
+    }
+
+    #[test]
+    fn assigner_for_builds_the_named_policy() {
+        assert_eq!(assigner_for(ShardAssignKind::Hash).name(), "hash");
+        assert_eq!(
+            assigner_for(ShardAssignKind::RoundRobin).name(),
+            "round-robin"
+        );
+    }
+
+    #[test]
+    fn rebalance_migrates_a_whole_head_run_deep_to_shallow() {
+        // shard 0: deep, head run of three seg-1 entries; shard 1 shallow
+        let mut shards = vec![
+            shard_of_segs(&[1, 1, 1, 0, 2, 0, 1, 2], 0),
+            shard_of_segs(&[3], 100),
+        ];
+        let moved = rebalance(&mut shards, 2, 64);
+        assert_eq!(moved, 3);
+        assert_eq!(shards[0].stats.migrated_out, 3);
+        assert_eq!(shards[1].stats.migrated_in, 3);
+        // the run landed at the back of the shallow fifo, in order
+        let tail: Vec<u64> =
+            shards[1].fifo.iter().map(|r| r.id).collect();
+        assert_eq!(tail, vec![100, 0, 1, 2]);
+        // conservation
+        assert_eq!(shards[0].fifo.len() + shards[1].fifo.len(), 9);
+    }
+
+    #[test]
+    fn rebalance_noop_below_threshold_or_single_shard() {
+        let mut shards = vec![
+            shard_of_segs(&[0, 0, 1], 0),
+            shard_of_segs(&[2], 10),
+        ];
+        // diff = 2, threshold 2: not strictly above, no move
+        assert_eq!(rebalance(&mut shards, 2, 64), 0);
+        // threshold 0 disables
+        assert_eq!(rebalance(&mut shards, 0, 64), 0);
+        let mut one = vec![shard_of_segs(&[0, 0, 0, 0], 0)];
+        assert_eq!(rebalance(&mut one, 1, 64), 0);
+    }
+
+    #[test]
+    fn rebalance_never_inverts_the_imbalance() {
+        // deep shard's head run (5) >= diff (5): whole-run move would
+        // overshoot, so the rebalancer leaves it alone
+        let mut shards = vec![
+            shard_of_segs(&[2, 2, 2, 2, 2], 0),
+            shard_of_segs(&[], 50),
+        ];
+        assert_eq!(rebalance(&mut shards, 2, 64), 0);
+        assert_eq!(shards[0].fifo.len(), 5);
+
+        // a shorter head run (2) < diff (5) does migrate
+        let mut shards = vec![
+            shard_of_segs(&[1, 1, 2, 2, 2], 0),
+            shard_of_segs(&[], 50),
+        ];
+        assert_eq!(rebalance(&mut shards, 2, 64), 2);
+        assert!(shards[0].fifo.len() >= shards[1].fifo.len());
+    }
+
+    #[test]
+    fn rebalance_is_budgeted_per_step() {
+        // many length-1 runs: one step migrates at most
+        // MAX_MIGRATIONS_PER_STEP runs
+        let segs: Vec<usize> = (0..40).map(|i| i % 4).collect();
+        let mut shards = vec![
+            shard_of_segs(&segs, 0),
+            shard_of_segs(&[], 100),
+        ];
+        let moved = rebalance(&mut shards, 1, 64);
+        assert!(moved <= MAX_MIGRATIONS_PER_STEP);
+        assert!(moved > 0);
+    }
+}

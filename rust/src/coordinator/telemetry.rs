@@ -76,6 +76,10 @@ pub struct TelemetryLog {
     pub util_variance: Summary,
     pub per_server_util: Vec<Summary>,
     pub per_server_mem: Vec<Summary>,
+    /// Per-leader-shard FIFO depth, sampled on the same tick — the
+    /// imbalance signal the cross-shard rebalancer acts on (one entry
+    /// per shard; the engine sizes this at construction).
+    pub shard_depths: Vec<Summary>,
 }
 
 impl TelemetryLog {
@@ -85,6 +89,7 @@ impl TelemetryLog {
             util_variance: Summary::default(),
             per_server_util: vec![Summary::default(); n_servers],
             per_server_mem: vec![Summary::default(); n_servers],
+            shard_depths: Vec::new(),
         }
     }
 
@@ -95,6 +100,16 @@ impl TelemetryLog {
             if i < self.per_server_util.len() {
                 self.per_server_util[i].record(s.util_pct);
                 self.per_server_mem[i].record(s.mem_util);
+            }
+        }
+    }
+
+    /// Record one per-shard FIFO-depth sample (entries beyond the sized
+    /// shard count are ignored, mirroring `record`'s server guard).
+    pub fn record_shard_depths(&mut self, depths: &[usize]) {
+        for (i, &d) in depths.iter().enumerate() {
+            if i < self.shard_depths.len() {
+                self.shard_depths[i].record(d as f64);
             }
         }
     }
@@ -159,6 +174,22 @@ mod tests {
         assert!(log.util_variance.mean() > 0.0);
         assert!((log.per_server_util[0].mean() - 30.0).abs() < 1e-9);
         assert!((log.per_server_util[1].mean() - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_depths_record_when_sized() {
+        let mut log = TelemetryLog::new(1);
+        // unsized: samples are ignored, not panicking
+        log.record_shard_depths(&[5, 9]);
+        assert!(log.shard_depths.is_empty());
+        log.shard_depths = vec![Summary::default(); 2];
+        log.record_shard_depths(&[4, 8]);
+        log.record_shard_depths(&[6, 10]);
+        assert!((log.shard_depths[0].mean() - 5.0).abs() < 1e-12);
+        assert!((log.shard_depths[1].mean() - 9.0).abs() < 1e-12);
+        // extra entries beyond the sized count are dropped
+        log.record_shard_depths(&[1, 1, 99]);
+        assert_eq!(log.shard_depths.len(), 2);
     }
 
     #[test]

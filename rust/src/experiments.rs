@@ -5,8 +5,8 @@
 
 use crate::config::{Config, RewardCfg};
 use crate::coordinator::router::RandomRouter;
-use crate::coordinator::{Engine, RunOutcome};
-use crate::ppo::PpoRouter;
+use crate::coordinator::{sharded_engine, RunOutcome};
+use crate::ppo::{run_ppo_episode, PpoRouter};
 
 /// Standard evaluation configuration (the paper's 3-GPU cluster) with a
 /// chosen request count.
@@ -21,7 +21,8 @@ pub fn paper_cluster_cfg(total_requests: usize, seed: u64) -> Config {
 /// selects a `sim::scenarios` entry — the hook that lets every table
 /// bench re-run per scenario without code changes.
 /// `BENCH_ROUTE_WINDOW=<n>` widens the leader's routing window (default
-/// 1 = the paper-faithful per-head loop).
+/// 1 = the paper-faithful per-head loop); `BENCH_LEADERS=<n>` shards the
+/// leader tier (default 1 = the paper's single leader).
 pub fn bench_cfg(total_requests: usize, seed: u64) -> Config {
     let mut cfg = paper_cluster_cfg(total_requests, seed);
     if let Ok(name) = std::env::var("BENCH_SCENARIO") {
@@ -41,6 +42,13 @@ pub fn bench_cfg(total_requests: usize, seed: u64) -> Config {
             cfg.router.route_window = w.max(1);
         }
     }
+    if let Ok(l) = std::env::var("BENCH_LEADERS") {
+        if !l.is_empty() {
+            let l: usize =
+                l.parse().unwrap_or_else(|e| panic!("BENCH_LEADERS: {e}"));
+            cfg.shard.leaders = l.max(1);
+        }
+    }
     cfg
 }
 
@@ -54,10 +62,12 @@ pub fn bench_workers() -> usize {
 }
 
 /// Table III: greedy executors + uniformly random routing (and random
-/// width selection — "purely randomized task distribution").
+/// width selection — "purely randomized task distribution"). Honors
+/// `cfg.shard.leaders` (one leader is the paper protocol and stays
+/// bit-identical per seed to the pre-shard engine).
 pub fn run_random_baseline(cfg: &Config) -> RunOutcome {
     let router = RandomRouter::new(cfg.scheduler.widths.clone(), true, 8);
-    Engine::new(cfg.clone(), router).run()
+    sharded_engine(cfg.clone(), router).run()
 }
 
 /// Train a PPO router online against the simulated cluster for
@@ -76,8 +86,7 @@ pub fn train_ppo(cfg: &Config, reward: RewardCfg, episodes: usize) -> PpoRouter 
     for ep in 0..episodes {
         let mut episode_cfg = cfg.clone();
         episode_cfg.seed = crate::ppo::parallel::episode_seed(cfg.seed, ep);
-        let engine = Engine::new(episode_cfg, router);
-        let (_outcome, r) = engine.run_returning_router();
+        let (_outcome, r) = run_ppo_episode(&episode_cfg, router);
         router = r;
     }
     router
@@ -123,7 +132,7 @@ pub fn run_ppo_experiment_workers(
     router.eval_mode();
     let mut eval_cfg = cfg.clone();
     eval_cfg.seed = cfg.seed.wrapping_add(0xEA1);
-    let (outcome, router) = Engine::new(eval_cfg, router).run_returning_router();
+    let (outcome, router) = run_ppo_episode(&eval_cfg, router);
     (outcome, router)
 }
 
@@ -153,7 +162,7 @@ pub fn run_ppo_experiment_online_workers(
         train_ppo_workers(cfg, reward, train_episodes.saturating_sub(1), workers);
     let mut eval_cfg = cfg.clone();
     eval_cfg.seed = cfg.seed.wrapping_add(0xEA1);
-    let (outcome, router) = Engine::new(eval_cfg, router).run_returning_router();
+    let (outcome, router) = run_ppo_episode(&eval_cfg, router);
     (outcome, router)
 }
 

@@ -19,8 +19,8 @@
 
 use slim_scheduler::benchx::Table;
 use slim_scheduler::config::Config;
-use slim_scheduler::coordinator::router::{LeastLoadedRouter, RoundRobinRouter};
-use slim_scheduler::coordinator::Engine;
+use slim_scheduler::coordinator::router::{EdfRouter, LeastLoadedRouter, RoundRobinRouter};
+use slim_scheduler::coordinator::sharded_engine;
 use slim_scheduler::experiments;
 use slim_scheduler::model::{AccuracyPrior, ModelMeta, WIDTHS};
 use slim_scheduler::ppo::router_impl::width_marginal;
@@ -29,7 +29,7 @@ use slim_scheduler::utilx::{Args, Rng};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()
-        .describe("router", "random|round-robin|least-loaded|ppo (simulate)")
+        .describe("router", "random|round-robin|least-loaded|edf|ppo (simulate)")
         .describe("reward", "overfit|balanced (ppo reward preset)")
         .describe("requests", "total requests in the workload")
         .describe("rate", "mean arrival rate (req/s)")
@@ -38,6 +38,10 @@ fn main() -> anyhow::Result<()> {
         .describe("scenario", "named cluster/workload scenario (see `repro scenarios`)")
         .describe("route-window", "FIFO heads planned per routing event (1 = paper per-head loop)")
         .describe("sla", "soft per-request SLA (s) exposed to routers as deadline slack")
+        .describe("leaders", "leader shards the global FIFO splits across (1 = paper single leader)")
+        .describe("rebalance", "cross-shard rebalance threshold in requests (0 = off)")
+        .describe("shard-assign", "request->shard policy: hash|round-robin")
+        .describe("leader-service", "leader routing service time per head (s, 0 = infinitely fast)")
         .describe("dropout", "kill server mid-run: server@time, e.g. 0@5.0")
         .describe("diurnal-period", "sinusoidal load cycle length (s, 0=off)")
         .describe("diurnal-depth", "sinusoidal load modulation depth [0,1)")
@@ -79,23 +83,29 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = base_cfg(args);
     let router = args.str_or("router", "random");
     println!(
-        "router={router} scenario={} requests={} rate={}/s devices={:?} route_window={}",
+        "router={router} scenario={} requests={} rate={}/s devices={:?} route_window={} leaders={}",
         cfg.scenario.as_deref().unwrap_or("paper(default)"),
         cfg.workload.total_requests,
         cfg.workload.rate_hz,
         cfg.devices,
-        cfg.router.route_window
+        cfg.router.route_window,
+        cfg.shard.leaders
     );
     let outcome = match router.as_str() {
         "random" => experiments::run_random_baseline(&cfg),
-        "round-robin" => Engine::new(
+        "round-robin" => sharded_engine(
             cfg.clone(),
             RoundRobinRouter::new(cfg.scheduler.widths.clone(), 8),
         )
         .run(),
-        "least-loaded" => Engine::new(
+        "least-loaded" => sharded_engine(
             cfg.clone(),
             LeastLoadedRouter::new(cfg.scheduler.widths.clone(), 16),
+        )
+        .run(),
+        "edf" => sharded_engine(
+            cfg.clone(),
+            EdfRouter::new(cfg.scheduler.widths.clone(), 16),
         )
         .run(),
         "ppo" => {
@@ -116,7 +126,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 );
                 router.eval_mode();
                 println!("loaded checkpoint {path}");
-                Engine::new(cfg.clone(), router).run()
+                slim_scheduler::ppo::run_ppo_episode(&cfg, router).0
             } else {
                 let episodes = args.usize_or("episodes", 8);
                 let workers = args.usize_or("workers", 1);
@@ -146,6 +156,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "sim duration {:.1}s, total energy {:.0} J",
         outcome.sim_duration_s, outcome.total_energy_j
     );
+    if outcome.shard_stats.len() > 1 {
+        for (i, s) in outcome.shard_stats.iter().enumerate() {
+            println!(
+                "leader shard {i}: assigned {} routed {} heads / {} blocks, \
+                 migrated +{}/-{}, peak depth {}",
+                s.assigned, s.routed_heads, s.blocks, s.migrated_in,
+                s.migrated_out, s.max_depth
+            );
+        }
+    }
+    if outcome.plan_clamps > 0 {
+        println!("plan clamps (router fields repaired): {}", outcome.plan_clamps);
+    }
     Ok(())
 }
 

@@ -38,10 +38,10 @@
 use std::thread;
 
 use crate::config::{Config, RewardCfg};
-use crate::coordinator::{Engine, Router};
+use crate::coordinator::Router;
 
 use super::buffer::Transition;
-use super::router_impl::PpoRouter;
+use super::router_impl::{run_ppo_episode, PpoRouter};
 
 /// Episode seed formula shared with `experiments::train_ppo`.
 pub fn episode_seed(base: u64, episode: usize) -> u64 {
@@ -86,8 +86,10 @@ pub fn train_parallel(
                 worker_cfg.seed = episode_seed(cfg.seed, ep + k);
                 let collector = central.fork_collector();
                 handles.push(scope.spawn(move || {
-                    let engine = Engine::new(worker_cfg, collector);
-                    let (outcome, mut router) = engine.run_returning_router();
+                    // honors cfg.shard.leaders: a sharded worker engine
+                    // shares the collector across its leader shards
+                    let (outcome, mut router) =
+                        run_ppo_episode(&worker_cfg, collector);
                     Harvest {
                         transitions: router.take_transitions(),
                         decisions: router.stats.decisions,

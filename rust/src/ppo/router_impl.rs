@@ -13,12 +13,21 @@
 //! pre-plan router per seed); wider windows featurize every head into
 //! one stacked state buffer and run a single `Policy::sample_batch`
 //! matrix forward, amortizing the MLP cost across the queue.
+//!
+//! For the multi-leader coordinator (`coordinator::shard`),
+//! [`SharedPpoRouter`] wraps one `PpoRouter` behind a cheap cloneable
+//! handle: every leader shard plans through the same policy and stages
+//! into the same rollout buffer, so training sees every shard's
+//! transitions exactly as it would a single leader's.
 
-use crate::config::PpoCfg;
+use std::sync::{Arc, Mutex};
+
+use crate::config::{Config, PpoCfg};
 use crate::coordinator::router::{
     BlockFeedback, Decision, HeadView, Router, RoutingPlan,
 };
 use crate::coordinator::telemetry::TelemetrySnapshot;
+use crate::coordinator::{Engine, RunOutcome};
 use crate::utilx::{Json, Rng};
 
 use super::adam::Adam;
@@ -354,6 +363,91 @@ impl Router for PpoRouter {
     }
 }
 
+/// One `PpoRouter` shared across leader shards behind a cheap cloneable
+/// handle. The engine's event loop is single-threaded, so the mutex is
+/// uncontended — it exists to satisfy `Send` (parallel rollout workers
+/// move whole engines across threads), not to arbitrate.
+///
+/// Every shard replica plans through the same policy, stages into the
+/// same rollout buffer, and advances the same exploration schedule, so a
+/// sharded run trains exactly one router. Tag uniqueness across shards
+/// falls out for free: the shared `next_tag` counter is global.
+pub struct SharedPpoRouter {
+    inner: Arc<Mutex<PpoRouter>>,
+}
+
+impl Clone for SharedPpoRouter {
+    fn clone(&self) -> Self {
+        SharedPpoRouter { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl SharedPpoRouter {
+    pub fn new(router: PpoRouter) -> Self {
+        SharedPpoRouter { inner: Arc::new(Mutex::new(router)) }
+    }
+
+    /// Recover the underlying router. Panics if other handles are still
+    /// alive — callers must let the engine (and its shard replicas) drop
+    /// first, which `Engine::run_returning_router` guarantees.
+    pub fn into_inner(self) -> PpoRouter {
+        Arc::try_unwrap(self.inner)
+            .ok()
+            .expect("shard replicas still hold the shared PPO router")
+            .into_inner()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+impl Router for SharedPpoRouter {
+    fn name(&self) -> &'static str {
+        "ppo"
+    }
+
+    fn plan(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        heads: &[HeadView],
+        rng: &mut Rng,
+    ) -> RoutingPlan {
+        self.inner.lock().unwrap().plan(snap, heads, rng)
+    }
+
+    fn feedback(&mut self, fb: &BlockFeedback) {
+        self.inner.lock().unwrap().feedback(fb)
+    }
+
+    fn abandon(&mut self, tag: u64) {
+        self.inner.lock().unwrap().abandon(tag)
+    }
+
+    fn end_of_run(&mut self) {
+        // called once per shard replica at drain; the flush inside is
+        // buffer-guarded, so repeat calls are no-ops
+        self.inner.lock().unwrap().end_of_run()
+    }
+}
+
+/// Run one engine episode with this PPO router, honoring
+/// `cfg.shard.leaders`: one leader drives the classic engine directly
+/// (bit-identical per seed to the pre-shard trainer); multiple leaders
+/// share the router — and its one `Policy` — across shards behind a
+/// [`SharedPpoRouter`], so every shard's transitions land in the same
+/// rollout buffer. Returns the outcome and the router (trained state
+/// intact) either way.
+pub fn run_ppo_episode(cfg: &Config, router: PpoRouter) -> (RunOutcome, PpoRouter) {
+    if cfg.shard.leaders > 1 {
+        let shared = SharedPpoRouter::new(router);
+        let engine = crate::coordinator::sharded_engine(cfg.clone(), shared);
+        let (outcome, handle) = engine.run_returning_router();
+        (outcome, handle.into_inner())
+    } else {
+        let (outcome, router) =
+            Engine::new(cfg.clone(), router).run_returning_router();
+        (outcome, router)
+    }
+}
+
 /// Width-index histogram of a trained policy's marginal (diagnostics for
 /// the Table IV collapse check).
 pub fn width_marginal(router: &PpoRouter, snap: &TelemetrySnapshot) -> Vec<f64> {
@@ -626,6 +720,66 @@ mod tests {
         for (a, b) in ec.p_w.iter().zip(&ew.p_w) {
             assert!((a - b).abs() < 1e-15);
         }
+    }
+
+    #[test]
+    fn shared_handle_trains_one_router_across_replicas() {
+        // two handles onto one router: decisions through either advance
+        // the same schedule, buffer and tag space
+        let shared = SharedPpoRouter::new(router());
+        let mut a = shared.clone();
+        let mut b = shared.clone();
+        let mut rng = Rng::new(14);
+        let s = snap(3);
+        let d0 = a.route_one(&s, &HeadView::new(0.5, 0), &mut rng);
+        let d1 = b.route_one(&s, &HeadView::new(0.5, 1), &mut rng);
+        assert_ne!(d0.tag, d1.tag, "tag space must be shared");
+        b.feedback(&BlockFeedback {
+            tag: d0.tag,
+            acc_prior_norm: 0.5,
+            latency_s: 0.01,
+            energy_j: 1.0,
+            util_variance: 0.0,
+        });
+        drop(a);
+        drop(b);
+        let inner = shared.into_inner();
+        assert_eq!(inner.stats.decisions, 2);
+        assert_eq!(inner.buffer.ready(), 1); // d0 completed, d1 pending
+    }
+
+    #[test]
+    fn run_ppo_episode_routes_single_and_sharded() {
+        let mut cfg = Config::default();
+        cfg.workload.total_requests = 300;
+        cfg.workload.rate_hz = 250.0;
+        cfg.ppo.horizon = 64;
+
+        let ppo = PpoRouter::new(
+            cfg.devices.len(),
+            cfg.scheduler.widths.clone(),
+            cfg.ppo.clone(),
+            cfg.seed,
+        );
+        let (out, r) = run_ppo_episode(&cfg, ppo);
+        assert_eq!(out.report.completed, 300);
+        assert_eq!(out.shard_stats.len(), 1);
+        assert!(r.stats.decisions > 0);
+
+        cfg.shard.leaders = 3;
+        let ppo = PpoRouter::new(
+            cfg.devices.len(),
+            cfg.scheduler.widths.clone(),
+            cfg.ppo.clone(),
+            cfg.seed,
+        );
+        let (out, r) = run_ppo_episode(&cfg, ppo);
+        assert_eq!(out.report.completed, 300);
+        assert_eq!(out.shard_stats.len(), 3);
+        // every shard fed the one shared router
+        let assigned: u64 = out.shard_stats.iter().map(|s| s.assigned).sum();
+        assert!(assigned >= 300);
+        assert!(r.stats.decisions > 0);
     }
 
     #[test]

@@ -88,6 +88,27 @@ fn build_diurnal(cfg: &mut Config) {
     cfg.workload.diurnal_depth = 0.8;
 }
 
+fn build_sharded_hot(cfg: &mut Config) {
+    // the multi-leader stress case: a large homogeneous cluster whose
+    // device capacity comfortably exceeds the offered load, routed
+    // through a finite-capacity leader tier (1.5 ms of routing work per
+    // head ≈ 667 heads/s/leader vs ~1280 heads/s offered) — a single
+    // leader is the bottleneck, four are not. Arrival keys are skewed
+    // slim-heavy so same-segment runs are long and hash-sharded depths
+    // wander apart, which is what the rebalancer (enabled here) acts on.
+    cfg.devices = vec!["rtx2080ti".to_string(); 6];
+    cfg.workload.rate_hz = 320.0;
+    cfg.workload.burst_factor = 2.0;
+    cfg.workload.burst_period_s = 5.0;
+    cfg.workload.burst_duty = 0.2;
+    cfg.workload.width_mix = vec![0.25, 0.25, 0.25, 0.5];
+    cfg.router.route_window = 8;
+    cfg.shard.leader_service_s = 0.0015;
+    cfg.shard.rebalance_threshold = 16;
+    // leaders stay at the config default (1): the scenario models the
+    // leader bottleneck; --leaders / BENCH_LEADERS choose the shard count
+}
+
 fn build_dropout(cfg: &mut Config) {
     // one of the fast servers dies 8 virtual seconds in; the survivors
     // (1× 2080 Ti + 980 Ti) must absorb the re-routed queue. Offered
@@ -126,6 +147,11 @@ static SCENARIOS: &[Scenario] = &[
         name: "dropout",
         summary: "paper cluster; server 0 (a 2080 Ti) dies at t=8s",
         build: build_dropout,
+    },
+    Scenario {
+        name: "sharded-hot",
+        summary: "6x 2080Ti, 320 req/s slim-skewed; finite-capacity leaders (--leaders)",
+        build: build_sharded_hot,
     },
 ];
 
@@ -246,6 +272,12 @@ mod tests {
         assert!(bursty.workload.burst_factor >= 8.0);
         let edge = by_name("edge-fleet").unwrap().config();
         assert!(edge.devices.iter().all(|d| d == "gtx1650"));
+        let hot = by_name("sharded-hot").unwrap().config();
+        assert_eq!(hot.devices.len(), 6);
+        assert!(hot.shard.leader_service_s > 0.0);
+        assert!(hot.shard.rebalance_threshold > 0);
+        assert!(hot.router.route_window > 1);
+        assert_eq!(hot.shard.leaders, 1); // shard count is the caller's knob
         // paper scenario is the default config plus provenance
         let mut want = Config::default();
         want.scenario = Some("paper".to_string());
