@@ -103,6 +103,11 @@ fn main() {
             format!("{:.2}", out.report.energy.mean()),
             format!("{:.2}", edf.report.energy.mean()),
         ]);
+        edf_table.row(&[
+            "SLA miss rate".into(),
+            format!("{:.4}", out.sla_miss_rate()),
+            format!("{:.4}", edf.sla_miss_rate()),
+        ]);
         edf_table.print();
         assert_eq!(edf.report.completed, requests as u64);
 
@@ -111,6 +116,10 @@ fn main() {
         bench.metric("baseline_plan_clamps", out.plan_clamps as f64);
         bench.metric("edf_plan_clamps", edf.plan_clamps as f64);
         bench.metric("edf_e2e_p99_s", edf.e2e_latency.percentile(99.0));
+        // SLA-miss rates (completions past --sla, default 1 s) — the
+        // deadline counterpart of the latency row, per router
+        bench.metric("baseline_sla_miss_rate", out.sla_miss_rate());
+        bench.metric("edf_sla_miss_rate", edf.sla_miss_rate());
     }
 
     // qualitative signature (the saturation band is calibrated to the

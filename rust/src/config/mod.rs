@@ -57,11 +57,16 @@ pub struct RouterCfg {
     /// Nominal per-request soft SLA (s) used to derive
     /// `HeadView::slack_s` for deadline-aware routers.
     pub sla_s: f64,
+    /// Opt-in (`--state-slack`): append the head's SLA slack to the PPO
+    /// state vector as one extra feature. Off by default — the paper's
+    /// eq. 1 state — and `TelemetrySnapshot::state_dim` accounts for it,
+    /// so checkpoints are shape-incompatible across the flag.
+    pub state_slack: bool,
 }
 
 impl Default for RouterCfg {
     fn default() -> Self {
-        RouterCfg { route_window: 1, sla_s: 1.0 }
+        RouterCfg { route_window: 1, sla_s: 1.0, state_slack: false }
     }
 }
 
@@ -73,14 +78,19 @@ impl Default for RouterCfg {
 pub enum ShardAssignKind {
     Hash,
     RoundRobin,
+    /// Batch-key affinity: hash of `(segment, requested width)`, so
+    /// same-key requests concentrate on one leader and its FIFO grows
+    /// long same-segment runs (bigger micro-batch groups per decision).
+    KeyAffine,
 }
 
 impl ShardAssignKind {
-    /// Parse a CLI/JSON spelling (`hash` | `round-robin`).
+    /// Parse a CLI/JSON spelling (`hash` | `round-robin` | `key-affine`).
     pub fn parse(s: &str) -> Option<ShardAssignKind> {
         match s {
             "hash" => Some(ShardAssignKind::Hash),
             "round-robin" | "rr" => Some(ShardAssignKind::RoundRobin),
+            "key-affine" | "affine" => Some(ShardAssignKind::KeyAffine),
             _ => None,
         }
     }
@@ -89,6 +99,7 @@ impl ShardAssignKind {
         match self {
             ShardAssignKind::Hash => "hash",
             ShardAssignKind::RoundRobin => "round-robin",
+            ShardAssignKind::KeyAffine => "key-affine",
         }
     }
 }
@@ -395,6 +406,9 @@ impl Config {
         self.router.route_window =
             args.usize_or("route-window", self.router.route_window).max(1);
         self.router.sla_s = args.f64_or("sla", self.router.sla_s);
+        if args.flag("state-slack") {
+            self.router.state_slack = true;
+        }
         self.shard.leaders = args.usize_or("leaders", self.shard.leaders).max(1);
         self.shard.rebalance_threshold =
             args.usize_or("rebalance", self.shard.rebalance_threshold);
@@ -402,7 +416,7 @@ impl Config {
             args.f64_or("leader-service", self.shard.leader_service_s);
         if let Some(kind) = args.get("shard-assign") {
             self.shard.assign = ShardAssignKind::parse(kind).unwrap_or_else(|| {
-                panic!("--shard-assign expects hash|round-robin, got {kind:?}")
+                panic!("--shard-assign expects hash|round-robin|key-affine, got {kind:?}")
             });
         }
         self.scheduler.b_max = args.usize_or("b-max", self.scheduler.b_max);
@@ -458,6 +472,7 @@ impl Config {
                 obj(vec![
                     ("route_window", Json::Num(self.router.route_window as f64)),
                     ("sla_s", Json::Num(self.router.sla_s)),
+                    ("state_slack", Json::Bool(self.router.state_slack)),
                 ]),
             ),
             (
@@ -498,7 +513,21 @@ impl Config {
                     ("c_v", Json::Num(self.ppo.c_v)),
                     ("c_h", Json::Num(self.ppo.c_h)),
                     ("epochs", Json::Num(self.ppo.epochs as f64)),
+                    ("grad_clip", Json::Num(self.ppo.grad_clip)),
+                    ("eps_max", Json::Num(self.ppo.eps_max)),
+                    ("eps_min", Json::Num(self.ppo.eps_min)),
+                    ("t_dec", Json::Num(self.ppo.t_dec)),
                     ("horizon", Json::Num(self.ppo.horizon as f64)),
+                    (
+                        "groups",
+                        Json::Arr(
+                            self.ppo
+                                .groups
+                                .iter()
+                                .map(|&g| Json::Num(g as f64))
+                                .collect(),
+                        ),
+                    ),
                     (
                         "reward",
                         obj(vec![
@@ -506,6 +535,8 @@ impl Config {
                             ("beta", Json::Num(self.ppo.reward.beta)),
                             ("gamma", Json::Num(self.ppo.reward.gamma)),
                             ("delta", Json::Num(self.ppo.reward.delta)),
+                            ("bonus", Json::Num(self.ppo.reward.bonus)),
+                            ("center_acc", Json::Bool(self.ppo.reward.center_acc)),
                         ]),
                     ),
                 ]),
@@ -523,6 +554,7 @@ impl Config {
                         "total_requests",
                         Json::Num(self.workload.total_requests as f64),
                     ),
+                    ("width_mix", arr_f64(&self.workload.width_mix)),
                 ]),
             ),
         ])
@@ -557,6 +589,9 @@ impl Config {
             }
             if let Some(x) = r.get("sla_s").and_then(Json::as_f64) {
                 cfg.router.sla_s = x;
+            }
+            if let Some(x) = r.get("state_slack").and_then(Json::as_bool) {
+                cfg.router.state_slack = x;
             }
         }
         if let Some(sh) = json.get("shard") {
@@ -608,6 +643,15 @@ impl Config {
             if let Some(x) = w.get("burst_factor").and_then(Json::as_f64) {
                 cfg.workload.burst_factor = x;
             }
+            if let Some(x) = w.get("burst_period_s").and_then(Json::as_f64) {
+                cfg.workload.burst_period_s = x;
+            }
+            if let Some(x) = w.get("burst_duty").and_then(Json::as_f64) {
+                cfg.workload.burst_duty = x;
+            }
+            if let Some(x) = w.get("width_mix").and_then(Json::as_f64_vec) {
+                cfg.workload.width_mix = x;
+            }
             if let Some(x) = w.get("diurnal_period_s").and_then(Json::as_f64) {
                 cfg.workload.diurnal_period_s = x;
             }
@@ -616,14 +660,41 @@ impl Config {
             }
         }
         if let Some(p) = json.get("ppo") {
+            if let Some(x) = p.get("hidden").and_then(Json::as_usize_vec) {
+                cfg.ppo.hidden = x;
+            }
             if let Some(x) = p.get("lr").and_then(Json::as_f64) {
                 cfg.ppo.lr = x;
+            }
+            if let Some(x) = p.get("clip").and_then(Json::as_f64) {
+                cfg.ppo.clip = x;
+            }
+            if let Some(x) = p.get("c_v").and_then(Json::as_f64) {
+                cfg.ppo.c_v = x;
+            }
+            if let Some(x) = p.get("c_h").and_then(Json::as_f64) {
+                cfg.ppo.c_h = x;
+            }
+            if let Some(x) = p.get("grad_clip").and_then(Json::as_f64) {
+                cfg.ppo.grad_clip = x;
+            }
+            if let Some(x) = p.get("eps_max").and_then(Json::as_f64) {
+                cfg.ppo.eps_max = x;
+            }
+            if let Some(x) = p.get("eps_min").and_then(Json::as_f64) {
+                cfg.ppo.eps_min = x;
+            }
+            if let Some(x) = p.get("t_dec").and_then(Json::as_f64) {
+                cfg.ppo.t_dec = x;
             }
             if let Some(x) = p.get("horizon").and_then(Json::as_usize) {
                 cfg.ppo.horizon = x;
             }
             if let Some(x) = p.get("epochs").and_then(Json::as_usize) {
                 cfg.ppo.epochs = x;
+            }
+            if let Some(x) = p.get("groups").and_then(Json::as_usize_vec) {
+                cfg.ppo.groups = x;
             }
             if let Some(r) = p.get("reward") {
                 if let Some(x) = r.get("alpha").and_then(Json::as_f64) {
@@ -637,6 +708,12 @@ impl Config {
                 }
                 if let Some(x) = r.get("delta").and_then(Json::as_f64) {
                     cfg.ppo.reward.delta = x;
+                }
+                if let Some(x) = r.get("bonus").and_then(Json::as_f64) {
+                    cfg.ppo.reward.bonus = x;
+                }
+                if let Some(x) = r.get("center_acc").and_then(Json::as_bool) {
+                    cfg.ppo.reward.center_acc = x;
                 }
             }
         }
@@ -823,9 +900,83 @@ mod tests {
             Some(ShardAssignKind::RoundRobin)
         );
         assert_eq!(ShardAssignKind::parse("rr"), Some(ShardAssignKind::RoundRobin));
+        assert_eq!(
+            ShardAssignKind::parse("key-affine"),
+            Some(ShardAssignKind::KeyAffine)
+        );
+        assert_eq!(
+            ShardAssignKind::parse("affine"),
+            Some(ShardAssignKind::KeyAffine)
+        );
         assert_eq!(ShardAssignKind::parse("nope"), None);
         assert_eq!(ShardAssignKind::Hash.as_str(), "hash");
         assert_eq!(ShardAssignKind::RoundRobin.as_str(), "round-robin");
+        assert_eq!(ShardAssignKind::KeyAffine.as_str(), "key-affine");
+    }
+
+    #[test]
+    fn key_affine_assign_parses_and_roundtrips() {
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--leaders", "3", "--shard-assign", "key-affine"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.shard.assign, ShardAssignKind::KeyAffine);
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.shard.assign, ShardAssignKind::KeyAffine);
+    }
+
+    #[test]
+    fn state_slack_defaults_off_parses_and_roundtrips() {
+        let cfg = Config::default();
+        assert!(!cfg.router.state_slack); // paper's eq. 1 state by default
+
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--state-slack"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert!(cfg.router.state_slack);
+
+        let parsed = Config::from_json(&cfg.to_json());
+        assert!(parsed.router.state_slack);
+    }
+
+    #[test]
+    fn full_ppo_cfg_roundtrips_through_json() {
+        // the trace header must reconstruct the recording run's PPO
+        // hyper-parameters exactly — including the ones only JSON (not
+        // the CLI) can set — or `repro replay` retrains a different
+        // policy than the one the trace documents
+        let mut cfg = Config::default();
+        cfg.ppo.hidden = vec![32, 16];
+        cfg.ppo.clip = 0.3;
+        cfg.ppo.c_v = 0.7;
+        cfg.ppo.c_h = 0.05; // --entropy
+        cfg.ppo.grad_clip = 1.5;
+        cfg.ppo.eps_max = 0.4;
+        cfg.ppo.eps_min = 0.01;
+        cfg.ppo.t_dec = 9999.0;
+        cfg.ppo.groups = vec![1, 2, 8];
+        cfg.ppo.reward = RewardCfg::overfit(); // bonus/center_acc too
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.ppo, cfg.ppo);
+    }
+
+    #[test]
+    fn workload_shape_fields_roundtrip_through_json() {
+        // the trace header embeds to_json(); replay reconstructs with
+        // from_json — burst shape and width mix must survive the trip
+        let mut cfg = Config::default();
+        cfg.workload.burst_period_s = 4.0;
+        cfg.workload.burst_duty = 0.15;
+        cfg.workload.width_mix = vec![0.25, 0.25, 0.5];
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.workload.burst_period_s, 4.0);
+        assert_eq!(parsed.workload.burst_duty, 0.15);
+        assert_eq!(parsed.workload.width_mix, vec![0.25, 0.25, 0.5]);
     }
 
     #[test]

@@ -292,10 +292,15 @@ pub struct RunMetrics {
     /// surfaced in `RunOutcome` so silently-corrected routers are
     /// visible instead of vanishing into the repair.
     pub plan_clamps: u64,
+    /// The soft per-request SLA (s) completions are judged against
+    /// (`RouterCfg::sla_s`, fixed at construction).
+    pub sla_s: f64,
+    /// Completions whose end-to-end latency exceeded `sla_s`.
+    pub sla_misses: u64,
 }
 
 impl RunMetrics {
-    pub fn new(n_servers: usize, total: usize, n_widths: usize) -> Self {
+    pub fn new(n_servers: usize, total: usize, n_widths: usize, sla_s: f64) -> Self {
         RunMetrics {
             done: 0,
             total,
@@ -307,6 +312,8 @@ impl RunMetrics {
             width_histogram: vec![0; n_widths],
             blocks_completed: 0,
             plan_clamps: 0,
+            sla_s,
+            sla_misses: 0,
         }
     }
 
@@ -322,6 +329,9 @@ impl RunMetrics {
         self.done += 1;
         self.e2e_latency.record(e2e_latency_s);
         self.acc_sum += acc_pct;
+        if e2e_latency_s > self.sla_s {
+            self.sla_misses += 1;
+        }
     }
 
     pub fn all_done(&self) -> bool {
@@ -403,7 +413,7 @@ mod tests {
 
     #[test]
     fn run_metrics_accumulate() {
-        let mut m = RunMetrics::new(3, 2, 4);
+        let mut m = RunMetrics::new(3, 2, 4, 0.6);
         assert_eq!(m.width_histogram.len(), 4);
         assert!(!m.all_done());
         m.record_block(0.2, 30.0);
@@ -413,6 +423,8 @@ mod tests {
         assert_eq!(m.blocks_completed, 1);
         assert!((m.mean_accuracy() - 72.0).abs() < 1e-12);
         assert_eq!(m.e2e_latency.count(), 2);
+        // the 0.7 s completion blew the 0.6 s SLA; the 0.5 s one held it
+        assert_eq!(m.sla_misses, 1);
     }
 
     #[test]

@@ -24,6 +24,14 @@
 //! glue. An engine is plain data and `Send` — `ppo::parallel` constructs
 //! one per worker thread for concurrent rollouts.
 //!
+//! The trace layer (`crate::trace`) attaches here too: an optional
+//! [`TraceSink`] receives per-request lifecycle records (arrival, shard
+//! assignment, routing decisions incl. clamp repairs, dispatch,
+//! completion) and telemetry ticks, and [`Engine::set_arrivals`] replays
+//! a recorded arrival stream in place of the generated workload —
+//! together they make any run recordable and any recording replayable
+//! bit-identically.
+//!
 //! Virtual time (discrete events) makes a 20 k-request cluster run finish
 //! in tens of milliseconds, so PPO training over hundreds of thousands of
 //! scheduling steps is practical on one CPU.
@@ -31,14 +39,15 @@
 use crate::config::Config;
 use crate::metrics::{RunReport, Summary};
 use crate::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS};
-use crate::sim::{profiles, Link, SimDevice, VirtualClock, Workload};
+use crate::sim::{profiles, Link, SimDevice, VirtualClock, Workload, WorkloadEvent};
+use crate::trace::record::{TraceEvent, TraceSink};
 use crate::utilx::Rng;
 
 use super::core::{BlockLedger, BlockState, DeviceModel, EventQueue, LocalScheduler, RunMetrics};
 use super::greedy::{Dispatch, GreedyScheduler, GreedyStats};
 use super::queue::{head_runs, HeadRun, Queued};
 use super::request::Request;
-use super::router::{width_eq, BlockFeedback, HeadView, PlanError, Router};
+use super::router::{width_eq, BlockFeedback, Decision, HeadView, PlanError, Router};
 use super::shard::{
     assigner_for, global_tag, rebalance, split_tag, LeaderShard, ShardAssign,
     ShardStats,
@@ -92,9 +101,23 @@ pub struct RunOutcome {
     /// across the run — non-zero means a router emitted out-of-range
     /// servers/widths/groups that were silently corrected.
     pub plan_clamps: u64,
+    /// Completions whose end-to-end latency exceeded the soft SLA
+    /// (`RouterCfg::sla_s`) — the deadline counterpart of the latency
+    /// mean, surfaced per run for the EDF-vs-PPO SLA sweeps.
+    pub sla_misses: u64,
 }
 
 impl RunOutcome {
+    /// Fraction of completed requests that missed the soft SLA
+    /// (0 when nothing completed).
+    pub fn sla_miss_rate(&self) -> f64 {
+        if self.report.completed == 0 {
+            0.0
+        } else {
+            self.sla_misses as f64 / self.report.completed as f64
+        }
+    }
+
     /// Total segment executions across all widths.
     pub fn width_execs(&self) -> u64 {
         self.width_histogram.iter().map(|&(_, c)| c).sum()
@@ -150,6 +173,12 @@ pub struct Engine<R: Router, D: DeviceModel = SimDevice, S: LocalScheduler = Gre
     metrics: RunMetrics,
     /// Servers knocked out by a `DeviceDown` event.
     down: Vec<bool>,
+    /// Fixed arrival stream (trace replay) — replaces the generated
+    /// workload when set via [`Engine::set_arrivals`].
+    arrivals: Option<Vec<WorkloadEvent>>,
+    /// Trace sink: when installed, the engine's lifecycle hooks deliver
+    /// per-request records and telemetry ticks here (`crate::trace`).
+    sink: Option<Box<dyn TraceSink>>,
     /// Safety cap for pathological configurations.
     pub max_sim_time_s: f64,
 }
@@ -220,7 +249,8 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         );
         let n = devices.len();
         let total = cfg.workload.total_requests;
-        let mut metrics = RunMetrics::new(n, total, cfg.scheduler.widths.len());
+        let mut metrics =
+            RunMetrics::new(n, total, cfg.scheduler.widths.len(), cfg.router.sla_s);
         metrics.telemetry_log.shard_depths =
             vec![Summary::default(); routers.len()];
         Engine {
@@ -237,8 +267,39 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             clock: VirtualClock::new(),
             metrics,
             down: vec![false; n],
+            arrivals: None,
+            sink: None,
             max_sim_time_s: 3600.0,
             cfg,
+        }
+    }
+
+    /// Install a trace sink: the lifecycle hooks (arrival, shard
+    /// assignment, routing decision incl. clamp repairs, dispatch,
+    /// completion, telemetry tick) deliver [`TraceEvent`]s to it for the
+    /// whole run. Recording never touches the RNG stream, so a traced
+    /// run stays bit-identical to an untraced one.
+    pub fn set_trace_sink(&mut self, sink: Box<dyn TraceSink>) {
+        self.sink = Some(sink);
+    }
+
+    /// Replace the generated arrival stream with a fixed event list
+    /// (trace replay): the workload replays `events` verbatim while the
+    /// engine's own RNG stream stays identical to a generative run's.
+    /// The run budget (drain condition, done-fraction telemetry) is
+    /// reconciled to the event count, so a caller that skips
+    /// `trace::configure_for_replay` cannot silently run a short trace
+    /// into the safety cap.
+    pub fn set_arrivals(&mut self, events: Vec<WorkloadEvent>) {
+        self.metrics.total = events.len();
+        self.arrivals = Some(events);
+    }
+
+    /// Deliver one trace event. Callers gate on `self.sink.is_some()`
+    /// first so record construction stays off the untraced hot path.
+    fn emit(&mut self, ev: TraceEvent) {
+        if let Some(sink) = self.sink.as_mut() {
+            sink.record(&ev);
         }
     }
 
@@ -310,6 +371,14 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
     fn enqueue_leader(&mut self, req: Request) {
         let si = self.assign.assign(&req, self.shards.len());
         self.shards[si].stats.assigned += 1;
+        if self.sink.is_some() {
+            self.emit(TraceEvent::Assign {
+                t: self.clock.now(),
+                id: req.id,
+                seg: req.seg,
+                shard: si,
+            });
+        }
         self.shards[si].fifo.push_back(req);
     }
 
@@ -389,6 +458,9 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 .collect();
 
             let plan = self.shards[si].router.plan(&snap, &heads, &mut self.rng);
+            // pre-repair decisions, kept only while tracing so the trace
+            // can attribute clamp corrections to individual decisions
+            let mut pre_clamp: Option<Vec<Decision>> = None;
             let plan = match plan.validate(
                 heads.len(),
                 self.devices.len(),
@@ -405,6 +477,9 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 // clamp explicitly instead of indexing out of bounds,
                 // and surface the correction count instead of dropping it
                 Err(_) => {
+                    if self.sink.is_some() {
+                        pre_clamp = Some(plan.decisions().to_vec());
+                    }
                     let (repaired, clamped) = plan
                         .clamp(self.devices.len(), &self.cfg.scheduler.widths);
                     self.metrics.plan_clamps += clamped as u64;
@@ -447,6 +522,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                         req.block_tag = gtag;
                         req.routed_at = now;
                         req.enqueued_at = now;
+                        req.block_size = take;
                         Queued { req, width: d.width }
                     })
                     .collect();
@@ -455,11 +531,12 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             blocks.reverse();
 
             let mut routed_heads = 0usize;
-            for ((decision, run), entries) in
-                decisions.iter().zip(&runs).zip(blocks)
+            for (k, ((decision, run), entries)) in
+                decisions.iter().zip(&runs).zip(blocks).enumerate()
             {
                 debug_assert!(!entries.is_empty());
                 routed_heads += entries.len();
+                let block_size = entries.len();
                 let head_seg = run.seg;
 
                 // representative tuple for the partial-accuracy prior:
@@ -501,6 +578,31 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                     arrive = arrive.max(now + dt);
                 }
                 self.shards[si].stats.blocks += 1;
+                if self.sink.is_some() {
+                    // clamp corrections attributed per decision by
+                    // diffing against the pre-repair plan (0 otherwise)
+                    let clamped = pre_clamp.as_ref().map_or(0, |before| {
+                        let b = &before[k];
+                        (b.server != decision.server) as u64
+                            + (!width_eq(b.width, decision.width)) as u64
+                            + (b.group != decision.group) as u64
+                    });
+                    // router-local tag (the `shard` field disambiguates):
+                    // locals stay far below 2^53, so the JSON f64 number
+                    // is exact — the namespaced global tag would not be
+                    self.emit(TraceEvent::Route {
+                        t: now,
+                        shard: si,
+                        tag: decision.tag,
+                        seg: head_seg,
+                        server,
+                        width: decision.width,
+                        group: decision.group,
+                        size: block_size,
+                        clamped,
+                        arrive_t: arrive,
+                    });
+                }
                 self.push_event(arrive, EvKind::BlockArrive { server, entries });
             }
             self.shards[si].stats.routed_heads += routed_heads as u64;
@@ -582,11 +684,32 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 self.shards[fsi].router.feedback(&fb);
             }
 
+            // per-request energy: this member's 1/block_size slice of
+            // the block energy E_t = P̄·L, charged at the member's own
+            // completion instant — shares sum exactly to the recorded
+            // block energy when the block executes as one batch, and
+            // stay a faithful per-member attribution when it splits
+            // (the trace `done` record and the A/B harness pair on the
+            // per-request sum)
+            req.energy_j += snap.mean_power_w() * (now - req.routed_at)
+                / req.block_size.max(1) as f64;
+
             if req.advance(d.width, now, server) {
                 self.enqueue_leader(req);
             } else {
                 let acc = self.prior.lookup(&req.width_tuple());
-                self.metrics.record_request_done(now - req.arrival, acc);
+                let e2e = now - req.arrival;
+                self.metrics.record_request_done(e2e, acc);
+                if self.sink.is_some() {
+                    self.emit(TraceEvent::Done {
+                        t: now,
+                        id: req.id,
+                        e2e_s: e2e,
+                        energy_j: req.energy_j,
+                        slack_s: self.cfg.router.sla_s - e2e,
+                        widths: req.widths_used.to_vec(),
+                    });
+                }
             }
         }
         // freed instance may unblock queued batches
@@ -640,6 +763,12 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             &self.cfg.scheduler.widths,
             self.rng.split(0xA11),
         );
+        // trace replay: the same construction path (including the RNG
+        // split above) keeps the engine's RNG stream bit-identical to
+        // the recording run; only the arrival source changes
+        if let Some(events) = self.arrivals.take() {
+            workload = workload.with_trace(events);
+        }
         if let Some(first) = workload.next_event() {
             let req = Request::new(first.request_id, first.at, first.w_req);
             self.push_event(first.at, EvKind::Arrival(req));
@@ -662,6 +791,13 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             self.clock.advance_to(t);
             match ev {
                 EvKind::Arrival(req) => {
+                    if self.sink.is_some() {
+                        self.emit(TraceEvent::Arrival {
+                            t: self.clock.now(),
+                            id: req.id,
+                            w_req: req.w_req,
+                        });
+                    }
                     self.enqueue_leader(req);
                     if let Some(next) = workload.next_event() {
                         let r = Request::new(next.request_id, next.at, next.w_req);
@@ -697,6 +833,15 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                     let depths: Vec<usize> =
                         self.shards.iter().map(|s| s.fifo.len()).collect();
                     self.metrics.telemetry_log.record_shard_depths(&depths);
+                    if self.sink.is_some() {
+                        self.emit(TraceEvent::Tick {
+                            t: now,
+                            fifo: snap.fifo_len,
+                            done: snap.done_count,
+                            util: snap.servers.iter().map(|s| s.util_pct).collect(),
+                            power: snap.servers.iter().map(|s| s.power_w).collect(),
+                        });
+                    }
                     if !self.metrics.all_done() {
                         self.push_event(now + TELEMETRY_DT, EvKind::TelemetryTick);
                     }
@@ -774,6 +919,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             total_energy_j: total_energy,
             shard_stats,
             plan_clamps: m.plan_clamps,
+            sla_misses: m.sla_misses,
         };
         // shard 0's router is the one handed back: for single-leader runs
         // it is *the* router; for shared-policy PPO every replica is a
@@ -1020,6 +1166,180 @@ mod tests {
         let out = run_with(cfg, Box::new(RandomRouter::new(widths, true, 4)));
         assert_eq!(out.plan_clamps, 0);
         assert!(out.shard_stats.iter().all(|s| s.plan_clamps == 0));
+    }
+
+    #[test]
+    fn sla_misses_follow_the_configured_threshold() {
+        // an impossible SLA marks every completion late; a generous one
+        // marks none — and the rate is their ratio to completions
+        let mut strict = small_cfg(150, 200.0);
+        strict.router.sla_s = 1e-9;
+        let widths = strict.scheduler.widths.clone();
+        let out = run_with(strict, Box::new(RandomRouter::new(widths.clone(), true, 4)));
+        assert_eq!(out.sla_misses, 150);
+        assert!((out.sla_miss_rate() - 1.0).abs() < 1e-12);
+
+        let mut lax = small_cfg(150, 200.0);
+        lax.router.sla_s = 1e9;
+        let out = run_with(lax, Box::new(RandomRouter::new(widths, true, 4)));
+        assert_eq!(out.sla_misses, 0);
+        assert_eq!(out.sla_miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn trace_sink_captures_the_request_lifecycle() {
+        use crate::trace::record::TraceRecorder;
+
+        let cfg = small_cfg(80, 150.0);
+        let widths = cfg.scheduler.widths.clone();
+        let recorder = TraceRecorder::new(&cfg, "random");
+        let mut engine =
+            Engine::new(cfg, RandomRouter::new(widths, true, 4));
+        engine.set_trace_sink(Box::new(recorder.clone()));
+        let out = engine.run();
+        assert_eq!(out.report.completed, 80);
+
+        let events = recorder.events();
+        let mut arrivals = 0usize;
+        let mut assigns = 0usize;
+        let mut routes = 0usize;
+        let mut dones = 0usize;
+        let mut ticks = 0usize;
+        for ev in &events {
+            match ev {
+                TraceEvent::Arrival { .. } => arrivals += 1,
+                TraceEvent::Assign { .. } => assigns += 1,
+                TraceEvent::Route { size, clamped, .. } => {
+                    routes += 1;
+                    assert!(*size >= 1);
+                    assert_eq!(*clamped, 0); // well-behaved router
+                }
+                TraceEvent::Done { widths, e2e_s, .. } => {
+                    dones += 1;
+                    assert_eq!(widths.len(), NUM_SEGMENTS);
+                    assert!(*e2e_s > 0.0);
+                }
+                TraceEvent::Tick { .. } => ticks += 1,
+            }
+        }
+        assert_eq!(arrivals, 80);
+        assert_eq!(dones, 80);
+        // every request is assigned once per segment traversal
+        assert_eq!(assigns, 4 * 80);
+        assert!(routes > 0);
+        assert!(ticks > 0);
+        // per-request energy accrual sums (approximately) to the block
+        // energy mass: both integrate mean power over block latencies
+        let traced_energy: f64 = events
+            .iter()
+            .filter_map(|ev| match ev {
+                TraceEvent::Done { energy_j, .. } => Some(*energy_j),
+                _ => None,
+            })
+            .sum();
+        assert!(traced_energy > 0.0);
+    }
+
+    #[test]
+    fn per_request_energy_shares_sum_to_block_energy() {
+        use crate::trace::record::TraceRecorder;
+
+        // group 1 ⇒ every block has exactly one member completing at the
+        // block's own completion instant, so the per-member share equals
+        // the recorded block energy and the sums must agree exactly
+        let cfg = small_cfg(100, 150.0);
+        let widths = cfg.scheduler.widths.clone();
+        let recorder = TraceRecorder::new(&cfg, "random");
+        let mut engine =
+            Engine::new(cfg, RandomRouter::new(widths, true, 1));
+        engine.set_trace_sink(Box::new(recorder.clone()));
+        let out = engine.run();
+        assert_eq!(out.report.completed, 100);
+        let traced: f64 = recorder
+            .done_map()
+            .values()
+            .map(|d| d.energy_j)
+            .sum();
+        let block_mass =
+            out.report.energy.mean() * out.report.energy.count() as f64;
+        assert!(block_mass > 0.0);
+        assert!(
+            ((traced - block_mass) / block_mass).abs() < 1e-9,
+            "per-request energy {traced} vs block mass {block_mass}"
+        );
+    }
+
+    #[test]
+    fn tracing_does_not_perturb_the_run() {
+        use crate::trace::record::TraceRecorder;
+
+        let mk = |traced: bool| {
+            let cfg = small_cfg(120, 250.0);
+            let widths = cfg.scheduler.widths.clone();
+            let recorder = TraceRecorder::new(&cfg, "random");
+            let mut engine =
+                Engine::new(cfg, RandomRouter::new(widths, true, 4));
+            if traced {
+                engine.set_trace_sink(Box::new(recorder.clone()));
+            }
+            engine.run()
+        };
+        let plain = mk(false);
+        let traced = mk(true);
+        assert_eq!(plain.width_histogram, traced.width_histogram);
+        assert_eq!(
+            plain.report.latency.mean().to_bits(),
+            traced.report.latency.mean().to_bits()
+        );
+        assert_eq!(plain.total_energy_j.to_bits(), traced.total_energy_j.to_bits());
+    }
+
+    #[test]
+    fn clamped_decisions_are_attributed_in_the_trace() {
+        use crate::trace::record::TraceRecorder;
+
+        let cfg = small_cfg(60, 60.0);
+        let widths = cfg.scheduler.widths.clone();
+        let recorder = TraceRecorder::new(&cfg, "out-of-range");
+        let mut engine =
+            Engine::new(cfg, OutOfRangeRouter { widths, next_tag: 0 });
+        engine.set_trace_sink(Box::new(recorder.clone()));
+        let out = engine.run();
+        assert!(out.plan_clamps > 0);
+        let traced_clamps: u64 = recorder
+            .events()
+            .iter()
+            .filter_map(|ev| match ev {
+                TraceEvent::Route { clamped, .. } => Some(*clamped),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(traced_clamps, out.plan_clamps);
+    }
+
+    #[test]
+    fn replayed_arrivals_drive_the_run_verbatim() {
+        use crate::sim::WorkloadEvent;
+
+        // note the configured budget (50) deliberately disagrees with
+        // the replayed stream: set_arrivals reconciles the run budget to
+        // the event count, so the run drains instead of idling against
+        // the safety cap waiting for 47 arrivals that never come
+        let cfg = small_cfg(50, 100.0);
+        let widths = cfg.scheduler.widths.clone();
+        let arrivals = vec![
+            WorkloadEvent { at: 0.01, request_id: 0, w_req: 0.25 },
+            WorkloadEvent { at: 0.02, request_id: 1, w_req: 0.5 },
+            WorkloadEvent { at: 0.5, request_id: 2, w_req: 1.0 },
+        ];
+        let mut engine =
+            Engine::new(cfg, RandomRouter::new(widths, false, 4));
+        let cap = engine.max_sim_time_s;
+        engine.set_arrivals(arrivals);
+        let out = engine.run();
+        assert_eq!(out.report.completed, 3);
+        assert_eq!(out.e2e_latency.count(), 3);
+        assert!(out.sim_duration_s < cap, "replay idled into the safety cap");
     }
 
     #[test]

@@ -41,9 +41,11 @@ pub use greedy::GreedyScheduler;
 pub use instance::{Instance, InstancePool};
 pub use queue::{head_runs, HeadRun, KeyedFifo};
 pub use request::{wkey, BatchKey, Request};
-pub use router::{Decision, EdfRouter, HeadView, PlanError, Router, RoutingPlan};
+pub use router::{
+    AlgoRouter, Decision, EdfRouter, HeadView, PlanError, Router, RoutingPlan,
+};
 pub use shard::{
-    sharded_engine, HashAssign, RoundRobinAssign, ShardAssign, ShardStats,
-    ShardedEngine,
+    sharded_engine, HashAssign, KeyAffineAssign, RoundRobinAssign, ShardAssign,
+    ShardStats, ShardedEngine,
 };
 pub use telemetry::TelemetrySnapshot;

@@ -58,6 +58,21 @@ pub struct Request {
     pub last_server: Option<usize>,
     /// Tag of the routed block this request currently belongs to.
     pub block_tag: u64,
+    /// Members of the routed block this request currently rides in
+    /// (stamped at routing; 1 before the first routing decision) — the
+    /// divisor that turns block energy into a per-member share.
+    pub block_size: usize,
+    /// Energy (J) attributed to this request so far: each completed
+    /// segment charges its 1/`block_size` share of mean cluster power ×
+    /// time-since-routing — the per-member slice of the block energy the
+    /// paper's E_t = P̄·L measures. When a block executes as one batch
+    /// (the common case) the shares sum exactly to the recorded block
+    /// energy; a block split across device batches charges each member
+    /// at its *own* completion instant, so the per-request view is a
+    /// faithful attribution rather than an exact decomposition of the
+    /// block aggregate. The trace `done` records this sum and the A/B
+    /// harness pairs on it.
+    pub energy_j: f64,
 }
 
 impl Request {
@@ -73,6 +88,8 @@ impl Request {
             routed_at: arrival,
             last_server: None,
             block_tag: 0,
+            block_size: 1,
+            energy_j: 0.0,
         }
     }
 

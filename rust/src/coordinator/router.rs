@@ -569,6 +569,87 @@ impl Router for EdfRouter {
     }
 }
 
+/// The four algorithmic routers behind one cloneable, nameable type —
+/// what the CLI, the trace replay path and the counterfactual A/B
+/// harness build from a `--router` spelling. Construction parameters
+/// (width randomization, group caps) match the long-standing `repro
+/// simulate` arms exactly, so a trace recorded through the CLI replays
+/// bit-identically through this type. PPO keeps its own type (it carries
+/// training state and a checkpoint lifecycle).
+#[derive(Clone)]
+pub enum AlgoRouter {
+    Random(RandomRouter),
+    RoundRobin(RoundRobinRouter),
+    LeastLoaded(LeastLoadedRouter),
+    Edf(EdfRouter),
+}
+
+impl AlgoRouter {
+    /// Build the named router over the scenario's width set; None for
+    /// unknown spellings (see [`AlgoRouter::names`]).
+    pub fn by_name(name: &str, widths: &[f64]) -> Option<AlgoRouter> {
+        Some(match name {
+            "random" => {
+                AlgoRouter::Random(RandomRouter::new(widths.to_vec(), true, 8))
+            }
+            "round-robin" => {
+                AlgoRouter::RoundRobin(RoundRobinRouter::new(widths.to_vec(), 8))
+            }
+            "least-loaded" => {
+                AlgoRouter::LeastLoaded(LeastLoadedRouter::new(widths.to_vec(), 16))
+            }
+            "edf" => AlgoRouter::Edf(EdfRouter::new(widths.to_vec(), 16)),
+            _ => return None,
+        })
+    }
+
+    /// Every spelling [`AlgoRouter::by_name`] accepts.
+    pub fn names() -> Vec<&'static str> {
+        vec!["random", "round-robin", "least-loaded", "edf"]
+    }
+
+    fn inner(&mut self) -> &mut dyn Router {
+        match self {
+            AlgoRouter::Random(r) => r,
+            AlgoRouter::RoundRobin(r) => r,
+            AlgoRouter::LeastLoaded(r) => r,
+            AlgoRouter::Edf(r) => r,
+        }
+    }
+}
+
+impl Router for AlgoRouter {
+    fn name(&self) -> &'static str {
+        match self {
+            AlgoRouter::Random(r) => r.name(),
+            AlgoRouter::RoundRobin(r) => r.name(),
+            AlgoRouter::LeastLoaded(r) => r.name(),
+            AlgoRouter::Edf(r) => r.name(),
+        }
+    }
+
+    fn plan(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        heads: &[HeadView],
+        rng: &mut Rng,
+    ) -> RoutingPlan {
+        self.inner().plan(snap, heads, rng)
+    }
+
+    fn feedback(&mut self, fb: &BlockFeedback) {
+        self.inner().feedback(fb)
+    }
+
+    fn abandon(&mut self, tag: u64) {
+        self.inner().abandon(tag)
+    }
+
+    fn end_of_run(&mut self) {
+        self.inner().end_of_run()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -733,6 +814,31 @@ mod tests {
         let plan = r.plan(&s, &hs, &mut rng);
         assert_eq!(plan.len(), 2);
         assert!(plan.validate(2, 2, &W).is_ok());
+    }
+
+    #[test]
+    fn algo_router_by_name_matches_the_direct_constructions() {
+        // every spelling resolves, reports the inner name, and plans the
+        // same decision stream as the directly built router
+        let s = snap(&[3, 1, 2], &[10.0, 20.0, 30.0]);
+        let hs = heads(4);
+        for name in AlgoRouter::names() {
+            let mut r = AlgoRouter::by_name(name, &W).unwrap();
+            assert_eq!(r.name(), name);
+            let mut rng = Rng::new(21);
+            let plan = r.plan(&s, &hs, &mut rng);
+            assert!(plan.validate(hs.len(), 3, &W).is_ok(), "{name}");
+        }
+        assert!(AlgoRouter::by_name("marsbase", &W).is_none());
+
+        let mut rng_a = Rng::new(33);
+        let mut rng_b = rng_a.clone();
+        let mut via_enum = AlgoRouter::by_name("random", &W).unwrap();
+        let mut direct = RandomRouter::new(W.to_vec(), true, 8);
+        assert_eq!(
+            via_enum.plan(&s, &hs, &mut rng_a).into_decisions(),
+            direct.plan(&s, &hs, &mut rng_b).into_decisions()
+        );
     }
 
     #[test]

@@ -10,8 +10,10 @@
 //! clock, and per-shard telemetry counters.
 //!
 //! * [`ShardAssign`] — deterministic request→shard placement, with
-//!   [`HashAssign`] (pure function of the request id) and
-//!   [`RoundRobinAssign`] (cursor in enqueue order) behind it. Both are
+//!   [`HashAssign`] (pure function of the request id),
+//!   [`RoundRobinAssign`] (cursor in enqueue order) and
+//!   [`KeyAffineAssign`] (pure function of the batch key `(seg, w_req)`,
+//!   concentrating same-key runs on one leader) behind it. All are
 //!   pure functions of the (seeded, deterministic) event stream, so
 //!   sharded runs stay reproducible across `--workers` counts.
 //! * [`rebalance`] — the optional cross-shard step: when the deepest and
@@ -117,11 +119,32 @@ impl ShardAssign for RoundRobinAssign {
     }
 }
 
+/// Batch-key affinity: shard = mix64(segment, requested width) mod N.
+/// All requests sharing a batch key land on one leader, so its FIFO
+/// grows long same-segment runs — exactly what lets a windowed plan
+/// issue large micro-batch groups per decision. Stateless and a pure
+/// function of `(seg, w_req)`, so placement is deterministic per seed
+/// and worker count; a request *changes* shard as it crosses segments
+/// (by design — affinity is to the key, not to the request).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KeyAffineAssign;
+
+impl ShardAssign for KeyAffineAssign {
+    fn name(&self) -> &'static str {
+        "key-affine"
+    }
+    fn assign(&mut self, req: &Request, n_shards: usize) -> usize {
+        let key = ((req.seg as u64) << 32) | super::request::wkey(req.w_req) as u64;
+        (mix64(key) % n_shards.max(1) as u64) as usize
+    }
+}
+
 /// Build the configured assignment policy.
 pub fn assigner_for(kind: ShardAssignKind) -> Box<dyn ShardAssign> {
     match kind {
         ShardAssignKind::Hash => Box::new(HashAssign),
         ShardAssignKind::RoundRobin => Box::new(RoundRobinAssign::default()),
+        ShardAssignKind::KeyAffine => Box::new(KeyAffineAssign),
     }
 }
 
@@ -322,6 +345,54 @@ mod tests {
             assigner_for(ShardAssignKind::RoundRobin).name(),
             "round-robin"
         );
+        assert_eq!(
+            assigner_for(ShardAssignKind::KeyAffine).name(),
+            "key-affine"
+        );
+    }
+
+    #[test]
+    fn key_affine_concentrates_same_key_requests_on_one_shard() {
+        let mut a = KeyAffineAssign;
+        // every request with the same (seg, w_req) lands on one shard,
+        // regardless of request id
+        let mut r1 = req(1, 2);
+        r1.w_req = 0.5;
+        let home = a.assign(&r1, 4);
+        for id in 2..40u64 {
+            let mut r = req(id, 2);
+            r.w_req = 0.5;
+            assert_eq!(a.assign(&r, 4), home, "id {id}");
+        }
+        // distinct keys spread: over the 4 segments × 4 widths key grid
+        // at least two shards are hit (16 keys over 4 shards)
+        let mut seen = std::collections::BTreeSet::new();
+        for seg in 0..4usize {
+            for &w in &[0.25, 0.5, 0.75, 1.0] {
+                let mut r = req(99, seg);
+                r.w_req = w;
+                let s = a.assign(&r, 4);
+                assert!(s < 4);
+                seen.insert(s);
+            }
+        }
+        assert!(seen.len() >= 2, "all 16 keys collapsed onto {seen:?}");
+        // one shard degenerates to 0
+        assert_eq!(a.assign(&req(7, 1), 1), 0);
+    }
+
+    #[test]
+    fn key_affine_moves_requests_between_shards_across_segments() {
+        // affinity is to the batch key, not the request: as a request
+        // advances through segments its shard may change; what must hold
+        // is that the mapping is a pure function of (seg, w_req)
+        let mut a = KeyAffineAssign;
+        let mut b = KeyAffineAssign;
+        for seg in 0..4usize {
+            let mut r = req(5, seg);
+            r.w_req = 0.75;
+            assert_eq!(a.assign(&r, 8), b.assign(&r, 8));
+        }
     }
 
     #[test]

@@ -30,14 +30,20 @@ pub struct TelemetrySnapshot {
 }
 
 impl TelemetrySnapshot {
-    /// State dimension for N servers: 2 global + 3 per server.
-    pub fn state_dim(n_servers: usize) -> usize {
-        2 + 3 * n_servers
+    /// State dimension for N servers: 2 global + 3 per server, plus one
+    /// trailing per-head SLA-slack feature when `state_slack` is on
+    /// (`RouterCfg::state_slack` / `--state-slack` — the PPO router
+    /// appends the head's clamped slack after the snapshot features, so
+    /// the policy input grows by exactly one dimension).
+    pub fn state_dim(n_servers: usize, state_slack: bool) -> usize {
+        2 + 3 * n_servers + state_slack as usize
     }
 
-    /// Normalized observation vector for the PPO router.
+    /// Normalized observation vector for the PPO router (the snapshot
+    /// part only — the optional slack feature is per-head and appended
+    /// by the router).
     pub fn to_state_vector(&self) -> Vec<f64> {
-        let mut v = Vec::with_capacity(Self::state_dim(self.servers.len()));
+        let mut v = Vec::with_capacity(Self::state_dim(self.servers.len(), false));
         v.push((self.fifo_len as f64 / 64.0).min(4.0));
         v.push(self.done_count as f64 / (self.total_requests.max(1) as f64));
         for s in &self.servers {
@@ -138,10 +144,20 @@ mod tests {
     }
 
     #[test]
+    fn state_dim_accounts_for_the_optional_slack_feature() {
+        assert_eq!(TelemetrySnapshot::state_dim(3, false), 11);
+        assert_eq!(TelemetrySnapshot::state_dim(3, true), 12);
+        assert_eq!(
+            TelemetrySnapshot::state_dim(5, true),
+            TelemetrySnapshot::state_dim(5, false) + 1
+        );
+    }
+
+    #[test]
     fn state_vector_dimension_and_normalization() {
         let s = snap(&[50.0, 80.0, 20.0]);
         let v = s.to_state_vector();
-        assert_eq!(v.len(), TelemetrySnapshot::state_dim(3));
+        assert_eq!(v.len(), TelemetrySnapshot::state_dim(3, false));
         assert!(v.iter().all(|x| x.is_finite()));
         // util entries normalized to [0,1]
         assert!((v[4] - 0.5).abs() < 1e-12);

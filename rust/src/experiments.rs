@@ -77,11 +77,12 @@ pub fn run_random_baseline(cfg: &Config) -> RunOutcome {
 pub fn train_ppo(cfg: &Config, reward: RewardCfg, episodes: usize) -> PpoRouter {
     let mut ppo_cfg = cfg.ppo.clone();
     ppo_cfg.reward = reward;
-    let mut router = PpoRouter::new(
+    let mut router = PpoRouter::with_state_slack(
         cfg.devices.len(),
         cfg.scheduler.widths.clone(),
         ppo_cfg,
         cfg.seed,
+        cfg.router.state_slack,
     );
     for ep in 0..episodes {
         let mut episode_cfg = cfg.clone();
@@ -121,6 +122,25 @@ pub fn run_ppo_experiment(
     run_ppo_experiment_workers(cfg, reward, train_episodes, 1)
 }
 
+/// The Tables IV/V evaluation protocol, up to (but not including) the
+/// measured episode: train under `cfg`, freeze the policy, and shift to
+/// the fresh evaluation seed. Callers run the returned `(eval_cfg,
+/// router)` pair through whatever episode harness they need (plain,
+/// traced, or replayed) — one definition, so the CLI and the table
+/// benches can never drift on what "train then evaluate" means.
+pub fn prepare_ppo_eval(
+    cfg: &Config,
+    reward: RewardCfg,
+    train_episodes: usize,
+    workers: usize,
+) -> (Config, PpoRouter) {
+    let mut router = train_ppo_workers(cfg, reward, train_episodes, workers);
+    router.eval_mode();
+    let mut eval_cfg = cfg.clone();
+    eval_cfg.seed = cfg.seed.wrapping_add(0xEA1);
+    (eval_cfg, router)
+}
+
 /// [`run_ppo_experiment`] with a parallel-rollout worker count.
 pub fn run_ppo_experiment_workers(
     cfg: &Config,
@@ -128,10 +148,7 @@ pub fn run_ppo_experiment_workers(
     train_episodes: usize,
     workers: usize,
 ) -> (RunOutcome, PpoRouter) {
-    let mut router = train_ppo_workers(cfg, reward, train_episodes, workers);
-    router.eval_mode();
-    let mut eval_cfg = cfg.clone();
-    eval_cfg.seed = cfg.seed.wrapping_add(0xEA1);
+    let (eval_cfg, router) = prepare_ppo_eval(cfg, reward, train_episodes, workers);
     let (outcome, router) = run_ppo_episode(&eval_cfg, router);
     (outcome, router)
 }

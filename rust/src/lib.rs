@@ -26,6 +26,9 @@
 //! * [`ppo`] — from-scratch MLP/Adam/factored-categorical PPO.
 //! * [`runtime`] — PJRT artifact loading and execution (the real
 //!   inference path; zero python at serve time).
+//! * [`trace`] — trace record/replay + counterfactual router A/B:
+//!   byte-deterministic JSONL lifecycle traces, fixed-arrival replay,
+//!   paired per-request delta reports.
 //! * [`benchx`] — mini statistical bench harness (criterion substitute).
 
 pub mod benchx;
@@ -37,6 +40,7 @@ pub mod model;
 pub mod ppo;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod utilx;
 
 /// Crate-wide result alias.

@@ -1,17 +1,25 @@
 //! `repro` — the Slim Scheduler CLI.
 //!
 //! Subcommands:
-//!   simulate   run one cluster experiment (choose --router / --reward)
-//!   tables     regenerate paper tables (I, II, III, IV, V)
-//!   figures    regenerate paper figures (1, 2, 3) as data series
-//!   train-ppo  train a PPO router, print learning curve, checkpoint it
-//!   scenarios  list the registered cluster/workload scenarios
-//!   accuracy   query the width-tuple accuracy prior
-//!   serve      real-inference smoke: route batches through PJRT CPU
+//!   simulate      run one cluster experiment (choose --router / --reward;
+//!                 --trace-out records the run as a JSONL trace)
+//!   replay        re-run a recorded trace's arrivals through any router
+//!                 (--trace-in; --trace-out re-records the replay)
+//!   trace-compare counterfactual A/B: N routers over one trace, paired
+//!                 per-request deltas into BENCH_trace_ab.json
+//!   tables        regenerate paper tables (I, II, III, IV, V)
+//!   figures       regenerate paper figures (1, 2, 3) as data series
+//!   train-ppo     train a PPO router, print learning curve, checkpoint it
+//!   scenarios     list the registered cluster/workload scenarios
+//!   accuracy      query the width-tuple accuracy prior
+//!   serve         real-inference smoke: route batches through PJRT CPU
 //!
 //! Examples:
 //!   repro simulate --router ppo --reward overfit --requests 5000
 //!   repro simulate --scenario hetero-mixed --router least-loaded
+//!   repro simulate --router random --requests 2000 --trace-out run.jsonl
+//!   repro replay --trace-in run.jsonl --router edf
+//!   repro trace-compare --trace-in run.jsonl --routers random,edf
 //!   repro tables --which 4 --scenario dropout
 //!   repro figures --which 1
 //!   repro train-ppo --episodes 10 --workers 4 --out ppo.json
@@ -19,13 +27,18 @@
 
 use slim_scheduler::benchx::Table;
 use slim_scheduler::config::Config;
-use slim_scheduler::coordinator::router::{EdfRouter, LeastLoadedRouter, RoundRobinRouter};
-use slim_scheduler::coordinator::sharded_engine;
+use slim_scheduler::coordinator::router::AlgoRouter;
+use slim_scheduler::coordinator::{sharded_engine, RunOutcome};
 use slim_scheduler::experiments;
 use slim_scheduler::model::{AccuracyPrior, ModelMeta, WIDTHS};
 use slim_scheduler::ppo::router_impl::width_marginal;
+use slim_scheduler::ppo::{run_ppo_episode_io, PpoRouter};
 use slim_scheduler::runtime::{HostTensor, SegmentExecutor};
-use slim_scheduler::utilx::{Args, Rng};
+use slim_scheduler::trace::{
+    compare_routers, configure_for_replay, write_report, Trace, TraceRecorder,
+    TraceSink,
+};
+use slim_scheduler::utilx::{Args, Json, Rng};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()
@@ -40,15 +53,20 @@ fn main() -> anyhow::Result<()> {
         .describe("sla", "soft per-request SLA (s) exposed to routers as deadline slack")
         .describe("leaders", "leader shards the global FIFO splits across (1 = paper single leader)")
         .describe("rebalance", "cross-shard rebalance threshold in requests (0 = off)")
-        .describe("shard-assign", "request->shard policy: hash|round-robin")
+        .describe("shard-assign", "request->shard policy: hash|round-robin|key-affine")
         .describe("leader-service", "leader routing service time per head (s, 0 = infinitely fast)")
+        .describe("state-slack", "append per-head SLA slack to the PPO state vector (opt-in)")
+        .describe("trace-out", "record the run as a JSONL trace at this path")
+        .describe("trace-in", "replay/compare a recorded JSONL trace (replay, trace-compare)")
+        .describe("routers", "comma list for trace-compare; first is the baseline (default random,edf)")
+        .describe("checkpoint", "PPO checkpoint to load instead of training (simulate, replay)")
         .describe("dropout", "kill server mid-run: server@time, e.g. 0@5.0")
         .describe("diurnal-period", "sinusoidal load cycle length (s, 0=off)")
         .describe("diurnal-depth", "sinusoidal load modulation depth [0,1)")
         .describe("seed", "rng seed")
         .describe("which", "table/figure number to regenerate")
         .describe("artifacts-dir", "AOT artifacts directory (serve)")
-        .describe("out", "output path (train-ppo checkpoint)");
+        .describe("out", "output path (train-ppo checkpoint; trace-compare report)");
 
     if args.wants_help() {
         print!("{}", args.help_text("repro <subcommand> [flags]"));
@@ -57,6 +75,8 @@ fn main() -> anyhow::Result<()> {
 
     match args.subcommand.as_deref() {
         Some("simulate") => cmd_simulate(&args),
+        Some("replay") => cmd_replay(&args),
+        Some("trace-compare") => cmd_trace_compare(&args),
         Some("tables") => cmd_tables(&args),
         Some("figures") => cmd_figures(&args),
         Some("train-ppo") => cmd_train_ppo(&args),
@@ -79,78 +99,83 @@ fn base_cfg(args: &Args) -> Config {
     cfg
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let cfg = base_cfg(args);
-    let router = args.str_or("router", "random");
-    println!(
-        "router={router} scenario={} requests={} rate={}/s devices={:?} route_window={} leaders={}",
-        cfg.scenario.as_deref().unwrap_or("paper(default)"),
-        cfg.workload.total_requests,
-        cfg.workload.rate_hz,
-        cfg.devices,
-        cfg.router.route_window,
-        cfg.shard.leaders
-    );
-    let outcome = match router.as_str() {
-        "random" => experiments::run_random_baseline(&cfg),
-        "round-robin" => sharded_engine(
-            cfg.clone(),
-            RoundRobinRouter::new(cfg.scheduler.widths.clone(), 8),
-        )
-        .run(),
-        "least-loaded" => sharded_engine(
-            cfg.clone(),
-            LeastLoadedRouter::new(cfg.scheduler.widths.clone(), 16),
-        )
-        .run(),
-        "edf" => sharded_engine(
-            cfg.clone(),
-            EdfRouter::new(cfg.scheduler.widths.clone(), 16),
-        )
-        .run(),
-        "ppo" => {
-            if let Some(path) = args.get("checkpoint") {
-                // serve a previously trained policy (no training)
-                let text = std::fs::read_to_string(path)?;
-                let json = slim_scheduler::utilx::Json::parse(&text)
-                    .map_err(|e| anyhow::anyhow!("{e}"))?;
-                let mut router = slim_scheduler::ppo::PpoRouter::new(
-                    cfg.devices.len(),
-                    cfg.scheduler.widths.clone(),
-                    cfg.ppo.clone(),
-                    cfg.seed,
-                );
-                anyhow::ensure!(
-                    router.load_weights(&json),
-                    "checkpoint {path} does not match the policy shape"
-                );
-                router.eval_mode();
-                println!("loaded checkpoint {path}");
-                slim_scheduler::ppo::run_ppo_episode(&cfg, router).0
-            } else {
-                let episodes = args.usize_or("episodes", 8);
-                let workers = args.usize_or("workers", 1);
-                let reward = cfg.ppo.reward; // preset + --alpha/... overrides
-                let (out, router) = experiments::run_ppo_experiment_workers(
-                    &cfg, reward, episodes, workers,
-                );
-                println!(
-                    "ppo: {} updates ({} workers), final mean reward {:.3}",
-                    router.stats.updates,
-                    workers,
-                    router.stats.reward_history.last().copied().unwrap_or(0.0)
-                );
-                out
-            }
-        }
-        other => anyhow::bail!("unknown router {other}"),
-    };
+/// Persist a recording if one was requested (shared by simulate/replay).
+fn finish_trace(
+    recorder: &Option<TraceRecorder>,
+    trace_out: &Option<String>,
+) -> anyhow::Result<()> {
+    if let (Some(rec), Some(path)) = (recorder, trace_out) {
+        rec.write(path)?;
+        println!("trace written to {path} ({} records)", rec.len());
+    }
+    Ok(())
+}
+
+/// The PPO checkpoint-or-train entry shared by simulate and replay:
+/// loads `--checkpoint` into an eval-mode router, or trains one per
+/// `--episodes`/`--workers` and freezes it. The returned (cfg, router)
+/// pair is what the measured episode runs under. `shift_eval_seed`
+/// selects the Tables IV/V protocol (train on `cfg.seed`, measure on a
+/// fresh evaluation seed — `simulate`); `replay` passes false so the
+/// measured episode runs under the trace header's seed verbatim and a
+/// replay-recorded PPO trace is a fixed point of replaying itself.
+/// (Faithfully reproducing a trained-PPO recording still requires
+/// `--checkpoint` — retraining from the header's eval seed cannot
+/// recover the original policy.)
+fn ppo_for_run(
+    args: &Args,
+    cfg: &Config,
+    shift_eval_seed: bool,
+) -> anyhow::Result<(Config, PpoRouter)> {
+    if let Some(path) = args.get("checkpoint") {
+        // serve a previously trained policy (no training)
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut router = PpoRouter::for_config(cfg);
+        anyhow::ensure!(
+            router.load_weights(&json),
+            "checkpoint {path} does not match the policy shape \
+             (state-slack checkpoints need --state-slack)"
+        );
+        router.eval_mode();
+        println!("loaded checkpoint {path}");
+        Ok((cfg.clone(), router))
+    } else {
+        let episodes = args.usize_or("episodes", 8);
+        let workers = args.usize_or("workers", 1);
+        let reward = cfg.ppo.reward; // preset + --alpha/... overrides
+        let (run_cfg, router) = if shift_eval_seed {
+            // the Tables IV/V protocol (one definition: experiments.rs)
+            experiments::prepare_ppo_eval(cfg, reward, episodes, workers)
+        } else {
+            let mut router =
+                experiments::train_ppo_workers(cfg, reward, episodes, workers);
+            router.eval_mode();
+            (cfg.clone(), router)
+        };
+        println!(
+            "ppo: {} updates ({} workers), final mean reward {:.3}",
+            router.stats.updates,
+            workers,
+            router.stats.reward_history.last().copied().unwrap_or(0.0)
+        );
+        Ok((run_cfg, router))
+    }
+}
+
+fn print_outcome(outcome: &RunOutcome) {
     print!("{}", outcome.report.to_table());
     println!("width histogram (width, execs): {:?}", outcome.width_histogram);
     println!(
         "e2e latency: mean {:.1} ms  p99 {:.1} ms",
         outcome.e2e_latency.mean() * 1e3,
         outcome.e2e_latency.percentile(99.0) * 1e3
+    );
+    println!(
+        "sla misses: {} of {} ({:.2}%)",
+        outcome.sla_misses,
+        outcome.report.completed,
+        outcome.sla_miss_rate() * 100.0
     );
     println!(
         "sim duration {:.1}s, total energy {:.0} J",
@@ -169,6 +194,153 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if outcome.plan_clamps > 0 {
         println!("plan clamps (router fields repaired): {}", outcome.plan_clamps);
     }
+}
+
+/// Run one engine episode of `router_name` under `cfg`, optionally fed
+/// by a fixed arrival stream and/or recorded to `trace_out` — the shared
+/// body of `simulate` (arrivals = None) and `replay` (arrivals = Some).
+fn run_routed(
+    args: &Args,
+    cfg: &Config,
+    router_name: &str,
+    arrivals: Option<Vec<slim_scheduler::sim::WorkloadEvent>>,
+    trace_out: &Option<String>,
+) -> anyhow::Result<RunOutcome> {
+    if let Some(algo) = AlgoRouter::by_name(router_name, &cfg.scheduler.widths) {
+        let recorder = trace_out.as_ref().map(|_| TraceRecorder::new(cfg, router_name));
+        let mut engine = sharded_engine(cfg.clone(), algo);
+        if let Some(events) = arrivals {
+            engine.set_arrivals(events);
+        }
+        if let Some(rec) = &recorder {
+            engine.set_trace_sink(Box::new(rec.clone()));
+        }
+        let out = engine.run();
+        finish_trace(&recorder, trace_out)?;
+        Ok(out)
+    } else if router_name == "ppo" {
+        // replay (arrivals set) keeps the configured seed verbatim;
+        // simulate shifts to the fresh Tables IV/V evaluation seed
+        let (run_cfg, router) = ppo_for_run(args, cfg, arrivals.is_none())?;
+        let recorder =
+            trace_out.as_ref().map(|_| TraceRecorder::new(&run_cfg, "ppo"));
+        let sink = recorder
+            .as_ref()
+            .map(|rec| Box::new(rec.clone()) as Box<dyn TraceSink>);
+        let (out, _router) = run_ppo_episode_io(&run_cfg, router, arrivals, sink);
+        finish_trace(&recorder, trace_out)?;
+        Ok(out)
+    } else {
+        anyhow::bail!(
+            "unknown router {router_name} (known: {}, ppo)",
+            AlgoRouter::names().join(", ")
+        )
+    }
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = base_cfg(args);
+    let router = args.str_or("router", "random");
+    println!(
+        "router={router} scenario={} requests={} rate={}/s devices={:?} route_window={} leaders={}",
+        cfg.scenario.as_deref().unwrap_or("paper(default)"),
+        cfg.workload.total_requests,
+        cfg.workload.rate_hz,
+        cfg.devices,
+        cfg.router.route_window,
+        cfg.shard.leaders
+    );
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let outcome = run_routed(args, &cfg, &router, None, &trace_out)?;
+    print_outcome(&outcome);
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("trace-in")
+        .ok_or_else(|| anyhow::anyhow!("replay needs --trace-in <trace.jsonl>"))?;
+    let trace = Trace::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    // the embedded header config reconstructs the recording run;
+    // explicit CLI flags (applied after) override it, and the request
+    // budget always becomes the trace's arrival count
+    let mut cfg = trace.config().unwrap_or_default();
+    cfg.apply_args(args);
+    configure_for_replay(&mut cfg, &trace);
+    let router = args
+        .get("router")
+        .map(str::to_string)
+        .or_else(|| trace.router.clone())
+        .unwrap_or_else(|| "random".to_string());
+    println!(
+        "replaying {path}: {} arrivals, router={router}, leaders={}, seed={}",
+        cfg.workload.total_requests, cfg.shard.leaders, cfg.seed
+    );
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let outcome =
+        run_routed(args, &cfg, &router, Some(trace.arrivals().to_vec()), &trace_out)?;
+    print_outcome(&outcome);
+    Ok(())
+}
+
+fn cmd_trace_compare(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("trace-in")
+        .ok_or_else(|| anyhow::anyhow!("trace-compare needs --trace-in <trace.jsonl>"))?;
+    let trace = Trace::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut cfg = trace.config().unwrap_or_default();
+    cfg.apply_args(args);
+    let routers: Vec<String> = args
+        .str_or("routers", "random,edf")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    println!(
+        "counterfactual A/B over {path}: {} arrivals, routers {:?} (baseline {})",
+        trace.arrivals().len(),
+        routers,
+        routers.first().map(String::as_str).unwrap_or("?")
+    );
+    let report =
+        compare_routers(&cfg, &trace, &routers).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut table = Table::new(
+        "Paired per-request deltas vs baseline (candidate − baseline)",
+        &[
+            "router",
+            "n",
+            "lat_delta_s",
+            "energy_delta_j",
+            "width_delta",
+            "miss_rate_delta",
+            "wins",
+            "losses",
+        ],
+    );
+    if let Some(pairs) = report.get("pairs").and_then(Json::as_arr) {
+        for pair in pairs {
+            let s = |k: &str| {
+                pair.get(k).and_then(Json::as_str).unwrap_or("?").to_string()
+            };
+            let n = |k: &str| pair.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+            table.row(&[
+                s("router"),
+                format!("{}", n("n_pairs") as u64),
+                format!("{:+.4}", n("latency_delta_mean_s")),
+                format!("{:+.2}", n("energy_delta_mean_j")),
+                format!("{:+.3}", n("width_delta_mean")),
+                format!("{:+.4}", n("sla_miss_rate_delta")),
+                format!("{}", n("wins") as u64),
+                format!("{}", n("losses") as u64),
+            ]);
+        }
+    }
+    table.print();
+
+    let out = args.str_or("out", "BENCH_trace_ab.json");
+    write_report(&report, &out)?;
+    println!("A/B report written to {out}");
     Ok(())
 }
 

@@ -28,5 +28,7 @@ pub use buffer::{RolloutBuffer, Transition};
 pub use mlp::Mlp;
 pub use parallel::train_parallel;
 pub use policy::{ActionTriple, BatchHeadEval, Policy, PolicyEval};
-pub use router_impl::{run_ppo_episode, PpoRouter, SharedPpoRouter, TrainStats};
+pub use router_impl::{
+    run_ppo_episode, run_ppo_episode_io, PpoRouter, SharedPpoRouter, TrainStats,
+};
 pub use update::ppo_update;

@@ -68,11 +68,12 @@ pub fn train_parallel(
     let workers = workers.max(1);
     let mut ppo_cfg = cfg.ppo.clone();
     ppo_cfg.reward = reward;
-    let mut central = PpoRouter::new(
+    let mut central = PpoRouter::with_state_slack(
         cfg.devices.len(),
         cfg.scheduler.widths.clone(),
         ppo_cfg,
         cfg.seed,
+        cfg.router.state_slack,
     );
 
     let mut ep = 0usize;

@@ -28,6 +28,8 @@ use crate::coordinator::router::{
 };
 use crate::coordinator::telemetry::TelemetrySnapshot;
 use crate::coordinator::{Engine, RunOutcome};
+use crate::sim::WorkloadEvent;
+use crate::trace::record::TraceSink;
 use crate::utilx::{Json, Rng};
 
 use super::adam::Adam;
@@ -64,9 +66,25 @@ pub struct PpoRouter {
     collect_only: bool,
     /// Normalized mean prior for the optional zero-mean centering.
     prior_mean_norm: f64,
+    /// Append the head's SLA slack as one extra state feature
+    /// (`RouterCfg::state_slack` / `--state-slack`; the policy input is
+    /// one dimension wider when on, so checkpoints don't cross the flag).
+    state_slack: bool,
     pub stats: TrainStats,
     /// Reused forward buffers for the eval-mode hot path (§Perf).
     scratch: (Vec<f64>, Vec<f64>),
+}
+
+/// Slack feature for the PPO state vector: clamped to [-4, 4] seconds
+/// (synthetic heads carry infinite slack — they clamp to the "no
+/// pressure" end; a poisoned NaN reads as neutral 0 instead of
+/// propagating into the policy forward).
+fn slack_feature(slack_s: f64) -> f64 {
+    if slack_s.is_nan() {
+        0.0
+    } else {
+        slack_s.clamp(-4.0, 4.0)
+    }
 }
 
 impl PpoRouter {
@@ -76,8 +94,21 @@ impl PpoRouter {
         cfg: PpoCfg,
         seed: u64,
     ) -> Self {
+        Self::with_state_slack(n_servers, widths, cfg, seed, false)
+    }
+
+    /// [`PpoRouter::new`] with the opt-in slack state feature: the
+    /// policy input is `TelemetrySnapshot::state_dim(n_servers,
+    /// state_slack)` wide. With the flag off this is exactly `new`.
+    pub fn with_state_slack(
+        n_servers: usize,
+        widths: Vec<f64>,
+        cfg: PpoCfg,
+        seed: u64,
+        state_slack: bool,
+    ) -> Self {
         let mut rng = Rng::new(seed ^ 0x9e37);
-        let state_dim = TelemetrySnapshot::state_dim(n_servers);
+        let state_dim = TelemetrySnapshot::state_dim(n_servers, state_slack);
         let policy = Policy::new(
             state_dim,
             &cfg.hidden.clone(),
@@ -101,9 +132,23 @@ impl PpoRouter {
             training: true,
             collect_only: false,
             prior_mean_norm,
+            state_slack,
             stats: TrainStats::default(),
             scratch: (Vec::new(), Vec::new()),
         }
+    }
+
+    /// Standard construction from a full run configuration: cluster
+    /// size, width set, PPO hyper-parameters, seed and the
+    /// `--state-slack` opt-in all come from `cfg`.
+    pub fn for_config(cfg: &Config) -> Self {
+        Self::with_state_slack(
+            cfg.devices.len(),
+            cfg.scheduler.widths.clone(),
+            cfg.ppo.clone(),
+            cfg.seed,
+            cfg.router.state_slack,
+        )
     }
 
     /// Freeze the policy for evaluation runs.
@@ -116,11 +161,12 @@ impl PpoRouter {
     /// harvests them with [`PpoRouter::take_transitions`] and the central
     /// router performs the updates.
     pub fn fork_collector(&self) -> PpoRouter {
-        let mut worker = PpoRouter::new(
+        let mut worker = PpoRouter::with_state_slack(
             self.policy.n_srv,
             self.widths.clone(),
             self.cfg.clone(),
             0,
+            self.state_slack,
         );
         worker.policy = self.policy.clone();
         worker.step = self.step;
@@ -234,9 +280,18 @@ impl PpoRouter {
 
     /// The original scalar path: one head, one `Policy::sample` /
     /// `sample_notrain` invocation — bit-identical to the pre-plan
-    /// router per seed.
-    fn route_head(&mut self, snap: &TelemetrySnapshot, rng: &mut Rng) -> Decision {
-        let state = snap.to_state_vector();
+    /// router per seed (the optional slack feature appends to the state
+    /// without touching the draw order).
+    fn route_head(
+        &mut self,
+        snap: &TelemetrySnapshot,
+        head: &HeadView,
+        rng: &mut Rng,
+    ) -> Decision {
+        let mut state = snap.to_state_vector();
+        if self.state_slack {
+            state.push(slack_feature(head.slack_s));
+        }
         let eps = self.eps();
         self.step += 1;
         self.stats.decisions += 1;
@@ -269,11 +324,15 @@ impl PpoRouter {
     ) -> RoutingPlan {
         let n = heads.len();
         let base = snap.to_state_vector();
-        let dim = base.len();
+        let dim = base.len() + self.state_slack as usize;
         let mut states = Vec::with_capacity(n * dim);
         for head in heads {
             let start = states.len();
             states.extend_from_slice(&base);
+            if self.state_slack {
+                // per-head deadline pressure rides as the last feature
+                states.push(slack_feature(head.slack_s));
+            }
             // queue-position signal: a deeper head sees fewer pending
             // entries ahead of it, mirroring the sequential loop where
             // each routed block shrank the next snapshot's fifo_len
@@ -332,7 +391,7 @@ impl Router for PpoRouter {
         match heads.len() {
             0 => RoutingPlan::new(Vec::new()),
             // route_window = 1: the pre-plan scalar path, bit-identical
-            1 => RoutingPlan::new(vec![self.route_head(snap, rng)]),
+            1 => RoutingPlan::new(vec![self.route_head(snap, &heads[0], rng)]),
             _ => self.plan_batched(snap, heads, rng),
         }
     }
@@ -436,14 +495,39 @@ impl Router for SharedPpoRouter {
 /// rollout buffer. Returns the outcome and the router (trained state
 /// intact) either way.
 pub fn run_ppo_episode(cfg: &Config, router: PpoRouter) -> (RunOutcome, PpoRouter) {
+    run_ppo_episode_io(cfg, router, None, None)
+}
+
+/// [`run_ppo_episode`] with the trace layer attached: an optional fixed
+/// arrival stream (trace replay) and an optional [`TraceSink`] receiving
+/// the run's lifecycle records — so PPO evaluation episodes are
+/// recordable and replayable exactly like the algorithmic routers.
+pub fn run_ppo_episode_io(
+    cfg: &Config,
+    router: PpoRouter,
+    arrivals: Option<Vec<WorkloadEvent>>,
+    sink: Option<Box<dyn TraceSink>>,
+) -> (RunOutcome, PpoRouter) {
     if cfg.shard.leaders > 1 {
         let shared = SharedPpoRouter::new(router);
-        let engine = crate::coordinator::sharded_engine(cfg.clone(), shared);
+        let mut engine = crate::coordinator::sharded_engine(cfg.clone(), shared);
+        if let Some(events) = arrivals {
+            engine.set_arrivals(events);
+        }
+        if let Some(sink) = sink {
+            engine.set_trace_sink(sink);
+        }
         let (outcome, handle) = engine.run_returning_router();
         (outcome, handle.into_inner())
     } else {
-        let (outcome, router) =
-            Engine::new(cfg.clone(), router).run_returning_router();
+        let mut engine = Engine::new(cfg.clone(), router);
+        if let Some(events) = arrivals {
+            engine.set_arrivals(events);
+        }
+        if let Some(sink) = sink {
+            engine.set_trace_sink(sink);
+        }
+        let (outcome, router) = engine.run_returning_router();
         (outcome, router)
     }
 }
@@ -803,5 +887,100 @@ mod tests {
         let mut r = router();
         let other = PpoRouter::new(2, vec![0.5, 1.0], PpoCfg::default(), 9);
         assert!(!r.load_weights(&other.to_json()));
+    }
+
+    #[test]
+    fn state_slack_widens_the_policy_input_by_one() {
+        let plain = router();
+        let slack = PpoRouter::with_state_slack(
+            3,
+            vec![0.25, 0.5, 0.75, 1.0],
+            PpoCfg::default(),
+            1,
+            true,
+        );
+        assert_eq!(
+            plain.policy.mlp.sizes[0],
+            TelemetrySnapshot::state_dim(3, false)
+        );
+        assert_eq!(
+            slack.policy.mlp.sizes[0],
+            TelemetrySnapshot::state_dim(3, true)
+        );
+        assert_eq!(slack.policy.mlp.sizes[0], plain.policy.mlp.sizes[0] + 1);
+    }
+
+    #[test]
+    fn checkpoints_do_not_cross_the_state_slack_flag() {
+        // dimension-compat guard: a slack-state checkpoint must not load
+        // into a plain router (and vice versa) — shapes differ by design
+        let mut plain = router();
+        let mut slack = PpoRouter::with_state_slack(
+            3,
+            vec![0.25, 0.5, 0.75, 1.0],
+            PpoCfg::default(),
+            1,
+            true,
+        );
+        assert!(!plain.load_weights(&slack.to_json()));
+        assert!(!slack.load_weights(&plain.to_json()));
+        // same-flag checkpoints still roundtrip
+        let twin = PpoRouter::with_state_slack(
+            3,
+            vec![0.25, 0.5, 0.75, 1.0],
+            PpoCfg::default(),
+            99,
+            true,
+        );
+        assert!(slack.load_weights(&twin.to_json()));
+    }
+
+    #[test]
+    fn slack_feature_clamps_and_sanitizes() {
+        assert_eq!(slack_feature(0.5), 0.5);
+        assert_eq!(slack_feature(-100.0), -4.0);
+        assert_eq!(slack_feature(f64::INFINITY), 4.0);
+        assert_eq!(slack_feature(f64::NEG_INFINITY), -4.0);
+        assert_eq!(slack_feature(f64::NAN), 0.0);
+    }
+
+    #[test]
+    fn slack_state_router_routes_and_trains_end_to_end() {
+        let mut cfg = Config::default();
+        cfg.workload.total_requests = 250;
+        cfg.workload.rate_hz = 220.0;
+        cfg.router.state_slack = true;
+        cfg.router.route_window = 4; // exercise the batched featurizer too
+        cfg.ppo.horizon = 64;
+        let ppo = PpoRouter::for_config(&cfg);
+        assert_eq!(
+            ppo.policy.mlp.sizes[0],
+            TelemetrySnapshot::state_dim(cfg.devices.len(), true)
+        );
+        let (out, r) = run_ppo_episode(&cfg, ppo);
+        assert_eq!(out.report.completed, 250);
+        assert!(r.stats.decisions > 0);
+        // collectors inherit the flag (same policy shape)
+        let worker = r.fork_collector();
+        assert_eq!(worker.policy.mlp.sizes[0], r.policy.mlp.sizes[0]);
+    }
+
+    #[test]
+    fn state_slack_off_is_bit_identical_to_the_old_constructor() {
+        // flag off must not perturb weight init or the decision stream
+        let a = router();
+        let b = PpoRouter::with_state_slack(
+            3,
+            vec![0.25, 0.5, 0.75, 1.0],
+            PpoCfg::default(),
+            1,
+            false,
+        );
+        let s = snap(3).to_state_vector();
+        let (ea, _) = a.policy.evaluate(&s, None, 0.0);
+        let (eb, _) = b.policy.evaluate(&s, None, 0.0);
+        for (x, y) in ea.p_w.iter().zip(&eb.p_w) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 }

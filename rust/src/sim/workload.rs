@@ -4,8 +4,12 @@
 //! paper evaluates "responsive scale-up under bursty load"): during the
 //! burst window the instantaneous rate is `rate × burst_factor`. Each
 //! arrival carries a requested width sampled from the configured mix
-//! (uniform over W by default). A trace mode replays a fixed event list
-//! for reproducible integration tests.
+//! (uniform over W by default). The trace mode ([`Workload::with_trace`]
+//! — the trace-workload source behind `crate::trace::replay`) replays a
+//! fixed event list verbatim instead of drawing from the generator, so
+//! any router/scenario re-runs against bit-identical arrivals.
+
+use std::collections::VecDeque;
 
 use crate::config::WorkloadCfg;
 use crate::utilx::Rng;
@@ -26,6 +30,10 @@ pub struct Workload {
     rng: Rng,
     t: f64,
     issued: usize,
+    /// Fixed arrival stream (trace replay): when set, events pop from
+    /// here verbatim and the stochastic generator (and its RNG) is
+    /// never consulted.
+    trace: Option<VecDeque<WorkloadEvent>>,
 }
 
 impl Workload {
@@ -35,7 +43,17 @@ impl Workload {
         } else {
             cfg.width_mix.clone()
         };
-        Workload { cfg, widths: width_pool, rng, t: 0.0, issued: 0 }
+        Workload { cfg, widths: width_pool, rng, t: 0.0, issued: 0, trace: None }
+    }
+
+    /// Switch this workload into trace mode: `next_event` replays
+    /// `events` in order and ignores the generator entirely. The
+    /// construction path (and its RNG split) stays identical to the
+    /// generative mode, which is what keeps a replayed engine's RNG
+    /// stream bit-identical to the recording run's.
+    pub fn with_trace(mut self, events: Vec<WorkloadEvent>) -> Self {
+        self.trace = Some(events.into());
+        self
     }
 
     /// Instantaneous arrival rate at time t: base rate, optionally
@@ -58,8 +76,16 @@ impl Workload {
         rate
     }
 
-    /// Next arrival, or None once `total_requests` have been issued.
+    /// Next arrival, or None once `total_requests` have been issued
+    /// (trace mode: the next recorded event, until the trace drains).
     pub fn next_event(&mut self) -> Option<WorkloadEvent> {
+        if let Some(trace) = &mut self.trace {
+            let ev = trace.pop_front();
+            if ev.is_some() {
+                self.issued += 1;
+            }
+            return ev;
+        }
         if self.issued >= self.cfg.total_requests {
             return None;
         }
@@ -156,6 +182,25 @@ mod tests {
         let a = Workload::new(base_cfg(), &[0.5], Rng::new(7)).collect_all();
         let b = Workload::new(base_cfg(), &[0.5], Rng::new(7)).collect_all();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn trace_mode_replays_the_event_list_verbatim() {
+        // record a generated stream, feed it back through trace mode:
+        // identical events, no RNG consultation (any seed reproduces)
+        let recorded = Workload::new(base_cfg(), &[0.25, 1.0], Rng::new(9)).collect_all();
+        let replayed = Workload::new(base_cfg(), &[0.25, 1.0], Rng::new(12345))
+            .with_trace(recorded.clone())
+            .collect_all();
+        assert_eq!(recorded, replayed);
+
+        // the trace drains exactly once, regardless of total_requests
+        let mut short_cfg = base_cfg();
+        short_cfg.total_requests = 1;
+        let again = Workload::new(short_cfg, &[0.5], Rng::new(1))
+            .with_trace(recorded.clone());
+        let drained: Vec<WorkloadEvent> = again.collect_all();
+        assert_eq!(drained.len(), recorded.len());
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! Counterfactual router A/B over one trace.
+//!
+//! The paper (and the Table III–V protocol) compares schedulers on
+//! *different* stochastic arrival streams, which inflates the variance
+//! of exactly the metrics it reports most cautiously (latency/energy
+//! std-dev). This harness replays **one** fixed arrival stream through N
+//! router configurations and reports **paired per-request deltas** —
+//! every request is its own control, so the arrival-process noise
+//! cancels instead of being averaged over.
+//!
+//! Output (`BENCH_trace_ab.json` by default, via `repro trace-compare`):
+//! absolute per-router summaries, and for every non-baseline router a
+//! paired-difference block (`latency_delta_mean_s`, `…_std_s`, energy,
+//! mean executed width, SLA slack, miss-rate delta, win/loss counts)
+//! plus the full per-request delta rows. Deltas are `router − baseline`,
+//! so negative latency/energy deltas mean the candidate improves on the
+//! baseline for the *same* requests.
+
+use std::collections::BTreeMap;
+
+use crate::config::Config;
+use crate::coordinator::router::AlgoRouter;
+use crate::coordinator::sharded_engine;
+use crate::metrics::Summary;
+use crate::utilx::json::{obj, Json};
+
+use super::record::{DoneStats, TraceRecorder};
+use super::replay::{configure_for_replay, Trace};
+
+/// One replayed router's harvest.
+struct RouterRun {
+    name: String,
+    done: BTreeMap<u64, DoneStats>,
+    sla_miss_rate: f64,
+    plan_clamps: u64,
+}
+
+/// Replay `trace` through one named algorithmic router and collect
+/// per-request completions. `cfg` supplies everything except the
+/// arrival stream (cluster, seed, windows, shards, SLA).
+fn replay_run(cfg: &Config, trace: &Trace, name: &str) -> Result<RouterRun, String> {
+    let router = AlgoRouter::by_name(name, &cfg.scheduler.widths).ok_or_else(|| {
+        format!(
+            "unknown router {name:?} (trace compare supports: {})",
+            AlgoRouter::names().join(", ")
+        )
+    })?;
+    let mut cfg = cfg.clone();
+    configure_for_replay(&mut cfg, trace);
+    let recorder = TraceRecorder::new(&cfg, name);
+    let mut engine = sharded_engine(cfg, router);
+    engine.set_arrivals(trace.arrivals().to_vec());
+    engine.set_trace_sink(Box::new(recorder.clone()));
+    let outcome = engine.run();
+    Ok(RouterRun {
+        name: name.to_string(),
+        done: recorder.done_map(),
+        sla_miss_rate: outcome.sla_miss_rate(),
+        plan_clamps: outcome.plan_clamps,
+    })
+}
+
+fn summary_json(prefix: &str, unit: &str, s: &Summary) -> Vec<(String, Json)> {
+    vec![
+        (format!("{prefix}_mean{unit}"), Json::Num(s.mean())),
+        (format!("{prefix}_std{unit}"), Json::Num(s.std())),
+    ]
+}
+
+/// Run `names[0]` (the baseline) and every other router over one trace
+/// and build the paired A/B report. Deterministic: every run replays the
+/// identical arrivals under `cfg.seed`.
+pub fn compare_routers(
+    cfg: &Config,
+    trace: &Trace,
+    names: &[String],
+) -> Result<Json, String> {
+    if names.len() < 2 {
+        return Err(format!(
+            "trace compare needs at least two routers (baseline + candidates), got {names:?}"
+        ));
+    }
+    let mut runs = Vec::with_capacity(names.len());
+    for name in names {
+        runs.push(replay_run(cfg, trace, name)?);
+    }
+
+    let routers_json: Vec<Json> = runs
+        .iter()
+        .map(|r| {
+            let mut lat = Summary::default();
+            let mut energy = Summary::default();
+            let mut width = Summary::default();
+            for d in r.done.values() {
+                lat.record(d.e2e_s);
+                energy.record(d.energy_j);
+                width.record(d.mean_width);
+            }
+            let mut fields: Vec<(String, Json)> = vec![
+                ("name".to_string(), Json::Str(r.name.clone())),
+                ("completed".to_string(), Json::Num(r.done.len() as f64)),
+            ];
+            fields.extend(summary_json("latency", "_s", &lat));
+            fields.extend(summary_json("energy", "_j", &energy));
+            fields.push(("width_mean".to_string(), Json::Num(width.mean())));
+            fields.push(("sla_miss_rate".to_string(), Json::Num(r.sla_miss_rate)));
+            fields.push(("plan_clamps".to_string(), Json::Num(r.plan_clamps as f64)));
+            Json::Obj(fields)
+        })
+        .collect();
+
+    let base = &runs[0];
+    let mut pairs = Vec::with_capacity(runs.len() - 1);
+    for cand in &runs[1..] {
+        let mut lat = Summary::default();
+        let mut energy = Summary::default();
+        let mut width = Summary::default();
+        let mut slack = Summary::default();
+        let mut wins = 0u64; // candidate strictly faster on this request
+        let mut losses = 0u64;
+        let mut per_request = Vec::new();
+        for (id, b) in &base.done {
+            let Some(c) = cand.done.get(id) else { continue };
+            let d_lat = c.e2e_s - b.e2e_s;
+            let d_energy = c.energy_j - b.energy_j;
+            let d_width = c.mean_width - b.mean_width;
+            let d_slack = c.slack_s - b.slack_s;
+            lat.record(d_lat);
+            energy.record(d_energy);
+            width.record(d_width);
+            slack.record(d_slack);
+            if d_lat < 0.0 {
+                wins += 1;
+            } else if d_lat > 0.0 {
+                losses += 1;
+            }
+            per_request.push(obj(vec![
+                ("id", Json::Num(*id as f64)),
+                ("latency_delta_s", Json::Num(d_lat)),
+                ("energy_delta_j", Json::Num(d_energy)),
+                ("width_delta", Json::Num(d_width)),
+                ("slack_delta_s", Json::Num(d_slack)),
+            ]));
+        }
+        if lat.count() == 0 {
+            return Err(format!(
+                "no paired completions between {} and {}",
+                base.name, cand.name
+            ));
+        }
+        let mut fields: Vec<(String, Json)> = vec![
+            ("router".to_string(), Json::Str(cand.name.clone())),
+            ("baseline".to_string(), Json::Str(base.name.clone())),
+            ("n_pairs".to_string(), Json::Num(lat.count() as f64)),
+        ];
+        fields.extend(summary_json("latency_delta", "_s", &lat));
+        fields.extend(summary_json("energy_delta", "_j", &energy));
+        fields.push(("width_delta_mean".to_string(), Json::Num(width.mean())));
+        fields.push(("slack_delta_mean_s".to_string(), Json::Num(slack.mean())));
+        fields.push((
+            "sla_miss_rate_delta".to_string(),
+            Json::Num(cand.sla_miss_rate - base.sla_miss_rate),
+        ));
+        fields.push(("wins".to_string(), Json::Num(wins as f64)));
+        fields.push(("losses".to_string(), Json::Num(losses as f64)));
+        fields.push(("per_request".to_string(), Json::Arr(per_request)));
+        pairs.push(Json::Obj(fields));
+    }
+
+    Ok(obj(vec![
+        ("trace_requests", Json::Num(trace.arrivals().len() as f64)),
+        ("sla_s", Json::Num(cfg.router.sla_s)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("baseline", Json::Str(base.name.clone())),
+        ("routers", Json::Arr(routers_json)),
+        ("pairs", Json::Arr(pairs)),
+    ]))
+}
+
+/// Persist an A/B report (pretty-printed; `BENCH_trace_ab.json` is the
+/// conventional name the CI grep checks).
+pub fn write_report(report: &Json, path: &str) -> std::io::Result<()> {
+    std::fs::write(path, report.to_string_pretty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Router;
+
+    fn record_small_trace(cfg: &Config) -> Trace {
+        let router = AlgoRouter::by_name("random", &cfg.scheduler.widths).unwrap();
+        let recorder = TraceRecorder::new(cfg, router.name());
+        let mut engine = sharded_engine(cfg.clone(), router);
+        engine.set_trace_sink(Box::new(recorder.clone()));
+        let out = engine.run();
+        assert_eq!(out.report.completed, cfg.workload.total_requests as u64);
+        Trace::parse(&recorder.to_jsonl()).expect("recorded trace parses")
+    }
+
+    fn small_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.workload.total_requests = 150;
+        cfg.workload.rate_hz = 220.0;
+        cfg
+    }
+
+    #[test]
+    fn compare_emits_paired_deltas_for_every_candidate() {
+        let cfg = small_cfg();
+        let trace = record_small_trace(&cfg);
+        let names: Vec<String> =
+            ["random", "edf", "least-loaded"].iter().map(|s| s.to_string()).collect();
+        let report = compare_routers(&cfg, &trace, &names).unwrap();
+
+        assert_eq!(report.get("baseline").and_then(Json::as_str), Some("random"));
+        assert_eq!(report.get("trace_requests").and_then(Json::as_usize), Some(150));
+        let pairs = report.get("pairs").and_then(Json::as_arr).unwrap();
+        assert_eq!(pairs.len(), 2);
+        for pair in pairs {
+            assert_eq!(pair.get("n_pairs").and_then(Json::as_usize), Some(150));
+            let mean = pair.get("latency_delta_mean_s").and_then(Json::as_f64);
+            assert!(mean.is_some_and(f64::is_finite), "{pair:?}");
+            assert!(pair.get("latency_delta_std_s").is_some());
+            assert!(pair.get("energy_delta_mean_j").is_some());
+            assert!(pair.get("width_delta_mean").is_some());
+            assert!(pair.get("slack_delta_mean_s").is_some());
+            assert!(pair.get("sla_miss_rate_delta").is_some());
+            let rows = pair.get("per_request").and_then(Json::as_arr).unwrap();
+            assert_eq!(rows.len(), 150);
+            assert!(rows[0].get("latency_delta_s").is_some());
+        }
+        // paired slack and latency deltas are the same comparison seen
+        // from opposite sides: slack = sla − e2e, so Δslack = −Δlatency
+        let p0 = &pairs[0];
+        let dl = p0.get("latency_delta_mean_s").and_then(Json::as_f64).unwrap();
+        let ds = p0.get("slack_delta_mean_s").and_then(Json::as_f64).unwrap();
+        assert!((dl + ds).abs() < 1e-9, "Δlat {dl} vs Δslack {ds}");
+    }
+
+    #[test]
+    fn compare_is_deterministic() {
+        let cfg = small_cfg();
+        let trace = record_small_trace(&cfg);
+        let names: Vec<String> = ["random", "edf"].iter().map(|s| s.to_string()).collect();
+        let a = compare_routers(&cfg, &trace, &names).unwrap();
+        let b = compare_routers(&cfg, &trace, &names).unwrap();
+        assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+    }
+
+    #[test]
+    fn compare_rejects_bad_inputs() {
+        let cfg = small_cfg();
+        let trace = record_small_trace(&cfg);
+        let one: Vec<String> = vec!["random".to_string()];
+        assert!(compare_routers(&cfg, &trace, &one)
+            .unwrap_err()
+            .contains("at least two"));
+        let unknown: Vec<String> =
+            ["random", "marsbase"].iter().map(|s| s.to_string()).collect();
+        assert!(compare_routers(&cfg, &trace, &unknown)
+            .unwrap_err()
+            .contains("unknown router"));
+    }
+
+    #[test]
+    fn baseline_self_comparison_is_all_zero() {
+        // replaying the same router twice over one trace must pair to
+        // exactly zero deltas — the determinism the A/B design rests on
+        let cfg = small_cfg();
+        let trace = record_small_trace(&cfg);
+        let names: Vec<String> = ["edf", "edf"].iter().map(|s| s.to_string()).collect();
+        let report = compare_routers(&cfg, &trace, &names).unwrap();
+        let pair = &report.get("pairs").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(pair.get("latency_delta_mean_s").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(pair.get("latency_delta_std_s").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(pair.get("energy_delta_mean_j").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(pair.get("wins").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(pair.get("losses").and_then(Json::as_f64), Some(0.0));
+    }
+}

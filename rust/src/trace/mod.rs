@@ -1,0 +1,34 @@
+//! Trace subsystem: record, replay, and counterfactual router A/B.
+//!
+//! Stochastic arrival generation makes every run a fresh draw, so
+//! comparing two routers confounds the policy difference with the
+//! arrival difference — exactly where the paper's weakest numbers
+//! (latency/energy spread) live. This subsystem removes that confound:
+//!
+//! * [`record`] — a [`record::TraceSink`] wired into the engine's
+//!   lifecycle hooks captures per-request records (arrival, shard
+//!   assignment, routing decision incl. clamp repairs, dispatch,
+//!   completion with energy/width/SLA slack) and run-level telemetry
+//!   ticks into a versioned, byte-deterministic JSONL format
+//!   (`repro simulate --trace-out`).
+//! * [`replay`] — [`replay::Trace`] parses a recorded (or externally
+//!   imported) trace back into the fixed arrival stream the trace-mode
+//!   workload source feeds through the engine, so any router / shard
+//!   assignment / scenario re-runs against bit-identical arrivals
+//!   (`repro replay --trace-in`). Recording a replay reproduces the
+//!   original trace byte for byte (`tests/trace_roundtrip.rs`).
+//! * [`compare`] — the counterfactual A/B harness: N routers over one
+//!   trace, paired per-request deltas (latency, energy, width, SLA
+//!   slack) and a paired-difference summary into `BENCH_trace_ab.json`
+//!   (`repro trace-compare`). Paired statistics, not independent runs —
+//!   the arrival noise cancels request by request.
+
+pub mod compare;
+pub mod record;
+pub mod replay;
+
+pub use compare::{compare_routers, write_report};
+pub use record::{
+    done_stats, DoneStats, TraceEvent, TraceRecorder, TraceSink, TRACE_VERSION,
+};
+pub use replay::{configure_for_replay, Trace, TraceError};

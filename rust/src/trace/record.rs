@@ -1,0 +1,435 @@
+//! Trace recording: the event schema and the JSONL sink.
+//!
+//! A trace is one JSONL document: a header line (`{"trace":
+//! "slim-scheduler", "version": 1, ...}` carrying the run's router name,
+//! declared request count and the full serialized [`Config`]) followed by
+//! one line per [`TraceEvent`]. Field order inside every line is fixed
+//! (the JSON writer preserves insertion order and renders floats with
+//! Rust's shortest-round-trip formatting), so two runs of the same
+//! seeded configuration produce **byte-identical** files and two seeds
+//! byte-diff — the property the round-trip tests pin.
+//!
+//! The engine emits events through the [`TraceSink`] trait (a no-op when
+//! no sink is installed); [`TraceRecorder`] is the standard in-memory
+//! sink behind a cheap cloneable handle, so callers keep a handle while
+//! the engine owns the boxed sink and can serialize ([`TraceRecorder::
+//! to_jsonl`]) or persist ([`TraceRecorder::write`]) after the run.
+
+use std::sync::{Arc, Mutex};
+
+use crate::config::Config;
+use crate::utilx::json::{arr_f64, obj, Json};
+
+/// Trace format version — bump on any schema change.
+pub const TRACE_VERSION: u64 = 1;
+
+/// One per-request lifecycle (or run-level telemetry) record.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A request reached the leader tier.
+    Arrival { t: f64, id: u64, w_req: f64 },
+    /// A request landed on a leader shard via the assignment policy —
+    /// once per FIFO entry (arrival, segment re-entry, and again on a
+    /// device-dropout readmission). Cross-shard *rebalance* migrations
+    /// move requests without a new assignment, so under `--rebalance`
+    /// a later `route` record's `shard` is the authoritative placement.
+    Assign { t: f64, id: u64, seg: usize, shard: usize },
+    /// A routing decision was applied: `size` requests of segment `seg`
+    /// dispatched as one block to `server`, arriving at `arrive_t`.
+    /// `tag` is the router-local decision tag (`shard` disambiguates —
+    /// local tags stay far below 2^53 so the JSON number is exact);
+    /// `clamped` counts the decision fields the explicit repair path
+    /// corrected (0 for well-behaved routers).
+    Route {
+        t: f64,
+        shard: usize,
+        tag: u64,
+        seg: usize,
+        server: usize,
+        width: f64,
+        group: usize,
+        size: usize,
+        clamped: u64,
+        arrive_t: f64,
+    },
+    /// A request crossed its final segment: end-to-end latency,
+    /// accumulated per-request energy, SLA slack at completion
+    /// (negative = missed) and the executed width tuple.
+    Done {
+        t: f64,
+        id: u64,
+        e2e_s: f64,
+        energy_j: f64,
+        slack_s: f64,
+        widths: Vec<f64>,
+    },
+    /// Run-level telemetry tick: leader FIFO depth, completions, and
+    /// per-server utilization / power samples.
+    Tick { t: f64, fifo: usize, done: u64, util: Vec<f64>, power: Vec<f64> },
+}
+
+impl TraceEvent {
+    /// Serialize with the fixed v1 field order.
+    pub fn to_json(&self) -> Json {
+        match self {
+            TraceEvent::Arrival { t, id, w_req } => obj(vec![
+                ("ev", Json::Str("arrival".into())),
+                ("t", Json::Num(*t)),
+                ("id", Json::Num(*id as f64)),
+                ("w_req", Json::Num(*w_req)),
+            ]),
+            TraceEvent::Assign { t, id, seg, shard } => obj(vec![
+                ("ev", Json::Str("assign".into())),
+                ("t", Json::Num(*t)),
+                ("id", Json::Num(*id as f64)),
+                ("seg", Json::Num(*seg as f64)),
+                ("shard", Json::Num(*shard as f64)),
+            ]),
+            TraceEvent::Route {
+                t,
+                shard,
+                tag,
+                seg,
+                server,
+                width,
+                group,
+                size,
+                clamped,
+                arrive_t,
+            } => obj(vec![
+                ("ev", Json::Str("route".into())),
+                ("t", Json::Num(*t)),
+                ("shard", Json::Num(*shard as f64)),
+                ("tag", Json::Num(*tag as f64)),
+                ("seg", Json::Num(*seg as f64)),
+                ("server", Json::Num(*server as f64)),
+                ("width", Json::Num(*width)),
+                ("group", Json::Num(*group as f64)),
+                ("size", Json::Num(*size as f64)),
+                ("clamped", Json::Num(*clamped as f64)),
+                ("arrive_t", Json::Num(*arrive_t)),
+            ]),
+            TraceEvent::Done { t, id, e2e_s, energy_j, slack_s, widths } => {
+                obj(vec![
+                    ("ev", Json::Str("done".into())),
+                    ("t", Json::Num(*t)),
+                    ("id", Json::Num(*id as f64)),
+                    ("e2e_s", Json::Num(*e2e_s)),
+                    ("energy_j", Json::Num(*energy_j)),
+                    ("slack_s", Json::Num(*slack_s)),
+                    ("widths", arr_f64(widths)),
+                ])
+            }
+            TraceEvent::Tick { t, fifo, done, util, power } => obj(vec![
+                ("ev", Json::Str("tick".into())),
+                ("t", Json::Num(*t)),
+                ("fifo", Json::Num(*fifo as f64)),
+                ("done", Json::Num(*done as f64)),
+                ("util", arr_f64(util)),
+                ("power", arr_f64(power)),
+            ]),
+        }
+    }
+
+    /// Parse one record line; `Err` names the missing/invalid piece.
+    pub fn from_json(json: &Json) -> Result<TraceEvent, String> {
+        let kind = json
+            .get("ev")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "record missing \"ev\" kind".to_string())?;
+        let num = |key: &str| -> Result<f64, String> {
+            json.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("{kind} record missing numeric {key:?}"))
+        };
+        let vec = |key: &str| -> Result<Vec<f64>, String> {
+            json.get(key)
+                .and_then(Json::as_f64_vec)
+                .ok_or_else(|| format!("{kind} record missing array {key:?}"))
+        };
+        match kind {
+            "arrival" => Ok(TraceEvent::Arrival {
+                t: num("t")?,
+                id: num("id")? as u64,
+                w_req: num("w_req")?,
+            }),
+            "assign" => Ok(TraceEvent::Assign {
+                t: num("t")?,
+                id: num("id")? as u64,
+                seg: num("seg")? as usize,
+                shard: num("shard")? as usize,
+            }),
+            "route" => Ok(TraceEvent::Route {
+                t: num("t")?,
+                shard: num("shard")? as usize,
+                tag: num("tag")? as u64,
+                seg: num("seg")? as usize,
+                server: num("server")? as usize,
+                width: num("width")?,
+                group: num("group")? as usize,
+                size: num("size")? as usize,
+                clamped: num("clamped")? as u64,
+                arrive_t: num("arrive_t")?,
+            }),
+            "done" => Ok(TraceEvent::Done {
+                t: num("t")?,
+                id: num("id")? as u64,
+                e2e_s: num("e2e_s")?,
+                energy_j: num("energy_j")?,
+                slack_s: num("slack_s")?,
+                widths: vec("widths")?,
+            }),
+            "tick" => Ok(TraceEvent::Tick {
+                t: num("t")?,
+                fifo: num("fifo")? as usize,
+                done: num("done")? as u64,
+                util: vec("util")?,
+                power: vec("power")?,
+            }),
+            other => Err(format!("unknown record kind {other:?}")),
+        }
+    }
+}
+
+/// Where the engine's lifecycle hooks deliver events. Implementations
+/// must be cheap: hooks fire on the discrete-event hot path.
+pub trait TraceSink: Send {
+    fn record(&mut self, ev: &TraceEvent);
+}
+
+/// Build the v1 header line for a run of `cfg` under `router`.
+pub fn header_json(cfg: &Config, router: &str) -> Json {
+    obj(vec![
+        ("trace", Json::Str("slim-scheduler".into())),
+        ("version", Json::Num(TRACE_VERSION as f64)),
+        ("router", Json::Str(router.to_string())),
+        ("requests", Json::Num(cfg.workload.total_requests as f64)),
+        ("config", cfg.to_json()),
+    ])
+}
+
+/// The standard in-memory recording sink. Cloning yields another handle
+/// onto the same buffer (the engine owns one boxed clone; the caller
+/// keeps another to extract the trace after the run). The mutex exists
+/// for `Send` — the engine's event loop is single-threaded, so it is
+/// never contended.
+#[derive(Clone)]
+pub struct TraceRecorder {
+    header: String,
+    events: Arc<Mutex<Vec<TraceEvent>>>,
+}
+
+/// Per-request completion stats extracted from a recording (the paired
+/// unit of the counterfactual A/B harness).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DoneStats {
+    pub e2e_s: f64,
+    pub energy_j: f64,
+    pub slack_s: f64,
+    /// Mean executed width over the request's segments.
+    pub mean_width: f64,
+}
+
+/// Per-request completion stats from a record stream, keyed by request
+/// id — the one extraction both the in-memory recorder and the parsed
+/// trace use, so the two sides of a paired comparison can never drift.
+pub fn done_stats(events: &[TraceEvent]) -> std::collections::BTreeMap<u64, DoneStats> {
+    events
+        .iter()
+        .filter_map(|ev| match ev {
+            TraceEvent::Done { id, e2e_s, energy_j, slack_s, widths, .. } => {
+                let mean_width = if widths.is_empty() {
+                    0.0
+                } else {
+                    widths.iter().sum::<f64>() / widths.len() as f64
+                };
+                Some((
+                    *id,
+                    DoneStats {
+                        e2e_s: *e2e_s,
+                        energy_j: *energy_j,
+                        slack_s: *slack_s,
+                        mean_width,
+                    },
+                ))
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+impl TraceRecorder {
+    pub fn new(cfg: &Config, router: &str) -> Self {
+        TraceRecorder {
+            header: header_json(cfg, router).to_string_compact(),
+            events: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Events recorded so far (cloned out of the shared buffer).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Completion stats keyed by request id.
+    pub fn done_map(&self) -> std::collections::BTreeMap<u64, DoneStats> {
+        done_stats(&self.events.lock().unwrap())
+    }
+
+    /// Serialize header + every event as JSONL (deterministic byte-wise
+    /// for a deterministic run).
+    pub fn to_jsonl(&self) -> String {
+        let events = self.events.lock().unwrap();
+        let mut out = String::with_capacity(64 * (events.len() + 1));
+        out.push_str(&self.header);
+        out.push('\n');
+        for ev in events.iter() {
+            out.push_str(&ev.to_json().to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Persist the trace to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+}
+
+impl TraceSink for TraceRecorder {
+    fn record(&mut self, ev: &TraceEvent) {
+        self.events.lock().unwrap().push(ev.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn samples() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Arrival { t: 0.125, id: 3, w_req: 0.5 },
+            TraceEvent::Assign { t: 0.125, id: 3, seg: 0, shard: 1 },
+            TraceEvent::Route {
+                t: 0.25,
+                shard: 1,
+                tag: 7,
+                seg: 0,
+                server: 2,
+                width: 0.75,
+                group: 4,
+                size: 3,
+                clamped: 1,
+                arrive_t: 0.2512345678901234,
+            },
+            TraceEvent::Done {
+                t: 1.5,
+                id: 3,
+                e2e_s: 1.375,
+                energy_j: 210.25,
+                slack_s: -0.375,
+                widths: vec![0.5, 0.75, 0.25, 1.0],
+            },
+            TraceEvent::Tick {
+                t: 0.05,
+                fifo: 12,
+                done: 0,
+                util: vec![10.0, 0.0],
+                power: vec![60.5, 55.0],
+            },
+        ]
+    }
+
+    #[test]
+    fn every_event_kind_roundtrips_through_json() {
+        for ev in samples() {
+            let line = ev.to_json().to_string_compact();
+            let parsed = Json::parse(&line).expect("line parses");
+            assert_eq!(TraceEvent::from_json(&parsed).unwrap(), ev, "{line}");
+        }
+    }
+
+    #[test]
+    fn float_serialization_is_lossless() {
+        // shortest-round-trip formatting: exact f64 recovery, which is
+        // what makes record → replay byte equality possible at all
+        let t = 0.1 + 0.2; // classic non-representable sum
+        let ev = TraceEvent::Arrival { t, id: 0, w_req: 1.0 / 3.0 };
+        let line = ev.to_json().to_string_compact();
+        match TraceEvent::from_json(&Json::parse(&line).unwrap()).unwrap() {
+            TraceEvent::Arrival { t: t2, w_req, .. } => {
+                assert_eq!(t.to_bits(), t2.to_bits());
+                assert_eq!((1.0f64 / 3.0).to_bits(), w_req.to_bits());
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_records() {
+        let bad = Json::parse(r#"{"t": 1.0}"#).unwrap();
+        assert!(TraceEvent::from_json(&bad).unwrap_err().contains("ev"));
+        let unknown = Json::parse(r#"{"ev":"warp","t":1}"#).unwrap();
+        assert!(TraceEvent::from_json(&unknown)
+            .unwrap_err()
+            .contains("unknown record kind"));
+        let missing = Json::parse(r#"{"ev":"arrival","t":1}"#).unwrap();
+        assert!(TraceEvent::from_json(&missing).unwrap_err().contains("id"));
+    }
+
+    #[test]
+    fn recorder_handles_share_one_buffer() {
+        let cfg = Config::default();
+        let rec = TraceRecorder::new(&cfg, "random");
+        let mut engine_side: Box<dyn TraceSink> = Box::new(rec.clone());
+        for ev in samples() {
+            engine_side.record(&ev);
+        }
+        assert_eq!(rec.len(), 5);
+        assert_eq!(rec.events(), samples());
+        let jsonl = rec.to_jsonl();
+        assert_eq!(jsonl.lines().count(), 6); // header + 5 records
+        let header = Json::parse(jsonl.lines().next().unwrap()).unwrap();
+        assert_eq!(header.get("trace").and_then(Json::as_str), Some("slim-scheduler"));
+        assert_eq!(header.get("version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(header.get("router").and_then(Json::as_str), Some("random"));
+        assert!(header.get("config").is_some());
+    }
+
+    #[test]
+    fn done_map_extracts_completions() {
+        let cfg = Config::default();
+        let mut rec = TraceRecorder::new(&cfg, "edf");
+        for ev in samples() {
+            rec.record(&ev);
+        }
+        let map = rec.done_map();
+        assert_eq!(map.len(), 1);
+        let d = map[&3];
+        assert_eq!(d.e2e_s, 1.375);
+        assert_eq!(d.energy_j, 210.25);
+        assert_eq!(d.slack_s, -0.375);
+        assert!((d.mean_width - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identical_inputs_serialize_byte_identically() {
+        let cfg = Config::default();
+        let mk = || {
+            let mut rec = TraceRecorder::new(&cfg, "random");
+            for ev in samples() {
+                rec.record(&ev);
+            }
+            rec.to_jsonl()
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -1,0 +1,309 @@
+//! Trace replay: parse a recorded (or externally imported) JSONL trace
+//! back into a fixed arrival stream.
+//!
+//! A parsed [`Trace`] yields the exact [`WorkloadEvent`] sequence the
+//! recording engine consumed; feeding it through the trace mode of
+//! [`crate::sim::Workload`] (`Workload::with_trace` — the trace-workload
+//! source) re-runs **any** router / shard-assignment / scenario
+//! combination against bit-identical arrivals. Recording such a replay
+//! with the same router and seed reproduces the original trace byte for
+//! byte (`tests/trace_roundtrip.rs` pins this).
+//!
+//! Externally imported traces only need the header line plus `arrival`
+//! records — `{"ev":"arrival","t":<s>,"id":<n>,"w_req":<width>}` — in
+//! non-decreasing time order; `assign`/`route`/`done`/`tick` records are
+//! optional recording detail.
+
+use crate::config::Config;
+use crate::sim::WorkloadEvent;
+use crate::utilx::json::Json;
+
+use super::record::{DoneStats, TraceEvent, TRACE_VERSION};
+
+/// Why a trace failed to load (1-based line number when applicable).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.line > 0 {
+            write!(f, "trace line {}: {}", self.line, self.msg)
+        } else {
+            write!(f, "trace: {}", self.msg)
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+fn err(line: usize, msg: impl Into<String>) -> TraceError {
+    TraceError { line, msg: msg.into() }
+}
+
+/// A parsed trace: the header's provenance plus every record.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub version: u64,
+    /// Router name the header declared (imported traces may omit it).
+    pub router: Option<String>,
+    /// Declared request count (validated against the arrival records
+    /// when present — a truncated file fails here).
+    pub requests: Option<usize>,
+    /// Full serialized configuration of the recording run, when present.
+    config: Option<Json>,
+    pub events: Vec<TraceEvent>,
+    /// The arrival stream, extracted once at parse time (large traces
+    /// are mostly non-arrival records; callers hit this repeatedly).
+    arrivals: Vec<WorkloadEvent>,
+}
+
+impl Trace {
+    /// Parse a JSONL trace document.
+    pub fn parse(text: &str) -> Result<Trace, TraceError> {
+        let mut lines = text.lines().enumerate();
+        let (_, header_line) = lines
+            .next()
+            .ok_or_else(|| err(0, "empty document (missing header line)"))?;
+        let header = Json::parse(header_line)
+            .map_err(|e| err(1, format!("header is not valid JSON: {e}")))?;
+        if header.get("trace").and_then(Json::as_str) != Some("slim-scheduler") {
+            return Err(err(1, "not a slim-scheduler trace (header magic missing)"));
+        }
+        let version = header
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| err(1, "header missing version"))? as u64;
+        if version != TRACE_VERSION {
+            return Err(err(
+                1,
+                format!("unsupported trace version {version} (supported: {TRACE_VERSION})"),
+            ));
+        }
+        let router = header.get("router").and_then(Json::as_str).map(str::to_string);
+        let requests = header.get("requests").and_then(Json::as_usize);
+        let config = header.get("config").cloned();
+
+        let mut events = Vec::new();
+        for (i, line) in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let json = Json::parse(line)
+                .map_err(|e| err(i + 1, format!("invalid JSON: {e}")))?;
+            events.push(TraceEvent::from_json(&json).map_err(|m| err(i + 1, m))?);
+        }
+
+        let arrivals = events
+            .iter()
+            .filter_map(|ev| match ev {
+                TraceEvent::Arrival { t, id, w_req } => Some(WorkloadEvent {
+                    at: *t,
+                    request_id: *id,
+                    w_req: *w_req,
+                }),
+                _ => None,
+            })
+            .collect();
+        let trace = Trace { version, router, requests, config, events, arrivals };
+        trace.validate()?;
+        Ok(trace)
+    }
+
+    /// Load and parse a trace file.
+    pub fn load(path: &str) -> Result<Trace, TraceError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(0, format!("cannot read {path}: {e}")))?;
+        Trace::parse(&text)
+    }
+
+    fn validate(&self) -> Result<(), TraceError> {
+        let arrivals = &self.arrivals;
+        if arrivals.is_empty() {
+            return Err(err(0, "trace carries no arrival records"));
+        }
+        if let Some(declared) = self.requests {
+            if declared != arrivals.len() {
+                return Err(err(
+                    0,
+                    format!(
+                        "truncated or inconsistent trace: header declares {declared} \
+                         requests but {} arrival records are present",
+                        arrivals.len()
+                    ),
+                ));
+            }
+        }
+        let mut last = f64::NEG_INFINITY;
+        let mut seen = std::collections::BTreeSet::new();
+        for ev in arrivals {
+            if !ev.at.is_finite() || ev.at < last {
+                return Err(err(
+                    0,
+                    format!(
+                        "arrival times must be finite and non-decreasing (id {})",
+                        ev.request_id
+                    ),
+                ));
+            }
+            // ids key the paired A/B maps: a repeated id would silently
+            // collapse pairs instead of comparing them — fail loudly
+            if !seen.insert(ev.request_id) {
+                return Err(err(
+                    0,
+                    format!("duplicate arrival request id {}", ev.request_id),
+                ));
+            }
+            last = ev.at;
+        }
+        Ok(())
+    }
+
+    /// The fixed arrival stream, in record order (extracted at parse
+    /// time; `.to_vec()` it for `Engine::set_arrivals`).
+    pub fn arrivals(&self) -> &[WorkloadEvent] {
+        &self.arrivals
+    }
+
+    /// Per-request completion stats keyed by request id.
+    pub fn done_map(&self) -> std::collections::BTreeMap<u64, DoneStats> {
+        super::record::done_stats(&self.events)
+    }
+
+    /// Reconstruct the recording run's configuration from the header
+    /// (None for imported traces that omit `config`). CLI flags are
+    /// applied on top by callers, so explicit overrides still win.
+    pub fn config(&self) -> Option<Config> {
+        self.config.as_ref().map(Config::from_json)
+    }
+}
+
+/// Point `cfg` at this trace: the run budget becomes exactly the trace's
+/// arrival count (the generator budget is meaningless under replay).
+pub fn configure_for_replay(cfg: &mut Config, trace: &Trace) {
+    cfg.workload.total_requests = trace.arrivals().len();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_trace() -> String {
+        let cfg = Config::default();
+        let header = super::super::record::header_json(
+            &{
+                let mut c = cfg.clone();
+                c.workload.total_requests = 2;
+                c
+            },
+            "random",
+        );
+        let lines = [
+            header.to_string_compact(),
+            r#"{"ev":"arrival","t":0.25,"id":0,"w_req":0.5}"#.to_string(),
+            r#"{"ev":"arrival","t":0.5,"id":1,"w_req":1}"#.to_string(),
+            r#"{"ev":"done","t":1,"id":0,"e2e_s":0.75,"energy_j":10,"slack_s":0.25,"widths":[0.5,0.5,0.5,0.5]}"#
+                .to_string(),
+        ];
+        lines.join("\n") + "\n"
+    }
+
+    #[test]
+    fn parses_header_arrivals_and_completions() {
+        let trace = Trace::parse(&mini_trace()).unwrap();
+        assert_eq!(trace.version, TRACE_VERSION);
+        assert_eq!(trace.router.as_deref(), Some("random"));
+        assert_eq!(trace.requests, Some(2));
+        let arr = trace.arrivals();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0], WorkloadEvent { at: 0.25, request_id: 0, w_req: 0.5 });
+        assert_eq!(trace.done_map().len(), 1);
+        let cfg = trace.config().expect("recorded traces embed the config");
+        assert_eq!(cfg.workload.total_requests, 2);
+
+        let mut replay_cfg = Config::default();
+        configure_for_replay(&mut replay_cfg, &trace);
+        assert_eq!(replay_cfg.workload.total_requests, 2);
+    }
+
+    #[test]
+    fn rejects_empty_and_foreign_documents() {
+        assert!(Trace::parse("").unwrap_err().msg.contains("empty"));
+        let e = Trace::parse("{\"not\":\"ours\"}\n").unwrap_err();
+        assert!(e.msg.contains("magic"), "{e}");
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let doc = r#"{"trace":"slim-scheduler","version":99}"#;
+        let e = Trace::parse(doc).unwrap_err();
+        assert!(e.msg.contains("unsupported trace version 99"), "{e}");
+    }
+
+    #[test]
+    fn rejects_malformed_record_lines_with_line_numbers() {
+        let mut doc = mini_trace();
+        doc.push_str("{\"ev\":\"arrival\",\"t\":9}\n"); // missing id/w_req
+        let e = Trace::parse(&doc).unwrap_err();
+        assert_eq!(e.line, 5);
+        assert!(e.msg.contains("id"), "{e}");
+    }
+
+    #[test]
+    fn rejects_truncated_traces() {
+        // cut the document mid-line: invalid JSON on the last line
+        let doc = mini_trace();
+        let cut = &doc[..doc.len() - 20];
+        let e = Trace::parse(cut).unwrap_err();
+        assert!(e.line > 1, "{e}");
+
+        // drop a whole arrival record: the declared count catches it
+        let kept: Vec<&str> = doc.lines().filter(|l| !l.contains("\"id\":1")).collect();
+        let e = Trace::parse(&(kept.join("\n") + "\n")).unwrap_err();
+        assert!(e.msg.contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn rejects_duplicate_arrival_ids() {
+        // an imported log with a constant/missing id column would
+        // collapse the paired A/B maps to one row — reject at parse time
+        let doc = [
+            r#"{"trace":"slim-scheduler","version":1}"#,
+            r#"{"ev":"arrival","t":0.5,"id":3,"w_req":0.5}"#,
+            r#"{"ev":"arrival","t":1.0,"id":3,"w_req":0.5}"#,
+        ]
+        .join("\n");
+        let e = Trace::parse(&doc).unwrap_err();
+        assert!(e.msg.contains("duplicate arrival request id 3"), "{e}");
+    }
+
+    #[test]
+    fn rejects_out_of_order_arrivals() {
+        let doc = [
+            r#"{"trace":"slim-scheduler","version":1,"requests":2}"#,
+            r#"{"ev":"arrival","t":1.0,"id":0,"w_req":0.5}"#,
+            r#"{"ev":"arrival","t":0.5,"id":1,"w_req":0.5}"#,
+        ]
+        .join("\n");
+        let e = Trace::parse(&doc).unwrap_err();
+        assert!(e.msg.contains("non-decreasing"), "{e}");
+    }
+
+    #[test]
+    fn imported_traces_need_only_header_and_arrivals() {
+        // minimal external import: no config, no router, no completions
+        let doc = [
+            r#"{"trace":"slim-scheduler","version":1}"#,
+            r#"{"ev":"arrival","t":0.1,"id":0,"w_req":0.25}"#,
+            r#"{"ev":"arrival","t":0.2,"id":1,"w_req":1}"#,
+        ]
+        .join("\n");
+        let trace = Trace::parse(&doc).unwrap();
+        assert!(trace.config().is_none());
+        assert!(trace.router.is_none());
+        assert_eq!(trace.arrivals().len(), 2);
+    }
+}

@@ -1,0 +1,207 @@
+//! Trace round-trip determinism — the pinned invariant of the trace
+//! subsystem: **record → replay → re-record is the identity** on the
+//! trace bytes.
+//!
+//! A recorded run's trace embeds its arrivals; replaying those arrivals
+//! through an identically configured engine (same router, same seed)
+//! must walk the exact same event sequence, so re-recording the replay
+//! reproduces the original JSONL byte for byte — across seeds, leader
+//! counts, shard assignments, and (for PPO) `--workers` training
+//! settings. If any engine change breaks this, trace-driven evaluation
+//! (and the counterfactual A/B harness built on it) silently measures
+//! the wrong thing; these tests make that loud.
+
+use slim_scheduler::config::{Config, ShardAssignKind};
+use slim_scheduler::coordinator::router::AlgoRouter;
+use slim_scheduler::coordinator::sharded_engine;
+use slim_scheduler::experiments;
+use slim_scheduler::ppo::run_ppo_episode_io;
+use slim_scheduler::trace::{compare_routers, configure_for_replay, Trace, TraceRecorder};
+use slim_scheduler::utilx::Json;
+
+fn small_cfg(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.workload.total_requests = 300;
+    cfg.workload.rate_hz = 250.0;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Record one run of `router_name` under `cfg` and return the JSONL.
+fn record(cfg: &Config, router_name: &str) -> String {
+    let router = AlgoRouter::by_name(router_name, &cfg.scheduler.widths)
+        .unwrap_or_else(|| panic!("unknown router {router_name}"));
+    let recorder = TraceRecorder::new(cfg, router_name);
+    let mut engine = sharded_engine(cfg.clone(), router);
+    engine.set_trace_sink(Box::new(recorder.clone()));
+    let out = engine.run();
+    assert_eq!(out.report.completed, cfg.workload.total_requests as u64);
+    recorder.to_jsonl()
+}
+
+/// Replay `trace` under `cfg` with `router_name`, re-recording it.
+fn replay_and_rerecord(cfg: &Config, trace: &Trace, router_name: &str) -> String {
+    let router = AlgoRouter::by_name(router_name, &cfg.scheduler.widths).unwrap();
+    let mut cfg = cfg.clone();
+    configure_for_replay(&mut cfg, trace);
+    let recorder = TraceRecorder::new(&cfg, router_name);
+    let mut engine = sharded_engine(cfg, router);
+    engine.set_arrivals(trace.arrivals().to_vec());
+    engine.set_trace_sink(Box::new(recorder.clone()));
+    engine.run();
+    recorder.to_jsonl()
+}
+
+#[test]
+fn record_replay_rerecord_is_byte_identical_across_seeds_and_leaders() {
+    for seed in [11u64, 29] {
+        for leaders in [1usize, 3] {
+            let mut cfg = small_cfg(seed);
+            cfg.shard.leaders = leaders;
+            let original = record(&cfg, "random");
+            let trace = Trace::parse(&original).expect("recorded trace parses");
+            let rerecorded = replay_and_rerecord(&cfg, &trace, "random");
+            assert_eq!(
+                original, rerecorded,
+                "round trip diverged (seed {seed}, leaders {leaders})"
+            );
+        }
+    }
+}
+
+#[test]
+fn round_trip_holds_for_edf_with_key_affine_sharding() {
+    let mut cfg = small_cfg(7);
+    cfg.shard.leaders = 2;
+    cfg.shard.assign = ShardAssignKind::KeyAffine;
+    cfg.router.route_window = 4;
+    cfg.router.sla_s = 0.4;
+    let original = record(&cfg, "edf");
+    let trace = Trace::parse(&original).unwrap();
+    assert_eq!(trace.arrivals().len(), 300);
+    let rerecorded = replay_and_rerecord(&cfg, &trace, "edf");
+    assert_eq!(original, rerecorded);
+}
+
+#[test]
+fn round_trip_holds_for_ppo_across_worker_counts() {
+    // a PPO policy trained per (seed, workers) is deterministic, so an
+    // eval-mode recording of it must round-trip like any algorithmic
+    // router — for the sequential (workers=1) and parallel (workers=2)
+    // trainers alike
+    for workers in [1usize, 2] {
+        let mut cfg = small_cfg(5);
+        cfg.workload.total_requests = 250;
+        cfg.ppo.horizon = 64;
+        let train = |cfg: &Config| {
+            let mut r = experiments::train_ppo_workers(
+                cfg,
+                cfg.ppo.reward,
+                workers, // episodes = workers keeps the test fast
+                workers,
+            );
+            r.eval_mode();
+            r
+        };
+
+        let recorder = TraceRecorder::new(&cfg, "ppo");
+        let (out, _) = run_ppo_episode_io(
+            &cfg,
+            train(&cfg),
+            None,
+            Some(Box::new(recorder.clone())),
+        );
+        assert_eq!(out.report.completed, 250);
+        let original = recorder.to_jsonl();
+        let trace = Trace::parse(&original).unwrap();
+
+        let mut replay_cfg = cfg.clone();
+        configure_for_replay(&mut replay_cfg, &trace);
+        let recorder2 = TraceRecorder::new(&replay_cfg, "ppo");
+        run_ppo_episode_io(
+            &replay_cfg,
+            train(&cfg),
+            Some(trace.arrivals().to_vec()),
+            Some(Box::new(recorder2.clone())),
+        );
+        assert_eq!(
+            original,
+            recorder2.to_jsonl(),
+            "ppo round trip diverged (workers {workers})"
+        );
+    }
+}
+
+#[test]
+fn header_reconstructed_config_reproduces_the_run() {
+    // the replay CLI path: rebuild the config from the trace header
+    // (Config::from_json of the embedded document) instead of carrying
+    // the original object — the tail must still match byte for byte
+    let mut cfg = small_cfg(13);
+    cfg.router.sla_s = 0.5;
+    cfg.router.route_window = 2;
+    let original = record(&cfg, "least-loaded");
+    let trace = Trace::parse(&original).unwrap();
+    let from_header = trace.config().expect("recorded trace embeds its config");
+    assert_eq!(from_header.seed, 13);
+    assert_eq!(from_header.router.sla_s, 0.5);
+    assert_eq!(from_header.router.route_window, 2);
+    let rerecorded = replay_and_rerecord(&from_header, &trace, "least-loaded");
+    assert_eq!(original, rerecorded);
+}
+
+#[test]
+fn different_seeds_byte_diff() {
+    let a = record(&small_cfg(1), "random");
+    let b = record(&small_cfg(2), "random");
+    assert_ne!(a, b);
+    // and both parse into the same arrival count
+    assert_eq!(Trace::parse(&a).unwrap().arrivals().len(), 300);
+    assert_eq!(Trace::parse(&b).unwrap().arrivals().len(), 300);
+}
+
+#[test]
+fn malformed_and_truncated_traces_error_cleanly() {
+    let original = record(&small_cfg(3), "random");
+
+    // cut mid-line: the final partial record is invalid JSON
+    let cut = &original[..original.len() - 30];
+    let e = Trace::parse(cut).unwrap_err();
+    assert!(e.line > 1, "{e}");
+
+    // drop arrival records wholesale: the header's declared request
+    // count no longer matches
+    let gutted: String = original
+        .lines()
+        .filter(|l| !l.contains("\"ev\":\"arrival\"") || l.contains("\"id\":0,"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let e = Trace::parse(&gutted).unwrap_err();
+    assert!(e.msg.contains("truncated"), "{e}");
+
+    // garbage document
+    assert!(Trace::parse("not json at all\n").is_err());
+}
+
+#[test]
+fn compare_over_a_recorded_trace_emits_paired_deltas() {
+    // the acceptance-criteria path end to end: record once, A/B two
+    // routers over the same arrivals, check the paired summary keys
+    let cfg = small_cfg(17);
+    let original = record(&cfg, "random");
+    let trace = Trace::parse(&original).unwrap();
+    let names: Vec<String> = ["random", "edf"].iter().map(|s| s.to_string()).collect();
+    let report = compare_routers(&cfg, &trace, &names).unwrap();
+    let rendered = report.to_string_pretty();
+    assert!(rendered.contains("latency_delta_mean_s"));
+    let pairs = report.get("pairs").and_then(Json::as_arr).unwrap();
+    assert_eq!(pairs.len(), 1);
+    assert_eq!(pairs[0].get("n_pairs").and_then(Json::as_usize), Some(300));
+    assert_eq!(
+        pairs[0]
+            .get("per_request")
+            .and_then(Json::as_arr)
+            .map(<[Json]>::len),
+        Some(300)
+    );
+}
