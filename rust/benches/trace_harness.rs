@@ -1,0 +1,70 @@
+//! End-to-end timing of the counterfactual router-evaluation harness:
+//! train a small PPO checkpoint, record one trace, replay the
+//! algorithmic field plus the `ppo:<checkpoint>` entrant over it, and
+//! compute the paired significance block. Emits each candidate's paired
+//! latency delta and sign-test p-value as derived metrics in
+//! `BENCH_trace_harness.json`, so the perf trajectory records both how
+//! long the harness takes and what it concluded.
+
+use slim_scheduler::benchx::Bench;
+use slim_scheduler::config::RewardCfg;
+use slim_scheduler::experiments;
+use slim_scheduler::trace::{compare_routers, record_trace};
+use slim_scheduler::utilx::Json;
+
+fn main() {
+    let mut bench = Bench::from_env();
+    let quick = bench.quick();
+    let requests = if quick { 600 } else { 2500 };
+    let episodes = if quick { 1 } else { 3 };
+    let cfg = experiments::bench_cfg(requests, 42);
+
+    // train + checkpoint through the same file path the CLI cycle uses,
+    // so the bench exercises the `ppo:<path>` spelling end to end
+    let mut ckpt_cfg = cfg.clone();
+    ckpt_cfg.ppo.horizon = 128;
+    let mut trained = None;
+    bench.once("trace_harness/train_ppo", || {
+        trained =
+            Some(experiments::train_ppo(&ckpt_cfg, RewardCfg::overfit(), episodes));
+    });
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    let ckpt_path = format!("{dir}/trace_harness_ppo.json");
+    std::fs::write(&ckpt_path, trained.unwrap().to_json().to_string_pretty())
+        .expect("checkpoint writes");
+
+    let mut trace = None;
+    bench.once("trace_harness/record_trace", || {
+        trace = Some(record_trace(&cfg, "random").expect("recording succeeds"));
+    });
+    let trace = trace.unwrap();
+
+    let names: Vec<String> = vec![
+        "random".to_string(),
+        "edf".to_string(),
+        format!("ppo:{ckpt_path}"),
+    ];
+    let mut report = None;
+    bench.once("trace_harness/compare_3way", || {
+        report = Some(
+            compare_routers(&cfg, &trace, &names).expect("comparison succeeds"),
+        );
+    });
+    let report = report.unwrap();
+    if let Some(pairs) = report.get("pairs").and_then(Json::as_arr) {
+        for pair in pairs {
+            let router = pair.get("router").and_then(Json::as_str).unwrap_or("?");
+            let label = if router.starts_with("ppo:") { "ppo" } else { router };
+            let f = |k: &str| {
+                pair.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN)
+            };
+            bench.metric(
+                &format!("{label}_latency_delta_mean_s"),
+                f("latency_delta_mean_s"),
+            );
+            bench.metric(&format!("{label}_sign_test_p"), f("sign_test_p"));
+        }
+    }
+
+    bench.emit_json("trace_harness");
+}

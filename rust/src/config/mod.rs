@@ -55,7 +55,10 @@ pub struct RouterCfg {
     /// invocation across the queue (batched PPO inference).
     pub route_window: usize,
     /// Nominal per-request soft SLA (s) used to derive
-    /// `HeadView::slack_s` for deadline-aware routers.
+    /// `HeadView::slack_s` for deadline-aware routers. Non-positive
+    /// (`--sla 0`) means **no SLA**: heads carry infinite slack (EDF
+    /// degrades to its deterministic FIFO fallback) and no completion
+    /// counts as a miss.
     pub sla_s: f64,
     /// Opt-in (`--state-slack`): append the head's SLA slack to the PPO
     /// state vector as one extra feature. Off by default — the paper's
@@ -67,6 +70,26 @@ pub struct RouterCfg {
 impl Default for RouterCfg {
     fn default() -> Self {
         RouterCfg { route_window: 1, sla_s: 1.0, state_slack: false }
+    }
+}
+
+impl RouterCfg {
+    /// Whether a soft SLA is configured at all (`--sla 0` disables it).
+    pub fn sla_enabled(&self) -> bool {
+        self.sla_s > 0.0
+    }
+
+    /// Deadline slack for a head that has been queued for `age_s`
+    /// seconds: `sla − age`, or +∞ when no SLA is configured — the same
+    /// "no deadline pressure" sentinel synthetic heads use, so
+    /// deadline-aware routers fall back to their no-SLA behaviour
+    /// instead of ordering on a poisoned uniform slack.
+    pub fn slack_at(&self, age_s: f64) -> f64 {
+        if self.sla_enabled() {
+            self.sla_s - age_s
+        } else {
+            f64::INFINITY
+        }
     }
 }
 
@@ -857,6 +880,24 @@ mod tests {
         );
         cfg.apply_args(&args);
         assert_eq!(cfg.router.route_window, 1);
+    }
+
+    #[test]
+    fn sla_zero_means_disabled_with_infinite_slack() {
+        let mut cfg = Config::default();
+        assert!(cfg.router.sla_enabled()); // the 1 s soft default
+        assert_eq!(cfg.router.slack_at(0.25), 0.75);
+
+        let args = Args::parse_from(
+            ["simulate", "--sla", "0"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert!(!cfg.router.sla_enabled());
+        assert_eq!(cfg.router.slack_at(0.25), f64::INFINITY);
+        assert_eq!(cfg.router.slack_at(1e9), f64::INFINITY);
+        // roundtrips through JSON like any other value
+        let parsed = Config::from_json(&cfg.to_json());
+        assert!(!parsed.router.sla_enabled());
     }
 
     #[test]

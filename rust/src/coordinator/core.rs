@@ -216,10 +216,37 @@ impl LocalScheduler for GreedyScheduler {
 pub struct BlockState {
     pub routed_at: f64,
     pub remaining: usize,
+    /// Total members routed in this block (fixed at open; `remaining`
+    /// counts down from it).
+    pub size: usize,
+    /// Energy already attributed to completed members (J) — see
+    /// [`BlockLedger::member_done`].
+    pub charged_j: f64,
     pub width: f64,
     pub seg: usize,
     /// Representative width tuple (first request's history + this width).
     pub tuple: [f64; NUM_SEGMENTS],
+}
+
+/// What [`BlockLedger::member_done`] resolved one member completion to.
+#[derive(Clone, Debug)]
+pub enum MemberDone {
+    /// An intermediate member: its provisional 1/size share of the
+    /// block energy, integrated at this member's own completion instant.
+    Partial { share_j: f64 },
+    /// The final member: the block just completed. `energy_j` is the
+    /// block's device energy `P̄·L` at the completion instant;
+    /// `share_j = energy_j − (shares already charged)`, so the member
+    /// shares of a block sum to `energy_j` *exactly* — the invariant the
+    /// per-request energy column of the trace rests on. (The remainder
+    /// can dip below zero in the corner where cluster mean power falls
+    /// sharply between a split block's completions — exactness of the
+    /// sum is the contract; per-member shares are an attribution, not a
+    /// physical meter.)
+    Completed { block: BlockState, latency_s: f64, energy_j: f64, share_j: f64 },
+    /// Unknown tag: the block was abandoned (device-dropout re-route)
+    /// while this member was already in flight.
+    Orphan,
 }
 
 /// Tracks every routed block until all its members complete.
@@ -254,6 +281,37 @@ impl BlockLedger {
         } else {
             None
         }
+    }
+
+    /// [`BlockLedger::note_done`] with exact per-member energy
+    /// accounting. A block's device energy is `P̄·L` measured when its
+    /// *last* member completes; members that finish earlier (the block
+    /// was re-split across device batches by the local scheduler) are
+    /// charged a provisional `P̄(t_i)·(t_i − routed)/size` share at their
+    /// own completion instant, accumulated in `charged_j`, and the final
+    /// member takes the remainder — so the sum of member shares equals
+    /// the block energy to the last bit, whatever the split pattern.
+    /// (When the whole block completes in one batch every share reduces
+    /// to the historical `E/size` attribution.)
+    pub fn member_done(&mut self, tag: u64, power_w: f64, now: f64) -> MemberDone {
+        match self.blocks.get_mut(&tag) {
+            None => return MemberDone::Orphan,
+            Some(b) => {
+                b.remaining -= 1;
+                if b.remaining > 0 {
+                    let share_j =
+                        power_w * (now - b.routed_at) / b.size.max(1) as f64;
+                    b.charged_j += share_j;
+                    return MemberDone::Partial { share_j };
+                }
+            }
+        }
+        // last member: settle the block
+        let block = self.blocks.remove(&tag).expect("entry present");
+        let latency_s = now - block.routed_at;
+        let energy_j = power_w * latency_s;
+        let share_j = energy_j - block.charged_j;
+        MemberDone::Completed { block, latency_s, energy_j, share_j }
     }
 
     /// Cancel a block outright (its members were re-routed under new
@@ -324,12 +382,14 @@ impl RunMetrics {
         self.blocks_completed += 1;
     }
 
-    /// A request crossed its final segment.
+    /// A request crossed its final segment. A non-positive `sla_s`
+    /// means no SLA is configured — nothing can miss it (previously a
+    /// zero threshold marked *every* completion late).
     pub fn record_request_done(&mut self, e2e_latency_s: f64, acc_pct: f64) {
         self.done += 1;
         self.e2e_latency.record(e2e_latency_s);
         self.acc_sum += acc_pct;
-        if e2e_latency_s > self.sla_s {
+        if self.sla_s > 0.0 && e2e_latency_s > self.sla_s {
             self.sla_misses += 1;
         }
     }
@@ -388,17 +448,22 @@ mod tests {
         assert_eq!(order, vec![0, 1, 10, 11]);
     }
 
-    #[test]
-    fn block_ledger_counts_down() {
-        let mut l = BlockLedger::new();
-        let st = BlockState {
+    fn block3() -> BlockState {
+        BlockState {
             routed_at: 1.0,
             remaining: 3,
+            size: 3,
+            charged_j: 0.0,
             width: 0.5,
             seg: 2,
             tuple: [0.5; NUM_SEGMENTS],
-        };
-        l.open(7, st);
+        }
+    }
+
+    #[test]
+    fn block_ledger_counts_down() {
+        let mut l = BlockLedger::new();
+        l.open(7, block3());
         assert_eq!(l.open_blocks(), 1);
         assert!(l.note_done(7).is_none());
         assert!(l.note_done(7).is_none());
@@ -409,6 +474,65 @@ mod tests {
         // unknown / already-closed tags are ignored
         assert!(l.note_done(7).is_none());
         assert!(l.note_done(99).is_none());
+    }
+
+    #[test]
+    fn member_shares_sum_exactly_to_block_energy_across_splits() {
+        // a 3-member block whose members complete at three different
+        // instants under three different power readings — the re-split
+        // case the old per-request attribution drifted on
+        let mut l = BlockLedger::new();
+        l.open(9, block3());
+        let mut charged = 0.0;
+        let share1 = match l.member_done(9, 100.0, 2.0) {
+            MemberDone::Partial { share_j } => share_j,
+            other => panic!("first member must be partial: {other:?}"),
+        };
+        assert!((share1 - 100.0 * 1.0 / 3.0).abs() < 1e-12);
+        charged += share1;
+        let share2 = match l.member_done(9, 80.0, 3.0) {
+            MemberDone::Partial { share_j } => share_j,
+            other => panic!("second member must be partial: {other:?}"),
+        };
+        assert!((share2 - 80.0 * 2.0 / 3.0).abs() < 1e-12);
+        charged += share2;
+        let (block, latency_s, energy_j, share_j) =
+            match l.member_done(9, 120.0, 5.0) {
+                MemberDone::Completed { block, latency_s, energy_j, share_j } => {
+                    (block, latency_s, energy_j, share_j)
+                }
+                other => panic!("third member closes the block: {other:?}"),
+            };
+        assert!((latency_s - 4.0).abs() < 1e-12);
+        assert!((energy_j - 120.0 * 4.0).abs() < 1e-12);
+        charged += share_j;
+        // the invariant: member shares sum to the block's device energy
+        assert!((charged - energy_j).abs() < 1e-9, "{charged} vs {energy_j}");
+        assert_eq!(block.size, 3);
+        assert_eq!(l.open_blocks(), 0);
+        // orphaned tags resolve as such (no charge)
+        assert!(matches!(l.member_done(9, 100.0, 6.0), MemberDone::Orphan));
+    }
+
+    #[test]
+    fn single_batch_blocks_split_energy_evenly() {
+        // all members complete at one instant: every share is E/size
+        let mut l = BlockLedger::new();
+        l.open(4, block3());
+        let e = 90.0 * 2.0; // P̄ = 90 W, L = 2 s
+        for k in 0..3 {
+            match l.member_done(4, 90.0, 3.0) {
+                MemberDone::Partial { share_j } => {
+                    assert!((share_j - e / 3.0).abs() < 1e-12, "member {k}");
+                }
+                MemberDone::Completed { share_j, energy_j, .. } => {
+                    assert_eq!(k, 2);
+                    assert!((share_j - e / 3.0).abs() < 1e-9);
+                    assert!((energy_j - e).abs() < 1e-12);
+                }
+                MemberDone::Orphan => panic!("member {k} orphaned"),
+            }
+        }
     }
 
     #[test]

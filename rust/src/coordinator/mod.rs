@@ -42,10 +42,11 @@ pub use instance::{Instance, InstancePool};
 pub use queue::{head_runs, HeadRun, KeyedFifo};
 pub use request::{wkey, BatchKey, Request};
 pub use router::{
-    AlgoRouter, Decision, EdfRouter, HeadView, PlanError, Router, RoutingPlan,
+    AlgoRouter, Decision, EdfRouter, HeadView, PlanError, Router, RouterSpec,
+    RoutingPlan,
 };
 pub use shard::{
-    sharded_engine, HashAssign, KeyAffineAssign, RoundRobinAssign, ShardAssign,
-    ShardStats, ShardedEngine,
+    sharded_engine, HashAssign, KeyAffineAssign, Migration, RoundRobinAssign,
+    ShardAssign, ShardStats, ShardedEngine,
 };
 pub use telemetry::TelemetrySnapshot;

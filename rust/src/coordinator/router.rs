@@ -540,7 +540,16 @@ impl Router for EdfRouter {
         // panicking the leader — NaN sorts last and ties keep head order
         // (sort_by is stable), so the ordering is deterministic
         let mut order: Vec<usize> = (0..n).collect();
-        order.sort_by(|&a, &b| heads[a].slack_s.total_cmp(&heads[b].slack_s));
+        if heads.iter().any(|h| h.slack_s.is_finite()) {
+            order.sort_by(|&a, &b| heads[a].slack_s.total_cmp(&heads[b].slack_s));
+        }
+        // else: no head carries a usable deadline (SLA unset — every
+        // slack is +∞ — or telemetry poisoned every slack to NaN).
+        // Sorting such a window orders on garbage: total_cmp ranks +∞
+        // below NaN, so a single poisoned head would reshuffle the
+        // window. Fall back to plain FIFO order explicitly — without
+        // deadlines EDF *is* FIFO with load-aware placement — and let
+        // the load image below do the spreading.
         let mut scores: Vec<f64> = snap.servers.iter().map(load_score).collect();
         let mut decisions: Vec<Option<Decision>> = vec![None; n];
         for &k in &order {
@@ -608,6 +617,12 @@ impl AlgoRouter {
         vec!["random", "round-robin", "least-loaded", "edf"]
     }
 
+    /// Canonical spelling for `name` when it names an algorithmic
+    /// router (the `&'static str` the enum would report).
+    pub fn canonical(name: &str) -> Option<&'static str> {
+        Self::names().into_iter().find(|&n| n == name)
+    }
+
     fn inner(&mut self) -> &mut dyn Router {
         match self {
             AlgoRouter::Random(r) => r,
@@ -647,6 +662,52 @@ impl Router for AlgoRouter {
 
     fn end_of_run(&mut self) {
         self.inner().end_of_run()
+    }
+}
+
+/// A parsed router spelling — what `--routers` lists and the
+/// counterfactual A/B harness accept. Two families:
+///
+/// * an algorithmic router name (`random`, `round-robin`,
+///   `least-loaded`, `edf`) — constructed via [`AlgoRouter::by_name`];
+/// * `ppo:<path>` — a frozen PPO policy restored from a checkpoint
+///   file. Construction lives with the PPO module
+///   (`ppo::PpoRouter::from_checkpoint`), since the policy carries a
+///   weight lifecycle the algorithmic routers don't; this type only
+///   owns the spelling, so the coordinator stays free of PPO imports.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouterSpec {
+    /// A named algorithmic router (canonical spelling).
+    Algo(&'static str),
+    /// A PPO policy checkpoint at this path (`ppo:<path>`).
+    PpoCheckpoint(String),
+}
+
+impl RouterSpec {
+    /// Parse one `--routers` entry. `None` for unknown spellings and
+    /// for a bare `ppo:` with no path.
+    pub fn parse(s: &str) -> Option<RouterSpec> {
+        if let Some(path) = s.strip_prefix("ppo:") {
+            if path.is_empty() {
+                return None;
+            }
+            return Some(RouterSpec::PpoCheckpoint(path.to_string()));
+        }
+        AlgoRouter::canonical(s).map(RouterSpec::Algo)
+    }
+
+    /// The spelling this spec round-trips to (report labels, trace
+    /// headers).
+    pub fn label(&self) -> String {
+        match self {
+            RouterSpec::Algo(name) => (*name).to_string(),
+            RouterSpec::PpoCheckpoint(path) => format!("ppo:{path}"),
+        }
+    }
+
+    /// Human-readable list of accepted spellings (error messages).
+    pub fn spellings() -> String {
+        format!("{}, ppo:<checkpoint.json>", AlgoRouter::names().join(", "))
     }
 }
 
@@ -800,6 +861,63 @@ mod tests {
         assert_eq!(seen, vec![0, 1, 2]);
         assert!(plan.decisions().iter().all(|d| d.group == 1));
         assert!(plan.decisions().iter().all(|d| d.width == 0.25));
+    }
+
+    #[test]
+    fn edf_without_sla_falls_back_to_fifo_order() {
+        // SLA unset: every head carries infinite slack. EDF must process
+        // the window in FIFO order (an explicit fallback, not a sort
+        // over uniform garbage) and never apply the late-head widening.
+        let mut r = EdfRouter::new(W.to_vec(), 8);
+        let mut rng = Rng::new(14);
+        let mut s = snap(&[0, 0, 0], &[0.0, 0.0, 0.0]);
+        s.fifo_len = 2; // calm leader: group widening stays off
+        let hs: Vec<HeadView> = (0..3)
+            .map(|i| HeadView {
+                fifo_index: i,
+                w_req: 0.5,
+                seg: i,
+                age_s: 0.02 * i as f64,
+                slack_s: f64::INFINITY,
+            })
+            .collect();
+        let plan = r.plan(&s, &hs, &mut rng);
+        // FIFO processing over idle equal servers: head k takes server k
+        let servers: Vec<usize> =
+            plan.decisions().iter().map(|d| d.server).collect();
+        assert_eq!(servers, vec![0, 1, 2]);
+        assert!(plan.decisions().iter().all(|d| d.group == 1));
+
+        // one poisoned NaN among the infinities must not reshuffle the
+        // deterministic FIFO fallback
+        let mut r2 = EdfRouter::new(W.to_vec(), 8);
+        let mut hs2 = hs.clone();
+        hs2[0].slack_s = f64::NAN;
+        let plan2 = r2.plan(&s, &hs2, &mut rng);
+        let servers2: Vec<usize> =
+            plan2.decisions().iter().map(|d| d.server).collect();
+        assert_eq!(servers2, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn router_spec_parses_names_and_checkpoints() {
+        for name in AlgoRouter::names() {
+            assert_eq!(RouterSpec::parse(name), Some(RouterSpec::Algo(name)));
+            assert_eq!(RouterSpec::parse(name).unwrap().label(), name);
+        }
+        assert_eq!(
+            RouterSpec::parse("ppo:ckpt.json"),
+            Some(RouterSpec::PpoCheckpoint("ckpt.json".to_string()))
+        );
+        assert_eq!(
+            RouterSpec::parse("ppo:ckpt.json").unwrap().label(),
+            "ppo:ckpt.json"
+        );
+        assert_eq!(RouterSpec::parse("ppo:"), None); // path required
+        assert_eq!(RouterSpec::parse("ppo"), None); // bare ppo is ambiguous
+        assert_eq!(RouterSpec::parse("marsbase"), None);
+        assert!(RouterSpec::spellings().contains("edf"));
+        assert!(RouterSpec::spellings().contains("ppo:<checkpoint.json>"));
     }
 
     #[test]

@@ -195,6 +195,25 @@ impl<R: Router> LeaderShard<R> {
 /// ever turning one event into an O(backlog) reshuffle).
 const MAX_MIGRATIONS_PER_STEP: usize = 4;
 
+/// One migrated head run: which shard it left, which shard now owns it,
+/// and the moved requests' `(id, segment)` pairs in FIFO order — what
+/// the engine needs to re-attribute the requests' shard placement in
+/// the trace (`assign` records) after the move. Block tags need no
+/// re-namespacing: tags are minted at *routing* time from the routing
+/// shard's counter (`global_tag`), so a migrated run's blocks are
+/// namespaced under the destination shard automatically.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Migration {
+    pub from: usize,
+    pub to: usize,
+    pub ids: Vec<(u64, usize)>,
+}
+
+/// Requests moved across all runs of a rebalance step.
+pub fn migrated_count(migrations: &[Migration]) -> usize {
+    migrations.iter().map(|m| m.ids.len()).sum()
+}
+
 /// One cross-shard rebalance step over the leader FIFOs: while the
 /// deepest and shallowest FIFOs differ by more than `threshold`
 /// requests, migrate the deepest shard's whole same-segment head run to
@@ -202,17 +221,18 @@ const MAX_MIGRATIONS_PER_STEP: usize = 4;
 /// half the imbalance (`2·len <= diff`), so the depth gap shrinks but
 /// never changes sign — a migration can never invert the imbalance it
 /// is fixing (no ping-pong). Ties break on the lowest shard index;
-/// migration order is therefore deterministic. Returns the number of
-/// requests migrated, and records per-shard in/out counters.
+/// migration order is therefore deterministic. Returns one [`Migration`]
+/// record per moved run (the engine re-attributes trace placement from
+/// them), and records per-shard in/out counters.
 pub fn rebalance<R: Router>(
     shards: &mut [LeaderShard<R>],
     threshold: usize,
     run_cap: usize,
-) -> usize {
+) -> Vec<Migration> {
+    let mut migrations = Vec::new();
     if threshold == 0 || shards.len() < 2 {
-        return 0;
+        return migrations;
     }
-    let mut moved_total = 0usize;
     for _ in 0..MAX_MIGRATIONS_PER_STEP {
         let deep = (0..shards.len())
             .max_by_key(|&i| (shards[i].fifo.len(), shards.len() - i))
@@ -233,10 +253,14 @@ pub fn rebalance<R: Router>(
             shards[deep].fifo.drain(..take).collect();
         shards[deep].stats.migrated_out += take as u64;
         shards[shallow].stats.migrated_in += take as u64;
+        migrations.push(Migration {
+            from: deep,
+            to: shallow,
+            ids: moved.iter().map(|r| (r.id, r.seg)).collect(),
+        });
         shards[shallow].fifo.extend(moved);
-        moved_total += take;
     }
-    moved_total
+    migrations
 }
 
 /// The multi-leader coordinator. Since the shard refactor the engine
@@ -402,8 +426,14 @@ mod tests {
             shard_of_segs(&[1, 1, 1, 0, 2, 0, 1, 2], 0),
             shard_of_segs(&[3], 100),
         ];
-        let moved = rebalance(&mut shards, 2, 64);
-        assert_eq!(moved, 3);
+        let migrations = rebalance(&mut shards, 2, 64);
+        assert_eq!(migrated_count(&migrations), 3);
+        // the migration record names source, destination, and the moved
+        // requests in FIFO order — the trace re-attribution inputs
+        assert_eq!(migrations.len(), 1);
+        assert_eq!(migrations[0].from, 0);
+        assert_eq!(migrations[0].to, 1);
+        assert_eq!(migrations[0].ids, vec![(0, 1), (1, 1), (2, 1)]);
         assert_eq!(shards[0].stats.migrated_out, 3);
         assert_eq!(shards[1].stats.migrated_in, 3);
         // the run landed at the back of the shallow fifo, in order
@@ -421,11 +451,11 @@ mod tests {
             shard_of_segs(&[2], 10),
         ];
         // diff = 2, threshold 2: not strictly above, no move
-        assert_eq!(rebalance(&mut shards, 2, 64), 0);
+        assert!(rebalance(&mut shards, 2, 64).is_empty());
         // threshold 0 disables
-        assert_eq!(rebalance(&mut shards, 0, 64), 0);
+        assert!(rebalance(&mut shards, 0, 64).is_empty());
         let mut one = vec![shard_of_segs(&[0, 0, 0, 0], 0)];
-        assert_eq!(rebalance(&mut one, 1, 64), 0);
+        assert!(rebalance(&mut one, 1, 64).is_empty());
     }
 
     #[test]
@@ -436,7 +466,7 @@ mod tests {
             shard_of_segs(&[2, 2, 2, 2, 2], 0),
             shard_of_segs(&[], 50),
         ];
-        assert_eq!(rebalance(&mut shards, 2, 64), 0);
+        assert!(rebalance(&mut shards, 2, 64).is_empty());
         assert_eq!(shards[0].fifo.len(), 5);
 
         // a shorter head run (2) < diff (5) does migrate
@@ -444,7 +474,7 @@ mod tests {
             shard_of_segs(&[1, 1, 2, 2, 2], 0),
             shard_of_segs(&[], 50),
         ];
-        assert_eq!(rebalance(&mut shards, 2, 64), 2);
+        assert_eq!(migrated_count(&rebalance(&mut shards, 2, 64)), 2);
         assert!(shards[0].fifo.len() >= shards[1].fifo.len());
     }
 
@@ -458,7 +488,7 @@ mod tests {
             shard_of_segs(&[], 100),
         ];
         let moved = rebalance(&mut shards, 1, 64);
-        assert!(moved <= MAX_MIGRATIONS_PER_STEP);
-        assert!(moved > 0);
+        assert!(moved.len() <= MAX_MIGRATIONS_PER_STEP);
+        assert!(migrated_count(&moved) > 0);
     }
 }

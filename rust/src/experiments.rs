@@ -194,6 +194,105 @@ pub fn run_table5(cfg: &Config, train_episodes: usize) -> (RunOutcome, PpoRouter
     run_ppo_experiment_online(cfg, RewardCfg::balanced(), train_episodes)
 }
 
+// ---------------------------------------------------------------------
+// Scenario-conditioned trace study (`repro trace-study`)
+// ---------------------------------------------------------------------
+
+use crate::trace::{compare_routers_opts, record_trace};
+use crate::utilx::json::{obj, Json};
+
+/// The scenario-conditioned paired study from the ROADMAP: for every
+/// scenario in the registry, record one arrival trace under the baseline
+/// (`field[0]`) and counterfactually replay the full algorithmic field
+/// plus the given PPO checkpoint over it, collecting the paired
+/// significance matrix. Each scenario's entry carries the A/B report
+/// (summary + significance, no per-request rows — this is a matrix, not
+/// a dump) or, when the scenario can't run the checkpoint (different
+/// cluster size or width set ⇒ different policy shape), the algorithmic
+/// field alone plus the load error under `ppo_error` — an honest
+/// "policy not transferable as-is" cell instead of a silent skip.
+///
+/// Deterministic end to end: every scenario records and replays under
+/// `seed`, and the significance block's bootstrap streams are seeded
+/// from it too. Returns the `BENCH_trace_study.json` document.
+pub fn trace_study(
+    checkpoint: &str,
+    field: &[String],
+    requests: usize,
+    seed: u64,
+) -> Result<Json, String> {
+    if field.is_empty() {
+        return Err("trace-study needs at least one algorithmic router".into());
+    }
+    // an unreadable or unparsable checkpoint is a *global* failure —
+    // abort the study rather than letting a typoed path masquerade as
+    // "shape-incompatible" on every scenario (a false green). Parsed
+    // once; the per-scenario probe below only re-checks the shape.
+    let ckpt_text = std::fs::read_to_string(checkpoint)
+        .map_err(|e| format!("cannot read checkpoint {checkpoint}: {e}"))?;
+    let ckpt_json = Json::parse(&ckpt_text)
+        .map_err(|e| format!("checkpoint {checkpoint} is not valid JSON: {e}"))?;
+    let mut entries = Vec::new();
+    for scenario in crate::sim::scenarios::all() {
+        let mut cfg = scenario.config();
+        cfg.workload.total_requests = requests;
+        cfg.seed = seed;
+
+        let mut fields: Vec<(String, Json)> = vec![(
+            "scenario".to_string(),
+            Json::Str(scenario.name.to_string()),
+        )];
+        let trace = match record_trace(&cfg, &field[0]) {
+            Ok(trace) => trace,
+            Err(e) => {
+                // a scenario whose recording starves (overload past the
+                // safety cap) reports itself instead of sinking the study
+                fields.push(("record_error".to_string(), Json::Str(e)));
+                entries.push(Json::Obj(fields));
+                continue;
+            }
+        };
+
+        // shape probe against the pre-parsed weights: can this
+        // scenario's cluster run the checkpoint? (Different device
+        // count or width set ⇒ different policy dimensions.)
+        let ppo_compatible =
+            PpoRouter::for_config(&cfg).load_weights(&ckpt_json);
+        let mut names: Vec<String> = field.to_vec();
+        if ppo_compatible {
+            names.push(format!("ppo:{checkpoint}"));
+        } else {
+            fields.push((
+                "ppo_error".to_string(),
+                Json::Str(format!(
+                    "checkpoint shape does not fit this scenario \
+                     ({} servers, {} widths)",
+                    cfg.devices.len(),
+                    cfg.scheduler.widths.len()
+                )),
+            ));
+        }
+        fields.push(("ppo_compatible".to_string(), Json::Bool(ppo_compatible)));
+        if names.len() >= 2 {
+            let report = compare_routers_opts(&cfg, &trace, &names, false)?;
+            fields.push(("report".to_string(), report));
+        }
+        // (a one-router field with an incompatible checkpoint leaves no
+        // candidates — the entry still records why)
+        entries.push(Json::Obj(fields));
+    }
+    Ok(obj(vec![
+        ("checkpoint", Json::Str(checkpoint.to_string())),
+        (
+            "field",
+            Json::Arr(field.iter().cloned().map(Json::Str).collect()),
+        ),
+        ("requests_per_scenario", Json::Num(requests as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("scenarios", Json::Arr(entries)),
+    ]))
+}
+
 /// Percentage change helper for EXPERIMENTS.md-style deltas.
 pub fn pct_change(from: f64, to: f64) -> f64 {
     if from == 0.0 {
@@ -340,6 +439,78 @@ mod tests {
         assert!(seq.stats.decisions > 0);
         let par = train_ppo_workers(&cfg, RewardCfg::overfit(), 2, 2);
         assert!(par.stats.updates > 0);
+    }
+
+    #[test]
+    fn trace_study_builds_a_per_scenario_matrix() {
+        use crate::config::{PpoCfg, WIDTHS};
+
+        // shape is all from_checkpoint guards — an untrained policy
+        // checkpoint keeps the study test fast
+        let ppo = PpoRouter::new(3, WIDTHS.to_vec(), PpoCfg::default(), 7);
+        let path = std::env::temp_dir().join(format!(
+            "slim_sched_study_ckpt_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, ppo.to_json().to_string_pretty()).unwrap();
+
+        let field: Vec<String> =
+            ["random", "edf"].iter().map(|s| s.to_string()).collect();
+        let report = trace_study(&path, &field, 100, 42).unwrap();
+        let entries = report.get("scenarios").and_then(Json::as_arr).unwrap();
+        assert_eq!(entries.len(), crate::sim::scenarios::all().len());
+
+        let by_name = |name: &str| {
+            entries
+                .iter()
+                .find(|e| e.get("scenario").and_then(Json::as_str) == Some(name))
+                .unwrap_or_else(|| panic!("scenario {name} missing"))
+        };
+        // the paper cluster matches the checkpoint shape: the ppo entrant
+        // joins the field and its pair carries the significance block
+        let paper = by_name("paper");
+        assert_eq!(paper.get("ppo_compatible").and_then(Json::as_bool), Some(true));
+        let pairs = paper
+            .get("report")
+            .and_then(|r| r.get("pairs"))
+            .and_then(Json::as_arr)
+            .unwrap();
+        assert_eq!(pairs.len(), 2); // edf + ppo vs the random baseline
+        let ppo_pair = &pairs[1];
+        assert!(ppo_pair
+            .get("router")
+            .and_then(Json::as_str)
+            .unwrap()
+            .starts_with("ppo:"));
+        assert!(ppo_pair.get("sign_test_p").is_some());
+        assert!(ppo_pair.get("latency_delta_ci95").is_some());
+        assert!(ppo_pair.get("per_request").is_none()); // matrix, not dump
+
+        // a 4-device scenario cannot load the 3-device checkpoint: the
+        // study records the incompatibility and compares the field alone
+        let hetero = by_name("hetero-mixed");
+        assert_eq!(
+            hetero.get("ppo_compatible").and_then(Json::as_bool),
+            Some(false)
+        );
+        assert!(hetero.get("ppo_error").is_some());
+        let pairs = hetero
+            .get("report")
+            .and_then(|r| r.get("pairs"))
+            .and_then(Json::as_arr)
+            .unwrap();
+        assert_eq!(pairs.len(), 1); // edf only
+
+        // the whole matrix is deterministic
+        let again = trace_study(&path, &field, 100, 42).unwrap();
+        assert_eq!(report.to_string_pretty(), again.to_string_pretty());
+        std::fs::remove_file(&path).ok();
+
+        // a typoed checkpoint path is a global failure, not a quiet
+        // all-scenarios-incompatible matrix
+        let err = trace_study("/nonexistent/x.json", &field, 50, 1).unwrap_err();
+        assert!(err.contains("cannot read"), "{err}");
     }
 
     #[test]

@@ -5,8 +5,13 @@
 //!                 --trace-out records the run as a JSONL trace)
 //!   replay        re-run a recorded trace's arrivals through any router
 //!                 (--trace-in; --trace-out re-records the replay)
-//!   trace-compare counterfactual A/B: N routers over one trace, paired
-//!                 per-request deltas into BENCH_trace_ab.json
+//!   trace-compare counterfactual A/B: N routers (algorithmic names or
+//!                 ppo:<checkpoint> entrants) over one trace — paired
+//!                 per-request deltas + sign-test/bootstrap significance
+//!                 into BENCH_trace_ab.json
+//!   trace-study   scenario-conditioned sweep: record one trace per
+//!                 registry scenario and trace-compare a PPO checkpoint
+//!                 against the algorithmic field (BENCH_trace_study.json)
 //!   tables        regenerate paper tables (I, II, III, IV, V)
 //!   figures       regenerate paper figures (1, 2, 3) as data series
 //!   train-ppo     train a PPO router, print learning curve, checkpoint it
@@ -19,7 +24,8 @@
 //!   repro simulate --scenario hetero-mixed --router least-loaded
 //!   repro simulate --router random --requests 2000 --trace-out run.jsonl
 //!   repro replay --trace-in run.jsonl --router edf
-//!   repro trace-compare --trace-in run.jsonl --routers random,edf
+//!   repro trace-compare --trace-in run.jsonl --routers random,edf,ppo:ppo.json
+//!   repro trace-study --checkpoint ppo.json --requests 1500
 //!   repro tables --which 4 --scenario dropout
 //!   repro figures --which 1
 //!   repro train-ppo --episodes 10 --workers 4 --out ppo.json
@@ -50,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         .describe("workers", "parallel rollout workers (train-ppo/simulate --router ppo)")
         .describe("scenario", "named cluster/workload scenario (see `repro scenarios`)")
         .describe("route-window", "FIFO heads planned per routing event (1 = paper per-head loop)")
-        .describe("sla", "soft per-request SLA (s) exposed to routers as deadline slack")
+        .describe("sla", "soft per-request SLA (s) exposed to routers as deadline slack; 0 disables (EDF degrades to FIFO, no misses counted)")
         .describe("leaders", "leader shards the global FIFO splits across (1 = paper single leader)")
         .describe("rebalance", "cross-shard rebalance threshold in requests (0 = off)")
         .describe("shard-assign", "request->shard policy: hash|round-robin|key-affine")
@@ -58,8 +64,8 @@ fn main() -> anyhow::Result<()> {
         .describe("state-slack", "append per-head SLA slack to the PPO state vector (opt-in)")
         .describe("trace-out", "record the run as a JSONL trace at this path")
         .describe("trace-in", "replay/compare a recorded JSONL trace (replay, trace-compare)")
-        .describe("routers", "comma list for trace-compare; first is the baseline (default random,edf)")
-        .describe("checkpoint", "PPO checkpoint to load instead of training (simulate, replay)")
+        .describe("routers", "comma list for trace-compare/trace-study; first is the baseline; ppo:<path> loads a checkpoint entrant (default random,edf)")
+        .describe("checkpoint", "PPO checkpoint to load instead of training (simulate, replay, trace-study)")
         .describe("dropout", "kill server mid-run: server@time, e.g. 0@5.0")
         .describe("diurnal-period", "sinusoidal load cycle length (s, 0=off)")
         .describe("diurnal-depth", "sinusoidal load modulation depth [0,1)")
@@ -77,6 +83,7 @@ fn main() -> anyhow::Result<()> {
         Some("simulate") => cmd_simulate(&args),
         Some("replay") => cmd_replay(&args),
         Some("trace-compare") => cmd_trace_compare(&args),
+        Some("trace-study") => cmd_trace_study(&args),
         Some("tables") => cmd_tables(&args),
         Some("figures") => cmd_figures(&args),
         Some("train-ppo") => cmd_train_ppo(&args),
@@ -305,17 +312,28 @@ fn cmd_trace_compare(args: &Args) -> anyhow::Result<()> {
     let report =
         compare_routers(&cfg, &trace, &routers).map_err(|e| anyhow::anyhow!("{e}"))?;
 
+    print_pair_table(&report);
+
+    let out = args.str_or("out", "BENCH_trace_ab.json");
+    write_report(&report, &out)?;
+    println!("A/B report written to {out}");
+    Ok(())
+}
+
+/// Render one A/B report's paired-difference rows (shared by
+/// trace-compare and the per-scenario entries of trace-study).
+fn print_pair_table(report: &Json) {
     let mut table = Table::new(
         "Paired per-request deltas vs baseline (candidate − baseline)",
         &[
             "router",
             "n",
             "lat_delta_s",
+            "lat_ci95",
             "energy_delta_j",
-            "width_delta",
+            "sign_p",
+            "w/l/t",
             "miss_rate_delta",
-            "wins",
-            "losses",
         ],
     );
     if let Some(pairs) = report.get("pairs").and_then(Json::as_arr) {
@@ -324,23 +342,81 @@ fn cmd_trace_compare(args: &Args) -> anyhow::Result<()> {
                 pair.get(k).and_then(Json::as_str).unwrap_or("?").to_string()
             };
             let n = |k: &str| pair.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+            let ci = pair
+                .get("latency_delta_ci95")
+                .and_then(Json::as_f64_vec)
+                .filter(|v| v.len() == 2)
+                .map(|v| format!("[{:+.4}, {:+.4}]", v[0], v[1]))
+                .unwrap_or_else(|| "?".to_string());
             table.row(&[
                 s("router"),
                 format!("{}", n("n_pairs") as u64),
                 format!("{:+.4}", n("latency_delta_mean_s")),
+                ci,
                 format!("{:+.2}", n("energy_delta_mean_j")),
-                format!("{:+.3}", n("width_delta_mean")),
+                format!("{:.4}", n("sign_test_p")),
+                format!(
+                    "{}/{}/{}",
+                    n("wins") as u64,
+                    n("losses") as u64,
+                    n("ties") as u64
+                ),
                 format!("{:+.4}", n("sla_miss_rate_delta")),
-                format!("{}", n("wins") as u64),
-                format!("{}", n("losses") as u64),
             ]);
         }
     }
     table.print();
+}
 
-    let out = args.str_or("out", "BENCH_trace_ab.json");
+fn cmd_trace_study(args: &Args) -> anyhow::Result<()> {
+    let checkpoint = args.get("checkpoint").ok_or_else(|| {
+        anyhow::anyhow!("trace-study needs --checkpoint <ppo.json> (train one with `repro train-ppo --out ppo.json`)")
+    })?;
+    let field: Vec<String> = args
+        .str_or("routers", "random,round-robin,least-loaded,edf")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let requests = args.usize_or("requests", 1500);
+    let seed = args.u64_or("seed", Config::default().seed);
+    println!(
+        "trace study: {} scenarios x {requests} requests, field {:?} \
+         (baseline {}), checkpoint {checkpoint}",
+        slim_scheduler::sim::scenarios::all().len(),
+        field,
+        field.first().map(String::as_str).unwrap_or("?"),
+    );
+    let report = experiments::trace_study(checkpoint, &field, requests, seed)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    if let Some(entries) = report.get("scenarios").and_then(Json::as_arr) {
+        for entry in entries {
+            let name = entry
+                .get("scenario")
+                .and_then(Json::as_str)
+                .unwrap_or("?");
+            if let Some(e) = entry.get("record_error").and_then(Json::as_str) {
+                println!("\nscenario {name}: recording failed — {e}");
+                continue;
+            }
+            let compat = entry
+                .get("ppo_compatible")
+                .and_then(Json::as_bool)
+                .unwrap_or(false);
+            println!(
+                "\nscenario {name}{}:",
+                if compat { "" } else { " (checkpoint shape-incompatible; algorithmic field only)" }
+            );
+            if let Some(rep) = entry.get("report") {
+                print_pair_table(rep);
+            }
+        }
+    }
+
+    let out = args.str_or("out", "BENCH_trace_study.json");
     write_report(&report, &out)?;
-    println!("A/B report written to {out}");
+    println!("\nper-scenario paired matrix written to {out}");
     Ok(())
 }
 

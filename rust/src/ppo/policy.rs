@@ -63,6 +63,21 @@ pub fn entropy(p: &[f64]) -> f64 {
     -p.iter().filter(|&&x| x > 1e-12).map(|&x| x * x.ln()).sum::<f64>()
 }
 
+/// First argmax of a logit slice (softmax is monotonic, so the argmax
+/// over logits is the mode of the head's categorical). `total_cmp`
+/// keeps a NaN logit from panicking; ties break to the lowest index,
+/// so greedy decoding is a pure function of the weights and state.
+fn argmax(logits: &[f64]) -> usize {
+    debug_assert!(!logits.is_empty());
+    let mut best = 0usize;
+    for (j, &l) in logits.iter().enumerate().skip(1) {
+        if l.total_cmp(&logits[best]) == std::cmp::Ordering::Greater {
+            best = j;
+        }
+    }
+    best
+}
+
 /// Softmax + categorical draw on a stack buffer (heap fallback past 32
 /// logits, so huge server heads sample instead of overrunning the
 /// stack array); returns the sampled index and its (optionally ε-mixed)
@@ -198,6 +213,51 @@ impl Policy {
             rng,
         );
         ActionTriple { srv, w, g }
+    }
+
+    /// Greedy (mode) decoding: the argmax action of every head, no
+    /// sampling and no RNG. This is what frozen evaluation replays use —
+    /// the decision stream is a pure function of (weights, state), so a
+    /// counterfactual replay cannot be perturbed by draw-order effects.
+    pub fn greedy(
+        &self,
+        state: &[f64],
+        scratch: &mut (Vec<f64>, Vec<f64>),
+    ) -> ActionTriple {
+        self.mlp.forward_nocache(state, scratch);
+        let out = &scratch.0;
+        ActionTriple {
+            srv: argmax(&out[..self.n_srv]),
+            w: argmax(&out[self.n_srv..self.n_srv + self.n_w]),
+            g: argmax(
+                &out[self.n_srv + self.n_w..self.n_srv + self.n_w + self.n_g],
+            ),
+        }
+    }
+
+    /// Batched [`Policy::greedy`]: one matrix forward over `n` stacked
+    /// states, argmax per head per state.
+    pub fn greedy_batch(
+        &self,
+        states: &[f64],
+        n: usize,
+        scratch: &mut (Vec<f64>, Vec<f64>),
+    ) -> Vec<ActionTriple> {
+        let out_dim = self.n_srv + self.n_w + self.n_g + 1;
+        self.mlp.forward_batch(states, n, scratch);
+        (0..n)
+            .map(|k| {
+                let out = &scratch.0[k * out_dim..(k + 1) * out_dim];
+                ActionTriple {
+                    srv: argmax(&out[..self.n_srv]),
+                    w: argmax(&out[self.n_srv..self.n_srv + self.n_w]),
+                    g: argmax(
+                        &out[self.n_srv + self.n_w
+                            ..self.n_srv + self.n_w + self.n_g],
+                    ),
+                }
+            })
+            .collect()
     }
 
     /// Batched diagnostic evaluation over `n` stacked states (row-major
@@ -527,6 +587,47 @@ mod tests {
                 eval.p_w[j]
             );
         }
+    }
+
+    #[test]
+    fn greedy_is_the_distribution_mode_and_needs_no_rng() {
+        let p = policy();
+        let mut scratch = (Vec::new(), Vec::new());
+        for k in 0..6 {
+            let state = stacked_states(6, 11)[k * 11..(k + 1) * 11].to_vec();
+            let a = p.greedy(&state, &mut scratch);
+            let (eval, _) = p.evaluate(&state, None, 0.0);
+            assert_eq!(a.srv, argmax(&eval.p_srv), "state {k}");
+            assert_eq!(a.w, argmax(&eval.p_w), "state {k}");
+            assert_eq!(a.g, argmax(&eval.p_g), "state {k}");
+            // pure function of (weights, state): repeat calls agree
+            assert_eq!(a, p.greedy(&state, &mut scratch));
+        }
+    }
+
+    #[test]
+    fn greedy_batch_matches_per_state_greedy() {
+        let p = policy();
+        let n = 5;
+        let states = stacked_states(n, 11);
+        let mut s_a = (Vec::new(), Vec::new());
+        let mut s_b = (Vec::new(), Vec::new());
+        let batch = p.greedy_batch(&states, n, &mut s_a);
+        assert_eq!(batch.len(), n);
+        for (k, a) in batch.iter().enumerate() {
+            let single =
+                p.greedy(&states[k * 11..(k + 1) * 11], &mut s_b);
+            assert_eq!(*a, single, "state {k}");
+        }
+    }
+
+    #[test]
+    fn argmax_breaks_ties_low_and_survives_nan() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0); // tie → lowest index
+        assert_eq!(argmax(&[f64::NAN, 1.0]), 0); // NaN ranks above by
+                                                 // total_cmp — but never panics
+        assert_eq!(argmax(&[0.5]), 0);
     }
 
     #[test]

@@ -61,6 +61,11 @@ pub struct PpoRouter {
     step: u64,
     next_tag: u64,
     pub training: bool,
+    /// Frozen greedy decoding (eval mode only): every head takes the
+    /// argmax action, so the decision stream is a pure function of the
+    /// checkpoint and the replayed state — no RNG draws at all. This is
+    /// what the counterfactual A/B harness runs checkpoints under.
+    greedy: bool,
     /// Collect transitions but never update in-place (parallel rollout
     /// workers harvest the buffer; the central trainer owns updates).
     collect_only: bool,
@@ -130,6 +135,7 @@ impl PpoRouter {
             step: 0,
             next_tag: 0,
             training: true,
+            greedy: false,
             collect_only: false,
             prior_mean_norm,
             state_slack,
@@ -151,9 +157,45 @@ impl PpoRouter {
         )
     }
 
-    /// Freeze the policy for evaluation runs.
+    /// Freeze the policy for evaluation runs (stochastic: actions are
+    /// still sampled from the learned distribution, exploration off).
     pub fn eval_mode(&mut self) {
         self.training = false;
+    }
+
+    /// Freeze the policy in *greedy* evaluation mode: every head takes
+    /// its argmax action deterministically, with no RNG draws. Used by
+    /// the trace-compare harness so a checkpoint replay is a pure
+    /// function of (weights, trace) — two replays are byte-identical by
+    /// construction, not merely by seed discipline.
+    pub fn greedy_eval_mode(&mut self) {
+        self.training = false;
+        self.greedy = true;
+    }
+
+    /// Build a frozen greedy-eval router from a checkpoint file,
+    /// shape-guarded against `cfg` (cluster size, width/group sets, the
+    /// `--state-slack` feature flag — all of which change the policy
+    /// dimensions, so a mismatched checkpoint is rejected, never
+    /// silently truncated).
+    pub fn from_checkpoint(cfg: &Config, path: &str) -> Result<PpoRouter, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read checkpoint {path}: {e}"))?;
+        let json = Json::parse(&text)
+            .map_err(|e| format!("checkpoint {path} is not valid JSON: {e}"))?;
+        let mut router = PpoRouter::for_config(cfg);
+        if !router.load_weights(&json) {
+            return Err(format!(
+                "checkpoint {path} does not match the policy shape for this \
+                 config ({} servers, {} widths, state_slack={}; state-slack \
+                 checkpoints need --state-slack and the recording cluster)",
+                cfg.devices.len(),
+                cfg.scheduler.widths.len(),
+                cfg.router.state_slack,
+            ));
+        }
+        router.greedy_eval_mode();
+        Ok(router)
     }
 
     /// Spawn a rollout collector: same weights, cfg and exploration
@@ -301,6 +343,9 @@ impl PpoRouter {
             let (action, eval) = self.policy.sample(&state, eps, rng);
             self.buffer.stage(tag, state, action, eval.logp, eval.value, eps);
             action
+        } else if self.greedy {
+            // frozen greedy replay: argmax decoding, no RNG at all
+            self.policy.greedy(&state, &mut self.scratch)
         } else {
             // serving hot path: allocation-light forward, no rollout
             self.policy.sample_notrain(&state, eps, rng, &mut self.scratch)
@@ -355,9 +400,19 @@ impl PpoRouter {
             .collect();
         self.step += n as u64;
         self.stats.decisions += n as u64;
-        let sampled =
-            self.policy
-                .sample_batch(&states, n, &eps, rng, &mut self.scratch);
+        let sampled: Vec<(super::policy::ActionTriple, f64, f64)> =
+            if !self.training && self.greedy {
+                // frozen greedy replay: one matrix forward, argmax per
+                // head, no RNG draws (logp/value are never staged here)
+                self.policy
+                    .greedy_batch(&states, n, &mut self.scratch)
+                    .into_iter()
+                    .map(|a| (a, 0.0, 0.0))
+                    .collect()
+            } else {
+                self.policy
+                    .sample_batch(&states, n, &eps, rng, &mut self.scratch)
+            };
         let mut decisions = Vec::with_capacity(n);
         for (k, (action, logp, value)) in sampled.into_iter().enumerate() {
             let tag = self.next_tag;
@@ -880,6 +935,75 @@ mod tests {
         for (x, y) in ea.p_w.iter().zip(&eb.p_w) {
             assert!((x - y).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn greedy_eval_mode_is_rng_independent_and_stages_nothing() {
+        let mut r = router();
+        r.greedy_eval_mode();
+        let s = snap(3);
+        // two *different* RNG streams: greedy decoding must not consult
+        // either, so the decision streams agree action for action
+        let mut rng_a = Rng::new(1);
+        let mut rng_b = Rng::new(999);
+        for i in 0..20 {
+            let da = r.route_one(&s, &HeadView::new(0.5, i % 4), &mut rng_a);
+            let db = r.route_one(&s, &HeadView::new(0.5, i % 4), &mut rng_b);
+            assert_eq!((da.server, da.width, da.group), (db.server, db.width, db.group));
+        }
+        assert_eq!(r.buffer.pending_len(), 0);
+        assert_eq!(r.stats.updates, 0);
+
+        // the batched path decodes the same way
+        let heads: Vec<HeadView> = (0..6)
+            .map(|i| HeadView {
+                fifo_index: i,
+                w_req: 0.5,
+                seg: i % 4,
+                age_s: 0.0,
+                slack_s: 1.0,
+            })
+            .collect();
+        let pa = r.plan(&s, &heads, &mut rng_a).into_decisions();
+        let pb = r.plan(&s, &heads, &mut rng_b).into_decisions();
+        for (a, b) in pa.iter().zip(&pb) {
+            assert_eq!((a.server, a.width, a.group), (b.server, b.width, b.group));
+        }
+        assert_eq!(r.buffer.pending_len(), 0);
+    }
+
+    #[test]
+    fn from_checkpoint_restores_a_frozen_greedy_router() {
+        let trained = router();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "slim_sched_ckpt_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, trained.to_json().to_string_pretty()).unwrap();
+
+        let mut cfg = Config::default();
+        cfg.workload.total_requests = 10;
+        let mut restored =
+            PpoRouter::from_checkpoint(&cfg, &path).expect("checkpoint loads");
+        assert!(!restored.training);
+        let s = snap(3);
+        let mut rng = Rng::new(5);
+        let d = restored.route_one(&s, &HeadView::new(0.5, 0), &mut rng);
+        assert!(d.server < 3);
+
+        // wrong-shape config (extra device) is rejected with the guard
+        let mut wide = Config::default();
+        wide.devices.push("gtx980ti".to_string());
+        let err = PpoRouter::from_checkpoint(&wide, &path).unwrap_err();
+        assert!(err.contains("does not match the policy shape"), "{err}");
+
+        // unreadable path is a load error, not a panic
+        let err = PpoRouter::from_checkpoint(&cfg, "/nonexistent/x.json")
+            .unwrap_err();
+        assert!(err.contains("cannot read"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -8,24 +8,37 @@
 //! every request is its own control, so the arrival-process noise
 //! cancels instead of being averaged over.
 //!
+//! Entrants are [`RouterSpec`] spellings: the algorithmic router names
+//! plus `ppo:<checkpoint.json>` — a trained policy restored from disk
+//! and run in frozen *greedy* evaluation mode
+//! (`PpoRouter::greedy_eval_mode`), so a checkpoint replay is a pure
+//! function of (weights, trace, cfg): no exploration, no sampling, no
+//! RNG draws, and two replays are byte-identical by construction.
+//!
 //! Output (`BENCH_trace_ab.json` by default, via `repro trace-compare`):
 //! absolute per-router summaries, and for every non-baseline router a
 //! paired-difference block (`latency_delta_mean_s`, `…_std_s`, energy,
-//! mean executed width, SLA slack, miss-rate delta, win/loss counts)
+//! mean executed width, SLA slack, miss-rate delta, win/loss/tie counts)
 //! plus the full per-request delta rows. Deltas are `router − baseline`,
 //! so negative latency/energy deltas mean the candidate improves on the
-//! baseline for the *same* requests.
+//! baseline for the *same* requests. Every pair also carries the
+//! [`super::stats`] significance block — exact sign-test p-value and
+//! seeded bootstrap 95 % CIs on the mean latency/energy deltas — so a
+//! report can answer "did the policy actually win, or was it noise?"
+//! without a separate analysis step.
 
 use std::collections::BTreeMap;
 
 use crate::config::Config;
-use crate::coordinator::router::AlgoRouter;
+use crate::coordinator::router::{AlgoRouter, RouterSpec};
 use crate::coordinator::sharded_engine;
 use crate::metrics::Summary;
+use crate::ppo::{run_ppo_episode_io, PpoRouter};
 use crate::utilx::json::{obj, Json};
 
-use super::record::{DoneStats, TraceRecorder};
+use super::record::{DoneStats, TraceRecorder, TraceSink};
 use super::replay::{configure_for_replay, Trace};
+use super::stats::paired_stats;
 
 /// One replayed router's harvest.
 struct RouterRun {
@@ -35,25 +48,45 @@ struct RouterRun {
     plan_clamps: u64,
 }
 
-/// Replay `trace` through one named algorithmic router and collect
-/// per-request completions. `cfg` supplies everything except the
-/// arrival stream (cluster, seed, windows, shards, SLA).
-fn replay_run(cfg: &Config, trace: &Trace, name: &str) -> Result<RouterRun, String> {
-    let router = AlgoRouter::by_name(name, &cfg.scheduler.widths).ok_or_else(|| {
+/// Replay `trace` through one router spec — an algorithmic name or a
+/// `ppo:<checkpoint>` entrant — and collect per-request completions.
+/// `cfg` supplies everything except the arrival stream (cluster, seed,
+/// windows, shards, SLA). Checkpoints run in frozen greedy-eval mode
+/// ([`PpoRouter::greedy_eval_mode`]), so a replay is a pure function of
+/// (weights, trace, cfg) and two replays are byte-identical.
+fn replay_run(cfg: &Config, trace: &Trace, spec: &str) -> Result<RouterRun, String> {
+    let parsed = RouterSpec::parse(spec).ok_or_else(|| {
         format!(
-            "unknown router {name:?} (trace compare supports: {})",
-            AlgoRouter::names().join(", ")
+            "unknown router {spec:?} (trace compare supports: {})",
+            RouterSpec::spellings()
         )
     })?;
     let mut cfg = cfg.clone();
     configure_for_replay(&mut cfg, trace);
-    let recorder = TraceRecorder::new(&cfg, name);
-    let mut engine = sharded_engine(cfg, router);
-    engine.set_arrivals(trace.arrivals().to_vec());
-    engine.set_trace_sink(Box::new(recorder.clone()));
-    let outcome = engine.run();
+    let recorder = TraceRecorder::new(&cfg, spec);
+    let outcome = match parsed {
+        RouterSpec::Algo(name) => {
+            let router = AlgoRouter::by_name(name, &cfg.scheduler.widths)
+                .expect("RouterSpec::Algo spellings construct");
+            let mut engine = sharded_engine(cfg, router);
+            engine.set_arrivals(trace.arrivals().to_vec());
+            engine.set_trace_sink(Box::new(recorder.clone()));
+            engine.run()
+        }
+        RouterSpec::PpoCheckpoint(path) => {
+            let router = PpoRouter::from_checkpoint(&cfg, &path)?;
+            let sink: Box<dyn TraceSink> = Box::new(recorder.clone());
+            let (outcome, _router) = run_ppo_episode_io(
+                &cfg,
+                router,
+                Some(trace.arrivals().to_vec()),
+                Some(sink),
+            );
+            outcome
+        }
+    };
     Ok(RouterRun {
-        name: name.to_string(),
+        name: spec.to_string(),
         done: recorder.done_map(),
         sla_miss_rate: outcome.sla_miss_rate(),
         plan_clamps: outcome.plan_clamps,
@@ -74,6 +107,19 @@ pub fn compare_routers(
     cfg: &Config,
     trace: &Trace,
     names: &[String],
+) -> Result<Json, String> {
+    compare_routers_opts(cfg, trace, names, true)
+}
+
+/// [`compare_routers`] with the per-request delta rows optional —
+/// multi-scenario sweeps (`repro trace-study`) keep the paired summary
+/// and significance block but drop the row dump, which dominates the
+/// report size at study scale.
+pub fn compare_routers_opts(
+    cfg: &Config,
+    trace: &Trace,
+    names: &[String],
+    include_per_request: bool,
 ) -> Result<Json, String> {
     if names.len() < 2 {
         return Err(format!(
@@ -111,13 +157,15 @@ pub fn compare_routers(
 
     let base = &runs[0];
     let mut pairs = Vec::with_capacity(runs.len() - 1);
-    for cand in &runs[1..] {
+    for (ci, cand) in runs[1..].iter().enumerate() {
         let mut lat = Summary::default();
         let mut energy = Summary::default();
         let mut width = Summary::default();
         let mut slack = Summary::default();
-        let mut wins = 0u64; // candidate strictly faster on this request
-        let mut losses = 0u64;
+        // raw delta columns for the significance block (the Summary
+        // accumulators stream; the sign test / bootstrap need the rows)
+        let mut lat_deltas = Vec::with_capacity(base.done.len());
+        let mut energy_deltas = Vec::with_capacity(base.done.len());
         let mut per_request = Vec::new();
         for (id, b) in &base.done {
             let Some(c) = cand.done.get(id) else { continue };
@@ -129,18 +177,17 @@ pub fn compare_routers(
             energy.record(d_energy);
             width.record(d_width);
             slack.record(d_slack);
-            if d_lat < 0.0 {
-                wins += 1;
-            } else if d_lat > 0.0 {
-                losses += 1;
+            lat_deltas.push(d_lat);
+            energy_deltas.push(d_energy);
+            if include_per_request {
+                per_request.push(obj(vec![
+                    ("id", Json::Num(*id as f64)),
+                    ("latency_delta_s", Json::Num(d_lat)),
+                    ("energy_delta_j", Json::Num(d_energy)),
+                    ("width_delta", Json::Num(d_width)),
+                    ("slack_delta_s", Json::Num(d_slack)),
+                ]));
             }
-            per_request.push(obj(vec![
-                ("id", Json::Num(*id as f64)),
-                ("latency_delta_s", Json::Num(d_lat)),
-                ("energy_delta_j", Json::Num(d_energy)),
-                ("width_delta", Json::Num(d_width)),
-                ("slack_delta_s", Json::Num(d_slack)),
-            ]));
         }
         if lat.count() == 0 {
             return Err(format!(
@@ -148,6 +195,11 @@ pub fn compare_routers(
                 base.name, cand.name
             ));
         }
+        // paired significance: seeded per candidate so the report is a
+        // pure function of (trace, cfg, names) — byte-identical reruns
+        let stats_seed = cfg.seed ^ 0xB007_57A7 ^ (ci as u64);
+        let lat_stats = paired_stats(&lat_deltas, stats_seed);
+        let energy_stats = paired_stats(&energy_deltas, stats_seed ^ 0xE);
         let mut fields: Vec<(String, Json)> = vec![
             ("router".to_string(), Json::Str(cand.name.clone())),
             ("baseline".to_string(), Json::Str(base.name.clone())),
@@ -161,9 +213,35 @@ pub fn compare_routers(
             "sla_miss_rate_delta".to_string(),
             Json::Num(cand.sla_miss_rate - base.sla_miss_rate),
         ));
-        fields.push(("wins".to_string(), Json::Num(wins as f64)));
-        fields.push(("losses".to_string(), Json::Num(losses as f64)));
-        fields.push(("per_request".to_string(), Json::Arr(per_request)));
+        fields.push(("wins".to_string(), Json::Num(lat_stats.wins as f64)));
+        fields.push(("losses".to_string(), Json::Num(lat_stats.losses as f64)));
+        fields.push(("ties".to_string(), Json::Num(lat_stats.ties as f64)));
+        fields.push(("win_rate".to_string(), Json::Num(lat_stats.win_rate)));
+        fields.push((
+            "sign_test_p".to_string(),
+            Json::Num(lat_stats.sign_test_p),
+        ));
+        fields.push((
+            "latency_delta_ci95".to_string(),
+            Json::Arr(vec![
+                Json::Num(lat_stats.ci_lo),
+                Json::Num(lat_stats.ci_hi),
+            ]),
+        ));
+        fields.push((
+            "energy_sign_test_p".to_string(),
+            Json::Num(energy_stats.sign_test_p),
+        ));
+        fields.push((
+            "energy_delta_ci95".to_string(),
+            Json::Arr(vec![
+                Json::Num(energy_stats.ci_lo),
+                Json::Num(energy_stats.ci_hi),
+            ]),
+        ));
+        if include_per_request {
+            fields.push(("per_request".to_string(), Json::Arr(per_request)));
+        }
         pairs.push(Json::Obj(fields));
     }
 
@@ -177,6 +255,32 @@ pub fn compare_routers(
     ]))
 }
 
+/// Record a fresh trace of `cfg` under a named algorithmic router — the
+/// per-scenario recording step of `repro trace-study` (and the test
+/// harness). The recording is parsed straight back, so the returned
+/// [`Trace`] is exactly what a file round-trip would yield.
+pub fn record_trace(cfg: &Config, router_name: &str) -> Result<Trace, String> {
+    let router =
+        AlgoRouter::by_name(router_name, &cfg.scheduler.widths).ok_or_else(|| {
+            format!(
+                "unknown recording router {router_name:?} (known: {})",
+                AlgoRouter::names().join(", ")
+            )
+        })?;
+    let recorder = TraceRecorder::new(cfg, router_name);
+    let mut engine = sharded_engine(cfg.clone(), router);
+    engine.set_trace_sink(Box::new(recorder.clone()));
+    let outcome = engine.run();
+    if outcome.report.completed != cfg.workload.total_requests as u64 {
+        return Err(format!(
+            "recording under {router_name:?} completed {} of {} requests \
+             (overload or dropout starved the trace)",
+            outcome.report.completed, cfg.workload.total_requests
+        ));
+    }
+    Trace::parse(&recorder.to_jsonl()).map_err(|e| e.to_string())
+}
+
 /// Persist an A/B report (pretty-printed; `BENCH_trace_ab.json` is the
 /// conventional name the CI grep checks).
 pub fn write_report(report: &Json, path: &str) -> std::io::Result<()> {
@@ -186,16 +290,9 @@ pub fn write_report(report: &Json, path: &str) -> std::io::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Router;
 
     fn record_small_trace(cfg: &Config) -> Trace {
-        let router = AlgoRouter::by_name("random", &cfg.scheduler.widths).unwrap();
-        let recorder = TraceRecorder::new(cfg, router.name());
-        let mut engine = sharded_engine(cfg.clone(), router);
-        engine.set_trace_sink(Box::new(recorder.clone()));
-        let out = engine.run();
-        assert_eq!(out.report.completed, cfg.workload.total_requests as u64);
-        Trace::parse(&recorder.to_jsonl()).expect("recorded trace parses")
+        record_trace(cfg, "random").expect("recording succeeds")
     }
 
     fn small_cfg() -> Config {
@@ -236,6 +333,105 @@ mod tests {
         let dl = p0.get("latency_delta_mean_s").and_then(Json::as_f64).unwrap();
         let ds = p0.get("slack_delta_mean_s").and_then(Json::as_f64).unwrap();
         assert!((dl + ds).abs() < 1e-9, "Δlat {dl} vs Δslack {ds}");
+    }
+
+    #[test]
+    fn pairs_carry_the_significance_block() {
+        let cfg = small_cfg();
+        let trace = record_small_trace(&cfg);
+        let names: Vec<String> =
+            ["random", "edf"].iter().map(|s| s.to_string()).collect();
+        let report = compare_routers(&cfg, &trace, &names).unwrap();
+        let pair = &report.get("pairs").and_then(Json::as_arr).unwrap()[0];
+
+        let p = pair.get("sign_test_p").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&p), "p = {p}");
+        let wins = pair.get("wins").and_then(Json::as_f64).unwrap();
+        let losses = pair.get("losses").and_then(Json::as_f64).unwrap();
+        let ties = pair.get("ties").and_then(Json::as_f64).unwrap();
+        assert_eq!(wins + losses + ties, 150.0);
+        let wr = pair.get("win_rate").and_then(Json::as_f64).unwrap();
+        assert!((wr - wins / 150.0).abs() < 1e-12);
+
+        // the CI must bracket the reported mean delta, for both columns
+        for (ci_key, mean_key) in [
+            ("latency_delta_ci95", "latency_delta_mean_s"),
+            ("energy_delta_ci95", "energy_delta_mean_j"),
+        ] {
+            let ci = pair.get(ci_key).and_then(Json::as_f64_vec).unwrap();
+            assert_eq!(ci.len(), 2, "{ci_key}");
+            let mean = pair.get(mean_key).and_then(Json::as_f64).unwrap();
+            assert!(
+                ci[0] <= mean && mean <= ci[1],
+                "{ci_key} {ci:?} does not bracket {mean}"
+            );
+        }
+        assert!(pair.get("energy_sign_test_p").is_some());
+    }
+
+    #[test]
+    fn ppo_checkpoint_entrant_compares_and_replays_byte_identically() {
+        // the acceptance cycle in miniature: train → checkpoint →
+        // trace-compare against the algorithmic field, twice, and demand
+        // byte equality of the full report
+        let mut cfg = small_cfg();
+        cfg.ppo.horizon = 64;
+        let trained = crate::experiments::train_ppo(
+            &cfg,
+            crate::config::RewardCfg::overfit(),
+            1,
+        );
+        let path = std::env::temp_dir().join(format!(
+            "slim_sched_ab_ckpt_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, trained.to_json().to_string_pretty()).unwrap();
+
+        let trace = record_small_trace(&cfg);
+        let names: Vec<String> = vec![
+            "random".to_string(),
+            "edf".to_string(),
+            format!("ppo:{path}"),
+        ];
+        let a = compare_routers(&cfg, &trace, &names).unwrap();
+        let b = compare_routers(&cfg, &trace, &names).unwrap();
+        assert_eq!(
+            a.to_string_pretty(),
+            b.to_string_pretty(),
+            "checkpoint replay must be deterministic"
+        );
+
+        let pairs = a.get("pairs").and_then(Json::as_arr).unwrap();
+        assert_eq!(pairs.len(), 2);
+        let ppo_pair = &pairs[1];
+        assert_eq!(
+            ppo_pair.get("router").and_then(Json::as_str),
+            Some(format!("ppo:{path}").as_str())
+        );
+        assert_eq!(ppo_pair.get("n_pairs").and_then(Json::as_usize), Some(150));
+        assert!(ppo_pair.get("sign_test_p").is_some());
+        assert!(ppo_pair.get("latency_delta_ci95").is_some());
+
+        // a missing checkpoint is a load error, not a panic
+        let bad: Vec<String> =
+            vec!["random".to_string(), "ppo:/nonexistent/x.json".to_string()];
+        assert!(compare_routers(&cfg, &trace, &bad)
+            .unwrap_err()
+            .contains("cannot read"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn per_request_rows_are_optional() {
+        let cfg = small_cfg();
+        let trace = record_small_trace(&cfg);
+        let names: Vec<String> =
+            ["random", "edf"].iter().map(|s| s.to_string()).collect();
+        let lean = compare_routers_opts(&cfg, &trace, &names, false).unwrap();
+        let pair = &lean.get("pairs").and_then(Json::as_arr).unwrap()[0];
+        assert!(pair.get("per_request").is_none());
+        assert!(pair.get("sign_test_p").is_some()); // stats survive
     }
 
     #[test]

@@ -21,14 +21,25 @@
 //!   trace, paired per-request deltas (latency, energy, width, SLA
 //!   slack) and a paired-difference summary into `BENCH_trace_ab.json`
 //!   (`repro trace-compare`). Paired statistics, not independent runs —
-//!   the arrival noise cancels request by request.
+//!   the arrival noise cancels request by request. Entrants are
+//!   [`compare`]-level `RouterSpec` spellings: the algorithmic names
+//!   plus `ppo:<checkpoint>` (frozen greedy-eval replay of a trained
+//!   policy).
+//! * [`stats`] — paired significance over the delta rows: exact
+//!   sign-test p-values and seeded (deterministic) bootstrap confidence
+//!   intervals on the mean deltas, surfaced per candidate in the A/B
+//!   report and the `repro trace-study` per-scenario matrix.
 
 pub mod compare;
 pub mod record;
 pub mod replay;
+pub mod stats;
 
-pub use compare::{compare_routers, write_report};
+pub use compare::{
+    compare_routers, compare_routers_opts, record_trace, write_report,
+};
 pub use record::{
     done_stats, DoneStats, TraceEvent, TraceRecorder, TraceSink, TRACE_VERSION,
 };
 pub use replay::{configure_for_replay, Trace, TraceError};
+pub use stats::{bootstrap_mean_ci, paired_stats, sign_test_p, PairedStats};

@@ -28,11 +28,11 @@ pub const TRACE_VERSION: u64 = 1;
 pub enum TraceEvent {
     /// A request reached the leader tier.
     Arrival { t: f64, id: u64, w_req: f64 },
-    /// A request landed on a leader shard via the assignment policy —
-    /// once per FIFO entry (arrival, segment re-entry, and again on a
-    /// device-dropout readmission). Cross-shard *rebalance* migrations
-    /// move requests without a new assignment, so under `--rebalance`
-    /// a later `route` record's `shard` is the authoritative placement.
+    /// A request landed on a leader shard — via the assignment policy
+    /// (arrival, segment re-entry, device-dropout readmission) or via a
+    /// cross-shard *rebalance* migration, which re-emits the record
+    /// with the destination shard. The latest `assign` for a request id
+    /// is therefore always its authoritative placement.
     Assign { t: f64, id: u64, seg: usize, shard: usize },
     /// A routing decision was applied: `size` requests of segment `seg`
     /// dispatched as one block to `server`, arriving at `arrive_t`.

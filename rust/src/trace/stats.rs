@@ -1,0 +1,220 @@
+//! Paired significance statistics for the counterfactual A/B harness.
+//!
+//! The per-request delta rows `trace::compare` emits are a *paired*
+//! sample: every request is measured under both routers over the same
+//! arrival stream, so the right question is not "are the two means
+//! different?" but "is the per-request difference consistently signed,
+//! and how tight is its mean?". Two classic answers, both exact or
+//! deterministic (no asymptotic approximations, no unseeded
+//! randomness — two runs of the harness must stay byte-identical):
+//!
+//! * [`sign_test_p`] — the exact two-sided sign test. Under H₀ ("the
+//!   candidate is no better or worse than the baseline per request")
+//!   each non-tied delta is an independent fair coin; the p-value is
+//!   the exact binomial tail probability of a split at least as
+//!   lopsided as the observed (wins, losses). Ties carry no sign
+//!   information and are excluded, per the standard construction.
+//! * [`bootstrap_mean_ci`] — a seeded percentile-bootstrap confidence
+//!   interval on the mean delta. Resamples are drawn from a dedicated
+//!   [`Rng`] stream, so the interval is a pure function of
+//!   (data, resamples, seed) and replays byte-identically.
+//!
+//! [`paired_stats`] bundles both plus the win/loss/tie decomposition
+//! into the [`PairedStats`] block `BENCH_trace_ab.json` surfaces per
+//! candidate router.
+
+use crate::utilx::Rng;
+
+/// Bootstrap resample count used by the A/B harness: large enough that
+/// the 2.5 %/97.5 % order statistics are stable, small enough that a
+/// 20 k-pair trace re-samples in well under a second.
+pub const BOOTSTRAP_RESAMPLES: usize = 1000;
+
+/// Confidence level of the reported interval.
+pub const CI_LEVEL: f64 = 0.95;
+
+/// The paired-significance block computed over one delta column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PairedStats {
+    /// Paired observations (wins + losses + ties).
+    pub n: usize,
+    /// Deltas strictly below zero (candidate strictly better when the
+    /// delta is a cost such as latency or energy).
+    pub wins: u64,
+    /// Deltas strictly above zero.
+    pub losses: u64,
+    /// Exact zeros — excluded from the sign test.
+    pub ties: u64,
+    /// wins / n (ties count against neither side but stay in the
+    /// denominator, so a tie-heavy comparison reads as indecisive).
+    pub win_rate: f64,
+    /// Exact two-sided sign-test p-value over (wins, losses).
+    pub sign_test_p: f64,
+    /// Seeded percentile-bootstrap CI on the mean delta.
+    pub ci_lo: f64,
+    pub ci_hi: f64,
+}
+
+/// Exact two-sided sign test: the probability, under a fair coin, of a
+/// (wins, losses) split at least as extreme as observed. Ties are the
+/// caller's to exclude (pass only strictly signed counts). Returns 1.0
+/// for an empty sample — no evidence either way.
+pub fn sign_test_p(wins: u64, losses: u64) -> f64 {
+    let n = wins + losses;
+    if n == 0 {
+        return 1.0;
+    }
+    let k = wins.min(losses);
+    // P(X <= k) for X ~ Bin(n, 1/2), summed in log space: the individual
+    // terms underflow f64 around n ≈ 1075 while the tail itself is
+    // perfectly representable (a 20 k-request trace is routine here).
+    let ln_half_n = -(n as f64) * std::f64::consts::LN_2;
+    let mut ln_terms = Vec::with_capacity(k as usize + 1);
+    let mut ln_choose = 0.0; // ln C(n, 0)
+    ln_terms.push(ln_half_n);
+    for i in 1..=k {
+        ln_choose += ((n - i + 1) as f64).ln() - (i as f64).ln();
+        ln_terms.push(ln_choose + ln_half_n);
+    }
+    let max = ln_terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if !max.is_finite() {
+        return 0.0; // tail beneath f64 range: p-value is effectively zero
+    }
+    let tail: f64 = ln_terms.iter().map(|&l| (l - max).exp()).sum();
+    (2.0 * max.exp() * tail).min(1.0)
+}
+
+/// Seeded percentile bootstrap on the mean of `xs`: `resamples` means of
+/// with-replacement resamples, sorted; the interval is the `(1−level)/2`
+/// and `1−(1−level)/2` order statistics. Deterministic per
+/// (xs, resamples, seed). Degenerate inputs collapse cleanly: an empty
+/// sample yields (0, 0), a constant sample yields (c, c).
+pub fn bootstrap_mean_ci(
+    xs: &[f64],
+    resamples: usize,
+    seed: u64,
+    level: f64,
+) -> (f64, f64) {
+    if xs.is_empty() || resamples == 0 {
+        return (0.0, 0.0);
+    }
+    let n = xs.len();
+    let mut rng = Rng::new(seed);
+    let mut means = Vec::with_capacity(resamples);
+    for _ in 0..resamples {
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += xs[rng.index(n)];
+        }
+        means.push(sum / n as f64);
+    }
+    means.sort_by(|a, b| a.total_cmp(b));
+    let pick = |q: f64| {
+        let rank = (q * (resamples - 1) as f64).round() as usize;
+        means[rank.min(resamples - 1)]
+    };
+    let alpha = (1.0 - level) / 2.0;
+    (pick(alpha), pick(1.0 - alpha))
+}
+
+/// The full paired block over one delta column (negative = candidate
+/// better): win/loss/tie split, exact sign test over the signed pairs,
+/// and the seeded bootstrap CI on the mean delta.
+pub fn paired_stats(deltas: &[f64], seed: u64) -> PairedStats {
+    let mut wins = 0u64;
+    let mut losses = 0u64;
+    let mut ties = 0u64;
+    for &d in deltas {
+        match d.partial_cmp(&0.0) {
+            Some(std::cmp::Ordering::Less) => wins += 1,
+            Some(std::cmp::Ordering::Greater) => losses += 1,
+            // exact zeros; a poisoned NaN delta carries no sign either
+            _ => ties += 1,
+        }
+    }
+    let n = deltas.len();
+    let (ci_lo, ci_hi) =
+        bootstrap_mean_ci(deltas, BOOTSTRAP_RESAMPLES, seed, CI_LEVEL);
+    PairedStats {
+        n,
+        wins,
+        losses,
+        ties,
+        win_rate: if n == 0 { 0.0 } else { wins as f64 / n as f64 },
+        sign_test_p: sign_test_p(wins, losses),
+        ci_lo,
+        ci_hi,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sign_test_matches_hand_computed_binomials() {
+        // n = 10, k = 2: 2·(C(10,0)+C(10,1)+C(10,2))/2^10 = 112/1024
+        assert!((sign_test_p(2, 8) - 0.109375).abs() < 1e-12);
+        assert!((sign_test_p(8, 2) - 0.109375).abs() < 1e-12); // symmetric
+        // n = 5, k = 0: 2/32
+        assert!((sign_test_p(0, 5) - 0.0625).abs() < 1e-12);
+        // a perfectly balanced split carries no evidence (capped at 1)
+        assert_eq!(sign_test_p(5, 5), 1.0);
+        assert_eq!(sign_test_p(0, 0), 1.0);
+        // one-sided sweep: more lopsided splits are strictly stronger
+        let p_weak = sign_test_p(40, 60);
+        let p_strong = sign_test_p(10, 90);
+        assert!(p_strong < p_weak, "{p_strong} vs {p_weak}");
+    }
+
+    #[test]
+    fn sign_test_survives_large_n_without_underflow() {
+        // 20 k pairs, modest skew: the per-term probabilities underflow
+        // f64 but the log-space tail must not
+        let p = sign_test_p(9_800, 10_200);
+        assert!(p > 0.0 && p < 1.0, "{p}");
+        // extreme skew at large n: effectively zero, never NaN
+        let p = sign_test_p(0, 20_000);
+        assert!(p >= 0.0 && p < 1e-100, "{p}");
+        assert!(!p.is_nan());
+    }
+
+    #[test]
+    fn bootstrap_is_deterministic_and_brackets_the_mean() {
+        let xs: Vec<f64> =
+            (0..500).map(|i| ((i * 37) % 100) as f64 / 100.0 - 0.3).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let a = bootstrap_mean_ci(&xs, 1000, 7, 0.95);
+        let b = bootstrap_mean_ci(&xs, 1000, 7, 0.95);
+        assert_eq!(a, b, "same seed must reproduce the interval exactly");
+        assert!(a.0 <= mean && mean <= a.1, "{a:?} vs mean {mean}");
+        assert!(a.0 < a.1);
+        // a different seed moves the interval but not by much
+        let c = bootstrap_mean_ci(&xs, 1000, 8, 0.95);
+        assert!((a.0 - c.0).abs() < 0.05 && (a.1 - c.1).abs() < 0.05);
+    }
+
+    #[test]
+    fn bootstrap_degenerate_inputs() {
+        assert_eq!(bootstrap_mean_ci(&[], 100, 1, 0.95), (0.0, 0.0));
+        let (lo, hi) = bootstrap_mean_ci(&[2.5; 40], 100, 1, 0.95);
+        assert_eq!((lo, hi), (2.5, 2.5)); // constant sample: point interval
+        let (lo, hi) = bootstrap_mean_ci(&[1.0], 100, 1, 0.95);
+        assert_eq!((lo, hi), (1.0, 1.0)); // single observation
+    }
+
+    #[test]
+    fn paired_stats_decomposes_and_scores() {
+        // 6 wins, 2 losses, 2 ties
+        let deltas = [-1.0, -0.5, -0.25, -2.0, -0.1, -0.2, 0.5, 1.0, 0.0, 0.0];
+        let s = paired_stats(&deltas, 11);
+        assert_eq!(s.n, 10);
+        assert_eq!((s.wins, s.losses, s.ties), (6, 2, 2));
+        assert!((s.win_rate - 0.6).abs() < 1e-12);
+        // sign test over the 8 signed pairs: 2·(C(8,0)+C(8,1)+C(8,2))/2^8
+        assert!((s.sign_test_p - 74.0 / 256.0).abs() < 1e-12);
+        assert!(s.ci_lo <= s.ci_hi);
+        // reproducible end to end
+        assert_eq!(paired_stats(&deltas, 11), s);
+    }
+}
