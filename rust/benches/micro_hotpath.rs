@@ -2,11 +2,13 @@
 //! optimizes. Covers: keyed-FIFO batch formation, greedy scheduling sweep,
 //! router decisions (random vs PPO inference, per-head vs batched plan),
 //! policy forward/backward, device-model step, telemetry snapshot/state-
-//! vector, multi-leader shard scaling on the `sharded-hot` scenario, and
-//! (when artifacts are present) the real PJRT segment execution. Emits
-//! the batched-vs-per-head PPO evaluation speedup and the
-//! `leaders4_speedup_x` shard-scaling ratio as derived metrics in
-//! `BENCH_micro_hotpath.json`.
+//! vector, calendar-queue vs binary-heap event churn, multi-leader shard
+//! scaling on the `sharded-hot` scenario (BENCH_LEADERS accepts a comma
+//! list, e.g. `4,16`), and (when artifacts are present) the real PJRT
+//! segment execution. Emits the batched-vs-per-head PPO evaluation
+//! speedup, the `leaders<N>_speedup_x` shard-scaling ratios, and the
+//! event-core `events_per_sec` / `wheel_vs_heap_speedup_x` pair as
+//! derived metrics in `BENCH_micro_hotpath.json`.
 
 use slim_scheduler::benchx::Bench;
 use slim_scheduler::config::{Config, PpoCfg, SchedulerCfg};
@@ -180,6 +182,50 @@ fn main() {
         std::hint::black_box(Engine::new(cfg, router).run());
     });
 
+    // ---- event-queue churn: calendar queue vs binary heap ----
+    // Steady-state hold-and-churn at ~4096 pending events, the regime a
+    // million-request run lives in: every iteration pops the earliest
+    // event and schedules a successor a short random offset ahead, so
+    // both queues stay at constant occupancy while time advances. The
+    // identical offset stream (same seed) feeds both structures.
+    let held = 4096usize;
+    let churn_offsets = |rng: &mut Rng| rng.below(1000) as f64 * 1e-3 + 1e-4;
+    let mut cal: slim_scheduler::coordinator::EventQueue<u32> =
+        slim_scheduler::coordinator::EventQueue::new();
+    let mut cal_rng = Rng::new(97);
+    for i in 0..held {
+        let dt = churn_offsets(&mut cal_rng);
+        cal.push(dt, i as u32);
+    }
+    let cal_name = "events/calendar_pop_push_held4096";
+    bench.bench(cal_name, || {
+        let (t, ev) = cal.pop().expect("queue never drains");
+        cal.push(t + churn_offsets(&mut cal_rng), ev);
+        std::hint::black_box(t);
+    });
+    let mut heap: slim_scheduler::coordinator::HeapEventQueue<u32> =
+        slim_scheduler::coordinator::HeapEventQueue::new();
+    let mut heap_rng = Rng::new(97);
+    for i in 0..held {
+        let dt = churn_offsets(&mut heap_rng);
+        heap.push(dt, i as u32);
+    }
+    let heap_name = "events/heap_pop_push_held4096";
+    bench.bench(heap_name, || {
+        let (t, ev) = heap.pop().expect("queue never drains");
+        heap.push(t + churn_offsets(&mut heap_rng), ev);
+        std::hint::black_box(t);
+    });
+    if let (Some(cal_ns), Some(heap_ns)) =
+        (bench.mean_ns_of(cal_name), bench.mean_ns_of(heap_name))
+    {
+        // one iteration = one pop + one push, i.e. one event through
+        // the queue; >1 speedup means the calendar queue wins at this
+        // occupancy (CI checks presence, acceptance checks >= 1.0)
+        bench.metric("events_per_sec", 1e9 / cal_ns);
+        bench.metric("wheel_vs_heap_speedup_x", heap_ns / cal_ns);
+    }
+
     // ---- shard scaling: single vs multi-leader coordinator ----
     // The sharded-hot scenario gives each leader finite routing capacity
     // (leader_service_s), so one leader saturates below the offered load
@@ -189,14 +235,21 @@ fn main() {
     // (`leaders<N>_speedup_x`), so trajectories from different
     // BENCH_LEADERS settings can never be mistaken for one another; the
     // default (and the CI setting) is 4, i.e. `leaders4_speedup_x`.
-    let leaders: usize = match std::env::var("BENCH_LEADERS") {
-        Ok(v) if !v.is_empty() => {
-            v.parse().unwrap_or_else(|e| panic!("BENCH_LEADERS: {e}"))
-        }
-        _ => 4,
+    let leaders_list: Vec<usize> = match std::env::var("BENCH_LEADERS") {
+        Ok(v) if !v.is_empty() => v
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|e| panic!("BENCH_LEADERS '{s}': {e}"))
+            })
+            .collect(),
+        _ => vec![4],
     };
-    if leaders < 2 {
-        eprintln!("shard scaling skipped: BENCH_LEADERS={leaders} has nothing to compare");
+    let leaders_list: Vec<usize> =
+        leaders_list.into_iter().filter(|&n| n >= 2).collect();
+    if leaders_list.is_empty() {
+        eprintln!("shard scaling skipped: BENCH_LEADERS has nothing to compare");
     } else {
         let shard_requests = if bench.quick() { 800 } else { 2000 };
         let mut hot = Config::default();
@@ -211,9 +264,8 @@ fn main() {
                 LeastLoadedRouter::new(cfg.scheduler.widths.clone(), 16);
             sharded_engine(cfg, router).run()
         };
+        // the single-leader baseline is shared by every entry in the list
         let mut dur_1 = 0.0f64;
-        let mut dur_n = 0.0f64;
-        let mut clamps = 0u64;
         bench.once(
             &format!("shard/sharded_hot_{shard_requests}req_1leader"),
             || {
@@ -222,21 +274,29 @@ fn main() {
                 dur_1 = out.sim_duration_s;
             },
         );
-        bench.once(
-            &format!("shard/sharded_hot_{shard_requests}req_{leaders}leaders"),
-            || {
-                let out = run_hot(leaders);
-                assert_eq!(out.report.completed, shard_requests as u64);
-                dur_n = out.sim_duration_s;
-                clamps = out.plan_clamps;
-            },
-        );
-        if dur_1 > 0.0 && dur_n > 0.0 {
-            // >1 means the sharded leader tier drains the same workload
-            // faster in virtual time (CI checks presence and the
-            // acceptance bar checks > 1.0 on the sharded-hot scenario)
-            bench.metric(&format!("leaders{leaders}_speedup_x"), dur_1 / dur_n);
-            bench.metric("sharded_hot_plan_clamps", clamps as f64);
+        let mut clamps_reported = false;
+        for &leaders in &leaders_list {
+            let mut dur_n = 0.0f64;
+            let mut clamps = 0u64;
+            bench.once(
+                &format!("shard/sharded_hot_{shard_requests}req_{leaders}leaders"),
+                || {
+                    let out = run_hot(leaders);
+                    assert_eq!(out.report.completed, shard_requests as u64);
+                    dur_n = out.sim_duration_s;
+                    clamps = out.plan_clamps;
+                },
+            );
+            if dur_1 > 0.0 && dur_n > 0.0 {
+                // >1 means the sharded leader tier drains the same
+                // workload faster in virtual time (CI checks presence and
+                // the acceptance bar checks > 1.0 on sharded-hot)
+                bench.metric(&format!("leaders{leaders}_speedup_x"), dur_1 / dur_n);
+                if !clamps_reported {
+                    bench.metric("sharded_hot_plan_clamps", clamps as f64);
+                    clamps_reported = true;
+                }
+            }
         }
     }
 

@@ -147,6 +147,13 @@ pub struct ShardCfg {
     /// throughput at `1/leader_service_s` heads per second, which is
     /// what makes multi-leader scaling measurable.
     pub leader_service_s: f64,
+    /// OS threads used to run per-shard `Router::plan` calls in
+    /// parallel. `1` (the default) is the sequential loop, pinned
+    /// byte-identical in `tests/determinism.rs`; higher values plan
+    /// independent shards concurrently on per-shard RNG streams and
+    /// apply the plans in deterministic shard order, so results are
+    /// reproducible per seed at any thread count.
+    pub plan_threads: usize,
 }
 
 impl Default for ShardCfg {
@@ -156,6 +163,7 @@ impl Default for ShardCfg {
             assign: ShardAssignKind::Hash,
             rebalance_threshold: 0,
             leader_service_s: 0.0,
+            plan_threads: 1,
         }
     }
 }
@@ -437,6 +445,8 @@ impl Config {
             args.usize_or("rebalance", self.shard.rebalance_threshold);
         self.shard.leader_service_s =
             args.f64_or("leader-service", self.shard.leader_service_s);
+        self.shard.plan_threads =
+            args.usize_or("plan-threads", self.shard.plan_threads).max(1);
         if let Some(kind) = args.get("shard-assign") {
             self.shard.assign = ShardAssignKind::parse(kind).unwrap_or_else(|| {
                 panic!("--shard-assign expects hash|round-robin|key-affine, got {kind:?}")
@@ -508,6 +518,7 @@ impl Config {
                         Json::Num(self.shard.rebalance_threshold as f64),
                     ),
                     ("leader_service_s", Json::Num(self.shard.leader_service_s)),
+                    ("plan_threads", Json::Num(self.shard.plan_threads as f64)),
                 ]),
             ),
             (
@@ -631,6 +642,9 @@ impl Config {
             }
             if let Some(x) = sh.get("leader_service_s").and_then(Json::as_f64) {
                 cfg.shard.leader_service_s = x;
+            }
+            if let Some(x) = sh.get("plan_threads").and_then(Json::as_usize) {
+                cfg.shard.plan_threads = x.max(1);
             }
         }
         if let Some(s) = json.get("scheduler") {
@@ -907,11 +921,13 @@ mod tests {
         assert_eq!(cfg.shard.assign, ShardAssignKind::Hash);
         assert_eq!(cfg.shard.rebalance_threshold, 0); // rebalance off
         assert_eq!(cfg.shard.leader_service_s, 0.0); // infinitely fast leader
+        assert_eq!(cfg.shard.plan_threads, 1); // sequential planning
 
         let mut cfg = Config::default();
         let args = Args::parse_from(
             ["simulate", "--leaders", "4", "--rebalance", "24",
-             "--shard-assign", "round-robin", "--leader-service", "0.0015"]
+             "--shard-assign", "round-robin", "--leader-service", "0.0015",
+             "--plan-threads", "4"]
                 .iter()
                 .map(|s| s.to_string()),
         );
@@ -920,17 +936,22 @@ mod tests {
         assert_eq!(cfg.shard.rebalance_threshold, 24);
         assert_eq!(cfg.shard.assign, ShardAssignKind::RoundRobin);
         assert_eq!(cfg.shard.leader_service_s, 0.0015);
+        assert_eq!(cfg.shard.plan_threads, 4);
 
         let parsed = Config::from_json(&cfg.to_json());
         assert_eq!(parsed.shard, cfg.shard);
 
-        // a pathological 0 floors at 1 (the coordinator needs a leader)
+        // a pathological 0 floors at 1 (the coordinator needs a leader,
+        // and planning needs a thread)
         let mut cfg = Config::default();
         let args = Args::parse_from(
-            ["simulate", "--leaders", "0"].iter().map(|s| s.to_string()),
+            ["simulate", "--leaders", "0", "--plan-threads", "0"]
+                .iter()
+                .map(|s| s.to_string()),
         );
         cfg.apply_args(&args);
         assert_eq!(cfg.shard.leaders, 1);
+        assert_eq!(cfg.shard.plan_threads, 1);
     }
 
     #[test]

@@ -4,9 +4,11 @@
 //! block bookkeeping and metric accumulators, hard-wired to `SimDevice`
 //! and `GreedyScheduler`. This module factors those substrates out:
 //!
-//! * [`EventQueue`] — the deterministic event heap (earliest timestamp
-//!   first, FIFO sequence tie-break). The tie-break is what makes every
-//!   run reproducible per seed; `tests/determinism.rs` guards it.
+//! * [`EventQueue`] — the deterministic event queue (earliest timestamp
+//!   first, FIFO sequence tie-break), calendar-queue internals for O(1)
+//!   amortized push/pop; [`HeapEventQueue`] is the original `BinaryHeap`
+//!   reference it is property-tested against. The tie-break is what makes
+//!   every run reproducible per seed; `tests/determinism.rs` guards it.
 //! * [`DeviceModel`] / [`LocalScheduler`] — the traits the engine drives
 //!   devices and per-server schedulers through, so alternative device
 //!   models (real executors, other simulators) and scheduling policies
@@ -29,7 +31,7 @@ use super::queue::Queued;
 use super::telemetry::TelemetryLog;
 
 // ---------------------------------------------------------------------
-// Deterministic event heap
+// Deterministic event queues (calendar default, heap reference)
 // ---------------------------------------------------------------------
 
 struct Slot<E> {
@@ -60,21 +62,32 @@ impl<E> Ord for Slot<E> {
     }
 }
 
-/// Min-heap of timestamped events with deterministic FIFO tie-breaking.
-pub struct EventQueue<E> {
+/// The (timestamp, sequence) total order both queue implementations pop
+/// in: earliest `t` first (`f64::total_cmp`), push order on ties.
+#[inline]
+fn slot_key_cmp(a_t: f64, a_seq: u64, b_t: f64, b_seq: u64) -> std::cmp::Ordering {
+    a_t.total_cmp(&b_t).then_with(|| a_seq.cmp(&b_seq))
+}
+
+/// Reference min-heap implementation of the event queue — the original
+/// `BinaryHeap` core. Kept as the executable specification the calendar
+/// [`EventQueue`] is property-tested against (identical pop sequences
+/// under arbitrary push/pop interleavings) and as the baseline of the
+/// `micro_hotpath` `wheel_vs_heap_speedup_x` metric.
+pub struct HeapEventQueue<E> {
     heap: BinaryHeap<Slot<E>>,
     seq: u64,
 }
 
-impl<E> Default for EventQueue<E> {
+impl<E> Default for HeapEventQueue<E> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<E> EventQueue<E> {
+impl<E> HeapEventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0 }
+        HeapEventQueue { heap: BinaryHeap::new(), seq: 0 }
     }
 
     /// Schedule `ev` at absolute virtual time `t`.
@@ -100,6 +113,147 @@ impl<E> EventQueue<E> {
 
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
+    }
+}
+
+/// Deterministic event queue with calendar (two-level ladder) internals:
+/// earliest timestamp first, FIFO sequence tie-break — the exact
+/// (t, seq) total order of [`HeapEventQueue`], bit-for-bit.
+///
+/// Layout: `cur` holds the imminent batch sorted descending by (t, seq)
+/// so `pop` is a O(1) `Vec::pop` from the tail; `future` holds everything
+/// at or beyond `horizon`, unsorted, so the common push (an event
+/// scheduled past the imminent window) is a O(1) append. When `cur`
+/// drains, one `advance` sweep moves the next `span` of virtual time out
+/// of `future`, sorts that small batch, and adapts `span` toward a
+/// target batch size — so sorting cost stays O(log B) per event for a
+/// small B regardless of how many events are outstanding, where the heap
+/// paid O(log N) per operation on the whole population. Pushes that land
+/// inside the imminent window (same-instant follow-ups, short transfer
+/// delays) binary-insert into `cur`, which the adaptation keeps small.
+pub struct EventQueue<E> {
+    /// Imminent events, sorted descending by (t, seq); pop from the end.
+    cur: Vec<Slot<E>>,
+    /// Events with `t >= horizon`, unsorted.
+    future: Vec<Slot<E>>,
+    /// Every slot in `cur` sorts at or before (≤) every slot in
+    /// `future`: `cur` times are ≤ `horizon`, `future` times ≥ `horizon`,
+    /// and the seq tie-break orders the boundary (a `future` slot at
+    /// exactly `horizon` was pushed after any equal-time `cur` slot).
+    horizon: f64,
+    /// Virtual-time width of the next imminent batch (adaptive).
+    span: f64,
+    seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// `span` adaptation targets a batch in [`SPAN_MIN_BATCH`, `SPAN_MAX_BATCH`].
+const SPAN_MIN_BATCH: usize = 16;
+const SPAN_MAX_BATCH: usize = 128;
+const SPAN_INIT: f64 = 0.05;
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            cur: Vec::new(),
+            future: Vec::new(),
+            horizon: f64::NEG_INFINITY,
+            span: SPAN_INIT,
+            seq: 0,
+        }
+    }
+
+    /// Schedule `ev` at absolute virtual time `t`.
+    pub fn push(&mut self, t: f64, ev: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        let slot = Slot { t, seq, ev };
+        if t.total_cmp(&self.horizon) == std::cmp::Ordering::Less {
+            // lands inside the imminent window: keep `cur` sorted
+            // (descending), so the first index whose key sorts before the
+            // new slot is the insertion point. The new slot has the
+            // largest seq so far, so among equal timestamps it sits
+            // closer to the front — popped last, preserving push order.
+            let at = self.cur.partition_point(|s| {
+                slot_key_cmp(s.t, s.seq, t, seq) == std::cmp::Ordering::Greater
+            });
+            self.cur.insert(at, slot);
+        } else {
+            self.future.push(slot);
+        }
+    }
+
+    /// Refill `cur` from `future`: take the slots within `span` of the
+    /// earliest outstanding timestamp, sort that batch, and adapt `span`
+    /// toward the target batch size. Caller guarantees `future` is
+    /// non-empty; afterwards `cur` holds at least the earliest slot.
+    fn advance(&mut self) {
+        debug_assert!(self.cur.is_empty() && !self.future.is_empty());
+        // seed from the first slot, not +∞: under `total_cmp` a NaN
+        // timestamp sorts above +∞, so an ∞-seeded scan over all-NaN
+        // slots would find no minimum and move nothing
+        let mut min_t = self.future[0].t;
+        for s in &self.future[1..] {
+            if s.t.total_cmp(&min_t) == std::cmp::Ordering::Less {
+                min_t = s.t;
+            }
+        }
+        // `<=` cutoff: even when `min_t + span` rounds back to `min_t`
+        // (huge timestamps, tiny span) the earliest slot still moves, so
+        // advance always makes progress.
+        let cutoff = min_t + self.span;
+        let mut i = 0;
+        while i < self.future.len() {
+            if self.future[i].t.total_cmp(&cutoff) != std::cmp::Ordering::Greater {
+                self.cur.push(self.future.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        self.cur.sort_unstable_by(|a, b| slot_key_cmp(b.t, b.seq, a.t, a.seq));
+        self.horizon = cutoff;
+        let moved = self.cur.len();
+        if moved > SPAN_MAX_BATCH {
+            self.span *= 0.5;
+        } else if moved < SPAN_MIN_BATCH {
+            self.span *= 2.0;
+        }
+        self.span = self.span.clamp(1e-9, 1e9);
+    }
+
+    /// Earliest event (ties in push order), or None when drained.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        if self.cur.is_empty() {
+            if self.future.is_empty() {
+                return None;
+            }
+            self.advance();
+        }
+        self.cur.pop().map(|s| (s.t, s.ev))
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn next_t(&self) -> Option<f64> {
+        if let Some(s) = self.cur.last() {
+            return Some(s.t);
+        }
+        self.future
+            .iter()
+            .map(|s| s.t)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    pub fn len(&self) -> usize {
+        self.cur.len() + self.future.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cur.is_empty() && self.future.is_empty()
     }
 }
 
@@ -411,6 +565,7 @@ impl RunMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::utilx::Rng;
 
     #[test]
     fn event_queue_pops_earliest_first() {
@@ -446,6 +601,76 @@ mod tests {
         q.push(0.0, 1);
         let order: Vec<u32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
         assert_eq!(order, vec![0, 1, 10, 11]);
+    }
+
+    #[test]
+    fn calendar_and_heap_queues_pop_identically_under_random_ops() {
+        // the pin that lets the calendar queue replace the heap wholesale:
+        // under arbitrary interleavings of pushes and pops — coarse
+        // timestamps to force ties, occasional past-horizon pushes, full
+        // drains mid-stream — both implementations yield the same
+        // (t, payload) sequence bit for bit.
+        crate::utilx::prop::check("calendar-matches-heap", 60, |rng: &mut Rng| {
+            let mut cal: EventQueue<u64> = EventQueue::new();
+            let mut heap: HeapEventQueue<u64> = HeapEventQueue::new();
+            let mut next_id = 0u64;
+            let mut clock = 0.0f64;
+            let ops = 200 + rng.index(800);
+            for _ in 0..ops {
+                if cal.is_empty() || rng.chance(0.6) {
+                    // quantized offsets produce frequent exact ties; a
+                    // small chance of a push behind the clock exercises
+                    // the inside-horizon insert path
+                    let dt = rng.below(16) as f64 * 0.25;
+                    let t = if rng.chance(0.1) { (clock - dt).max(0.0) } else { clock + dt };
+                    cal.push(t, next_id);
+                    heap.push(t, next_id);
+                    next_id += 1;
+                } else {
+                    if cal.next_t() != heap.next_t() {
+                        return Err(format!(
+                            "next_t diverged: calendar {:?} vs heap {:?}",
+                            cal.next_t(),
+                            heap.next_t()
+                        ));
+                    }
+                    let a = cal.pop();
+                    let b = heap.pop();
+                    if a != b {
+                        return Err(format!("pop diverged: calendar {a:?} vs heap {b:?}"));
+                    }
+                    if let Some((t, _)) = a {
+                        clock = t;
+                    }
+                }
+                if cal.len() != heap.len() {
+                    return Err(format!("len diverged: {} vs {}", cal.len(), heap.len()));
+                }
+            }
+            loop {
+                let a = cal.pop();
+                let b = heap.pop();
+                if a != b {
+                    return Err(format!("drain diverged: calendar {a:?} vs heap {b:?}"));
+                }
+                if a.is_none() {
+                    return Ok(());
+                }
+            }
+        });
+        // NaN timestamps never arise in the engine, but total_cmp gives
+        // them a defined order — both queues must agree there too
+        let mut cal: EventQueue<u32> = EventQueue::new();
+        let mut heap: HeapEventQueue<u32> = HeapEventQueue::new();
+        for (t, id) in [(1.0, 0u32), (f64::NAN, 1), (0.5, 2), (f64::NAN, 3)] {
+            cal.push(t, id);
+            heap.push(t, id);
+        }
+        for _ in 0..4 {
+            let (ca, he) = (cal.pop().unwrap(), heap.pop().unwrap());
+            assert_eq!(ca.0.to_bits(), he.0.to_bits());
+            assert_eq!(ca.1, he.1);
+        }
     }
 
     fn block3() -> BlockState {

@@ -48,12 +48,14 @@ use super::core::{
     RunMetrics,
 };
 use super::greedy::{Dispatch, GreedyScheduler, GreedyStats};
-use super::queue::{head_runs, HeadRun, Queued};
+use super::queue::{head_runs, head_runs_into, HeadRun, Queued};
 use super::request::Request;
-use super::router::{width_eq, BlockFeedback, Decision, HeadView, PlanError, Router};
+use super::router::{
+    width_eq, BlockFeedback, Decision, HeadView, PlanError, Router, RoutingPlan,
+};
 use super::shard::{
-    assigner_for, global_tag, rebalance, split_tag, LeaderShard, ShardAssign,
-    ShardStats,
+    assigner_for, global_tag, plan_stream_rng, rebalance, split_tag, LeaderShard,
+    ShardAssign, ShardStats,
 };
 use super::telemetry::{ServerTelemetry, TelemetryLog, TelemetrySnapshot};
 
@@ -182,8 +184,30 @@ pub struct Engine<R: Router, D: DeviceModel = SimDevice, S: LocalScheduler = Gre
     /// Trace sink: when installed, the engine's lifecycle hooks deliver
     /// per-request records and telemetry ticks here (`crate::trace`).
     sink: Option<Box<dyn TraceSink>>,
+    /// Per-shard RNG streams for parallel planning (`--plan-threads`):
+    /// derived from (seed, shard index) only, so plans drawn on them are
+    /// reproducible at any thread count and never touch the main stream.
+    plan_rngs: Vec<Rng>,
+    /// Scratch buffers reused across routing events so the hot path
+    /// allocates nothing per planning call (§Perf): head runs, head
+    /// views, the per-decision block list (outer vector only — the inner
+    /// entry vectors escape into `BlockArrive` events), and the
+    /// telemetry snapshot (its `servers` vector is the reused part).
+    runs_scratch: Vec<HeadRun>,
+    heads_scratch: Vec<HeadView>,
+    blocks_scratch: Vec<Vec<Queued>>,
+    snap_scratch: TelemetrySnapshot,
     /// Safety cap for pathological configurations.
     pub max_sim_time_s: f64,
+}
+
+/// One shard's gathered planning work for a parallel round: the shard's
+/// snapshot view plus its head runs/views, captured while holding the
+/// whole engine so the planning threads only need the shard itself.
+struct PlanInput {
+    snap: TelemetrySnapshot,
+    runs: Vec<HeadRun>,
+    heads: Vec<HeadView>,
 }
 
 /// Resolve the configured device profiles and build one greedy
@@ -256,9 +280,17 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             RunMetrics::new(n, total, cfg.scheduler.widths.len(), cfg.router.sla_s);
         metrics.telemetry_log.shard_depths =
             vec![Summary::default(); routers.len()];
+        let plan_rngs: Vec<Rng> = (0..routers.len())
+            .map(|si| plan_stream_rng(cfg.seed, si))
+            .collect();
         Engine {
             link: Link::new(cfg.link),
             rng: Rng::new(cfg.seed),
+            plan_rngs,
+            runs_scratch: Vec::new(),
+            heads_scratch: Vec::new(),
+            blocks_scratch: Vec::new(),
+            snap_scratch: TelemetrySnapshot::default(),
             meta: ModelMeta::default(),
             prior: AccuracyPrior::new(),
             devices,
@@ -316,12 +348,22 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
     /// the PPO state vector — steer away from it instead of seeing an
     /// attractive idle machine; `alive_server` remains the safety net.
     fn snapshot(&self) -> TelemetrySnapshot {
-        TelemetrySnapshot {
-            fifo_len: self.shards.iter().map(|s| s.fifo.len()).sum(),
-            done_count: self.metrics.done,
-            total_requests: self.metrics.total,
-            servers: self
-                .devices
+        let mut snap = TelemetrySnapshot::default();
+        self.fill_snapshot(&mut snap);
+        snap
+    }
+
+    /// [`Engine::snapshot`] into a caller-owned buffer: `out.servers` is
+    /// cleared and refilled in place, so the routing hot path reuses one
+    /// scratch snapshot instead of allocating a servers vector per
+    /// planning call (§Perf).
+    fn fill_snapshot(&self, out: &mut TelemetrySnapshot) {
+        out.fifo_len = self.shards.iter().map(|s| s.fifo.len()).sum();
+        out.done_count = self.metrics.done;
+        out.total_requests = self.metrics.total;
+        out.servers.clear();
+        out.servers.extend(
+            self.devices
                 .iter()
                 .zip(&self.scheds)
                 .zip(&self.down)
@@ -343,9 +385,8 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                             instances: s.instances_loaded(),
                         }
                     }
-                })
-                .collect(),
-        }
+                }),
+        );
     }
 
     fn width_index(&self, w: f64) -> usize {
@@ -407,12 +448,19 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
     }
 
     /// Route every request waiting at the leader tier: rebalance if
-    /// configured, then drain each shard's FIFO in shard order. With one
-    /// shard this is the pre-shard routing loop, bit-identical per seed.
+    /// configured, then drain each shard's FIFO. `--plan-threads 1` (the
+    /// default) drains shard by shard in order — the pre-shard routing
+    /// loop, bit-identical per seed; higher thread counts run the
+    /// per-shard `Router::plan` calls concurrently
+    /// ([`Engine::route_all_parallel`]).
     fn route_pending(&mut self) {
         self.maybe_rebalance();
-        for si in 0..self.shards.len() {
-            self.route_shard(si);
+        if self.cfg.shard.plan_threads > 1 && self.shards.len() > 1 {
+            self.route_all_parallel();
+        } else {
+            for si in 0..self.shards.len() {
+                self.route_shard(si);
+            }
         }
     }
 
@@ -444,193 +492,351 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             if depth > self.shards[si].stats.max_depth {
                 self.shards[si].stats.max_depth = depth;
             }
-            let mut snap = self.snapshot();
+            let mut snap = std::mem::take(&mut self.snap_scratch);
+            self.fill_snapshot(&mut snap);
             // the router sees its own shard's backlog as the FIFO-length
             // signal (equal to the global length at one leader)
             snap.fifo_len = depth;
-            let runs = if window == 1 {
+            let mut runs = std::mem::take(&mut self.runs_scratch);
+            if window == 1 {
                 // fast path: the single head needs no run-length scan —
                 // block extraction below is bounded by the segment check,
                 // so a deep same-segment backlog costs O(group), not
                 // O(backlog), per routing event
+                runs.clear();
                 let front = &self.shards[si].fifo[0];
-                vec![HeadRun { start: 0, len: usize::MAX, seg: front.seg }]
+                runs.push(HeadRun { start: 0, len: usize::MAX, seg: front.seg });
             } else {
-                head_runs(&self.shards[si].fifo, window, RUN_SCAN_CAP)
-            };
-            let heads: Vec<HeadView> = runs
-                .iter()
-                .map(|run| {
-                    let req = &self.shards[si].fifo[run.start];
-                    let age = now - req.arrival;
-                    HeadView {
-                        fifo_index: run.start,
-                        w_req: req.w_req,
-                        seg: run.seg,
-                        age_s: age,
-                        // +∞ when no SLA is configured (`--sla 0`):
-                        // deadline-aware routers see "no pressure", not
-                        // a poisoned uniform slack
-                        slack_s: self.cfg.router.slack_at(age),
-                    }
-                })
-                .collect();
+                head_runs_into(&self.shards[si].fifo, window, RUN_SCAN_CAP, &mut runs);
+            }
+            let mut heads = std::mem::take(&mut self.heads_scratch);
+            heads.clear();
+            heads.extend(runs.iter().map(|run| {
+                let req = &self.shards[si].fifo[run.start];
+                let age = now - req.arrival;
+                HeadView {
+                    fifo_index: run.start,
+                    w_req: req.w_req,
+                    seg: run.seg,
+                    age_s: age,
+                    // +∞ when no SLA is configured (`--sla 0`):
+                    // deadline-aware routers see "no pressure", not
+                    // a poisoned uniform slack
+                    slack_s: self.cfg.router.slack_at(age),
+                }
+            }));
 
             let plan = self.shards[si].router.plan(&snap, &heads, &mut self.rng);
-            // pre-repair decisions, kept only while tracing so the trace
-            // can attribute clamp corrections to individual decisions
-            let mut pre_clamp: Option<Vec<Decision>> = None;
-            let plan = match plan.validate(
-                heads.len(),
-                self.devices.len(),
-                &self.cfg.scheduler.widths,
-            ) {
-                // the common case: a valid plan passes through untouched
-                // (seeds stay bit-identical)
-                Ok(()) => plan,
-                // arity is a router contract violation, not routable data
-                Err(e @ PlanError::WrongArity { .. }) => {
-                    panic!("router {}: {e}", self.shards[si].router.name())
-                }
-                // out-of-range servers/widths/groups are repairable:
-                // clamp explicitly instead of indexing out of bounds,
-                // and surface the correction count instead of dropping it
-                Err(_) => {
-                    if self.sink.is_some() {
-                        pre_clamp = Some(plan.decisions().to_vec());
-                    }
-                    let (repaired, clamped) = plan
-                        .clamp(self.devices.len(), &self.cfg.scheduler.widths);
-                    self.metrics.plan_clamps += clamped as u64;
-                    self.shards[si].stats.plan_clamps += clamped as u64;
-                    repaired
-                }
-            };
-            let decisions = plan.into_decisions();
+            self.snap_scratch = snap;
+            let heads_len = heads.len();
+            heads.clear();
+            self.heads_scratch = heads;
+            self.apply_shard_plan(si, now, &runs, heads_len, plan);
+            runs.clear();
+            self.runs_scratch = runs;
+        }
+    }
 
-            // apply atomically: one ranged drain per decision (up to
-            // `group` members of each head's run), processed back to
-            // front so earlier runs' offsets stay valid; sub-group
-            // leftovers never leave the queue
-            let mut blocks: Vec<Vec<Queued>> =
-                Vec::with_capacity(decisions.len());
-            for k in (0..decisions.len()).rev() {
-                let run = &runs[k];
-                let d = &decisions[k];
-                let want = d.group.max(1);
-                // count this block's members (consecutive same-segment
-                // entries from the run start, capped by the group)
-                let mut take = 0usize;
-                while take < want
-                    && take < run.len
-                    && self.shards[si]
-                        .fifo
-                        .get(run.start + take)
-                        .map_or(false, |r| r.seg == run.seg)
-                {
-                    take += 1;
-                }
-                // per-shard routers keep local tag counters; namespace
-                // them so ledger tags stay globally unique (identity at
-                // shard 0)
-                let gtag = global_tag(si, d.tag);
-                let entries: Vec<Queued> = self.shards[si]
-                    .fifo
-                    .drain(run.start..run.start + take)
-                    .map(|mut req| {
-                        req.block_tag = gtag;
-                        req.routed_at = now;
-                        req.enqueued_at = now;
-                        req.block_size = take;
-                        Queued { req, width: d.width }
-                    })
-                    .collect();
-                blocks.push(entries);
+    /// Validate, repair (clamp), and apply one shard's routing plan:
+    /// drain the planned blocks out of the FIFO, open ledger entries,
+    /// charge WLAN transfers, emit trace records, and schedule the
+    /// `BlockArrive` events. Shared verbatim by the sequential
+    /// [`Engine::route_shard`] loop and the parallel planner, so the two
+    /// paths can only differ in *where* `Router::plan` ran.
+    fn apply_shard_plan(
+        &mut self,
+        si: usize,
+        now: f64,
+        runs: &[HeadRun],
+        heads_len: usize,
+        plan: RoutingPlan,
+    ) {
+        let service = self.cfg.shard.leader_service_s;
+        // pre-repair decisions, kept only while tracing so the trace
+        // can attribute clamp corrections to individual decisions
+        let mut pre_clamp: Option<Vec<Decision>> = None;
+        let plan = match plan.validate(
+            heads_len,
+            self.devices.len(),
+            &self.cfg.scheduler.widths,
+        ) {
+            // the common case: a valid plan passes through untouched
+            // (seeds stay bit-identical)
+            Ok(()) => plan,
+            // arity is a router contract violation, not routable data
+            Err(e @ PlanError::WrongArity { .. }) => {
+                panic!("router {}: {e}", self.shards[si].router.name())
             }
-            blocks.reverse();
-
-            let mut routed_heads = 0usize;
-            for (k, ((decision, run), entries)) in
-                decisions.iter().zip(&runs).zip(blocks).enumerate()
-            {
-                debug_assert!(!entries.is_empty());
-                routed_heads += entries.len();
-                let block_size = entries.len();
-                let head_seg = run.seg;
-
-                // representative tuple for the partial-accuracy prior:
-                // executed widths so far, this block's width for the
-                // current segment, nearest-neighbour for the rest.
-                let mut tuple = [decision.width; NUM_SEGMENTS];
-                for s in 0..head_seg {
-                    tuple[s] = entries[0].req.widths_used[s];
-                }
-
-                self.ledger.open(
-                    global_tag(si, decision.tag),
-                    BlockState {
-                        routed_at: now,
-                        remaining: entries.len(),
-                        size: entries.len(),
-                        charged_j: 0.0,
-                        width: decision.width,
-                        seg: head_seg,
-                        tuple,
-                    },
-                );
-
-                let server = self
-                    .alive_server(decision.server.min(self.devices.len() - 1));
-
-                // WLAN transfer: charge the slowest member of the block
-                let mut arrive = now;
-                for q in &entries {
-                    let bytes = if head_seg == 0 {
-                        // input image
-                        (self.meta.img * self.meta.img * self.meta.in_ch * 4) as u64
-                    } else {
-                        let (inp, _) = self.meta.seg_io_shapes(head_seg, 1);
-                        (inp.iter().product::<usize>() * 4) as u64
-                    };
-                    let dt = match q.req.last_server {
-                        Some(s) if s == server => self.link.local_s(),
-                        _ => self.link.transfer_s(bytes, &mut self.rng),
-                    };
-                    arrive = arrive.max(now + dt);
-                }
-                self.shards[si].stats.blocks += 1;
+            // out-of-range servers/widths/groups are repairable:
+            // clamp explicitly instead of indexing out of bounds,
+            // and surface the correction count instead of dropping it
+            Err(_) => {
                 if self.sink.is_some() {
-                    // clamp corrections attributed per decision by
-                    // diffing against the pre-repair plan (0 otherwise)
-                    let clamped = pre_clamp.as_ref().map_or(0, |before| {
-                        let b = &before[k];
-                        (b.server != decision.server) as u64
-                            + (!width_eq(b.width, decision.width)) as u64
-                            + (b.group != decision.group) as u64
-                    });
-                    // router-local tag (the `shard` field disambiguates):
-                    // locals stay far below 2^53, so the JSON f64 number
-                    // is exact — the namespaced global tag would not be
-                    self.emit(TraceEvent::Route {
-                        t: now,
-                        shard: si,
-                        tag: decision.tag,
-                        seg: head_seg,
-                        server,
-                        width: decision.width,
-                        group: decision.group,
-                        size: block_size,
-                        clamped,
-                        arrive_t: arrive,
-                    });
+                    pre_clamp = Some(plan.decisions().to_vec());
                 }
-                self.push_event(arrive, EvKind::BlockArrive { server, entries });
+                let (repaired, clamped) =
+                    plan.clamp(self.devices.len(), &self.cfg.scheduler.widths);
+                self.metrics.plan_clamps += clamped as u64;
+                self.shards[si].stats.plan_clamps += clamped as u64;
+                repaired
             }
-            self.shards[si].stats.routed_heads += routed_heads as u64;
-            if service > 0.0 && routed_heads > 0 {
-                // the leader spent `service` per routed head; it can plan
-                // again once that virtual work is done
-                self.shards[si].busy_until = now + service * routed_heads as f64;
+        };
+        let decisions = plan.into_decisions();
+
+        // apply atomically: one ranged drain per decision (up to
+        // `group` members of each head's run), processed back to
+        // front so earlier runs' offsets stay valid; sub-group
+        // leftovers never leave the queue
+        let mut blocks = std::mem::take(&mut self.blocks_scratch);
+        debug_assert!(blocks.is_empty());
+        for k in (0..decisions.len()).rev() {
+            let run = &runs[k];
+            let d = &decisions[k];
+            let want = d.group.max(1);
+            // count this block's members (consecutive same-segment
+            // entries from the run start, capped by the group)
+            let mut take = 0usize;
+            while take < want
+                && take < run.len
+                && self.shards[si]
+                    .fifo
+                    .get(run.start + take)
+                    .map_or(false, |r| r.seg == run.seg)
+            {
+                take += 1;
+            }
+            // per-shard routers keep local tag counters; namespace
+            // them so ledger tags stay globally unique (identity at
+            // shard 0)
+            let gtag = global_tag(si, d.tag);
+            let entries: Vec<Queued> = self.shards[si]
+                .fifo
+                .drain(run.start..run.start + take)
+                .map(|mut req| {
+                    req.block_tag = gtag;
+                    req.routed_at = now;
+                    req.enqueued_at = now;
+                    req.block_size = take;
+                    Queued { req, width: d.width }
+                })
+                .collect();
+            blocks.push(entries);
+        }
+        blocks.reverse();
+
+        let mut routed_heads = 0usize;
+        for (k, ((decision, run), entries)) in
+            decisions.iter().zip(runs).zip(blocks.drain(..)).enumerate()
+        {
+            debug_assert!(!entries.is_empty());
+            routed_heads += entries.len();
+            let block_size = entries.len();
+            let head_seg = run.seg;
+
+            // representative tuple for the partial-accuracy prior:
+            // executed widths so far, this block's width for the
+            // current segment, nearest-neighbour for the rest.
+            let mut tuple = [decision.width; NUM_SEGMENTS];
+            for s in 0..head_seg {
+                tuple[s] = entries[0].req.widths_used[s];
+            }
+
+            self.ledger.open(
+                global_tag(si, decision.tag),
+                BlockState {
+                    routed_at: now,
+                    remaining: entries.len(),
+                    size: entries.len(),
+                    charged_j: 0.0,
+                    width: decision.width,
+                    seg: head_seg,
+                    tuple,
+                },
+            );
+
+            let server = self
+                .alive_server(decision.server.min(self.devices.len() - 1));
+
+            // WLAN transfer: charge the slowest member of the block
+            let mut arrive = now;
+            for q in &entries {
+                let bytes = if head_seg == 0 {
+                    // input image
+                    (self.meta.img * self.meta.img * self.meta.in_ch * 4) as u64
+                } else {
+                    let (inp, _) = self.meta.seg_io_shapes(head_seg, 1);
+                    (inp.iter().product::<usize>() * 4) as u64
+                };
+                let dt = match q.req.last_server {
+                    Some(s) if s == server => self.link.local_s(),
+                    _ => self.link.transfer_s(bytes, &mut self.rng),
+                };
+                arrive = arrive.max(now + dt);
+            }
+            self.shards[si].stats.blocks += 1;
+            if self.sink.is_some() {
+                // clamp corrections attributed per decision by
+                // diffing against the pre-repair plan (0 otherwise)
+                let clamped = pre_clamp.as_ref().map_or(0, |before| {
+                    let b = &before[k];
+                    (b.server != decision.server) as u64
+                        + (!width_eq(b.width, decision.width)) as u64
+                        + (b.group != decision.group) as u64
+                });
+                // router-local tag (the `shard` field disambiguates):
+                // locals stay far below 2^53, so the JSON f64 number
+                // is exact — the namespaced global tag would not be
+                self.emit(TraceEvent::Route {
+                    t: now,
+                    shard: si,
+                    tag: decision.tag,
+                    seg: head_seg,
+                    server,
+                    width: decision.width,
+                    group: decision.group,
+                    size: block_size,
+                    clamped,
+                    arrive_t: arrive,
+                });
+            }
+            self.push_event(arrive, EvKind::BlockArrive { server, entries });
+        }
+        self.blocks_scratch = blocks;
+        self.shards[si].stats.routed_heads += routed_heads as u64;
+        if service > 0.0 && routed_heads > 0 {
+            // the leader spent `service` per routed head; it can plan
+            // again once that virtual work is done
+            self.shards[si].busy_until = now + service * routed_heads as f64;
+        }
+    }
+
+    /// Capture shard `si`'s planning work for one parallel round, or
+    /// `None` when the shard has nothing routable (empty FIFO, or its
+    /// leader is busy — in which case the wake-up event is scheduled
+    /// exactly as the sequential loop would).
+    fn gather_plan_input(
+        &mut self,
+        si: usize,
+        now: f64,
+        base: &TelemetrySnapshot,
+        window: usize,
+        service: f64,
+    ) -> Option<PlanInput> {
+        if self.shards[si].fifo.is_empty() {
+            return None;
+        }
+        if service > 0.0 && self.shards[si].busy_until > now {
+            if !self.shards[si].wake_scheduled {
+                self.shards[si].wake_scheduled = true;
+                let at = self.shards[si].busy_until;
+                self.push_event(at, EvKind::LeaderFree { shard: si });
+            }
+            return None;
+        }
+        let depth = self.shards[si].fifo.len();
+        if depth > self.shards[si].stats.max_depth {
+            self.shards[si].stats.max_depth = depth;
+        }
+        let mut snap = base.clone();
+        snap.fifo_len = depth;
+        let runs = if window == 1 {
+            let front = &self.shards[si].fifo[0];
+            vec![HeadRun { start: 0, len: usize::MAX, seg: front.seg }]
+        } else {
+            head_runs(&self.shards[si].fifo, window, RUN_SCAN_CAP)
+        };
+        let heads: Vec<HeadView> = runs
+            .iter()
+            .map(|run| {
+                let req = &self.shards[si].fifo[run.start];
+                let age = now - req.arrival;
+                HeadView {
+                    fifo_index: run.start,
+                    w_req: req.w_req,
+                    seg: run.seg,
+                    age_s: age,
+                    slack_s: self.cfg.router.slack_at(age),
+                }
+            })
+            .collect();
+        Some(PlanInput { snap, runs, heads })
+    }
+
+    /// Parallel leader tier (`--plan-threads N`, N ≥ 2): plan all shards
+    /// concurrently, apply sequentially. Each round gathers every
+    /// routable shard's (snapshot, head runs/views), fans the
+    /// `Router::plan` calls out over scoped threads — chunked so shard
+    /// `si` always plans on `plan_rngs[si]`, making results independent
+    /// of the thread count — then applies the plans in ascending shard
+    /// order on the main thread, where all engine mutation (FIFO drains,
+    /// ledger, WLAN draws on the main RNG, trace records, events)
+    /// happens exactly as in the sequential loop. Rounds repeat until no
+    /// shard has routable work, mirroring `route_shard`'s drain loop.
+    ///
+    /// Server telemetry cannot change while the leader tier routes
+    /// (executions advance only through future `BlockArrive`/`BatchDone`
+    /// events), so the per-round base snapshot every shard's plan sees
+    /// is the same one the sequential loop would observe at that
+    /// instant. Per-shard plan RNG streams are a function of (seed,
+    /// shard) only, so any N ≥ 2 produces identical runs; `N = 1` never
+    /// enters this path and stays bit-identical to the pre-parallel
+    /// engine. Caveat: the PPO router is *shared* across shards
+    /// (`SharedPpoRouter` — one rollout buffer, one tag counter), so
+    /// concurrent plans would advance that shared state in
+    /// thread-dependent order; PPO runs keep the default
+    /// `--plan-threads 1` (memory-safe either way — the shared state is
+    /// behind a mutex — but not reproducible). The per-shard-cloned
+    /// algorithmic routers parallelize deterministically.
+    fn route_all_parallel(&mut self) {
+        let window = self.cfg.router.route_window.max(1);
+        let service = self.cfg.shard.leader_service_s;
+        let threads = self.cfg.shard.plan_threads.min(self.shards.len()).max(1);
+        loop {
+            let now = self.clock.now();
+            let mut base = std::mem::take(&mut self.snap_scratch);
+            self.fill_snapshot(&mut base);
+            let inputs: Vec<Option<PlanInput>> = (0..self.shards.len())
+                .map(|si| self.gather_plan_input(si, now, &base, window, service))
+                .collect();
+            self.snap_scratch = base;
+            if inputs.iter().all(Option::is_none) {
+                return;
+            }
+
+            let chunk = self.shards.len().div_ceil(threads);
+            let shards = &mut self.shards;
+            let plan_rngs = &mut self.plan_rngs;
+            let plans: Vec<Option<RoutingPlan>> = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for ((shard_chunk, rng_chunk), input_chunk) in shards
+                    .chunks_mut(chunk)
+                    .zip(plan_rngs.chunks_mut(chunk))
+                    .zip(inputs.chunks(chunk))
+                {
+                    handles.push(scope.spawn(move || {
+                        let mut out = Vec::with_capacity(input_chunk.len());
+                        for ((sh, rng), input) in shard_chunk
+                            .iter_mut()
+                            .zip(rng_chunk.iter_mut())
+                            .zip(input_chunk)
+                        {
+                            out.push(input.as_ref().map(|inp| {
+                                sh.router.plan(&inp.snap, &inp.heads, rng)
+                            }));
+                        }
+                        out
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("plan worker panicked"))
+                    .collect()
+            });
+
+            for (si, (input, plan)) in inputs.iter().zip(plans).enumerate() {
+                if let (Some(inp), Some(plan)) = (input, plan) {
+                    self.apply_shard_plan(si, now, &inp.runs, inp.heads.len(), plan);
+                }
             }
         }
     }

@@ -35,11 +35,13 @@ pub mod router;
 pub mod shard;
 pub mod telemetry;
 
-pub use self::core::{BlockLedger, DeviceModel, EventQueue, LocalScheduler, RunMetrics};
+pub use self::core::{
+    BlockLedger, DeviceModel, EventQueue, HeapEventQueue, LocalScheduler, RunMetrics,
+};
 pub use engine::{Engine, RunOutcome};
 pub use greedy::GreedyScheduler;
 pub use instance::{Instance, InstancePool};
-pub use queue::{head_runs, HeadRun, KeyedFifo};
+pub use queue::{head_runs, head_runs_into, HeadRun, KeyedFifo};
 pub use request::{wkey, BatchKey, Request};
 pub use router::{
     AlgoRouter, Decision, EdfRouter, HeadView, PlanError, Router, RouterSpec,

@@ -37,8 +37,23 @@ pub fn head_runs(
     max_runs: usize,
     run_cap: usize,
 ) -> Vec<HeadRun> {
+    let mut runs = Vec::new();
+    head_runs_into(fifo, max_runs, run_cap, &mut runs);
+    runs
+}
+
+/// Allocation-free [`head_runs`]: clears and fills `runs` in place, so a
+/// caller driving a planning loop (the engine routes every shard on every
+/// event) reuses one scratch buffer instead of allocating a `Vec` per
+/// planning call (§Perf).
+pub fn head_runs_into(
+    fifo: &VecDeque<Request>,
+    max_runs: usize,
+    run_cap: usize,
+    runs: &mut Vec<HeadRun>,
+) {
+    runs.clear();
     let run_cap = run_cap.max(1);
-    let mut runs: Vec<HeadRun> = Vec::new();
     for (i, req) in fifo.iter().enumerate() {
         match runs.last_mut() {
             Some(run) if run.seg == req.seg && run.len < run_cap => {
@@ -56,11 +71,10 @@ pub fn head_runs(
             }
         }
     }
-    runs
 }
 
 /// Queue entry: a request plus the width the router granted it.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct Queued {
     pub req: Request,
     pub width: f64,

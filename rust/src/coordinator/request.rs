@@ -37,7 +37,11 @@ impl BatchKey {
 }
 
 /// One inference request (an image traversing all four segments).
-#[derive(Clone, Debug)]
+///
+/// `Copy`: every field is plain-old-data, so the hot path moves requests
+/// between FIFOs, blocks, and events by bitwise copy instead of clone
+/// calls — there is deliberately no heap state in here (§Perf).
+#[derive(Clone, Copy, Debug)]
 pub struct Request {
     pub id: u64,
     /// Wall arrival time at the leader.

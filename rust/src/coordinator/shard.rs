@@ -42,6 +42,7 @@ use std::collections::VecDeque;
 
 use crate::config::{Config, ShardAssignKind};
 use crate::sim::SimDevice;
+use crate::utilx::Rng;
 
 use super::engine::Engine;
 use super::greedy::GreedyScheduler;
@@ -66,6 +67,18 @@ pub fn split_tag(tag: u64) -> (usize, u64) {
         (tag >> TAG_SHARD_SHIFT) as usize,
         tag & ((1u64 << TAG_SHARD_SHIFT) - 1),
     )
+}
+
+/// Dedicated planning RNG stream for shard `si`, a pure function of
+/// `(seed, shard)`. The parallel planner (`--plan-threads N`, N ≥ 2)
+/// gives each shard's `Router::plan` its own stream so plans are
+/// independent of how shards are chunked over threads — any N ≥ 2
+/// yields bit-identical runs. Sequential planning (`N = 1`) keeps
+/// threading the engine's main RNG instead, preserving the historical
+/// event stream byte for byte.
+pub fn plan_stream_rng(seed: u64, shard: usize) -> Rng {
+    let tag = 0x9e3779b97f4a7c15u64.wrapping_mul(shard as u64 + 1);
+    Rng::with_stream(seed ^ tag, 0x7054_11A5u64.wrapping_add(shard as u64))
 }
 
 /// Deterministic request→shard placement policy.

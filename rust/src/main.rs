@@ -41,8 +41,8 @@ use slim_scheduler::ppo::router_impl::width_marginal;
 use slim_scheduler::ppo::{run_ppo_episode_io, PpoRouter};
 use slim_scheduler::runtime::{HostTensor, SegmentExecutor};
 use slim_scheduler::trace::{
-    compare_routers, configure_for_replay, write_report, Trace, TraceRecorder,
-    TraceSink,
+    compare_routers, configure_for_replay, write_report, StreamingTraceWriter,
+    Trace, TraceSink,
 };
 use slim_scheduler::utilx::{Args, Json, Rng};
 
@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
         .describe("rebalance", "cross-shard rebalance threshold in requests (0 = off)")
         .describe("shard-assign", "request->shard policy: hash|round-robin|key-affine")
         .describe("leader-service", "leader routing service time per head (s, 0 = infinitely fast)")
+        .describe("plan-threads", "threads for per-shard router planning (1 = sequential, byte-identical baseline)")
         .describe("state-slack", "append per-head SLA slack to the PPO state vector (opt-in)")
         .describe("trace-out", "record the run as a JSONL trace at this path")
         .describe("trace-in", "replay/compare a recorded JSONL trace (replay, trace-compare)")
@@ -106,14 +107,17 @@ fn base_cfg(args: &Args) -> Config {
     cfg
 }
 
-/// Persist a recording if one was requested (shared by simulate/replay).
+/// Flush a streaming recording if one was requested (shared by
+/// simulate/replay). Events were written to disk as they happened, so
+/// this only flushes buffers and reports the count — the full trace is
+/// never resident in memory regardless of run length.
 fn finish_trace(
-    recorder: &Option<TraceRecorder>,
+    writer: &Option<StreamingTraceWriter>,
     trace_out: &Option<String>,
 ) -> anyhow::Result<()> {
-    if let (Some(rec), Some(path)) = (recorder, trace_out) {
-        rec.write(path)?;
-        println!("trace written to {path} ({} records)", rec.len());
+    if let (Some(w), Some(path)) = (writer, trace_out) {
+        let n = w.finish()?;
+        println!("trace written to {path} ({n} records)");
     }
     Ok(())
 }
@@ -214,28 +218,37 @@ fn run_routed(
     trace_out: &Option<String>,
 ) -> anyhow::Result<RunOutcome> {
     if let Some(algo) = AlgoRouter::by_name(router_name, &cfg.scheduler.widths) {
-        let recorder = trace_out.as_ref().map(|_| TraceRecorder::new(cfg, router_name));
+        let writer = match trace_out {
+            Some(path) => {
+                Some(StreamingTraceWriter::create(path, cfg, router_name)?)
+            }
+            None => None,
+        };
         let mut engine = sharded_engine(cfg.clone(), algo);
         if let Some(events) = arrivals {
             engine.set_arrivals(events);
         }
-        if let Some(rec) = &recorder {
-            engine.set_trace_sink(Box::new(rec.clone()));
+        if let Some(w) = &writer {
+            engine.set_trace_sink(Box::new(w.clone()));
         }
         let out = engine.run();
-        finish_trace(&recorder, trace_out)?;
+        finish_trace(&writer, trace_out)?;
         Ok(out)
     } else if router_name == "ppo" {
         // replay (arrivals set) keeps the configured seed verbatim;
         // simulate shifts to the fresh Tables IV/V evaluation seed
         let (run_cfg, router) = ppo_for_run(args, cfg, arrivals.is_none())?;
-        let recorder =
-            trace_out.as_ref().map(|_| TraceRecorder::new(&run_cfg, "ppo"));
-        let sink = recorder
+        let writer = match trace_out {
+            Some(path) => {
+                Some(StreamingTraceWriter::create(path, &run_cfg, "ppo")?)
+            }
+            None => None,
+        };
+        let sink = writer
             .as_ref()
-            .map(|rec| Box::new(rec.clone()) as Box<dyn TraceSink>);
+            .map(|w| Box::new(w.clone()) as Box<dyn TraceSink>);
         let (out, _router) = run_ppo_episode_io(&run_cfg, router, arrivals, sink);
-        finish_trace(&recorder, trace_out)?;
+        finish_trace(&writer, trace_out)?;
         Ok(out)
     } else {
         anyhow::bail!(
@@ -267,7 +280,10 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
     let path = args
         .get("trace-in")
         .ok_or_else(|| anyhow::anyhow!("replay needs --trace-in <trace.jsonl>"))?;
-    let trace = Trace::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    // streaming load: only the arrival stream is kept resident, so
+    // replaying a multi-gigabyte trace needs memory proportional to its
+    // request count, not its record count
+    let trace = Trace::load_streaming(path).map_err(|e| anyhow::anyhow!("{e}"))?;
     // the embedded header config reconstructs the recording run;
     // explicit CLI flags (applied after) override it, and the request
     // budget always becomes the trace's arrival count
@@ -294,7 +310,7 @@ fn cmd_trace_compare(args: &Args) -> anyhow::Result<()> {
     let path = args
         .get("trace-in")
         .ok_or_else(|| anyhow::anyhow!("trace-compare needs --trace-in <trace.jsonl>"))?;
-    let trace = Trace::load(path).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let trace = Trace::load_streaming(path).map_err(|e| anyhow::anyhow!("{e}"))?;
     let mut cfg = trace.config().unwrap_or_default();
     cfg.apply_args(args);
     let routers: Vec<String> = args
@@ -330,6 +346,8 @@ fn print_pair_table(report: &Json) {
             "n",
             "lat_delta_s",
             "lat_ci95",
+            "cohen_d",
+            "hl_shift",
             "energy_delta_j",
             "sign_p",
             "w/l/t",
@@ -353,6 +371,8 @@ fn print_pair_table(report: &Json) {
                 format!("{}", n("n_pairs") as u64),
                 format!("{:+.4}", n("latency_delta_mean_s")),
                 ci,
+                format!("{:+.3}", n("cohen_d")),
+                format!("{:+.4}", n("hl_shift_s")),
                 format!("{:+.2}", n("energy_delta_mean_j")),
                 format!("{:.4}", n("sign_test_p")),
                 format!(

@@ -22,9 +22,10 @@
 //! plus the full per-request delta rows. Deltas are `router − baseline`,
 //! so negative latency/energy deltas mean the candidate improves on the
 //! baseline for the *same* requests. Every pair also carries the
-//! [`super::stats`] significance block — exact sign-test p-value and
-//! seeded bootstrap 95 % CIs on the mean latency/energy deltas — so a
-//! report can answer "did the policy actually win, or was it noise?"
+//! [`super::stats`] significance block — exact sign-test p-value, seeded
+//! bootstrap 95 % CIs on the mean latency/energy deltas, and effect
+//! sizes (paired Cohen's d, Hodges–Lehmann shift) — so a report can
+//! answer "did the policy actually win, was it noise, and by how much?"
 //! without a separate analysis step.
 
 use std::collections::BTreeMap;
@@ -228,6 +229,8 @@ pub fn compare_routers_opts(
                 Json::Num(lat_stats.ci_hi),
             ]),
         ));
+        fields.push(("cohen_d".to_string(), Json::Num(lat_stats.cohen_d)));
+        fields.push(("hl_shift_s".to_string(), Json::Num(lat_stats.hl_shift)));
         fields.push((
             "energy_sign_test_p".to_string(),
             Json::Num(energy_stats.sign_test_p),
@@ -238,6 +241,14 @@ pub fn compare_routers_opts(
                 Json::Num(energy_stats.ci_lo),
                 Json::Num(energy_stats.ci_hi),
             ]),
+        ));
+        fields.push((
+            "energy_cohen_d".to_string(),
+            Json::Num(energy_stats.cohen_d),
+        ));
+        fields.push((
+            "energy_hl_shift_j".to_string(),
+            Json::Num(energy_stats.hl_shift),
         ));
         if include_per_request {
             fields.push(("per_request".to_string(), Json::Arr(per_request)));
@@ -367,6 +378,15 @@ mod tests {
             );
         }
         assert!(pair.get("energy_sign_test_p").is_some());
+
+        // effect sizes ride along with the significance block, and the
+        // robust shift lands inside the latency CI's ballpark
+        let d = pair.get("cohen_d").and_then(Json::as_f64).unwrap();
+        assert!(d.is_finite(), "cohen_d = {d}");
+        let hl = pair.get("hl_shift_s").and_then(Json::as_f64).unwrap();
+        assert!(hl.is_finite(), "hl_shift_s = {hl}");
+        assert!(pair.get("energy_cohen_d").and_then(Json::as_f64).is_some());
+        assert!(pair.get("energy_hl_shift_j").and_then(Json::as_f64).is_some());
     }
 
     #[test]

@@ -26,9 +26,10 @@
 //!   plus `ppo:<checkpoint>` (frozen greedy-eval replay of a trained
 //!   policy).
 //! * [`stats`] — paired significance over the delta rows: exact
-//!   sign-test p-values and seeded (deterministic) bootstrap confidence
-//!   intervals on the mean deltas, surfaced per candidate in the A/B
-//!   report and the `repro trace-study` per-scenario matrix.
+//!   sign-test p-values, seeded (deterministic) bootstrap confidence
+//!   intervals on the mean deltas, and effect sizes (paired Cohen's d,
+//!   Hodges–Lehmann shift), surfaced per candidate in the A/B report
+//!   and the `repro trace-study` per-scenario matrix.
 
 pub mod compare;
 pub mod record;
@@ -39,7 +40,11 @@ pub use compare::{
     compare_routers, compare_routers_opts, record_trace, write_report,
 };
 pub use record::{
-    done_stats, DoneStats, TraceEvent, TraceRecorder, TraceSink, TRACE_VERSION,
+    done_stats, DoneStats, StreamingTraceWriter, TraceEvent, TraceRecorder,
+    TraceSink, TRACE_VERSION,
 };
 pub use replay::{configure_for_replay, Trace, TraceError};
-pub use stats::{bootstrap_mean_ci, paired_stats, sign_test_p, PairedStats};
+pub use stats::{
+    bootstrap_mean_ci, hodges_lehmann, paired_cohen_d, paired_stats, sign_test_p,
+    PairedStats,
+};

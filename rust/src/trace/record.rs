@@ -310,6 +310,71 @@ impl TraceSink for TraceRecorder {
     }
 }
 
+struct StreamingInner {
+    out: std::io::BufWriter<std::fs::File>,
+    records: u64,
+}
+
+/// Streaming recording sink: serializes each event to the trace file as
+/// it fires instead of buffering the run in memory, so recording a
+/// 10M-request trace needs O(1) memory rather than O(events). The bytes
+/// written are exactly what [`TraceRecorder::to_jsonl`] would produce
+/// for the same run (header line, then one compact-JSON line per event)
+/// — `tests/trace_roundtrip.rs` pins the equality.
+///
+/// Like [`TraceRecorder`], cloning yields another handle onto the same
+/// underlying writer: the engine owns one boxed clone while the caller
+/// keeps another to [`StreamingTraceWriter::finish`] after the run. An
+/// I/O error mid-run panics rather than silently truncating the trace —
+/// a partial trace that replays is worse than a loud failure.
+#[derive(Clone)]
+pub struct StreamingTraceWriter {
+    inner: Arc<Mutex<StreamingInner>>,
+}
+
+impl StreamingTraceWriter {
+    /// Create `path` and write the v1 header line for a run of `cfg`
+    /// under `router`.
+    pub fn create(path: &str, cfg: &Config, router: &str) -> std::io::Result<Self> {
+        use std::io::Write;
+        let file = std::fs::File::create(path)?;
+        let mut out = std::io::BufWriter::new(file);
+        out.write_all(header_json(cfg, router).to_string_compact().as_bytes())?;
+        out.write_all(b"\n")?;
+        Ok(StreamingTraceWriter {
+            inner: Arc::new(Mutex::new(StreamingInner { out, records: 0 })),
+        })
+    }
+
+    /// Event records written so far (header line excluded).
+    pub fn records(&self) -> u64 {
+        self.inner.lock().unwrap().records
+    }
+
+    /// Flush buffered bytes to disk and return the record count. The
+    /// file stays open; callers normally drop the last handle right
+    /// after.
+    pub fn finish(&self) -> std::io::Result<u64> {
+        use std::io::Write;
+        let mut inner = self.inner.lock().unwrap();
+        inner.out.flush()?;
+        Ok(inner.records)
+    }
+}
+
+impl TraceSink for StreamingTraceWriter {
+    fn record(&mut self, ev: &TraceEvent) {
+        use std::io::Write;
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .out
+            .write_all(ev.to_json().to_string_compact().as_bytes())
+            .and_then(|()| inner.out.write_all(b"\n"))
+            .expect("trace stream write failed");
+        inner.records += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -418,6 +483,28 @@ mod tests {
         assert_eq!(d.energy_j, 210.25);
         assert_eq!(d.slack_s, -0.375);
         assert!((d.mean_width - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_writer_matches_in_memory_recorder_byte_for_byte() {
+        let cfg = Config::default();
+        let path = std::env::temp_dir().join(format!(
+            "slim_sched_stream_rec_{}.jsonl",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let writer = StreamingTraceWriter::create(&path, &cfg, "random").unwrap();
+        let mut engine_side: Box<dyn TraceSink> = Box::new(writer.clone());
+        let mut rec = TraceRecorder::new(&cfg, "random");
+        for ev in samples() {
+            engine_side.record(&ev);
+            rec.record(&ev);
+        }
+        assert_eq!(writer.records(), 5);
+        assert_eq!(writer.finish().unwrap(), 5);
+        let streamed = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(streamed, rec.to_jsonl());
     }
 
     #[test]

@@ -60,6 +60,33 @@ pub struct Trace {
     arrivals: Vec<WorkloadEvent>,
 }
 
+/// Header fields shared by the in-memory parser and the streaming
+/// loader: (version, router, requests, config).
+type TraceHeader = (u64, Option<String>, Option<usize>, Option<Json>);
+
+/// Parse and validate the header line (magic, version) of a trace.
+fn parse_header(header_line: &str) -> Result<TraceHeader, TraceError> {
+    let header = Json::parse(header_line)
+        .map_err(|e| err(1, format!("header is not valid JSON: {e}")))?;
+    if header.get("trace").and_then(Json::as_str) != Some("slim-scheduler") {
+        return Err(err(1, "not a slim-scheduler trace (header magic missing)"));
+    }
+    let version = header
+        .get("version")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| err(1, "header missing version"))? as u64;
+    if version != TRACE_VERSION {
+        return Err(err(
+            1,
+            format!("unsupported trace version {version} (supported: {TRACE_VERSION})"),
+        ));
+    }
+    let router = header.get("router").and_then(Json::as_str).map(str::to_string);
+    let requests = header.get("requests").and_then(Json::as_usize);
+    let config = header.get("config").cloned();
+    Ok((version, router, requests, config))
+}
+
 impl Trace {
     /// Parse a JSONL trace document.
     pub fn parse(text: &str) -> Result<Trace, TraceError> {
@@ -67,24 +94,7 @@ impl Trace {
         let (_, header_line) = lines
             .next()
             .ok_or_else(|| err(0, "empty document (missing header line)"))?;
-        let header = Json::parse(header_line)
-            .map_err(|e| err(1, format!("header is not valid JSON: {e}")))?;
-        if header.get("trace").and_then(Json::as_str) != Some("slim-scheduler") {
-            return Err(err(1, "not a slim-scheduler trace (header magic missing)"));
-        }
-        let version = header
-            .get("version")
-            .and_then(Json::as_f64)
-            .ok_or_else(|| err(1, "header missing version"))? as u64;
-        if version != TRACE_VERSION {
-            return Err(err(
-                1,
-                format!("unsupported trace version {version} (supported: {TRACE_VERSION})"),
-            ));
-        }
-        let router = header.get("router").and_then(Json::as_str).map(str::to_string);
-        let requests = header.get("requests").and_then(Json::as_usize);
-        let config = header.get("config").cloned();
+        let (version, router, requests, config) = parse_header(header_line)?;
 
         let mut events = Vec::new();
         for (i, line) in lines {
@@ -117,6 +127,51 @@ impl Trace {
         let text = std::fs::read_to_string(path)
             .map_err(|e| err(0, format!("cannot read {path}: {e}")))?;
         Trace::parse(&text)
+    }
+
+    /// Load a trace file line by line, keeping only what replay needs:
+    /// the header (config/router/declared count) and the arrival stream.
+    /// Non-arrival records are parsed for validity and dropped, so the
+    /// resident footprint is O(arrivals) regardless of trace length — a
+    /// 10M-request recording (mostly `route`/`done`/`tick` detail)
+    /// replays in bounded memory where [`Trace::load`] would buffer the
+    /// whole document. The returned trace has an empty `events` vector;
+    /// use [`Trace::load`] when completion records are needed (the A/B
+    /// harness).
+    pub fn load_streaming(path: &str) -> Result<Trace, TraceError> {
+        use std::io::BufRead;
+        let file = std::fs::File::open(path)
+            .map_err(|e| err(0, format!("cannot read {path}: {e}")))?;
+        let reader = std::io::BufReader::new(file);
+        let mut lines = reader.lines().enumerate();
+        let (_, header_line) = lines
+            .next()
+            .ok_or_else(|| err(0, "empty document (missing header line)"))?;
+        let header_line =
+            header_line.map_err(|e| err(1, format!("cannot read {path}: {e}")))?;
+        let (version, router, requests, config) = parse_header(&header_line)?;
+
+        let mut arrivals = Vec::new();
+        for (i, line) in lines {
+            let line = line.map_err(|e| err(i + 1, format!("cannot read {path}: {e}")))?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let json = Json::parse(&line)
+                .map_err(|e| err(i + 1, format!("invalid JSON: {e}")))?;
+            match TraceEvent::from_json(&json).map_err(|m| err(i + 1, m))? {
+                TraceEvent::Arrival { t, id, w_req } => arrivals.push(WorkloadEvent {
+                    at: t,
+                    request_id: id,
+                    w_req,
+                }),
+                _ => {} // recording detail: validated, not retained
+            }
+        }
+        let trace =
+            Trace { version, router, requests, config, events: Vec::new(), arrivals };
+        trace.validate()?;
+        Ok(trace)
     }
 
     fn validate(&self) -> Result<(), TraceError> {
@@ -290,6 +345,41 @@ mod tests {
         .join("\n");
         let e = Trace::parse(&doc).unwrap_err();
         assert!(e.msg.contains("non-decreasing"), "{e}");
+    }
+
+    #[test]
+    fn streaming_load_matches_in_memory_parse() {
+        let doc = mini_trace();
+        let path = std::env::temp_dir().join(format!(
+            "slim_sched_stream_load_{}.jsonl",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, &doc).unwrap();
+
+        let streamed = Trace::load_streaming(&path).unwrap();
+        let parsed = Trace::parse(&doc).unwrap();
+        assert_eq!(streamed.arrivals(), parsed.arrivals());
+        assert_eq!(streamed.version, parsed.version);
+        assert_eq!(streamed.router, parsed.router);
+        assert_eq!(streamed.requests, parsed.requests);
+        assert!(streamed.events.is_empty(), "streaming load drops detail records");
+        assert_eq!(
+            streamed.config().map(|c| c.workload.total_requests),
+            parsed.config().map(|c| c.workload.total_requests)
+        );
+
+        // same validation as the in-memory path: a gutted arrival stream
+        // trips the declared-count check
+        let gutted: String = doc
+            .lines()
+            .filter(|l| !l.contains("\"id\":1"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        std::fs::write(&path, &gutted).unwrap();
+        let e = Trace::load_streaming(&path).unwrap_err();
+        assert!(e.msg.contains("truncated"), "{e}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

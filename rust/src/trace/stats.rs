@@ -53,6 +53,75 @@ pub struct PairedStats {
     /// Seeded percentile-bootstrap CI on the mean delta.
     pub ci_lo: f64,
     pub ci_hi: f64,
+    /// Paired Cohen's d: mean delta over the sample standard deviation
+    /// of the deltas — the standardized effect size that makes deltas
+    /// comparable across metrics with different units and spreads.
+    pub cohen_d: f64,
+    /// Hodges–Lehmann shift: the median of the Walsh averages
+    /// (d_i + d_j)/2, a robust location estimate of the per-pair shift
+    /// (in the delta's own units) that a handful of outlier requests
+    /// cannot drag the way the mean can.
+    pub hl_shift: f64,
+}
+
+/// Paired Cohen's d over a delta column: `mean / sd` with the unbiased
+/// (n−1) sample standard deviation. Degenerate samples (fewer than two
+/// observations, or zero spread) report 0 — no standardizable effect.
+pub fn paired_cohen_d(deltas: &[f64]) -> f64 {
+    let n = deltas.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mean = deltas.iter().sum::<f64>() / n as f64;
+    let var = deltas.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>()
+        / (n - 1) as f64;
+    if var <= 0.0 || !var.is_finite() {
+        return 0.0;
+    }
+    mean / var.sqrt()
+}
+
+/// Walsh-average pairs at or below this count are enumerated exactly
+/// (n ≈ 1000); larger samples fall back to a seeded subsample of the
+/// same size, keeping the estimator deterministic per (data, seed) and
+/// the cost independent of trace length.
+const HL_EXACT_PAIR_CAP: usize = 500_000;
+
+/// Hodges–Lehmann one-sample shift estimate: the median of all Walsh
+/// averages `(d_i + d_j)/2` for `i ≤ j`. Exact for samples whose pair
+/// count fits [`HL_EXACT_PAIR_CAP`]; beyond that, the median is taken
+/// over a seeded with-replacement sample of pairs — deterministic per
+/// (data, seed), like the bootstrap. Empty input reports 0.
+pub fn hodges_lehmann(deltas: &[f64], seed: u64) -> f64 {
+    let n = deltas.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let pairs = n * (n + 1) / 2;
+    let mut walsh: Vec<f64>;
+    if pairs <= HL_EXACT_PAIR_CAP {
+        walsh = Vec::with_capacity(pairs);
+        for i in 0..n {
+            for j in i..n {
+                walsh.push((deltas[i] + deltas[j]) * 0.5);
+            }
+        }
+    } else {
+        let mut rng = Rng::new(seed);
+        walsh = Vec::with_capacity(HL_EXACT_PAIR_CAP);
+        for _ in 0..HL_EXACT_PAIR_CAP {
+            let i = rng.index(n);
+            let j = rng.index(n);
+            walsh.push((deltas[i] + deltas[j]) * 0.5);
+        }
+    }
+    walsh.sort_by(|a, b| a.total_cmp(b));
+    let m = walsh.len();
+    if m % 2 == 1 {
+        walsh[m / 2]
+    } else {
+        (walsh[m / 2 - 1] + walsh[m / 2]) * 0.5
+    }
 }
 
 /// Exact two-sided sign test: the probability, under a fair coin, of a
@@ -119,7 +188,9 @@ pub fn bootstrap_mean_ci(
 
 /// The full paired block over one delta column (negative = candidate
 /// better): win/loss/tie split, exact sign test over the signed pairs,
-/// and the seeded bootstrap CI on the mean delta.
+/// the seeded bootstrap CI on the mean delta, and the effect sizes
+/// (paired Cohen's d, Hodges–Lehmann shift) that say how *large* a
+/// significant difference actually is.
 pub fn paired_stats(deltas: &[f64], seed: u64) -> PairedStats {
     let mut wins = 0u64;
     let mut losses = 0u64;
@@ -144,6 +215,8 @@ pub fn paired_stats(deltas: &[f64], seed: u64) -> PairedStats {
         sign_test_p: sign_test_p(wins, losses),
         ci_lo,
         ci_hi,
+        cohen_d: paired_cohen_d(deltas),
+        hl_shift: hodges_lehmann(deltas, seed ^ 0x4831_5EED),
     }
 }
 
@@ -201,6 +274,57 @@ mod tests {
         assert_eq!((lo, hi), (2.5, 2.5)); // constant sample: point interval
         let (lo, hi) = bootstrap_mean_ci(&[1.0], 100, 1, 0.95);
         assert_eq!((lo, hi), (1.0, 1.0)); // single observation
+    }
+
+    #[test]
+    fn cohen_d_standardizes_the_mean_shift() {
+        // constant shift with unit spread: d = mean/sd exactly
+        let deltas = [-2.0, -1.0, 0.0, 1.0, -3.0, -1.0];
+        let n = deltas.len() as f64;
+        let mean = deltas.iter().sum::<f64>() / n;
+        let sd = (deltas.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>()
+            / (n - 1.0))
+            .sqrt();
+        assert!((paired_cohen_d(&deltas) - mean / sd).abs() < 1e-12);
+        // scale invariance: multiplying every delta by 1000 (seconds →
+        // milliseconds) leaves d unchanged
+        let scaled: Vec<f64> = deltas.iter().map(|d| d * 1000.0).collect();
+        assert!((paired_cohen_d(&scaled) - paired_cohen_d(&deltas)).abs() < 1e-9);
+        // degenerate samples carry no standardizable effect
+        assert_eq!(paired_cohen_d(&[]), 0.0);
+        assert_eq!(paired_cohen_d(&[1.0]), 0.0);
+        assert_eq!(paired_cohen_d(&[0.5; 10]), 0.0);
+    }
+
+    #[test]
+    fn hodges_lehmann_is_robust_and_exact_for_small_n() {
+        // symmetric sample: HL sits at the center
+        assert!((hodges_lehmann(&[-1.0, 0.0, 1.0], 1) - 0.0).abs() < 1e-12);
+        // hand-computed: deltas [1, 2, 6] → Walsh averages
+        // {1, 1.5, 3.5, 2, 4, 6}, sorted {1, 1.5, 2, 3.5, 4, 6},
+        // median = (2 + 3.5)/2
+        assert!((hodges_lehmann(&[1.0, 2.0, 6.0], 1) - 2.75).abs() < 1e-12);
+        // one wild outlier barely moves HL while it drags the mean
+        let mut deltas = vec![-0.1; 99];
+        deltas.push(1000.0);
+        let mean = deltas.iter().sum::<f64>() / deltas.len() as f64;
+        let hl = hodges_lehmann(&deltas, 1);
+        assert!(mean > 9.0, "{mean}");
+        assert!(hl < 0.0, "{hl}");
+        assert_eq!(hodges_lehmann(&[], 1), 0.0);
+    }
+
+    #[test]
+    fn hodges_lehmann_sampled_path_is_deterministic_and_close() {
+        // n = 2000 → 2 001 000 pairs, beyond the exact cap: the seeded
+        // subsample must reproduce per seed and land near the exact
+        // value of the underlying symmetric distribution
+        let deltas: Vec<f64> =
+            (0..2000).map(|i| ((i * 53) % 401) as f64 / 100.0 - 2.0).collect();
+        let a = hodges_lehmann(&deltas, 9);
+        let b = hodges_lehmann(&deltas, 9);
+        assert_eq!(a, b, "same seed must reproduce the estimate exactly");
+        assert!((a - 0.0).abs() < 0.05, "{a}");
     }
 
     #[test]

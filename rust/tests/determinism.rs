@@ -2,16 +2,19 @@
 //!
 //! The whole experimental protocol (Tables III–V, the PPO training loop,
 //! the scenario sweeps) assumes a run is a pure function of its
-//! `Config.seed`. The load-bearing piece is the event heap's
+//! `Config.seed`. The load-bearing piece is the event queue's
 //! (timestamp, sequence) tie-breaking in `coordinator::core::EventQueue`
-//! — if two same-timestamp events ever popped in a heap-dependent order,
-//! RNG consumption would diverge and every downstream number would
-//! wobble. These tests pin that guarantee across the engine refactor,
-//! the scenario registry, and both trainers.
+//! (a calendar queue since the §Perf pass — `HeapEventQueue` keeps the
+//! reference semantics) — if two same-timestamp events ever popped in a
+//! structure-dependent order, RNG consumption would diverge and every
+//! downstream number would wobble. These tests pin that guarantee across
+//! the engine refactor, the scenario registry, both trainers, and the
+//! `--plan-threads` parallel planner.
 
 use slim_scheduler::config::{Config, RewardCfg};
-use slim_scheduler::coordinator::{RunOutcome, TelemetrySnapshot};
+use slim_scheduler::coordinator::router::RandomRouter;
 use slim_scheduler::coordinator::telemetry::ServerTelemetry;
+use slim_scheduler::coordinator::{sharded_engine, RunOutcome, TelemetrySnapshot};
 use slim_scheduler::experiments;
 use slim_scheduler::ppo::PpoRouter;
 use slim_scheduler::sim::scenarios;
@@ -175,6 +178,63 @@ fn windowed_ppo_training_is_deterministic_across_worker_counts() {
         assert_eq!(a.stats.decisions, b.stats.decisions, "workers={workers}");
         assert_eq!(a.stats.updates, b.stats.updates, "workers={workers}");
         assert_eq!(fingerprint(&a), fingerprint(&b), "workers={workers}");
+    }
+}
+
+/// A multi-leader run with finite routing capacity, the regime where
+/// the parallel planner (`--plan-threads`) actually fans plan calls out
+/// across threads.
+fn sharded_run(seed: u64, leaders: usize, plan_threads: usize) -> RunOutcome {
+    let mut cfg = quick_cfg(seed);
+    cfg.workload.total_requests = 400;
+    cfg.shard.leaders = leaders;
+    cfg.shard.leader_service_s = 2e-4;
+    cfg.shard.plan_threads = plan_threads;
+    let router = RandomRouter::new(cfg.scheduler.widths.clone(), true, 8);
+    sharded_engine(cfg, router).run()
+}
+
+#[test]
+fn parallel_planner_is_a_pure_function_of_the_seed() {
+    // plans run on scoped threads, but per-shard RNG streams and
+    // shard-order apply keep the whole run seed-deterministic
+    let a = sharded_run(42, 3, 2);
+    let b = sharded_run(42, 3, 2);
+    assert_eq!(a.report.completed, 400);
+    assert_identical(&a, &b);
+}
+
+#[test]
+fn parallel_planner_is_independent_of_thread_count() {
+    // shard si always plans on plan_rngs[si], so how shards are chunked
+    // over threads cannot leak into the event stream: any N >= 2 must
+    // produce bit-identical outcomes
+    let base = sharded_run(42, 4, 2);
+    for threads in [3usize, 8] {
+        let other = sharded_run(42, 4, threads);
+        assert_identical(&base, &other);
+    }
+}
+
+#[test]
+fn plan_threads_one_is_the_sequential_baseline_at_every_leader_count() {
+    // the default never enters the parallel path — an explicit
+    // `--plan-threads 1` must reproduce the untouched config's run
+    // bit for bit, with one leader and with several
+    for leaders in [1usize, 3] {
+        let mut cfg = quick_cfg(42);
+        cfg.workload.total_requests = 400;
+        cfg.shard.leaders = leaders;
+        cfg.shard.leader_service_s = 2e-4;
+        let mk = |cfg: &Config| {
+            let router = RandomRouter::new(cfg.scheduler.widths.clone(), true, 8);
+            sharded_engine(cfg.clone(), router).run()
+        };
+        let a = mk(&cfg);
+        cfg.shard.plan_threads = 1;
+        let b = mk(&cfg);
+        assert_eq!(a.report.completed, 400, "leaders={leaders}");
+        assert_identical(&a, &b);
     }
 }
 

@@ -16,7 +16,10 @@ use slim_scheduler::coordinator::router::AlgoRouter;
 use slim_scheduler::coordinator::sharded_engine;
 use slim_scheduler::experiments;
 use slim_scheduler::ppo::run_ppo_episode_io;
-use slim_scheduler::trace::{compare_routers, configure_for_replay, Trace, TraceRecorder};
+use slim_scheduler::trace::{
+    compare_routers, configure_for_replay, StreamingTraceWriter, Trace,
+    TraceRecorder,
+};
 use slim_scheduler::utilx::Json;
 
 fn small_cfg(seed: u64) -> Config {
@@ -56,17 +59,57 @@ fn replay_and_rerecord(cfg: &Config, trace: &Trace, router_name: &str) -> String
 fn record_replay_rerecord_is_byte_identical_across_seeds_and_leaders() {
     for seed in [11u64, 29] {
         for leaders in [1usize, 3] {
-            let mut cfg = small_cfg(seed);
-            cfg.shard.leaders = leaders;
-            let original = record(&cfg, "random");
-            let trace = Trace::parse(&original).expect("recorded trace parses");
-            let rerecorded = replay_and_rerecord(&cfg, &trace, "random");
-            assert_eq!(
-                original, rerecorded,
-                "round trip diverged (seed {seed}, leaders {leaders})"
-            );
+            for plan_threads in [1usize, 2] {
+                let mut cfg = small_cfg(seed);
+                cfg.shard.leaders = leaders;
+                cfg.shard.leader_service_s = 2e-4;
+                cfg.shard.plan_threads = plan_threads;
+                let original = record(&cfg, "random");
+                let trace =
+                    Trace::parse(&original).expect("recorded trace parses");
+                let rerecorded = replay_and_rerecord(&cfg, &trace, "random");
+                assert_eq!(
+                    original, rerecorded,
+                    "round trip diverged (seed {seed}, leaders {leaders}, \
+                     plan_threads {plan_threads})"
+                );
+            }
         }
     }
+}
+
+#[test]
+fn streaming_writer_records_a_real_run_byte_identically() {
+    // the CLI records through StreamingTraceWriter (constant memory);
+    // its on-disk bytes must equal the in-memory recorder's JSONL for
+    // the same engine run, and the streaming loader must recover the
+    // same arrival stream
+    let mut cfg = small_cfg(23);
+    cfg.shard.leaders = 2;
+    let in_memory = record(&cfg, "random");
+
+    let path = std::env::temp_dir().join(format!(
+        "slim_stream_roundtrip_{}.jsonl",
+        std::process::id()
+    ));
+    let path_s = path.to_str().unwrap().to_string();
+    let writer = StreamingTraceWriter::create(&path_s, &cfg, "random")
+        .expect("create stream");
+    let router = AlgoRouter::by_name("random", &cfg.scheduler.widths).unwrap();
+    let mut engine = sharded_engine(cfg.clone(), router);
+    engine.set_trace_sink(Box::new(writer.clone()));
+    engine.run();
+    let n = writer.finish().expect("flush stream");
+    assert!(n > 0);
+
+    let streamed = std::fs::read_to_string(&path).expect("read stream");
+    assert_eq!(in_memory, streamed, "streaming writer diverged from recorder");
+
+    let loaded = Trace::load_streaming(&path_s).expect("streaming load");
+    let parsed = Trace::parse(&in_memory).unwrap();
+    assert_eq!(loaded.arrivals().len(), parsed.arrivals().len());
+    assert_eq!(loaded.config().map(|c| c.seed), parsed.config().map(|c| c.seed));
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
