@@ -91,6 +91,24 @@ impl RouterCfg {
             f64::INFINITY
         }
     }
+
+    /// Per-tenant deadline slack: `sla × mult − age`, or +∞ when no SLA
+    /// is configured. `slack_for(age, 1.0)` is bit-identical to
+    /// `slack_at(age)` (×1.0 is exact), which keeps the single-tenant
+    /// default path byte-stable.
+    pub fn slack_for(&self, age_s: f64, sla_mult: f64) -> f64 {
+        if self.sla_enabled() {
+            self.sla_s * sla_mult - age_s
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// The effective SLA threshold (s) for a given tenant multiplier;
+    /// non-positive still means "no SLA".
+    pub fn sla_for(&self, sla_mult: f64) -> f64 {
+        self.sla_s * sla_mult
+    }
 }
 
 /// Request→shard assignment policy for the multi-leader coordinator
@@ -123,6 +141,76 @@ impl ShardAssignKind {
             ShardAssignKind::Hash => "hash",
             ShardAssignKind::RoundRobin => "round-robin",
             ShardAssignKind::KeyAffine => "key-affine",
+        }
+    }
+}
+
+/// Admission-control policy ahead of shard routing. `None` (the
+/// default) feeds arrivals straight to the leader shards — the
+/// pre-admission engine, bit-identical per seed; `Drr` runs arrivals
+/// through the deficit-round-robin `coordinator::admission::DrrGate`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionKind {
+    None,
+    Drr,
+}
+
+impl AdmissionKind {
+    /// Parse a CLI/JSON spelling (`none` | `drr`).
+    pub fn parse(s: &str) -> Option<AdmissionKind> {
+        match s {
+            "none" | "off" => Some(AdmissionKind::None),
+            "drr" => Some(AdmissionKind::Drr),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdmissionKind::None => "none",
+            AdmissionKind::Drr => "drr",
+        }
+    }
+}
+
+/// Deficit-round-robin admission knobs (`coordinator::admission`). The
+/// bounded-everything shape follows the Kaskade DRR exemplar named in
+/// the ROADMAP: bounded credit (burstiness cap), bounded scan width per
+/// tick, bounded batch admission per tick, and a finite per-tenant
+/// queue as backpressure (overflow sheds deterministically).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionCfg {
+    pub kind: AdmissionKind,
+    /// Credits a backlogged tenant accrues per admission tick; each
+    /// admitted request charges 1 credit.
+    pub quantum: f64,
+    /// Credit ceiling — caps how big a burst an idle-then-active tenant
+    /// can push through in one tick.
+    pub burst_cap: f64,
+    /// Tenants examined per tick (round-robin cursor resumes where the
+    /// previous tick stopped).
+    pub scan_width: usize,
+    /// Total requests admitted per tick across all scanned tenants.
+    pub batch_max: usize,
+    /// Per-tenant pending-queue capacity; arrivals beyond it are shed.
+    pub queue_cap: usize,
+    /// Overload policy: once a tenant's pending queue is deeper than
+    /// this, its admitted requests are degraded to the slimmest width
+    /// (serve everyone slim rather than queue the hot tenant to death).
+    /// `0` disables degradation.
+    pub degrade_depth: usize,
+}
+
+impl Default for AdmissionCfg {
+    fn default() -> Self {
+        AdmissionCfg {
+            kind: AdmissionKind::None,
+            quantum: 4.0,
+            burst_cap: 32.0,
+            scan_width: 16,
+            batch_max: 64,
+            queue_cap: 512,
+            degrade_depth: 128,
         }
     }
 }
@@ -326,6 +414,19 @@ pub struct WorkloadCfg {
     /// Requested widths distribution (uniform over the scheduler widths
     /// when empty).
     pub width_mix: Vec<f64>,
+    /// Tenants sharing the cluster. `1` (the default) is the anonymous
+    /// single-stream workload — the pre-tenant engine, bit-identical
+    /// per seed (the tenant RNG stream is only split off when > 1).
+    pub tenants: usize,
+    /// Zipf exponent for tenant popularity (tenant 0 is the hottest);
+    /// only meaningful when `tenants > 1`.
+    pub tenant_zipf: f64,
+    /// Flash-crowd injection: tenant 0's arrival share is multiplied by
+    /// this factor inside `[flash_start_s, flash_end_s)`. `1` (the
+    /// default) disables the flash entirely.
+    pub flash_factor: f64,
+    pub flash_start_s: f64,
+    pub flash_end_s: f64,
 }
 
 impl Default for WorkloadCfg {
@@ -344,6 +445,11 @@ impl Default for WorkloadCfg {
             diurnal_depth: 0.0,
             total_requests: 20_000,
             width_mix: vec![],
+            tenants: 1,
+            tenant_zipf: 1.1,
+            flash_factor: 1.0,
+            flash_start_s: 0.0,
+            flash_end_s: 0.0,
         }
     }
 }
@@ -366,6 +472,7 @@ pub struct Config {
     pub devices: Vec<String>,
     pub router: RouterCfg,
     pub shard: ShardCfg,
+    pub admission: AdmissionCfg,
     pub scheduler: SchedulerCfg,
     pub ppo: PpoCfg,
     pub link: LinkCfg,
@@ -390,6 +497,7 @@ impl Default for Config {
             ],
             router: RouterCfg::default(),
             shard: ShardCfg::default(),
+            admission: AdmissionCfg::default(),
             scheduler: SchedulerCfg::default(),
             ppo: PpoCfg::default(),
             link: LinkCfg::default(),
@@ -452,6 +560,20 @@ impl Config {
                 panic!("--shard-assign expects hash|round-robin|key-affine, got {kind:?}")
             });
         }
+        self.workload.tenants =
+            args.usize_or("tenants", self.workload.tenants).max(1);
+        self.workload.tenant_zipf =
+            args.f64_or("tenant-zipf", self.workload.tenant_zipf);
+        if let Some(kind) = args.get("admission") {
+            self.admission.kind = AdmissionKind::parse(kind).unwrap_or_else(|| {
+                panic!("--admission expects drr|none, got {kind:?}")
+            });
+        }
+        self.admission.quantum = args.f64_or("drr-quantum", self.admission.quantum);
+        self.admission.burst_cap =
+            args.f64_or("drr-burst-cap", self.admission.burst_cap);
+        self.admission.queue_cap =
+            args.usize_or("drr-queue-cap", self.admission.queue_cap).max(1);
         self.scheduler.b_max = args.usize_or("b-max", self.scheduler.b_max);
         self.scheduler.u_blk_pct = args.f64_or("u-blk", self.scheduler.u_blk_pct);
         self.scheduler.t_idle_s = args.f64_or("t-idle", self.scheduler.t_idle_s);
@@ -522,6 +644,21 @@ impl Config {
                 ]),
             ),
             (
+                "admission",
+                obj(vec![
+                    ("kind", Json::Str(self.admission.kind.as_str().to_string())),
+                    ("quantum", Json::Num(self.admission.quantum)),
+                    ("burst_cap", Json::Num(self.admission.burst_cap)),
+                    ("scan_width", Json::Num(self.admission.scan_width as f64)),
+                    ("batch_max", Json::Num(self.admission.batch_max as f64)),
+                    ("queue_cap", Json::Num(self.admission.queue_cap as f64)),
+                    (
+                        "degrade_depth",
+                        Json::Num(self.admission.degrade_depth as f64),
+                    ),
+                ]),
+            ),
+            (
                 "scheduler",
                 obj(vec![
                     ("b_max", Json::Num(self.scheduler.b_max as f64)),
@@ -589,6 +726,11 @@ impl Config {
                         Json::Num(self.workload.total_requests as f64),
                     ),
                     ("width_mix", arr_f64(&self.workload.width_mix)),
+                    ("tenants", Json::Num(self.workload.tenants as f64)),
+                    ("tenant_zipf", Json::Num(self.workload.tenant_zipf)),
+                    ("flash_factor", Json::Num(self.workload.flash_factor)),
+                    ("flash_start_s", Json::Num(self.workload.flash_start_s)),
+                    ("flash_end_s", Json::Num(self.workload.flash_end_s)),
                 ]),
             ),
         ])
@@ -647,6 +789,31 @@ impl Config {
                 cfg.shard.plan_threads = x.max(1);
             }
         }
+        if let Some(a) = json.get("admission") {
+            if let Some(x) = a.get("kind").and_then(Json::as_str) {
+                if let Some(kind) = AdmissionKind::parse(x) {
+                    cfg.admission.kind = kind;
+                }
+            }
+            if let Some(x) = a.get("quantum").and_then(Json::as_f64) {
+                cfg.admission.quantum = x;
+            }
+            if let Some(x) = a.get("burst_cap").and_then(Json::as_f64) {
+                cfg.admission.burst_cap = x;
+            }
+            if let Some(x) = a.get("scan_width").and_then(Json::as_usize) {
+                cfg.admission.scan_width = x.max(1);
+            }
+            if let Some(x) = a.get("batch_max").and_then(Json::as_usize) {
+                cfg.admission.batch_max = x.max(1);
+            }
+            if let Some(x) = a.get("queue_cap").and_then(Json::as_usize) {
+                cfg.admission.queue_cap = x.max(1);
+            }
+            if let Some(x) = a.get("degrade_depth").and_then(Json::as_usize) {
+                cfg.admission.degrade_depth = x;
+            }
+        }
         if let Some(s) = json.get("scheduler") {
             if let Some(x) = s.get("b_max").and_then(Json::as_usize) {
                 cfg.scheduler.b_max = x;
@@ -694,6 +861,21 @@ impl Config {
             }
             if let Some(x) = w.get("diurnal_depth").and_then(Json::as_f64) {
                 cfg.workload.diurnal_depth = x;
+            }
+            if let Some(x) = w.get("tenants").and_then(Json::as_usize) {
+                cfg.workload.tenants = x.max(1);
+            }
+            if let Some(x) = w.get("tenant_zipf").and_then(Json::as_f64) {
+                cfg.workload.tenant_zipf = x;
+            }
+            if let Some(x) = w.get("flash_factor").and_then(Json::as_f64) {
+                cfg.workload.flash_factor = x;
+            }
+            if let Some(x) = w.get("flash_start_s").and_then(Json::as_f64) {
+                cfg.workload.flash_start_s = x;
+            }
+            if let Some(x) = w.get("flash_end_s").and_then(Json::as_f64) {
+                cfg.workload.flash_end_s = x;
             }
         }
         if let Some(p) = json.get("ppo") {
@@ -1039,6 +1221,69 @@ mod tests {
         assert_eq!(parsed.workload.burst_period_s, 4.0);
         assert_eq!(parsed.workload.burst_duty, 0.15);
         assert_eq!(parsed.workload.width_mix, vec![0.25, 0.25, 0.5]);
+    }
+
+    #[test]
+    fn admission_defaults_parse_and_roundtrip() {
+        let cfg = Config::default();
+        assert_eq!(cfg.admission.kind, AdmissionKind::None); // pre-PR engine
+        assert_eq!(cfg.workload.tenants, 1); // anonymous stream
+        assert_eq!(cfg.workload.flash_factor, 1.0); // no flash
+
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--tenants", "6", "--tenant-zipf", "1.3",
+             "--admission", "drr", "--drr-quantum", "2.5",
+             "--drr-burst-cap", "12", "--drr-queue-cap", "64"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.workload.tenants, 6);
+        assert_eq!(cfg.workload.tenant_zipf, 1.3);
+        assert_eq!(cfg.admission.kind, AdmissionKind::Drr);
+        assert_eq!(cfg.admission.quantum, 2.5);
+        assert_eq!(cfg.admission.burst_cap, 12.0);
+        assert_eq!(cfg.admission.queue_cap, 64);
+
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.admission, cfg.admission);
+        assert_eq!(parsed.workload.tenants, 6);
+        assert_eq!(parsed.workload.tenant_zipf, 1.3);
+
+        // a pathological 0 floors at 1 (the workload needs a tenant)
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--tenants", "0"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.workload.tenants, 1);
+    }
+
+    #[test]
+    fn admission_kind_spellings() {
+        assert_eq!(AdmissionKind::parse("none"), Some(AdmissionKind::None));
+        assert_eq!(AdmissionKind::parse("off"), Some(AdmissionKind::None));
+        assert_eq!(AdmissionKind::parse("drr"), Some(AdmissionKind::Drr));
+        assert_eq!(AdmissionKind::parse("nope"), None);
+        assert_eq!(AdmissionKind::None.as_str(), "none");
+        assert_eq!(AdmissionKind::Drr.as_str(), "drr");
+    }
+
+    #[test]
+    fn flash_crowd_fields_roundtrip_through_json() {
+        // the trace header embeds to_json(); replay reconstructs with
+        // from_json — the flash window must survive or a replayed
+        // flash-crowd run regenerates a different arrival process
+        let mut cfg = Config::default();
+        cfg.workload.tenants = 6;
+        cfg.workload.flash_factor = 10.0;
+        cfg.workload.flash_start_s = 5.0;
+        cfg.workload.flash_end_s = 11.0;
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.workload.flash_factor, 10.0);
+        assert_eq!(parsed.workload.flash_start_s, 5.0);
+        assert_eq!(parsed.workload.flash_end_s, 11.0);
     }
 
     #[test]

@@ -484,6 +484,62 @@ impl BlockLedger {
 // Run metrics
 // ---------------------------------------------------------------------
 
+/// Per-tenant accounting row (grown on demand as tenants appear).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TenantStat {
+    /// Arrivals owned by this tenant (admitted or shed).
+    pub arrivals: u64,
+    /// Requests that completed all segments.
+    pub done: u64,
+    /// Requests shed by admission backpressure.
+    pub shed: u64,
+    /// Sum of end-to-end latencies over `done` (for the mean).
+    pub latency_sum: f64,
+    /// Completions that blew the tenant's effective SLA
+    /// (`sla_s × sla_multiplier(tenant)`).
+    pub sla_misses: u64,
+}
+
+impl TenantStat {
+    /// Mean end-to-end latency over this tenant's completions.
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.done > 0 {
+            self.latency_sum / self.done as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// SLA miss rate over this tenant's completions.
+    pub fn sla_miss_rate(&self) -> f64 {
+        if self.done > 0 {
+            self.sla_misses as f64 / self.done as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Jain's fairness index J = (Σx)² / (n·Σx²) over the positive entries
+/// of `xs`: 1.0 when everyone gets the same, →1/n when one tenant takes
+/// everything. Empty (or all-zero) input reports 1.0 — a run with
+/// nothing to divide is vacuously fair, and it keeps single-tenant runs
+/// at exactly 1.0.
+pub fn jain_index(xs: &[f64]) -> f64 {
+    let (mut sum, mut sq, mut n) = (0.0, 0.0, 0u32);
+    for &x in xs {
+        if x > 0.0 {
+            sum += x;
+            sq += x * x;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        return 1.0;
+    }
+    (sum * sum) / (n as f64 * sq)
+}
+
 /// Everything a run measures while events fire (the Tables III–V rows
 /// plus the per-width execution histogram).
 #[derive(Clone, Debug)]
@@ -509,6 +565,16 @@ pub struct RunMetrics {
     pub sla_s: f64,
     /// Completions whose end-to-end latency exceeded `sla_s`.
     pub sla_misses: u64,
+    /// Per-tenant accounting, indexed by tenant id (grown on demand;
+    /// single-tenant runs hold exactly one row).
+    pub tenant_stats: Vec<TenantStat>,
+    /// Requests shed by admission backpressure (never served; a shed
+    /// request counts toward run completion so overloaded runs still
+    /// terminate).
+    pub shed: u64,
+    /// Worst admission-queue wait observed (s): the oldest age at which
+    /// a request finally cleared the gate.
+    pub max_starvation_s: f64,
 }
 
 impl RunMetrics {
@@ -526,6 +592,35 @@ impl RunMetrics {
             plan_clamps: 0,
             sla_s,
             sla_misses: 0,
+            tenant_stats: Vec::new(),
+            shed: 0,
+            max_starvation_s: 0.0,
+        }
+    }
+
+    fn tenant_mut(&mut self, tenant: u16) -> &mut TenantStat {
+        let idx = tenant as usize;
+        if idx >= self.tenant_stats.len() {
+            self.tenant_stats.resize(idx + 1, TenantStat::default());
+        }
+        &mut self.tenant_stats[idx]
+    }
+
+    /// A request arrived (before admission — shed requests count too).
+    pub fn record_arrival(&mut self, tenant: u16) {
+        self.tenant_mut(tenant).arrivals += 1;
+    }
+
+    /// Admission backpressure shed a request outright.
+    pub fn record_shed(&mut self, tenant: u16) {
+        self.shed += 1;
+        self.tenant_mut(tenant).shed += 1;
+    }
+
+    /// A request cleared the admission gate after waiting `age_s`.
+    pub fn record_starvation(&mut self, age_s: f64) {
+        if age_s > self.max_starvation_s {
+            self.max_starvation_s = age_s;
         }
     }
 
@@ -538,18 +633,31 @@ impl RunMetrics {
 
     /// A request crossed its final segment. A non-positive `sla_s`
     /// means no SLA is configured — nothing can miss it (previously a
-    /// zero threshold marked *every* completion late).
-    pub fn record_request_done(&mut self, e2e_latency_s: f64, acc_pct: f64) {
+    /// zero threshold marked *every* completion late). The tenant's
+    /// effective SLA is `sla_s × sla_multiplier(tenant)` (×1.0 exact
+    /// for tenant 0, so single-tenant miss counts are unchanged).
+    pub fn record_request_done(&mut self, e2e_latency_s: f64, acc_pct: f64, tenant: u16) {
         self.done += 1;
         self.e2e_latency.record(e2e_latency_s);
         self.acc_sum += acc_pct;
-        if self.sla_s > 0.0 && e2e_latency_s > self.sla_s {
+        let sla = self.sla_s * crate::sim::workload::sla_multiplier(tenant);
+        let missed = self.sla_s > 0.0 && e2e_latency_s > sla;
+        if missed {
             self.sla_misses += 1;
+        }
+        let ts = self.tenant_mut(tenant);
+        ts.done += 1;
+        ts.latency_sum += e2e_latency_s;
+        if missed {
+            ts.sla_misses += 1;
         }
     }
 
+    /// Shed requests count toward termination: an overloaded run where
+    /// admission drops part of the offered load still finishes once
+    /// everything has either completed or been shed.
     pub fn all_done(&self) -> bool {
-        self.done >= self.total as u64
+        self.done + self.shed >= self.total as u64
     }
 
     /// Mean width-tuple accuracy over completed requests.
@@ -766,14 +874,66 @@ mod tests {
         assert_eq!(m.width_histogram.len(), 4);
         assert!(!m.all_done());
         m.record_block(0.2, 30.0);
-        m.record_request_done(0.5, 74.0);
-        m.record_request_done(0.7, 70.0);
+        m.record_request_done(0.5, 74.0, 0);
+        m.record_request_done(0.7, 70.0, 0);
         assert!(m.all_done());
         assert_eq!(m.blocks_completed, 1);
         assert!((m.mean_accuracy() - 72.0).abs() < 1e-12);
         assert_eq!(m.e2e_latency.count(), 2);
         // the 0.7 s completion blew the 0.6 s SLA; the 0.5 s one held it
         assert_eq!(m.sla_misses, 1);
+        // single-tenant runs hold exactly one tenant row mirroring the
+        // aggregate view
+        assert_eq!(m.tenant_stats.len(), 1);
+        assert_eq!(m.tenant_stats[0].done, 2);
+        assert_eq!(m.tenant_stats[0].sla_misses, 1);
+        assert!((m.tenant_stats[0].mean_latency_s() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_requests_count_toward_termination() {
+        let mut m = RunMetrics::new(1, 3, 4, 0.0);
+        m.record_arrival(0);
+        m.record_arrival(1);
+        m.record_arrival(1);
+        m.record_request_done(0.5, 70.0, 0);
+        m.record_shed(1);
+        assert!(!m.all_done());
+        m.record_shed(1);
+        assert!(m.all_done());
+        assert_eq!(m.shed, 2);
+        assert_eq!(m.tenant_stats[1].shed, 2);
+        assert_eq!(m.tenant_stats[1].arrivals, 2);
+        m.record_starvation(0.4);
+        m.record_starvation(0.2);
+        assert_eq!(m.max_starvation_s, 0.4);
+    }
+
+    #[test]
+    fn per_tenant_sla_uses_the_multiplier() {
+        // tenant 1's tier is ×1.5: a 0.7 s completion misses tenant 0's
+        // 0.6 s SLA but holds tenant 1's 0.9 s one
+        let mut m = RunMetrics::new(1, 2, 4, 0.6);
+        m.record_request_done(0.7, 70.0, 0);
+        m.record_request_done(0.7, 70.0, 1);
+        assert_eq!(m.sla_misses, 1);
+        assert_eq!(m.tenant_stats[0].sla_misses, 1);
+        assert_eq!(m.tenant_stats[1].sla_misses, 0);
+    }
+
+    #[test]
+    fn jain_index_brackets() {
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[3.0]), 1.0);
+        assert_eq!(jain_index(&[2.0, 2.0, 2.0]), 1.0);
+        // one tenant hogging everything → 1/n
+        let j = jain_index(&[10.0, 1e-12, 1e-12]);
+        assert!(j < 0.4, "j={j}");
+        // zeros are excluded (tenants that served nothing don't poison
+        // the index)
+        assert_eq!(jain_index(&[5.0, 0.0, 5.0]), 1.0);
+        let mixed = jain_index(&[1.0, 2.0, 3.0]);
+        assert!(mixed > 0.5 && mixed < 1.0, "mixed={mixed}");
     }
 
     #[test]

@@ -36,16 +36,18 @@
 //! in tens of milliseconds, so PPO training over hundreds of thousands of
 //! scheduling steps is practical on one CPU.
 
-use crate::config::Config;
+use crate::config::{AdmissionKind, Config};
 use crate::metrics::{RunReport, Summary};
 use crate::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS};
+use crate::sim::workload::sla_multiplier;
 use crate::sim::{profiles, Link, SimDevice, VirtualClock, Workload, WorkloadEvent};
 use crate::trace::record::{TraceEvent, TraceSink};
 use crate::utilx::Rng;
 
+use super::admission::{DrrGate, Offer};
 use super::core::{
-    BlockLedger, BlockState, DeviceModel, EventQueue, LocalScheduler, MemberDone,
-    RunMetrics,
+    jain_index, BlockLedger, BlockState, DeviceModel, EventQueue, LocalScheduler,
+    MemberDone, RunMetrics, TenantStat,
 };
 use super::greedy::{Dispatch, GreedyScheduler, GreedyStats};
 use super::queue::{head_runs, head_runs_into, HeadRun, Queued};
@@ -61,6 +63,11 @@ use super::telemetry::{ServerTelemetry, TelemetryLog, TelemetrySnapshot};
 
 const TELEMETRY_DT: f64 = 0.05;
 const UNLOAD_DT: f64 = 0.5;
+/// Admission-tick period for the DRR gate (`--admission drr`). An order
+/// of magnitude finer than telemetry so the gate never becomes the
+/// latency floor; the event is only ever scheduled when a gate exists,
+/// so `--admission none` runs carry zero structural change.
+const ADMIT_DT: f64 = 0.005;
 /// Per-run scan budget for windowed head discovery — comfortably above
 /// every micro-batch group size in use (≤ 16), so it never shortens a
 /// block, while keeping each planning event's FIFO scan bounded at
@@ -81,6 +88,9 @@ enum EvKind {
     /// A shard's leader finished routing its backlog window and can plan
     /// again (only scheduled when `ShardCfg::leader_service_s > 0`).
     LeaderFree { shard: usize },
+    /// DRR admission tick: drain the gate's credit round into the leader
+    /// tier (only scheduled when `--admission drr` installs a gate).
+    AdmitTick,
 }
 
 /// Everything a finished run reports.
@@ -110,6 +120,14 @@ pub struct RunOutcome {
     /// (`RouterCfg::sla_s`) — the deadline counterpart of the latency
     /// mean, surfaced per run for the EDF-vs-PPO SLA sweeps.
     pub sla_misses: u64,
+    /// Per-tenant accounting (arrivals / completions / sheds / latency
+    /// sums / per-tenant SLA misses), indexed by tenant id.
+    pub tenant_stats: Vec<TenantStat>,
+    /// Requests shed by admission backpressure (counted toward run
+    /// completion alongside `report.completed`).
+    pub shed: u64,
+    /// Worst admission-queue wait observed (s).
+    pub max_starvation_s: f64,
 }
 
 impl RunOutcome {
@@ -120,6 +138,34 @@ impl RunOutcome {
             0.0
         } else {
             self.sla_misses as f64 / self.report.completed as f64
+        }
+    }
+
+    /// Jain fairness index over per-tenant *mean latency* — 1.0 when
+    /// every tenant sees the same mean, →1/n when one tenant absorbs
+    /// all the queueing (single-tenant runs report exactly 1.0).
+    pub fn jain_latency(&self) -> f64 {
+        let xs: Vec<f64> =
+            self.tenant_stats.iter().map(TenantStat::mean_latency_s).collect();
+        jain_index(&xs)
+    }
+
+    /// Jain fairness index over per-tenant *throughput* (completion
+    /// counts — the run-length factor cancels inside the index).
+    pub fn jain_throughput(&self) -> f64 {
+        let xs: Vec<f64> =
+            self.tenant_stats.iter().map(|t| t.done as f64).collect();
+        jain_index(&xs)
+    }
+
+    /// Fraction of the offered load shed by admission backpressure
+    /// (0 when nothing arrived).
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.report.completed + self.shed;
+        if total == 0 {
+            0.0
+        } else {
+            self.shed as f64 / total as f64
         }
     }
 
@@ -171,6 +217,12 @@ pub struct Engine<R: Router, D: DeviceModel = SimDevice, S: LocalScheduler = Gre
     shards: Vec<LeaderShard<R>>,
     /// Deterministic request→shard placement.
     assign: Box<dyn ShardAssign>,
+    /// DRR admission gate (`--admission drr`); `None` (the default)
+    /// feeds arrivals straight to the shards — the pre-admission path,
+    /// structurally unchanged.
+    gate: Option<DrrGate>,
+    /// Scratch buffer for gate drains (admitted requests per tick).
+    admit_scratch: Vec<Request>,
     ledger: BlockLedger,
     events: EventQueue<EvKind>,
     clock: VirtualClock,
@@ -296,6 +348,11 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             devices,
             scheds,
             assign: assigner_for(cfg.shard.assign),
+            gate: match cfg.admission.kind {
+                AdmissionKind::None => None,
+                AdmissionKind::Drr => Some(DrrGate::new(cfg.admission)),
+            },
+            admit_scratch: Vec::new(),
             shards: routers.into_iter().map(LeaderShard::new).collect(),
             ledger: BlockLedger::new(),
             events: EventQueue::new(),
@@ -426,6 +483,60 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         self.shards[si].fifo.push_back(req);
     }
 
+    /// Offer an arrival to the DRR gate (callers check `gate.is_some()`
+    /// first). Queue-cap overflow sheds the request on the spot — it
+    /// never reaches a shard, and the shed count drives termination.
+    fn offer_to_gate(&mut self, req: Request) {
+        let gate = self.gate.as_mut().expect("offer_to_gate requires a gate");
+        if gate.offer(req) == Offer::Shed {
+            self.metrics.record_shed(req.tenant);
+        }
+    }
+
+    /// One DRR admission round: tick the gate, enqueue what it admitted
+    /// (tracking worst-case admission wait), and route.
+    fn drain_gate(&mut self, now: f64) {
+        let slim = self
+            .cfg
+            .scheduler
+            .widths
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        let mut admitted = std::mem::take(&mut self.admit_scratch);
+        admitted.clear();
+        if let Some(gate) = self.gate.as_mut() {
+            gate.tick(&mut admitted, slim);
+        }
+        let any = !admitted.is_empty();
+        for req in admitted.drain(..) {
+            self.metrics.record_starvation(now - req.arrival);
+            self.enqueue_leader(req);
+        }
+        self.admit_scratch = admitted;
+        if any {
+            self.route_pending();
+        }
+    }
+
+    /// Current per-shard queue depths for telemetry. Requests parked in
+    /// the admission gate count too — they are queued work the cluster
+    /// owes, and depth telemetry that ignored them would silently
+    /// under-report under backpressure. Gate requests have no shard yet
+    /// (assignment happens at admission), so tenant `t`'s pending rides
+    /// shard `t % leaders` as a bookkeeping attribution.
+    fn shard_depths_now(&self) -> Vec<usize> {
+        let mut depths: Vec<usize> =
+            self.shards.iter().map(|s| s.fifo.len()).collect();
+        if let Some(gate) = &self.gate {
+            let n = depths.len();
+            for t in 0..gate.tenant_count() {
+                depths[t % n] += gate.pending_for(t as u16);
+            }
+        }
+        depths
+    }
+
     /// Cross-shard rebalance (no-op unless configured and multi-leader).
     /// Migrated requests are re-attributed in the trace: each one gets a
     /// fresh `assign` record naming the destination shard, so the
@@ -519,10 +630,15 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                     w_req: req.w_req,
                     seg: run.seg,
                     age_s: age,
-                    // +∞ when no SLA is configured (`--sla 0`):
-                    // deadline-aware routers see "no pressure", not
-                    // a poisoned uniform slack
-                    slack_s: self.cfg.router.slack_at(age),
+                    // per-tenant deadline: sla × tier − age, or +∞ when
+                    // no SLA is configured (`--sla 0`) — deadline-aware
+                    // routers see "no pressure", not a poisoned uniform
+                    // slack. Tenant 0's tier is ×1.0 exact, so
+                    // single-tenant runs stay bit-identical.
+                    slack_s: self
+                        .cfg
+                        .router
+                        .slack_for(age, sla_multiplier(req.tenant)),
                 }
             }));
 
@@ -755,7 +871,10 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                     w_req: req.w_req,
                     seg: run.seg,
                     age_s: age,
-                    slack_s: self.cfg.router.slack_at(age),
+                    slack_s: self
+                        .cfg
+                        .router
+                        .slack_for(age, sla_multiplier(req.tenant)),
                 }
             })
             .collect();
@@ -940,15 +1059,19 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             } else {
                 let acc = self.prior.lookup(&req.width_tuple());
                 let e2e = now - req.arrival;
-                self.metrics.record_request_done(e2e, acc);
+                self.metrics.record_request_done(e2e, acc, req.tenant);
                 if self.sink.is_some() {
+                    // slack against the tenant's *effective* SLA
+                    // (×1.0 exact for tenant 0)
+                    let sla = self.cfg.router.sla_s * sla_multiplier(req.tenant);
                     self.emit(TraceEvent::Done {
                         t: now,
                         id: req.id,
                         e2e_s: e2e,
                         energy_j: req.energy_j,
-                        slack_s: self.cfg.router.sla_s - e2e,
+                        slack_s: sla - e2e,
                         widths: req.widths_used.to_vec(),
+                        tenant: req.tenant,
                     });
                 }
             }
@@ -1011,11 +1134,15 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             workload = workload.with_trace(events);
         }
         if let Some(first) = workload.next_event() {
-            let req = Request::new(first.request_id, first.at, first.w_req);
+            let req = Request::new(first.request_id, first.at, first.w_req)
+                .with_tenant(first.tenant);
             self.push_event(first.at, EvKind::Arrival(req));
         }
         self.push_event(TELEMETRY_DT, EvKind::TelemetryTick);
         self.push_event(UNLOAD_DT, EvKind::UnloadTick);
+        if self.gate.is_some() {
+            self.push_event(ADMIT_DT, EvKind::AdmitTick);
+        }
         if let Some(dp) = self.cfg.dropout {
             if dp.server < self.devices.len() {
                 self.push_event(
@@ -1032,16 +1159,28 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             self.clock.advance_to(t);
             match ev {
                 EvKind::Arrival(req) => {
+                    // the arrival is recorded *before* admission, so a
+                    // shed request's arrival is still in the trace —
+                    // replaying it re-offers the same sequence to the
+                    // gate and sheds identically (byte-stable round
+                    // trips under `--admission drr`)
                     if self.sink.is_some() {
                         self.emit(TraceEvent::Arrival {
                             t: self.clock.now(),
                             id: req.id,
                             w_req: req.w_req,
+                            tenant: req.tenant,
                         });
                     }
-                    self.enqueue_leader(req);
+                    self.metrics.record_arrival(req.tenant);
+                    if self.gate.is_some() {
+                        self.offer_to_gate(req);
+                    } else {
+                        self.enqueue_leader(req);
+                    }
                     if let Some(next) = workload.next_event() {
-                        let r = Request::new(next.request_id, next.at, next.w_req);
+                        let r = Request::new(next.request_id, next.at, next.w_req)
+                            .with_tenant(next.tenant);
                         self.push_event(next.at, EvKind::Arrival(r));
                     }
                     self.route_pending();
@@ -1071,8 +1210,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                     }
                     let snap = self.snapshot();
                     self.metrics.telemetry_log.record(&snap);
-                    let depths: Vec<usize> =
-                        self.shards.iter().map(|s| s.fifo.len()).collect();
+                    let depths = self.shard_depths_now();
                     self.metrics.telemetry_log.record_shard_depths(&depths);
                     if self.sink.is_some() {
                         self.emit(TraceEvent::Tick {
@@ -1109,6 +1247,13 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                     // the freed leader resumes its backlog; rebalance may
                     // also hand some of it to idle shards first
                     self.route_pending();
+                }
+                EvKind::AdmitTick => {
+                    let now = self.clock.now();
+                    self.drain_gate(now);
+                    if !self.metrics.all_done() {
+                        self.push_event(now + ADMIT_DT, EvKind::AdmitTick);
+                    }
                 }
             }
             if self.metrics.all_done() {
@@ -1161,6 +1306,9 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             shard_stats,
             plan_clamps: m.plan_clamps,
             sla_misses: m.sla_misses,
+            tenant_stats: m.tenant_stats,
+            shed: m.shed,
+            max_starvation_s: m.max_starvation_s,
         };
         // shard 0's router is the one handed back: for single-leader runs
         // it is *the* router; for shared-policy PPO every replica is a
@@ -1634,9 +1782,9 @@ mod tests {
         let cfg = small_cfg(50, 100.0);
         let widths = cfg.scheduler.widths.clone();
         let arrivals = vec![
-            WorkloadEvent { at: 0.01, request_id: 0, w_req: 0.25 },
-            WorkloadEvent { at: 0.02, request_id: 1, w_req: 0.5 },
-            WorkloadEvent { at: 0.5, request_id: 2, w_req: 1.0 },
+            WorkloadEvent { at: 0.01, request_id: 0, w_req: 0.25, tenant: 0 },
+            WorkloadEvent { at: 0.02, request_id: 1, w_req: 0.5, tenant: 0 },
+            WorkloadEvent { at: 0.5, request_id: 2, w_req: 1.0, tenant: 0 },
         ];
         let mut engine =
             Engine::new(cfg, RandomRouter::new(widths, false, 4));
@@ -1761,6 +1909,83 @@ mod tests {
             .count() as u64;
         let assigned: u64 = out.shard_stats.iter().map(|s| s.assigned).sum();
         assert_eq!(assigns, assigned + migrated_in);
+    }
+
+    #[test]
+    fn telemetry_depths_count_gate_held_requests() {
+        // trickle admission: a tiny quantum makes the gate itself the
+        // queue. Depth telemetry must see that backlog even though no
+        // shard FIFO ever grows — a depth signal that ignored the gate
+        // would read a fully backpressured cluster as idle.
+        let mut cfg = small_cfg(200, 300.0);
+        cfg.workload.tenants = 4;
+        cfg.admission.kind = AdmissionKind::Drr;
+        cfg.admission.quantum = 0.05; // ~10 admits/s per tenant
+        cfg.admission.burst_cap = 1.0;
+        cfg.admission.queue_cap = 512; // hold, don't shed
+        let widths = cfg.scheduler.widths.clone();
+        let out = run_with(cfg, Box::new(RandomRouter::new(widths, true, 4)));
+        assert_eq!(out.report.completed + out.shed, 200);
+        let max_depth = out
+            .telemetry
+            .shard_depths
+            .iter()
+            .map(Summary::max)
+            .fold(0.0, f64::max);
+        assert!(
+            max_depth > 50.0,
+            "gate backlog invisible to depth telemetry: {max_depth}"
+        );
+    }
+
+    #[test]
+    fn drr_flash_crowd_sheds_degrades_and_stays_deterministic() {
+        let mk = || {
+            let mut cfg = Config::default();
+            crate::sim::scenarios::apply_named("flash-crowd", &mut cfg)
+                .expect("registered scenario");
+            cfg.workload.total_requests = 400;
+            // every request asks for the full width, so any slim
+            // execution can only come from the gate's overload
+            // degradation
+            cfg.workload.width_mix = vec![1.0];
+            cfg.seed = 7;
+            let widths = cfg.scheduler.widths.clone();
+            run_with(cfg, Box::new(EdfRouter::new(widths, 4)))
+        };
+        let a = mk();
+        assert_eq!(a.report.completed + a.shed, 400);
+        assert!(a.shed > 0, "the 10x spike must overflow the queue cap");
+        assert_eq!(a.e2e_latency.count(), a.report.completed as usize);
+        assert!(
+            a.width_count(0.25) > 0,
+            "hot-tenant requests were never degraded: {:?}",
+            a.width_histogram
+        );
+        assert!(a.max_starvation_s > 0.0);
+
+        // per-tenant accounting conserves the workload exactly
+        let arrived: u64 = a.tenant_stats.iter().map(|s| s.arrivals).sum();
+        let done: u64 = a.tenant_stats.iter().map(|s| s.done).sum();
+        let shed: u64 = a.tenant_stats.iter().map(|s| s.shed).sum();
+        assert_eq!(arrived, 400);
+        assert_eq!(done, a.report.completed);
+        assert_eq!(shed, a.shed);
+        let jl = a.jain_latency();
+        let jt = a.jain_throughput();
+        assert!(jl > 0.0 && jl <= 1.0, "jain_latency = {jl}");
+        assert!(jt > 0.0 && jt <= 1.0, "jain_throughput = {jt}");
+
+        // bit-determinism per seed, gate and all
+        let b = mk();
+        assert_eq!(a.report.completed, b.report.completed);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.width_histogram, b.width_histogram);
+        assert_eq!(
+            a.report.latency.mean().to_bits(),
+            b.report.latency.mean().to_bits()
+        );
+        assert_eq!(a.jain_latency().to_bits(), b.jain_latency().to_bits());
     }
 
     #[test]

@@ -13,6 +13,10 @@
 //!   LeastLoaded (algorithmic comparators), Edf (deadline-aware
 //!   slack-ordered comparator), and the PPO router (Tables IV–V) with
 //!   its batched inference path.
+//! * [`admission`] — deficit-round-robin admission control ahead of
+//!   routing: per-tenant credit queues with a burstiness cap, bounded
+//!   scan/batch per tick, finite queues as backpressure, and a
+//!   width-degradation overload policy.
 //! * [`shard`] — multi-leader sharding of the global FIFO: leader
 //!   shards with router replicas, deterministic request→shard
 //!   assignment (`ShardAssign`), cross-shard rebalancing, and the
@@ -25,6 +29,7 @@
 //!   router, per-server schedulers and devices; produces the Tables
 //!   III–V metrics.
 
+pub mod admission;
 pub mod core;
 pub mod engine;
 pub mod greedy;
@@ -35,6 +40,7 @@ pub mod router;
 pub mod shard;
 pub mod telemetry;
 
+pub use admission::DrrGate;
 pub use self::core::{
     BlockLedger, DeviceModel, EventQueue, HeapEventQueue, LocalScheduler, RunMetrics,
 };

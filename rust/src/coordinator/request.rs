@@ -44,6 +44,10 @@ impl BatchKey {
 #[derive(Clone, Copy, Debug)]
 pub struct Request {
     pub id: u64,
+    /// Owning tenant (0 in single-tenant workloads). Determines the
+    /// effective SLA via `sim::workload::sla_multiplier` and the DRR
+    /// admission queue the request waits in.
+    pub tenant: u16,
     /// Wall arrival time at the leader.
     pub arrival: f64,
     /// Width the client asked for (minimum acceptable).
@@ -83,6 +87,7 @@ impl Request {
     pub fn new(id: u64, arrival: f64, w_req: f64) -> Self {
         Request {
             id,
+            tenant: 0,
             arrival,
             w_req,
             seg: 0,
@@ -95,6 +100,13 @@ impl Request {
             block_size: 1,
             energy_j: 0.0,
         }
+    }
+
+    /// Stamp the owning tenant (builder-style; `new` defaults to 0 so
+    /// hand-built test requests stay terse).
+    pub fn with_tenant(mut self, tenant: u16) -> Self {
+        self.tenant = tenant;
+        self
     }
 
     /// Key of the segment execution this request currently waits for,

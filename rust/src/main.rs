@@ -63,6 +63,12 @@ fn main() -> anyhow::Result<()> {
         .describe("leader-service", "leader routing service time per head (s, 0 = infinitely fast)")
         .describe("plan-threads", "threads for per-shard router planning (1 = sequential, byte-identical baseline)")
         .describe("state-slack", "append per-head SLA slack to the PPO state vector (opt-in)")
+        .describe("tenants", "multi-tenant workload: number of tenants (1 = anonymous stream)")
+        .describe("tenant-zipf", "Zipf exponent of tenant popularity (0 = uniform)")
+        .describe("admission", "admission gate: none (raw FIFO, default) | drr (deficit round-robin)")
+        .describe("drr-quantum", "DRR credit accrued per admission tick per backlogged tenant")
+        .describe("drr-burst-cap", "DRR credit ceiling (burstiness cap)")
+        .describe("drr-queue-cap", "per-tenant admission queue depth; overflow is shed deterministically")
         .describe("trace-out", "record the run as a JSONL trace at this path")
         .describe("trace-in", "replay/compare a recorded JSONL trace (replay, trace-compare)")
         .describe("routers", "comma list for trace-compare/trace-study; first is the baseline; ppo:<path> loads a checkpoint entrant (default random,edf)")
@@ -192,6 +198,31 @@ fn print_outcome(outcome: &RunOutcome) {
         "sim duration {:.1}s, total energy {:.0} J",
         outcome.sim_duration_s, outcome.total_energy_j
     );
+    if outcome.shed > 0 || outcome.tenant_stats.len() > 1 {
+        println!(
+            "admission: shed {} ({:.2}%), max starvation {:.3}s, \
+             jain(latency) {:.4}, jain(throughput) {:.4}",
+            outcome.shed,
+            outcome.shed_rate() * 100.0,
+            outcome.max_starvation_s,
+            outcome.jain_latency(),
+            outcome.jain_throughput()
+        );
+    }
+    if outcome.tenant_stats.len() > 1 {
+        for (t, s) in outcome.tenant_stats.iter().enumerate() {
+            println!(
+                "tenant {t}: arrived {} done {} shed {}, mean latency \
+                 {:.1} ms, sla misses {} ({:.2}%)",
+                s.arrivals,
+                s.done,
+                s.shed,
+                s.mean_latency_s() * 1e3,
+                s.sla_misses,
+                s.sla_miss_rate() * 100.0
+            );
+        }
+    }
     if outcome.shard_stats.len() > 1 {
         for (i, s) in outcome.shard_stats.iter().enumerate() {
             println!(

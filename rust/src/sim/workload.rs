@@ -20,6 +20,64 @@ pub struct WorkloadEvent {
     pub at: f64,
     pub request_id: u64,
     pub w_req: f64,
+    /// Owning tenant (0 in single-tenant workloads and for imported
+    /// traces recorded before the tenant dimension existed).
+    pub tenant: u16,
+}
+
+/// Per-tenant SLA multiplier: the effective deadline for tenant `t` is
+/// `RouterCfg::sla_s × sla_multiplier(t)`. Tenant 0 — the hottest
+/// tenant under the Zipf mix — keeps the configured SLA *exactly*
+/// (×1.0 is bit-exact, which is what keeps the single-tenant default
+/// path identical to the pre-tenant engine); the rest cycle through
+/// looser/stricter tiers. A pure function of the tenant id, so the
+/// engine, metrics, and replay all agree without plumbing a `TenantMix`
+/// around.
+pub fn sla_multiplier(tenant: u16) -> f64 {
+    if tenant == 0 {
+        return 1.0;
+    }
+    const TIERS: [f64; 4] = [1.5, 0.75, 2.0, 1.0];
+    TIERS[(tenant as usize - 1) % TIERS.len()]
+}
+
+/// Heavy-tailed tenant popularity (Zipf over tenant rank, tenant 0
+/// hottest) plus the flash-crowd weighting used by the `flash-crowd`
+/// scenario. Pure function of the workload config — no RNG state — so
+/// `rate_at` stays a `&self` query.
+#[derive(Clone, Debug)]
+pub struct TenantMix {
+    /// Normalized Zipf popularity weights (sum = 1), tenant 0 first.
+    weights: Vec<f64>,
+    /// Sampling weights during the flash window: tenant 0's weight
+    /// multiplied by `flash_factor` (unnormalized — the categorical
+    /// draw normalizes).
+    flash_weights: Vec<f64>,
+}
+
+impl TenantMix {
+    pub fn from_cfg(cfg: &WorkloadCfg) -> Self {
+        let n = cfg.tenants.max(1);
+        let s = cfg.tenant_zipf;
+        let mut weights: Vec<f64> =
+            (0..n).map(|t| 1.0 / ((t + 1) as f64).powf(s)).collect();
+        let total: f64 = weights.iter().sum();
+        for w in &mut weights {
+            *w /= total;
+        }
+        let mut flash_weights = weights.clone();
+        flash_weights[0] *= cfg.flash_factor.max(1.0);
+        TenantMix { weights, flash_weights }
+    }
+
+    pub fn n(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Tenant `t`'s share of the offered load (outside the flash).
+    pub fn share(&self, tenant: usize) -> f64 {
+        self.weights.get(tenant).copied().unwrap_or(0.0)
+    }
 }
 
 /// Arrival generator (iterator-style: `next_event` until exhausted).
@@ -28,6 +86,13 @@ pub struct Workload {
     cfg: WorkloadCfg,
     widths: Vec<f64>,
     rng: Rng,
+    /// Tenant popularity model (always derivable from the config).
+    mix: TenantMix,
+    /// Dedicated RNG stream for tenant / width-preference draws. Split
+    /// off **only when `tenants > 1`** — `Rng::split` consumes a draw
+    /// from the parent, so a single-tenant workload must never touch
+    /// it to keep the pre-tenant arrival stream bit-identical.
+    tenant_rng: Option<Rng>,
     t: f64,
     issued: usize,
     /// Fixed arrival stream (trace replay): when set, events pop from
@@ -37,13 +102,25 @@ pub struct Workload {
 }
 
 impl Workload {
-    pub fn new(cfg: WorkloadCfg, widths: &[f64], rng: Rng) -> Self {
+    pub fn new(cfg: WorkloadCfg, widths: &[f64], mut rng: Rng) -> Self {
         let width_pool = if cfg.width_mix.is_empty() {
             widths.to_vec()
         } else {
             cfg.width_mix.clone()
         };
-        Workload { cfg, widths: width_pool, rng, t: 0.0, issued: 0, trace: None }
+        let mix = TenantMix::from_cfg(&cfg);
+        let tenant_rng =
+            if cfg.tenants > 1 { Some(rng.split(0x7e4a)) } else { None };
+        Workload {
+            cfg,
+            widths: width_pool,
+            rng,
+            mix,
+            tenant_rng,
+            t: 0.0,
+            issued: 0,
+            trace: None,
+        }
     }
 
     /// Switch this workload into trace mode: `next_event` replays
@@ -73,7 +150,19 @@ impl Workload {
                 rate *= self.cfg.burst_factor;
             }
         }
+        if self.in_flash(t) {
+            // tenant 0's share of the offered load spikes by
+            // flash_factor; everyone else keeps arriving at base rate
+            rate *= 1.0 + self.mix.share(0) * (self.cfg.flash_factor - 1.0);
+        }
         rate
+    }
+
+    /// Whether `t` falls inside the flash-crowd window.
+    fn in_flash(&self, t: f64) -> bool {
+        self.cfg.flash_factor > 1.0
+            && t >= self.cfg.flash_start_s
+            && t < self.cfg.flash_end_s
     }
 
     /// Next arrival, or None once `total_requests` have been issued
@@ -89,14 +178,36 @@ impl Workload {
         if self.issued >= self.cfg.total_requests {
             return None;
         }
-        // thinning-free approach: step with the current window's rate
+        // thinning-free approach: step with the current window's rate.
+        // The draw order on the main RNG (exponential, then width
+        // choice) is load-bearing: it is what keeps single-tenant
+        // workloads bit-identical to the pre-tenant generator. All
+        // tenant-related draws go on the dedicated tenant stream.
         let rate = self.rate_at(self.t).max(1e-9);
         self.t += self.rng.exponential(rate);
-        let w_req = *self.rng.choice(&self.widths);
+        let mut w_req = *self.rng.choice(&self.widths);
+        let mut tenant = 0u16;
+        if let Some(tr) = &mut self.tenant_rng {
+            let weights = if self.cfg.flash_factor > 1.0
+                && self.t >= self.cfg.flash_start_s
+                && self.t < self.cfg.flash_end_s
+            {
+                &self.mix.flash_weights
+            } else {
+                &self.mix.weights
+            };
+            tenant = tr.categorical(weights) as u16;
+            // width preference: half of each tenant's traffic asks for
+            // its house width (tenants cycle through the pool)
+            if tr.index(2) == 0 {
+                w_req = self.widths[tenant as usize % self.widths.len()];
+            }
+        }
         let ev = WorkloadEvent {
             at: self.t,
             request_id: self.issued as u64,
             w_req,
+            tenant,
         };
         self.issued += 1;
         Some(ev)
@@ -123,10 +234,8 @@ mod tests {
             burst_factor: 1.0,
             burst_period_s: 0.0,
             burst_duty: 0.0,
-            diurnal_period_s: 0.0,
-            diurnal_depth: 0.0,
             total_requests: 5000,
-            width_mix: vec![],
+            ..WorkloadCfg::default()
         }
     }
 
@@ -236,6 +345,83 @@ mod tests {
             .count() as f64
             / evs.len() as f64;
         assert!(day > 0.6, "day fraction {day}");
+    }
+
+    #[test]
+    fn single_tenant_stream_is_identical_to_the_pre_tenant_generator() {
+        // tenants=1 must not consult the tenant RNG at all: every event
+        // is tenant 0 and the (at, id, w_req) stream matches a config
+        // that never heard of tenants. Pinned here because the
+        // engine-level determinism suite relies on it.
+        let evs = Workload::new(base_cfg(), &[0.25, 0.5], Rng::new(7)).collect_all();
+        assert!(evs.iter().all(|e| e.tenant == 0));
+        let mut multi = base_cfg();
+        multi.tenants = 4;
+        let multi_evs = Workload::new(multi, &[0.25, 0.5], Rng::new(7)).collect_all();
+        assert_eq!(evs.len(), multi_evs.len());
+        assert!(multi_evs.iter().any(|e| e.tenant != 0));
+    }
+
+    #[test]
+    fn zipf_mix_makes_tenant_zero_hottest() {
+        let mut cfg = base_cfg();
+        cfg.tenants = 6;
+        cfg.tenant_zipf = 1.2;
+        cfg.total_requests = 20_000;
+        let mix = TenantMix::from_cfg(&cfg);
+        assert_eq!(mix.n(), 6);
+        assert!(((0..6).map(|t| mix.share(t)).sum::<f64>() - 1.0).abs() < 1e-12);
+        let evs = Workload::new(cfg, &[1.0], Rng::new(11)).collect_all();
+        let mut counts = [0usize; 6];
+        for e in &evs {
+            counts[e.tenant as usize] += 1;
+        }
+        assert!(counts.windows(2).all(|w| w[0] >= w[1] / 2), "{counts:?}");
+        assert!(counts[0] > counts[5], "{counts:?}");
+        // empirical share tracks the Zipf weight
+        let share0 = counts[0] as f64 / evs.len() as f64;
+        assert!((share0 - mix.share(0)).abs() < 0.05, "share0={share0}");
+    }
+
+    #[test]
+    fn flash_window_spikes_tenant_zero() {
+        let mut cfg = base_cfg();
+        cfg.tenants = 6;
+        cfg.flash_factor = 10.0;
+        cfg.flash_start_s = 5.0;
+        cfg.flash_end_s = 15.0;
+        cfg.total_requests = 30_000;
+        let wl = Workload::new(cfg.clone(), &[1.0], Rng::new(13));
+        // the overall rate is boosted by tenant 0's share × 10 inside
+        // the window and untouched outside it
+        assert!(wl.rate_at(10.0) > wl.rate_at(20.0) * 2.0);
+        assert_eq!(wl.rate_at(20.0), 100.0);
+        let evs = wl.collect_all();
+        let in_window: Vec<_> =
+            evs.iter().filter(|e| e.at >= 5.0 && e.at < 15.0).collect();
+        let out_window: Vec<_> =
+            evs.iter().filter(|e| e.at < 5.0 || e.at >= 15.0).collect();
+        let share = |evs: &[&WorkloadEvent]| {
+            evs.iter().filter(|e| e.tenant == 0).count() as f64 / evs.len() as f64
+        };
+        assert!(
+            share(&in_window) > share(&out_window) + 0.2,
+            "in={} out={}",
+            share(&in_window),
+            share(&out_window)
+        );
+    }
+
+    #[test]
+    fn sla_multiplier_keeps_tenant_zero_exact() {
+        assert_eq!(sla_multiplier(0), 1.0);
+        // every tier is positive and tenant-stable
+        for t in 1..64u16 {
+            assert!(sla_multiplier(t) > 0.0);
+            assert_eq!(sla_multiplier(t), sla_multiplier(t));
+        }
+        assert_eq!(sla_multiplier(1), 1.5);
+        assert_eq!(sla_multiplier(5), 1.5); // tiers cycle with period 4
     }
 
     #[test]

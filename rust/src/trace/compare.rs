@@ -47,22 +47,39 @@ struct RouterRun {
     done: BTreeMap<u64, DoneStats>,
     sla_miss_rate: f64,
     plan_clamps: u64,
+    jain_latency: f64,
+    jain_throughput: f64,
+    shed_rate: f64,
+    shed: u64,
 }
 
 /// Replay `trace` through one router spec — an algorithmic name or a
-/// `ppo:<checkpoint>` entrant — and collect per-request completions.
-/// `cfg` supplies everything except the arrival stream (cluster, seed,
-/// windows, shards, SLA). Checkpoints run in frozen greedy-eval mode
+/// `ppo:<checkpoint>` entrant, optionally suffixed `+drr` / `+none` to
+/// force the admission gate on or off for this entrant (so one compare
+/// can pit DRR admission against raw FIFO over the same arrivals) — and
+/// collect per-request completions. `cfg` supplies everything except
+/// the arrival stream (cluster, seed, windows, shards, SLA).
+/// Checkpoints run in frozen greedy-eval mode
 /// ([`PpoRouter::greedy_eval_mode`]), so a replay is a pure function of
 /// (weights, trace, cfg) and two replays are byte-identical.
 fn replay_run(cfg: &Config, trace: &Trace, spec: &str) -> Result<RouterRun, String> {
-    let parsed = RouterSpec::parse(spec).ok_or_else(|| {
+    let mut cfg = cfg.clone();
+    let base_spec = if let Some(s) = spec.strip_suffix("+drr") {
+        cfg.admission.kind = crate::config::AdmissionKind::Drr;
+        s
+    } else if let Some(s) = spec.strip_suffix("+none") {
+        cfg.admission.kind = crate::config::AdmissionKind::None;
+        s
+    } else {
+        spec
+    };
+    let parsed = RouterSpec::parse(base_spec).ok_or_else(|| {
         format!(
-            "unknown router {spec:?} (trace compare supports: {})",
+            "unknown router {spec:?} (trace compare supports: {}, each \
+             optionally suffixed +drr or +none)",
             RouterSpec::spellings()
         )
     })?;
-    let mut cfg = cfg.clone();
     configure_for_replay(&mut cfg, trace);
     let recorder = TraceRecorder::new(&cfg, spec);
     let outcome = match parsed {
@@ -91,6 +108,10 @@ fn replay_run(cfg: &Config, trace: &Trace, spec: &str) -> Result<RouterRun, Stri
         done: recorder.done_map(),
         sla_miss_rate: outcome.sla_miss_rate(),
         plan_clamps: outcome.plan_clamps,
+        jain_latency: outcome.jain_latency(),
+        jain_throughput: outcome.jain_throughput(),
+        shed_rate: outcome.shed_rate(),
+        shed: outcome.shed,
     })
 }
 
@@ -152,6 +173,16 @@ pub fn compare_routers_opts(
             fields.push(("width_mean".to_string(), Json::Num(width.mean())));
             fields.push(("sla_miss_rate".to_string(), Json::Num(r.sla_miss_rate)));
             fields.push(("plan_clamps".to_string(), Json::Num(r.plan_clamps as f64)));
+            // fairness/admission block: always present (1.0 / 0 on
+            // single-tenant, gate-less runs) so downstream greps never
+            // depend on the workload shape
+            fields.push(("jain_latency".to_string(), Json::Num(r.jain_latency)));
+            fields.push((
+                "jain_throughput".to_string(),
+                Json::Num(r.jain_throughput),
+            ));
+            fields.push(("shed_rate".to_string(), Json::Num(r.shed_rate)));
+            fields.push(("shed".to_string(), Json::Num(r.shed as f64)));
             Json::Obj(fields)
         })
         .collect();
@@ -213,6 +244,16 @@ pub fn compare_routers_opts(
         fields.push((
             "sla_miss_rate_delta".to_string(),
             Json::Num(cand.sla_miss_rate - base.sla_miss_rate),
+        ));
+        // positive = the candidate spreads latency more evenly across
+        // tenants than the baseline does
+        fields.push((
+            "jain_latency_delta".to_string(),
+            Json::Num(cand.jain_latency - base.jain_latency),
+        ));
+        fields.push((
+            "shed_rate_delta".to_string(),
+            Json::Num(cand.shed_rate - base.shed_rate),
         ));
         fields.push(("wins".to_string(), Json::Num(lat_stats.wins as f64)));
         fields.push(("losses".to_string(), Json::Num(lat_stats.losses as f64)));
@@ -282,11 +323,13 @@ pub fn record_trace(cfg: &Config, router_name: &str) -> Result<Trace, String> {
     let mut engine = sharded_engine(cfg.clone(), router);
     engine.set_trace_sink(Box::new(recorder.clone()));
     let outcome = engine.run();
-    if outcome.report.completed != cfg.workload.total_requests as u64 {
+    // shed requests are deliberate admission backpressure, not a
+    // starved recording: they count toward the drained total
+    if outcome.report.completed + outcome.shed != cfg.workload.total_requests as u64 {
         return Err(format!(
-            "recording under {router_name:?} completed {} of {} requests \
-             (overload or dropout starved the trace)",
-            outcome.report.completed, cfg.workload.total_requests
+            "recording under {router_name:?} completed {} (+{} shed) of {} \
+             requests (overload or dropout starved the trace)",
+            outcome.report.completed, outcome.shed, cfg.workload.total_requests
         ));
     }
     Trace::parse(&recorder.to_jsonl()).map_err(|e| e.to_string())
@@ -477,6 +520,69 @@ mod tests {
         assert!(compare_routers(&cfg, &trace, &unknown)
             .unwrap_err()
             .contains("unknown router"));
+    }
+
+    #[test]
+    fn admission_suffix_pits_drr_against_fifo_over_one_flash_crowd() {
+        // the PR's headline study in miniature: record the flash-crowd
+        // scenario once (arrivals land in the trace *before* the gate, so
+        // the stream is admission-complete), then replay the same router
+        // with the gate forced off and on. The +drr entrant must shed
+        // under the spike while +none absorbs everything, and the pair
+        // must carry the fairness delta columns.
+        let mut cfg = Config::default();
+        crate::sim::scenarios::apply_named("flash-crowd", &mut cfg).unwrap();
+        cfg.workload.total_requests = 400;
+        cfg.seed = 42;
+        let trace = record_small_trace(&cfg);
+        assert_eq!(trace.arrivals().len(), 400, "shed arrivals stay in the trace");
+
+        let names: Vec<String> =
+            ["edf+none", "edf+drr"].iter().map(|s| s.to_string()).collect();
+        let a = compare_routers_opts(&cfg, &trace, &names, false).unwrap();
+        let b = compare_routers_opts(&cfg, &trace, &names, false).unwrap();
+        assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+
+        let routers = a.get("routers").and_then(Json::as_arr).unwrap();
+        for r in routers {
+            for key in ["jain_latency", "jain_throughput", "shed_rate", "shed"] {
+                let v = r.get(key).and_then(Json::as_f64).unwrap();
+                assert!(v.is_finite(), "{key} = {v}");
+            }
+            let jain = r.get("jain_latency").and_then(Json::as_f64).unwrap();
+            assert!(jain > 0.0 && jain <= 1.0, "jain_latency = {jain}");
+        }
+        let fifo = &routers[0];
+        let drr = &routers[1];
+        assert_eq!(fifo.get("name").and_then(Json::as_str), Some("edf+none"));
+        assert_eq!(fifo.get("shed_rate").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(fifo.get("completed").and_then(Json::as_usize), Some(400));
+        let drr_shed = drr.get("shed_rate").and_then(Json::as_f64).unwrap();
+        assert!(drr_shed > 0.0, "DRR must shed under the 10x spike");
+
+        // pairs only cover requests both runs completed, and carry the
+        // fairness deltas
+        let pair = &a.get("pairs").and_then(Json::as_arr).unwrap()[0];
+        let n = pair.get("n_pairs").and_then(Json::as_usize).unwrap();
+        assert!(n > 0 && n < 400, "n_pairs = {n}");
+        assert!(pair
+            .get("jain_latency_delta")
+            .and_then(Json::as_f64)
+            .unwrap()
+            .is_finite());
+        assert!(pair
+            .get("shed_rate_delta")
+            .and_then(Json::as_f64)
+            .is_some_and(|d| d > 0.0));
+        let p = pair.get("sign_test_p").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&p), "p = {p}");
+
+        // an unknown base router keeps its suffix in the error message
+        let bad: Vec<String> =
+            ["edf", "marsbase+drr"].iter().map(|s| s.to_string()).collect();
+        assert!(compare_routers_opts(&cfg, &trace, &bad, false)
+            .unwrap_err()
+            .contains("marsbase+drr"));
     }
 
     #[test]

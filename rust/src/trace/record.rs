@@ -21,13 +21,19 @@ use crate::config::Config;
 use crate::utilx::json::{arr_f64, obj, Json};
 
 /// Trace format version — bump on any schema change.
-pub const TRACE_VERSION: u64 = 1;
+///
+/// v2 appends a `tenant` field to `arrival` and `done` records (v1
+/// traces parse with tenant defaulting to 0 — see [`TraceEvent::
+/// from_json`] and the replay-side version gate).
+pub const TRACE_VERSION: u64 = 2;
 
 /// One per-request lifecycle (or run-level telemetry) record.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TraceEvent {
-    /// A request reached the leader tier.
-    Arrival { t: f64, id: u64, w_req: f64 },
+    /// A request reached the leader tier (before any admission gate —
+    /// shed requests still record their arrival, which is what lets an
+    /// overloaded `--admission drr` trace replay byte-identically).
+    Arrival { t: f64, id: u64, w_req: f64, tenant: u16 },
     /// A request landed on a leader shard — via the assignment policy
     /// (arrival, segment re-entry, device-dropout readmission) or via a
     /// cross-shard *rebalance* migration, which re-emits the record
@@ -62,6 +68,7 @@ pub enum TraceEvent {
         energy_j: f64,
         slack_s: f64,
         widths: Vec<f64>,
+        tenant: u16,
     },
     /// Run-level telemetry tick: leader FIFO depth, completions, and
     /// per-server utilization / power samples.
@@ -69,14 +76,16 @@ pub enum TraceEvent {
 }
 
 impl TraceEvent {
-    /// Serialize with the fixed v1 field order.
+    /// Serialize with the fixed field order (v2: `tenant` appended last
+    /// on `arrival`/`done` so v1 field prefixes are unchanged).
     pub fn to_json(&self) -> Json {
         match self {
-            TraceEvent::Arrival { t, id, w_req } => obj(vec![
+            TraceEvent::Arrival { t, id, w_req, tenant } => obj(vec![
                 ("ev", Json::Str("arrival".into())),
                 ("t", Json::Num(*t)),
                 ("id", Json::Num(*id as f64)),
                 ("w_req", Json::Num(*w_req)),
+                ("tenant", Json::Num(*tenant as f64)),
             ]),
             TraceEvent::Assign { t, id, seg, shard } => obj(vec![
                 ("ev", Json::Str("assign".into())),
@@ -109,7 +118,7 @@ impl TraceEvent {
                 ("clamped", Json::Num(*clamped as f64)),
                 ("arrive_t", Json::Num(*arrive_t)),
             ]),
-            TraceEvent::Done { t, id, e2e_s, energy_j, slack_s, widths } => {
+            TraceEvent::Done { t, id, e2e_s, energy_j, slack_s, widths, tenant } => {
                 obj(vec![
                     ("ev", Json::Str("done".into())),
                     ("t", Json::Num(*t)),
@@ -118,6 +127,7 @@ impl TraceEvent {
                     ("energy_j", Json::Num(*energy_j)),
                     ("slack_s", Json::Num(*slack_s)),
                     ("widths", arr_f64(widths)),
+                    ("tenant", Json::Num(*tenant as f64)),
                 ])
             }
             TraceEvent::Tick { t, fifo, done, util, power } => obj(vec![
@@ -147,11 +157,16 @@ impl TraceEvent {
                 .and_then(Json::as_f64_vec)
                 .ok_or_else(|| format!("{kind} record missing array {key:?}"))
         };
+        // v1 records carry no tenant field — default to tenant 0 so old
+        // traces keep parsing (the replay version gate relies on this)
+        let tenant =
+            || json.get("tenant").and_then(Json::as_f64).unwrap_or(0.0) as u16;
         match kind {
             "arrival" => Ok(TraceEvent::Arrival {
                 t: num("t")?,
                 id: num("id")? as u64,
                 w_req: num("w_req")?,
+                tenant: tenant(),
             }),
             "assign" => Ok(TraceEvent::Assign {
                 t: num("t")?,
@@ -178,6 +193,7 @@ impl TraceEvent {
                 energy_j: num("energy_j")?,
                 slack_s: num("slack_s")?,
                 widths: vec("widths")?,
+                tenant: tenant(),
             }),
             "tick" => Ok(TraceEvent::Tick {
                 t: num("t")?,
@@ -197,7 +213,7 @@ pub trait TraceSink: Send {
     fn record(&mut self, ev: &TraceEvent);
 }
 
-/// Build the v1 header line for a run of `cfg` under `router`.
+/// Build the header line for a run of `cfg` under `router`.
 pub fn header_json(cfg: &Config, router: &str) -> Json {
     obj(vec![
         ("trace", Json::Str("slim-scheduler".into())),
@@ -228,6 +244,8 @@ pub struct DoneStats {
     pub slack_s: f64,
     /// Mean executed width over the request's segments.
     pub mean_width: f64,
+    /// Owning tenant (0 for v1 traces and single-tenant runs).
+    pub tenant: u16,
 }
 
 /// Per-request completion stats from a record stream, keyed by request
@@ -237,7 +255,7 @@ pub fn done_stats(events: &[TraceEvent]) -> std::collections::BTreeMap<u64, Done
     events
         .iter()
         .filter_map(|ev| match ev {
-            TraceEvent::Done { id, e2e_s, energy_j, slack_s, widths, .. } => {
+            TraceEvent::Done { id, e2e_s, energy_j, slack_s, widths, tenant, .. } => {
                 let mean_width = if widths.is_empty() {
                     0.0
                 } else {
@@ -250,6 +268,7 @@ pub fn done_stats(events: &[TraceEvent]) -> std::collections::BTreeMap<u64, Done
                         energy_j: *energy_j,
                         slack_s: *slack_s,
                         mean_width,
+                        tenant: *tenant,
                     },
                 ))
             }
@@ -333,7 +352,7 @@ pub struct StreamingTraceWriter {
 }
 
 impl StreamingTraceWriter {
-    /// Create `path` and write the v1 header line for a run of `cfg`
+    /// Create `path` and write the header line for a run of `cfg`
     /// under `router`.
     pub fn create(path: &str, cfg: &Config, router: &str) -> std::io::Result<Self> {
         use std::io::Write;
@@ -381,7 +400,7 @@ mod tests {
 
     fn samples() -> Vec<TraceEvent> {
         vec![
-            TraceEvent::Arrival { t: 0.125, id: 3, w_req: 0.5 },
+            TraceEvent::Arrival { t: 0.125, id: 3, w_req: 0.5, tenant: 2 },
             TraceEvent::Assign { t: 0.125, id: 3, seg: 0, shard: 1 },
             TraceEvent::Route {
                 t: 0.25,
@@ -402,6 +421,7 @@ mod tests {
                 energy_j: 210.25,
                 slack_s: -0.375,
                 widths: vec![0.5, 0.75, 0.25, 1.0],
+                tenant: 2,
             },
             TraceEvent::Tick {
                 t: 0.05,
@@ -427,7 +447,7 @@ mod tests {
         // shortest-round-trip formatting: exact f64 recovery, which is
         // what makes record → replay byte equality possible at all
         let t = 0.1 + 0.2; // classic non-representable sum
-        let ev = TraceEvent::Arrival { t, id: 0, w_req: 1.0 / 3.0 };
+        let ev = TraceEvent::Arrival { t, id: 0, w_req: 1.0 / 3.0, tenant: 0 };
         let line = ev.to_json().to_string_compact();
         match TraceEvent::from_json(&Json::parse(&line).unwrap()).unwrap() {
             TraceEvent::Arrival { t: t2, w_req, .. } => {
@@ -464,7 +484,7 @@ mod tests {
         assert_eq!(jsonl.lines().count(), 6); // header + 5 records
         let header = Json::parse(jsonl.lines().next().unwrap()).unwrap();
         assert_eq!(header.get("trace").and_then(Json::as_str), Some("slim-scheduler"));
-        assert_eq!(header.get("version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(header.get("version").and_then(Json::as_f64), Some(2.0));
         assert_eq!(header.get("router").and_then(Json::as_str), Some("random"));
         assert!(header.get("config").is_some());
     }
@@ -483,6 +503,28 @@ mod tests {
         assert_eq!(d.energy_j, 210.25);
         assert_eq!(d.slack_s, -0.375);
         assert!((d.mean_width - 0.625).abs() < 1e-12);
+        assert_eq!(d.tenant, 2);
+    }
+
+    #[test]
+    fn v1_records_without_tenant_parse_as_tenant_zero() {
+        let arrival =
+            Json::parse(r#"{"ev":"arrival","t":0.5,"id":9,"w_req":0.75}"#).unwrap();
+        match TraceEvent::from_json(&arrival).unwrap() {
+            TraceEvent::Arrival { tenant, id, .. } => {
+                assert_eq!(tenant, 0);
+                assert_eq!(id, 9);
+            }
+            other => panic!("parsed {other:?}"),
+        }
+        let done = Json::parse(
+            r#"{"ev":"done","t":1.0,"id":9,"e2e_s":0.5,"energy_j":10.0,"slack_s":0.1,"widths":[1.0,1.0,1.0,1.0]}"#,
+        )
+        .unwrap();
+        match TraceEvent::from_json(&done).unwrap() {
+            TraceEvent::Done { tenant, .. } => assert_eq!(tenant, 0),
+            other => panic!("parsed {other:?}"),
+        }
     }
 
     #[test]

@@ -12,7 +12,8 @@
 //! Externally imported traces only need the header line plus `arrival`
 //! records — `{"ev":"arrival","t":<s>,"id":<n>,"w_req":<width>}` — in
 //! non-decreasing time order; `assign`/`route`/`done`/`tick` records are
-//! optional recording detail.
+//! optional recording detail. The optional `tenant` field (v2) defaults
+//! to 0, so v1 and external tenant-less traces import unchanged.
 
 use crate::config::Config;
 use crate::sim::WorkloadEvent;
@@ -75,10 +76,12 @@ fn parse_header(header_line: &str) -> Result<TraceHeader, TraceError> {
         .get("version")
         .and_then(Json::as_f64)
         .ok_or_else(|| err(1, "header missing version"))? as u64;
-    if version != TRACE_VERSION {
+    // older versions stay loadable for arrival-only replay: v1 records
+    // simply predate the tenant field, which parses as tenant 0
+    if !(1..=TRACE_VERSION).contains(&version) {
         return Err(err(
             1,
-            format!("unsupported trace version {version} (supported: {TRACE_VERSION})"),
+            format!("unsupported trace version {version} (supported: 1..={TRACE_VERSION})"),
         ));
     }
     let router = header.get("router").and_then(Json::as_str).map(str::to_string);
@@ -109,10 +112,11 @@ impl Trace {
         let arrivals = events
             .iter()
             .filter_map(|ev| match ev {
-                TraceEvent::Arrival { t, id, w_req } => Some(WorkloadEvent {
+                TraceEvent::Arrival { t, id, w_req, tenant } => Some(WorkloadEvent {
                     at: *t,
                     request_id: *id,
                     w_req: *w_req,
+                    tenant: *tenant,
                 }),
                 _ => None,
             })
@@ -160,11 +164,14 @@ impl Trace {
             let json = Json::parse(&line)
                 .map_err(|e| err(i + 1, format!("invalid JSON: {e}")))?;
             match TraceEvent::from_json(&json).map_err(|m| err(i + 1, m))? {
-                TraceEvent::Arrival { t, id, w_req } => arrivals.push(WorkloadEvent {
-                    at: t,
-                    request_id: id,
-                    w_req,
-                }),
+                TraceEvent::Arrival { t, id, w_req, tenant } => {
+                    arrivals.push(WorkloadEvent {
+                        at: t,
+                        request_id: id,
+                        w_req,
+                        tenant,
+                    })
+                }
                 _ => {} // recording detail: validated, not retained
             }
         }
@@ -273,7 +280,10 @@ mod tests {
         assert_eq!(trace.requests, Some(2));
         let arr = trace.arrivals();
         assert_eq!(arr.len(), 2);
-        assert_eq!(arr[0], WorkloadEvent { at: 0.25, request_id: 0, w_req: 0.5 });
+        assert_eq!(
+            arr[0],
+            WorkloadEvent { at: 0.25, request_id: 0, w_req: 0.5, tenant: 0 }
+        );
         assert_eq!(trace.done_map().len(), 1);
         let cfg = trace.config().expect("recorded traces embed the config");
         assert_eq!(cfg.workload.total_requests, 2);
@@ -395,5 +405,35 @@ mod tests {
         assert!(trace.config().is_none());
         assert!(trace.router.is_none());
         assert_eq!(trace.arrivals().len(), 2);
+    }
+
+    #[test]
+    fn v1_traces_still_load_with_tenant_defaulting_to_zero() {
+        // a pre-tenant (version 1) fixture, tenant-less records included:
+        // arrival-only import must keep working, every arrival tenant 0
+        let doc = [
+            r#"{"trace":"slim-scheduler","version":1,"router":"edf","requests":2}"#,
+            r#"{"ev":"arrival","t":0.1,"id":0,"w_req":0.25}"#,
+            r#"{"ev":"arrival","t":0.3,"id":1,"w_req":0.75}"#,
+            r#"{"ev":"done","t":0.9,"id":0,"e2e_s":0.8,"energy_j":5,"slack_s":0.2,"widths":[0.25,0.25,0.25,0.25]}"#,
+        ]
+        .join("\n");
+        let trace = Trace::parse(&doc).unwrap();
+        assert_eq!(trace.version, 1);
+        assert_eq!(trace.arrivals().len(), 2);
+        assert!(trace.arrivals().iter().all(|ev| ev.tenant == 0));
+        assert_eq!(trace.done_map()[&0].tenant, 0);
+
+        // and through the streaming loader too
+        let path = std::env::temp_dir().join(format!(
+            "slim_sched_v1_fixture_{}.jsonl",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, doc + "\n").unwrap();
+        let streamed = Trace::load_streaming(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(streamed.version, 1);
+        assert!(streamed.arrivals().iter().all(|ev| ev.tenant == 0));
     }
 }

@@ -328,6 +328,36 @@ mod tests {
     }
 
     #[test]
+    fn hodges_lehmann_exact_path_holds_right_up_to_the_pair_cap() {
+        // n = 999 → 999·1000/2 = 499 500 Walsh pairs, the largest sample
+        // the exact path still covers. For the symmetric arithmetic set
+        // {0, 1, …, 998} the Walsh-average multiset is symmetric around
+        // 499, every average is an exactly representable half-integer,
+        // and the even-count median lands on the center with no error —
+        // and no seed sensitivity, because no sampling happened.
+        let deltas: Vec<f64> = (0..999).map(|i| i as f64).collect();
+        assert_eq!(hodges_lehmann(&deltas, 1), 499.0);
+        assert_eq!(hodges_lehmann(&deltas, 2), 499.0, "exact path ignores seed");
+    }
+
+    #[test]
+    fn hodges_lehmann_first_sample_past_the_cap_stays_deterministic() {
+        // n = 1000 → 500 500 pairs, one step over the cap: the estimator
+        // switches to the seeded subsample. Same seed ⇒ bit-identical;
+        // the estimate stays near the symmetric center 499.5 even though
+        // it is no longer exact.
+        let deltas: Vec<f64> = (0..1000).map(|i| i as f64).collect();
+        let a = hodges_lehmann(&deltas, 9);
+        let b = hodges_lehmann(&deltas, 9);
+        assert_eq!(a, b, "same seed must reproduce the estimate exactly");
+        assert!((a - 499.5).abs() < 5.0, "{a}");
+        // the sampled path *does* consult the seed (the estimator now
+        // medians a 500 000-draw subsample instead of the full pair set)
+        let c = hodges_lehmann(&deltas, 10);
+        assert!((c - 499.5).abs() < 5.0, "{c}");
+    }
+
+    #[test]
     fn paired_stats_decomposes_and_scores() {
         // 6 wins, 2 losses, 2 ties
         let deltas = [-1.0, -0.5, -0.25, -2.0, -0.1, -0.2, 0.5, 1.0, 0.0, 0.0];

@@ -1,0 +1,133 @@
+//! Admission-gate equivalence and round-trip guarantees.
+//!
+//! The DRR gate is strictly additive: `--admission none` (the default)
+//! must leave the engine's event stream and RNG consumption untouched —
+//! the multi-tenant config fields exist, but with a single tenant no
+//! tenant RNG stream is ever split and no gate event is ever scheduled.
+//! With the gate on, a run is still a pure function of its seed, and a
+//! recorded DRR run must replay to the same bytes: arrivals are traced
+//! *before* admission, so shed requests shed identically on replay.
+
+use slim_scheduler::config::{AdmissionKind, Config};
+use slim_scheduler::coordinator::router::{AlgoRouter, RandomRouter};
+use slim_scheduler::coordinator::{sharded_engine, RunOutcome};
+use slim_scheduler::sim::scenarios;
+use slim_scheduler::trace::{configure_for_replay, Trace, TraceRecorder};
+
+fn base_cfg(seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.workload.total_requests = 400;
+    cfg.workload.rate_hz = 250.0;
+    cfg.seed = seed;
+    cfg
+}
+
+fn run(cfg: &Config) -> RunOutcome {
+    let router = RandomRouter::new(cfg.scheduler.widths.clone(), true, 8);
+    sharded_engine(cfg.clone(), router).run()
+}
+
+/// Bit-level outcome equality on every reported metric.
+fn assert_identical(a: &RunOutcome, b: &RunOutcome, ctx: &str) {
+    assert_eq!(a.report.completed, b.report.completed, "{ctx}");
+    assert_eq!(a.shed, b.shed, "{ctx}");
+    assert_eq!(a.width_histogram, b.width_histogram, "{ctx}");
+    assert_eq!(
+        a.report.latency.mean().to_bits(),
+        b.report.latency.mean().to_bits(),
+        "{ctx}"
+    );
+    assert_eq!(
+        a.e2e_latency.mean().to_bits(),
+        b.e2e_latency.mean().to_bits(),
+        "{ctx}"
+    );
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits(), "{ctx}");
+    assert_eq!(a.sim_duration_s.to_bits(), b.sim_duration_s.to_bits(), "{ctx}");
+}
+
+#[test]
+fn admission_none_single_tenant_is_bit_identical_to_the_default_engine() {
+    // spelling out the defaults (and touching tenant knobs that are
+    // inert at tenants = 1) must not perturb a single draw, across the
+    // leader-shard and parallel-planner matrix
+    for leaders in [1usize, 3] {
+        for plan_threads in [1usize, 2] {
+            let mut plain = base_cfg(42);
+            plain.shard.leaders = leaders;
+            plain.shard.leader_service_s = 2e-4;
+            plain.shard.plan_threads = plan_threads;
+            let mut spelled = plain.clone();
+            spelled.admission.kind = AdmissionKind::None;
+            spelled.workload.tenants = 1;
+            spelled.workload.tenant_zipf = 3.0; // meaningless without tenants
+            let a = run(&plain);
+            let b = run(&spelled);
+            assert_eq!(a.report.completed, 400);
+            assert_identical(
+                &a,
+                &b,
+                &format!("leaders={leaders} plan_threads={plan_threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_tenant_without_a_gate_completes_everything() {
+    let mut cfg = base_cfg(11);
+    cfg.workload.tenants = 6;
+    cfg.workload.tenant_zipf = 1.2;
+    let out = run(&cfg);
+    assert_eq!(out.report.completed, 400);
+    assert_eq!(out.shed, 0);
+    let arrived: u64 = out.tenant_stats.iter().map(|s| s.arrivals).sum();
+    assert_eq!(arrived, 400);
+    // Zipf popularity actually spreads traffic: several tenants see work
+    let active = out.tenant_stats.iter().filter(|s| s.arrivals > 0).count();
+    assert!(active >= 3, "only {active} tenants drew traffic");
+    // the run is still a pure function of the seed
+    assert_identical(&out, &run(&cfg), "tenants=6 admission=none");
+}
+
+#[test]
+fn drr_record_replay_rerecord_is_byte_identical() {
+    // the gate sheds mid-run, yet the trace must be a fixed point of
+    // replaying itself: arrivals are recorded pre-admission, the gate
+    // draws no RNG, and admission ticks fire at identical virtual times
+    let mut cfg = Config::default();
+    scenarios::apply_named("flash-crowd", &mut cfg).expect("registered scenario");
+    cfg.workload.total_requests = 300;
+    cfg.seed = 29;
+    assert_eq!(cfg.admission.kind, AdmissionKind::Drr);
+
+    let record = |cfg: &Config, arrivals: Option<&Trace>| -> (String, RunOutcome) {
+        let router = AlgoRouter::by_name("edf", &cfg.scheduler.widths).unwrap();
+        let recorder = TraceRecorder::new(cfg, "edf");
+        let mut engine = sharded_engine(cfg.clone(), router);
+        if let Some(trace) = arrivals {
+            engine.set_arrivals(trace.arrivals().to_vec());
+        }
+        engine.set_trace_sink(Box::new(recorder.clone()));
+        let out = engine.run();
+        (recorder.to_jsonl(), out)
+    };
+
+    let (original, out) = record(&cfg, None);
+    assert_eq!(out.report.completed + out.shed, 300);
+    assert!(out.shed > 0, "the flash window must overflow the queue cap");
+
+    let trace = Trace::parse(&original).expect("recorded trace parses");
+    // every arrival is in the trace, shed ones included
+    assert_eq!(trace.arrivals().len(), 300);
+
+    let mut replay_cfg = cfg.clone();
+    configure_for_replay(&mut replay_cfg, &trace);
+    let (rerecorded, replay_out) = record(&replay_cfg, Some(&trace));
+    assert_eq!(original, rerecorded, "DRR round trip diverged");
+    assert_eq!(replay_out.shed, out.shed);
+    assert_eq!(
+        replay_out.jain_latency().to_bits(),
+        out.jain_latency().to_bits()
+    );
+}

@@ -79,7 +79,10 @@ fn every_scenario_baseline_is_deterministic() {
         };
         let a = run();
         let b = run();
-        assert_eq!(a.report.completed, 300, "{}", s.name);
+        // flash-crowd runs a DRR gate with a tight queue cap: shed
+        // requests are deliberate backpressure, not lost work
+        assert_eq!(a.report.completed + a.shed, 300, "{}", s.name);
+        assert_eq!(a.shed, b.shed, "{}", s.name);
         assert_identical(&a, &b);
     }
 }
