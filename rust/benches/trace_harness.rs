@@ -9,7 +9,9 @@
 use slim_scheduler::benchx::Bench;
 use slim_scheduler::config::RewardCfg;
 use slim_scheduler::experiments;
-use slim_scheduler::trace::{compare_routers, record_trace};
+use slim_scheduler::trace::{
+    compare_routers, compare_routers_opts, record_trace, CompareOpts,
+};
 use slim_scheduler::utilx::Json;
 
 fn main() {
@@ -64,6 +66,71 @@ fn main() {
             );
             bench.metric(&format!("{label}_sign_test_p"), f("sign_test_p"));
         }
+    }
+
+    // ---- evaluation fan-out: threaded entrant replays ----------------
+    // the same 5-entrant field replayed sequentially and at 4 eval
+    // threads produces byte-identical reports, so the wall-clock ratio
+    // is pure fan-out speedup
+    let field5: Vec<String> = vec![
+        "random".to_string(),
+        "round-robin".to_string(),
+        "least-loaded".to_string(),
+        "edf".to_string(),
+        format!("ppo:{ckpt_path}"),
+    ];
+    let lean = CompareOpts { per_request: false, ..CompareOpts::default() };
+    bench.once("trace_harness/compare_5way_threads1", || {
+        compare_routers_opts(&cfg, &trace, &field5, lean)
+            .expect("sequential 5-way comparison succeeds");
+    });
+    bench.once("trace_harness/compare_5way_threads4", || {
+        compare_routers_opts(
+            &cfg,
+            &trace,
+            &field5,
+            CompareOpts { eval_threads: 4, ..lean },
+        )
+        .expect("threaded 5-way comparison succeeds");
+    });
+    if let (Some(t1), Some(t4)) = (
+        bench.mean_ns_of("trace_harness/compare_5way_threads1"),
+        bench.mean_ns_of("trace_harness/compare_5way_threads4"),
+    ) {
+        bench.metric("eval_fanout_speedup_x", t1 / t4);
+    }
+
+    // ---- scenario-parallel trace-study -------------------------------
+    let study_requests = if quick { 120 } else { 400 };
+    let study_field: Vec<String> =
+        vec!["random".to_string(), "edf".to_string()];
+    bench.once("trace_harness/study_threads1", || {
+        experiments::trace_study(
+            &ckpt_path,
+            &study_field,
+            study_requests,
+            42,
+            1,
+            false,
+        )
+        .expect("sequential study succeeds");
+    });
+    bench.once("trace_harness/study_threads4", || {
+        experiments::trace_study(
+            &ckpt_path,
+            &study_field,
+            study_requests,
+            42,
+            4,
+            false,
+        )
+        .expect("threaded study succeeds");
+    });
+    if let (Some(t1), Some(t4)) = (
+        bench.mean_ns_of("trace_harness/study_threads1"),
+        bench.mean_ns_of("trace_harness/study_threads4"),
+    ) {
+        bench.metric("study_fanout_speedup_x", t1 / t4);
     }
 
     bench.emit_json("trace_harness");

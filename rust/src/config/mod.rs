@@ -256,6 +256,25 @@ impl Default for ShardCfg {
     }
 }
 
+/// Evaluation-harness fan-out (`trace::compare`, `repro trace-study`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalCfg {
+    /// OS threads for the evaluation harness (`--eval-threads`):
+    /// entrant replays in `trace-compare`, scenario cells in
+    /// `trace-study`. `1` (the default) is the sequential loop; higher
+    /// values fan the independent replays across scoped threads and
+    /// reassemble results in entrant / registry order, so reports are
+    /// byte-identical at any thread count (the `trace::compare` tests
+    /// pin this).
+    pub threads: usize,
+}
+
+impl Default for EvalCfg {
+    fn default() -> Self {
+        EvalCfg { threads: 1 }
+    }
+}
+
 /// Reward weights (eq. 7): r = α·p_acc − β·L − γ·E − δ·Var(U) + b.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RewardCfg {
@@ -472,6 +491,7 @@ pub struct Config {
     pub devices: Vec<String>,
     pub router: RouterCfg,
     pub shard: ShardCfg,
+    pub eval: EvalCfg,
     pub admission: AdmissionCfg,
     pub scheduler: SchedulerCfg,
     pub ppo: PpoCfg,
@@ -497,6 +517,7 @@ impl Default for Config {
             ],
             router: RouterCfg::default(),
             shard: ShardCfg::default(),
+            eval: EvalCfg::default(),
             admission: AdmissionCfg::default(),
             scheduler: SchedulerCfg::default(),
             ppo: PpoCfg::default(),
@@ -555,6 +576,8 @@ impl Config {
             args.f64_or("leader-service", self.shard.leader_service_s);
         self.shard.plan_threads =
             args.usize_or("plan-threads", self.shard.plan_threads).max(1);
+        self.eval.threads =
+            args.usize_or("eval-threads", self.eval.threads).max(1);
         if let Some(kind) = args.get("shard-assign") {
             self.shard.assign = ShardAssignKind::parse(kind).unwrap_or_else(|| {
                 panic!("--shard-assign expects hash|round-robin|key-affine, got {kind:?}")
@@ -642,6 +665,13 @@ impl Config {
                     ("leader_service_s", Json::Num(self.shard.leader_service_s)),
                     ("plan_threads", Json::Num(self.shard.plan_threads as f64)),
                 ]),
+            ),
+            (
+                "eval",
+                obj(vec![(
+                    "threads",
+                    Json::Num(self.eval.threads as f64),
+                )]),
             ),
             (
                 "admission",
@@ -787,6 +817,11 @@ impl Config {
             }
             if let Some(x) = sh.get("plan_threads").and_then(Json::as_usize) {
                 cfg.shard.plan_threads = x.max(1);
+            }
+        }
+        if let Some(ev) = json.get("eval") {
+            if let Some(x) = ev.get("threads").and_then(Json::as_usize) {
+                cfg.eval.threads = x.max(1);
             }
         }
         if let Some(a) = json.get("admission") {
@@ -1134,6 +1169,29 @@ mod tests {
         cfg.apply_args(&args);
         assert_eq!(cfg.shard.leaders, 1);
         assert_eq!(cfg.shard.plan_threads, 1);
+    }
+
+    #[test]
+    fn eval_threads_default_parse_and_roundtrip() {
+        let cfg = Config::default();
+        assert_eq!(cfg.eval.threads, 1); // sequential evaluation harness
+
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["trace-compare", "--eval-threads", "4"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.eval.threads, 4);
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.eval, cfg.eval);
+
+        // a pathological 0 floors at 1, via flags and via JSON alike
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["trace-compare", "--eval-threads", "0"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.eval.threads, 1);
     }
 
     #[test]

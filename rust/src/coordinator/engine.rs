@@ -36,6 +36,8 @@
 //! in tens of milliseconds, so PPO training over hundreds of thousands of
 //! scheduling steps is practical on one CPU.
 
+use std::sync::Arc;
+
 use crate::config::{AdmissionKind, Config};
 use crate::metrics::{RunReport, Summary};
 use crate::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS};
@@ -231,8 +233,10 @@ pub struct Engine<R: Router, D: DeviceModel = SimDevice, S: LocalScheduler = Gre
     /// Servers knocked out by a `DeviceDown` event.
     down: Vec<bool>,
     /// Fixed arrival stream (trace replay) — replaces the generated
-    /// workload when set via [`Engine::set_arrivals`].
-    arrivals: Option<Vec<WorkloadEvent>>,
+    /// workload when set via [`Engine::set_arrivals`]. Held as a
+    /// shared immutable arena so N engines replaying one trace alias a
+    /// single arrival allocation.
+    arrivals: Option<Arc<[WorkloadEvent]>>,
     /// Trace sink: when installed, the engine's lifecycle hooks deliver
     /// per-request records and telemetry ticks here (`crate::trace`).
     sink: Option<Box<dyn TraceSink>>,
@@ -381,8 +385,12 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
     /// The run budget (drain condition, done-fraction telemetry) is
     /// reconciled to the event count, so a caller that skips
     /// `trace::configure_for_replay` cannot silently run a short trace
-    /// into the safety cap.
-    pub fn set_arrivals(&mut self, events: Vec<WorkloadEvent>) {
+    /// into the safety cap. Accepts a `Vec` (owned events) or an
+    /// `Arc<[WorkloadEvent]>` arena handle (`Trace::arrivals_arena`) —
+    /// the latter shares the parsed arrival set zero-copy across any
+    /// number of replaying engines.
+    pub fn set_arrivals(&mut self, events: impl Into<Arc<[WorkloadEvent]>>) {
+        let events = events.into();
         self.metrics.total = events.len();
         self.arrivals = Some(events);
     }

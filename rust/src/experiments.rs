@@ -198,7 +198,7 @@ pub fn run_table5(cfg: &Config, train_episodes: usize) -> (RunOutcome, PpoRouter
 // Scenario-conditioned trace study (`repro trace-study`)
 // ---------------------------------------------------------------------
 
-use crate::trace::{compare_routers_opts, record_trace};
+use crate::trace::{compare_routers_opts, record_trace, CompareOpts};
 use crate::utilx::json::{obj, Json};
 
 /// The scenario-conditioned paired study from the ROADMAP: for every
@@ -214,12 +214,19 @@ use crate::utilx::json::{obj, Json};
 ///
 /// Deterministic end to end: every scenario records and replays under
 /// `seed`, and the significance block's bootstrap streams are seeded
-/// from it too. Returns the `BENCH_trace_study.json` document.
+/// from it too — so the matrix is byte-identical at any `eval_threads`
+/// (the scenario fan-out reassembles entries in registry order) unless
+/// `timing` adds the per-entrant `replay_wall_s` wall-clock fields.
+/// Per-scenario failures (a starved recording, a failed compare) land
+/// in that scenario's entry (`record_error` / `compare_error`) instead
+/// of sinking the study. Returns the `BENCH_trace_study.json` document.
 pub fn trace_study(
     checkpoint: &str,
     field: &[String],
     requests: usize,
     seed: u64,
+    eval_threads: usize,
+    timing: bool,
 ) -> Result<Json, String> {
     if field.is_empty() {
         return Err("trace-study needs at least one algorithmic router".into());
@@ -232,8 +239,12 @@ pub fn trace_study(
         .map_err(|e| format!("cannot read checkpoint {checkpoint}: {e}"))?;
     let ckpt_json = Json::parse(&ckpt_text)
         .map_err(|e| format!("checkpoint {checkpoint} is not valid JSON: {e}"))?;
-    let mut entries = Vec::new();
-    for scenario in crate::sim::scenarios::all() {
+
+    // one scenario's study cell: record under the baseline, probe the
+    // checkpoint shape, compare the field. Infallible by design — every
+    // failure mode lands inside the entry, which is also what lets the
+    // scenario fan-out below run cells independently.
+    let scenario_entry = |scenario: &crate::sim::scenarios::Scenario| -> Json {
         let mut cfg = scenario.config();
         cfg.workload.total_requests = requests;
         cfg.seed = seed;
@@ -248,8 +259,7 @@ pub fn trace_study(
                 // a scenario whose recording starves (overload past the
                 // safety cap) reports itself instead of sinking the study
                 fields.push(("record_error".to_string(), Json::Str(e)));
-                entries.push(Json::Obj(fields));
-                continue;
+                return Json::Obj(fields);
             }
         };
 
@@ -274,13 +284,62 @@ pub fn trace_study(
         }
         fields.push(("ppo_compatible".to_string(), Json::Bool(ppo_compatible)));
         if names.len() >= 2 {
-            let report = compare_routers_opts(&cfg, &trace, &names, false)?;
-            fields.push(("report".to_string(), report));
+            // the study parallelizes across scenarios, so each cell's
+            // compare replays its entrants sequentially (no nested
+            // fan-out oversubscribing the pool). A failed compare is a
+            // per-scenario fact, exactly like a failed recording — not
+            // a study-wide abort.
+            let inner =
+                CompareOpts { per_request: false, eval_threads: 1, timing };
+            match compare_routers_opts(&cfg, &trace, &names, inner) {
+                Ok(report) => fields.push(("report".to_string(), report)),
+                Err(e) => {
+                    fields.push(("compare_error".to_string(), Json::Str(e)))
+                }
+            }
         }
         // (a one-router field with an incompatible checkpoint leaves no
         // candidates — the entry still records why)
-        entries.push(Json::Obj(fields));
-    }
+        Json::Obj(fields)
+    };
+
+    let scenarios = crate::sim::scenarios::all();
+    let threads = eval_threads.max(1).min(scenarios.len());
+    let entries: Vec<Json> = if threads <= 1 {
+        scenarios.iter().map(scenario_entry).collect()
+    } else {
+        // scenario-level fan-out, mirroring the compare harness's
+        // entrant fan-out: strided assignment over scoped workers,
+        // entries reassembled in registry order so the matrix is
+        // byte-identical to the sequential walk
+        let mut slots: Vec<Option<Json>> =
+            (0..scenarios.len()).map(|_| None).collect();
+        let cell = &scenario_entry;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|worker| {
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        let mut i = worker;
+                        while i < scenarios.len() {
+                            out.push((i, cell(&scenarios[i])));
+                            i += threads;
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, entry) in h.join().expect("study worker panicked") {
+                    slots[i] = Some(entry);
+                }
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.expect("every scenario is assigned to a worker"))
+            .collect()
+    };
     Ok(obj(vec![
         ("checkpoint", Json::Str(checkpoint.to_string())),
         (
@@ -457,7 +516,7 @@ mod tests {
 
         let field: Vec<String> =
             ["random", "edf"].iter().map(|s| s.to_string()).collect();
-        let report = trace_study(&path, &field, 100, 42).unwrap();
+        let report = trace_study(&path, &field, 100, 42, 1, false).unwrap();
         let entries = report.get("scenarios").and_then(Json::as_arr).unwrap();
         assert_eq!(entries.len(), crate::sim::scenarios::all().len());
 
@@ -503,14 +562,78 @@ mod tests {
         assert_eq!(pairs.len(), 1); // edf only
 
         // the whole matrix is deterministic
-        let again = trace_study(&path, &field, 100, 42).unwrap();
+        let again = trace_study(&path, &field, 100, 42, 1, false).unwrap();
         assert_eq!(report.to_string_pretty(), again.to_string_pretty());
         std::fs::remove_file(&path).ok();
 
         // a typoed checkpoint path is a global failure, not a quiet
         // all-scenarios-incompatible matrix
-        let err = trace_study("/nonexistent/x.json", &field, 50, 1).unwrap_err();
+        let err =
+            trace_study("/nonexistent/x.json", &field, 50, 1, 1, false).unwrap_err();
         assert!(err.contains("cannot read"), "{err}");
+    }
+
+    #[test]
+    fn study_is_byte_identical_across_eval_threads() {
+        use crate::config::{PpoCfg, WIDTHS};
+
+        // the 3-device checkpoint is shape-incompatible with the
+        // 4-device hetero-mixed scenario, so the fan-out also covers
+        // the ppo_error path concurrently
+        let ppo = PpoRouter::new(3, WIDTHS.to_vec(), PpoCfg::default(), 11);
+        let path = std::env::temp_dir().join(format!(
+            "slim_sched_study_fanout_ckpt_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, ppo.to_json().to_string_pretty()).unwrap();
+
+        let field: Vec<String> =
+            ["random", "edf"].iter().map(|s| s.to_string()).collect();
+        let sequential = trace_study(&path, &field, 80, 42, 1, false)
+            .unwrap()
+            .to_string_pretty();
+        for threads in [2usize, 4] {
+            let parallel = trace_study(&path, &field, 80, 42, threads, false)
+                .unwrap()
+                .to_string_pretty();
+            assert_eq!(sequential, parallel, "study diverged at {threads} threads");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compare_failures_land_per_scenario_not_study_wide() {
+        use crate::config::{PpoCfg, WIDTHS};
+
+        let ppo = PpoRouter::new(3, WIDTHS.to_vec(), PpoCfg::default(), 7);
+        let path = std::env::temp_dir().join(format!(
+            "slim_sched_study_cerr_ckpt_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, ppo.to_json().to_string_pretty()).unwrap();
+
+        // "edf+bogus" records fine under the baseline but fails every
+        // scenario's compare (unknown router) — the study must report
+        // the failure cell by cell, not abort
+        let field: Vec<String> =
+            ["random", "edf+bogus"].iter().map(|s| s.to_string()).collect();
+        let report = trace_study(&path, &field, 60, 7, 2, false).unwrap();
+        let entries = report.get("scenarios").and_then(Json::as_arr).unwrap();
+        assert_eq!(entries.len(), crate::sim::scenarios::all().len());
+        for e in entries {
+            if e.get("record_error").is_some() {
+                continue;
+            }
+            let err = e
+                .get("compare_error")
+                .and_then(Json::as_str)
+                .unwrap_or_else(|| panic!("entry lacks compare_error: {e:?}"));
+            assert!(err.contains("unknown router"), "{err}");
+            assert!(e.get("report").is_none());
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

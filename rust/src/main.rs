@@ -31,6 +31,8 @@
 //!   repro train-ppo --episodes 10 --workers 4 --out ppo.json
 //!   repro scenarios
 
+use std::sync::Arc;
+
 use slim_scheduler::benchx::Table;
 use slim_scheduler::config::Config;
 use slim_scheduler::coordinator::router::AlgoRouter;
@@ -41,8 +43,8 @@ use slim_scheduler::ppo::router_impl::width_marginal;
 use slim_scheduler::ppo::{run_ppo_episode_io, PpoRouter};
 use slim_scheduler::runtime::{HostTensor, SegmentExecutor};
 use slim_scheduler::trace::{
-    compare_routers, configure_for_replay, write_report, StreamingTraceWriter,
-    Trace, TraceSink,
+    compare_routers_opts, configure_for_replay, write_report, CompareOpts,
+    StreamingTraceWriter, Trace, TraceSink,
 };
 use slim_scheduler::utilx::{Args, Json, Rng};
 
@@ -62,6 +64,8 @@ fn main() -> anyhow::Result<()> {
         .describe("shard-assign", "request->shard policy: hash|round-robin|key-affine")
         .describe("leader-service", "leader routing service time per head (s, 0 = infinitely fast)")
         .describe("plan-threads", "threads for per-shard router planning (1 = sequential, byte-identical baseline)")
+        .describe("eval-threads", "threads for the evaluation harness: entrant replays (trace-compare) / scenario cells (trace-study); any N is byte-identical to 1")
+        .describe("no-timing", "drop the per-entrant replay_wall_s fields from trace-compare/trace-study reports (deterministic output for byte comparison)")
         .describe("state-slack", "append per-head SLA slack to the PPO state vector (opt-in)")
         .describe("tenants", "multi-tenant workload: number of tenants (1 = anonymous stream)")
         .describe("tenant-zipf", "Zipf exponent of tenant popularity (0 = uniform)")
@@ -245,7 +249,7 @@ fn run_routed(
     args: &Args,
     cfg: &Config,
     router_name: &str,
-    arrivals: Option<Vec<slim_scheduler::sim::WorkloadEvent>>,
+    arrivals: Option<Arc<[slim_scheduler::sim::WorkloadEvent]>>,
     trace_out: &Option<String>,
 ) -> anyhow::Result<RunOutcome> {
     if let Some(algo) = AlgoRouter::by_name(router_name, &cfg.scheduler.widths) {
@@ -331,8 +335,10 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
         cfg.workload.total_requests, cfg.shard.leaders, cfg.seed
     );
     let trace_out = args.get("trace-out").map(str::to_string);
+    // zero-copy: the engine replays straight out of the trace's parsed
+    // arrival arena
     let outcome =
-        run_routed(args, &cfg, &router, Some(trace.arrivals().to_vec()), &trace_out)?;
+        run_routed(args, &cfg, &router, Some(trace.arrivals_arena()), &trace_out)?;
     print_outcome(&outcome);
     Ok(())
 }
@@ -350,14 +356,21 @@ fn cmd_trace_compare(args: &Args) -> anyhow::Result<()> {
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
         .collect();
+    let opts = CompareOpts {
+        eval_threads: cfg.eval.threads,
+        timing: !args.flag("no-timing"),
+        ..CompareOpts::default()
+    };
     println!(
-        "counterfactual A/B over {path}: {} arrivals, routers {:?} (baseline {})",
+        "counterfactual A/B over {path}: {} arrivals, routers {:?} (baseline {}), \
+         eval threads {}",
         trace.arrivals().len(),
         routers,
-        routers.first().map(String::as_str).unwrap_or("?")
+        routers.first().map(String::as_str).unwrap_or("?"),
+        opts.eval_threads
     );
-    let report =
-        compare_routers(&cfg, &trace, &routers).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let report = compare_routers_opts(&cfg, &trace, &routers, opts)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     print_pair_table(&report);
 
@@ -431,15 +444,24 @@ fn cmd_trace_study(args: &Args) -> anyhow::Result<()> {
         .collect();
     let requests = args.usize_or("requests", 1500);
     let seed = args.u64_or("seed", Config::default().seed);
+    let eval_threads = args.usize_or("eval-threads", 1).max(1);
+    let timing = !args.flag("no-timing");
     println!(
         "trace study: {} scenarios x {requests} requests, field {:?} \
-         (baseline {}), checkpoint {checkpoint}",
+         (baseline {}), checkpoint {checkpoint}, eval threads {eval_threads}",
         slim_scheduler::sim::scenarios::all().len(),
         field,
         field.first().map(String::as_str).unwrap_or("?"),
     );
-    let report = experiments::trace_study(checkpoint, &field, requests, seed)
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let report = experiments::trace_study(
+        checkpoint,
+        &field,
+        requests,
+        seed,
+        eval_threads,
+        timing,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     if let Some(entries) = report.get("scenarios").and_then(Json::as_arr) {
         for entry in entries {

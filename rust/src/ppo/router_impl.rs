@@ -554,13 +554,15 @@ pub fn run_ppo_episode(cfg: &Config, router: PpoRouter) -> (RunOutcome, PpoRoute
 }
 
 /// [`run_ppo_episode`] with the trace layer attached: an optional fixed
-/// arrival stream (trace replay) and an optional [`TraceSink`] receiving
-/// the run's lifecycle records — so PPO evaluation episodes are
-/// recordable and replayable exactly like the algorithmic routers.
+/// arrival stream (trace replay — an `Arc` arena handle, shared
+/// zero-copy with the trace that parsed it and with any concurrent
+/// replays) and an optional [`TraceSink`] receiving the run's lifecycle
+/// records — so PPO evaluation episodes are recordable and replayable
+/// exactly like the algorithmic routers.
 pub fn run_ppo_episode_io(
     cfg: &Config,
     router: PpoRouter,
-    arrivals: Option<Vec<WorkloadEvent>>,
+    arrivals: Option<Arc<[WorkloadEvent]>>,
     sink: Option<Box<dyn TraceSink>>,
 ) -> (RunOutcome, PpoRouter) {
     if cfg.shard.leaders > 1 {

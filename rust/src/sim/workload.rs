@@ -9,7 +9,7 @@
 //! fixed event list verbatim instead of drawing from the generator, so
 //! any router/scenario re-runs against bit-identical arrivals.
 
-use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::config::WorkloadCfg;
 use crate::utilx::Rng;
@@ -95,10 +95,13 @@ pub struct Workload {
     tenant_rng: Option<Rng>,
     t: f64,
     issued: usize,
-    /// Fixed arrival stream (trace replay): when set, events pop from
-    /// here verbatim and the stochastic generator (and its RNG) is
-    /// never consulted.
-    trace: Option<VecDeque<WorkloadEvent>>,
+    /// Fixed arrival stream (trace replay): when set, events replay
+    /// from the shared immutable arena via a cursor and the stochastic
+    /// generator (and its RNG) is never consulted. The arena is
+    /// `Arc`-shared with the trace that parsed it (and with any other
+    /// concurrent replays), so switching a workload into trace mode
+    /// copies no events.
+    trace: Option<(Arc<[WorkloadEvent]>, usize)>,
 }
 
 impl Workload {
@@ -127,9 +130,11 @@ impl Workload {
     /// `events` in order and ignores the generator entirely. The
     /// construction path (and its RNG split) stays identical to the
     /// generative mode, which is what keeps a replayed engine's RNG
-    /// stream bit-identical to the recording run's.
-    pub fn with_trace(mut self, events: Vec<WorkloadEvent>) -> Self {
-        self.trace = Some(events.into());
+    /// stream bit-identical to the recording run's. Accepts a `Vec`
+    /// (owned events) or an `Arc<[WorkloadEvent]>` arena handle — the
+    /// latter shares the arrival set zero-copy with its source trace.
+    pub fn with_trace(mut self, events: impl Into<Arc<[WorkloadEvent]>>) -> Self {
+        self.trace = Some((events.into(), 0));
         self
     }
 
@@ -168,9 +173,10 @@ impl Workload {
     /// Next arrival, or None once `total_requests` have been issued
     /// (trace mode: the next recorded event, until the trace drains).
     pub fn next_event(&mut self) -> Option<WorkloadEvent> {
-        if let Some(trace) = &mut self.trace {
-            let ev = trace.pop_front();
+        if let Some((events, cursor)) = &mut self.trace {
+            let ev = events.get(*cursor).cloned();
             if ev.is_some() {
+                *cursor += 1;
                 self.issued += 1;
             }
             return ev;
@@ -310,6 +316,24 @@ mod tests {
             .with_trace(recorded.clone());
         let drained: Vec<WorkloadEvent> = again.collect_all();
         assert_eq!(drained.len(), recorded.len());
+    }
+
+    #[test]
+    fn trace_mode_shares_the_arena_instead_of_copying() {
+        // an Arc arena handed to with_trace is aliased, not cloned: one
+        // arrival allocation feeds any number of replaying workloads
+        let recorded = Workload::new(base_cfg(), &[0.25, 1.0], Rng::new(9)).collect_all();
+        let arena: Arc<[WorkloadEvent]> = recorded.clone().into();
+        let wl_a = Workload::new(base_cfg(), &[0.25, 1.0], Rng::new(1))
+            .with_trace(arena.clone());
+        let wl_b = Workload::new(base_cfg(), &[0.25, 1.0], Rng::new(2))
+            .with_trace(arena.clone());
+        // three live handles: ours plus one per trace-mode workload
+        assert_eq!(Arc::strong_count(&arena), 3);
+        assert_eq!(wl_a.collect_all(), recorded);
+        assert_eq!(wl_b.collect_all(), recorded);
+        // collect_all consumed the workloads, releasing their handles
+        assert_eq!(Arc::strong_count(&arena), 1);
     }
 
     #[test]

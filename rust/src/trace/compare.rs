@@ -29,6 +29,7 @@
 //! without a separate analysis step.
 
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 use crate::config::Config;
 use crate::coordinator::router::{AlgoRouter, RouterSpec};
@@ -41,6 +42,33 @@ use super::record::{DoneStats, TraceRecorder, TraceSink};
 use super::replay::{configure_for_replay, Trace};
 use super::stats::paired_stats;
 
+/// Options for [`compare_routers_opts`].
+#[derive(Clone, Copy, Debug)]
+pub struct CompareOpts {
+    /// Emit the full per-request delta rows in every pair block.
+    /// Multi-scenario sweeps (`repro trace-study`) turn this off — the
+    /// rows dominate the report size at study scale.
+    pub per_request: bool,
+    /// Worker threads for the entrant replays (`--eval-threads`). Every
+    /// replay is an independent pure function of (trace, cfg, spec), so
+    /// they fan out across scoped threads and the results are gathered
+    /// in entrant order — the report is byte-identical at any thread
+    /// count. `1` (the default) keeps the sequential loop.
+    pub eval_threads: usize,
+    /// Emit per-entrant replay wall-clock (`replay_wall_s`) in each
+    /// router block. Off by default: wall-clock is the one
+    /// nondeterministic field, and the library default keeps two
+    /// identical calls byte-identical. The CLI turns it on (and
+    /// `--no-timing` restores the deterministic document).
+    pub timing: bool,
+}
+
+impl Default for CompareOpts {
+    fn default() -> Self {
+        CompareOpts { per_request: true, eval_threads: 1, timing: false }
+    }
+}
+
 /// One replayed router's harvest.
 struct RouterRun {
     name: String,
@@ -51,6 +79,9 @@ struct RouterRun {
     jain_throughput: f64,
     shed_rate: f64,
     shed: u64,
+    /// Wall-clock seconds this entrant's replay took (measured around
+    /// the engine run; reported only under [`CompareOpts::timing`]).
+    replay_wall_s: f64,
 }
 
 /// Replay `trace` through one router spec — an algorithmic name or a
@@ -82,12 +113,15 @@ fn replay_run(cfg: &Config, trace: &Trace, spec: &str) -> Result<RouterRun, Stri
     })?;
     configure_for_replay(&mut cfg, trace);
     let recorder = TraceRecorder::new(&cfg, spec);
+    let wall = Instant::now();
     let outcome = match parsed {
         RouterSpec::Algo(name) => {
             let router = AlgoRouter::by_name(name, &cfg.scheduler.widths)
                 .expect("RouterSpec::Algo spellings construct");
             let mut engine = sharded_engine(cfg, router);
-            engine.set_arrivals(trace.arrivals().to_vec());
+            // zero-copy: the engine aliases the trace's arrival arena,
+            // so N entrants share one parsed arrival set
+            engine.set_arrivals(trace.arrivals_arena());
             engine.set_trace_sink(Box::new(recorder.clone()));
             engine.run()
         }
@@ -97,7 +131,7 @@ fn replay_run(cfg: &Config, trace: &Trace, spec: &str) -> Result<RouterRun, Stri
             let (outcome, _router) = run_ppo_episode_io(
                 &cfg,
                 router,
-                Some(trace.arrivals().to_vec()),
+                Some(trace.arrivals_arena()),
                 Some(sink),
             );
             outcome
@@ -112,7 +146,57 @@ fn replay_run(cfg: &Config, trace: &Trace, spec: &str) -> Result<RouterRun, Stri
         jain_throughput: outcome.jain_throughput(),
         shed_rate: outcome.shed_rate(),
         shed: outcome.shed,
+        replay_wall_s: wall.elapsed().as_secs_f64(),
     })
+}
+
+/// Replay every entrant, sequentially (`eval_threads <= 1` — the
+/// pre-fan-out loop, byte for byte) or across a pool of scoped worker
+/// threads with strided entrant assignment. Results come back in
+/// entrant order either way, and on failure the error reported is the
+/// *first failing entrant's* (in entrant order, not completion order),
+/// so the parallel path is observationally identical to the loop.
+fn replay_all(
+    cfg: &Config,
+    trace: &Trace,
+    names: &[String],
+    eval_threads: usize,
+) -> Result<Vec<RouterRun>, String> {
+    let threads = eval_threads.max(1).min(names.len());
+    if threads <= 1 {
+        let mut runs = Vec::with_capacity(names.len());
+        for name in names {
+            runs.push(replay_run(cfg, trace, name)?);
+        }
+        return Ok(runs);
+    }
+    let mut slots: Vec<Option<Result<RouterRun, String>>> =
+        (0..names.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|worker| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut i = worker;
+                    while i < names.len() {
+                        out.push((i, replay_run(cfg, trace, &names[i])));
+                        i += threads;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, run) in h.join().expect("eval worker panicked") {
+                slots[i] = Some(run);
+            }
+        }
+    });
+    let mut runs = Vec::with_capacity(names.len());
+    for slot in slots {
+        runs.push(slot.expect("every entrant is assigned to a worker")?);
+    }
+    Ok(runs)
 }
 
 fn summary_json(prefix: &str, unit: &str, s: &Summary) -> Vec<(String, Json)> {
@@ -130,28 +214,26 @@ pub fn compare_routers(
     trace: &Trace,
     names: &[String],
 ) -> Result<Json, String> {
-    compare_routers_opts(cfg, trace, names, true)
+    compare_routers_opts(cfg, trace, names, CompareOpts::default())
 }
 
-/// [`compare_routers`] with the per-request delta rows optional —
-/// multi-scenario sweeps (`repro trace-study`) keep the paired summary
-/// and significance block but drop the row dump, which dominates the
-/// report size at study scale.
+/// [`compare_routers`] with the harness knobs exposed — per-request
+/// rows optional, entrant replays optionally fanned out across
+/// `opts.eval_threads` scoped threads (byte-identical to the sequential
+/// loop at any thread count), and per-entrant wall-clock optionally
+/// reported (`opts.timing`).
 pub fn compare_routers_opts(
     cfg: &Config,
     trace: &Trace,
     names: &[String],
-    include_per_request: bool,
+    opts: CompareOpts,
 ) -> Result<Json, String> {
     if names.len() < 2 {
         return Err(format!(
             "trace compare needs at least two routers (baseline + candidates), got {names:?}"
         ));
     }
-    let mut runs = Vec::with_capacity(names.len());
-    for name in names {
-        runs.push(replay_run(cfg, trace, name)?);
-    }
+    let runs = replay_all(cfg, trace, names, opts.eval_threads)?;
 
     let routers_json: Vec<Json> = runs
         .iter()
@@ -168,6 +250,15 @@ pub fn compare_routers_opts(
                 ("name".to_string(), Json::Str(r.name.clone())),
                 ("completed".to_string(), Json::Num(r.done.len() as f64)),
             ];
+            // the only nondeterministic field in the report, placed
+            // mid-block so stripping its lines (`--no-timing` has no
+            // line to strip) recovers the deterministic document
+            if opts.timing {
+                fields.push((
+                    "replay_wall_s".to_string(),
+                    Json::Num(r.replay_wall_s),
+                ));
+            }
             fields.extend(summary_json("latency", "_s", &lat));
             fields.extend(summary_json("energy", "_j", &energy));
             fields.push(("width_mean".to_string(), Json::Num(width.mean())));
@@ -211,7 +302,7 @@ pub fn compare_routers_opts(
             slack.record(d_slack);
             lat_deltas.push(d_lat);
             energy_deltas.push(d_energy);
-            if include_per_request {
+            if opts.per_request {
                 per_request.push(obj(vec![
                     ("id", Json::Num(*id as f64)),
                     ("latency_delta_s", Json::Num(d_lat)),
@@ -291,7 +382,7 @@ pub fn compare_routers_opts(
             "energy_hl_shift_j".to_string(),
             Json::Num(energy_stats.hl_shift),
         ));
-        if include_per_request {
+        if opts.per_request {
             fields.push(("per_request".to_string(), Json::Arr(per_request)));
         }
         pairs.push(Json::Obj(fields));
@@ -335,10 +426,12 @@ pub fn record_trace(cfg: &Config, router_name: &str) -> Result<Trace, String> {
     Trace::parse(&recorder.to_jsonl()).map_err(|e| e.to_string())
 }
 
-/// Persist an A/B report (pretty-printed; `BENCH_trace_ab.json` is the
-/// conventional name the CI grep checks).
+/// Persist an A/B report (pretty-printed, newline-terminated so
+/// line-oriented tools — the CI's timing-line strip — round-trip the
+/// file exactly; `BENCH_trace_ab.json` is the conventional name the CI
+/// grep checks).
 pub fn write_report(report: &Json, path: &str) -> std::io::Result<()> {
-    std::fs::write(path, report.to_string_pretty())
+    std::fs::write(path, report.to_string_pretty() + "\n")
 }
 
 #[cfg(test)]
@@ -354,6 +447,30 @@ mod tests {
         cfg.workload.total_requests = 150;
         cfg.workload.rate_hz = 220.0;
         cfg
+    }
+
+    /// The trace-study shape: summary + significance, no row dump.
+    fn lean_opts() -> CompareOpts {
+        CompareOpts { per_request: false, ..CompareOpts::default() }
+    }
+
+    /// Train a tiny checkpoint for `cfg` and write it to a temp file
+    /// (caller removes it); returns the path.
+    fn tiny_checkpoint(cfg: &Config, tag: &str) -> String {
+        let mut cfg = cfg.clone();
+        cfg.ppo.horizon = 64;
+        let trained = crate::experiments::train_ppo(
+            &cfg,
+            crate::config::RewardCfg::overfit(),
+            1,
+        );
+        let path = std::env::temp_dir().join(format!(
+            "slim_sched_{tag}_ckpt_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, trained.to_json().to_string_pretty()).unwrap();
+        path
     }
 
     #[test]
@@ -491,7 +608,7 @@ mod tests {
         let trace = record_small_trace(&cfg);
         let names: Vec<String> =
             ["random", "edf"].iter().map(|s| s.to_string()).collect();
-        let lean = compare_routers_opts(&cfg, &trace, &names, false).unwrap();
+        let lean = compare_routers_opts(&cfg, &trace, &names, lean_opts()).unwrap();
         let pair = &lean.get("pairs").and_then(Json::as_arr).unwrap()[0];
         assert!(pair.get("per_request").is_none());
         assert!(pair.get("sign_test_p").is_some()); // stats survive
@@ -539,8 +656,8 @@ mod tests {
 
         let names: Vec<String> =
             ["edf+none", "edf+drr"].iter().map(|s| s.to_string()).collect();
-        let a = compare_routers_opts(&cfg, &trace, &names, false).unwrap();
-        let b = compare_routers_opts(&cfg, &trace, &names, false).unwrap();
+        let a = compare_routers_opts(&cfg, &trace, &names, lean_opts()).unwrap();
+        let b = compare_routers_opts(&cfg, &trace, &names, lean_opts()).unwrap();
         assert_eq!(a.to_string_pretty(), b.to_string_pretty());
 
         let routers = a.get("routers").and_then(Json::as_arr).unwrap();
@@ -580,9 +697,124 @@ mod tests {
         // an unknown base router keeps its suffix in the error message
         let bad: Vec<String> =
             ["edf", "marsbase+drr"].iter().map(|s| s.to_string()).collect();
-        assert!(compare_routers_opts(&cfg, &trace, &bad, false)
+        assert!(compare_routers_opts(&cfg, &trace, &bad, lean_opts())
             .unwrap_err()
             .contains("marsbase+drr"));
+    }
+
+    #[test]
+    fn eval_threads_fanout_is_byte_identical_across_thread_counts_and_leaders() {
+        // the tentpole invariant: the threaded fan-out must emit the
+        // same bytes as the sequential loop — for a 5-entrant field
+        // spanning algorithmic, +drr-suffixed, and checkpoint entrants,
+        // under single- and multi-leader sharding alike
+        let base = small_cfg();
+        let path = tiny_checkpoint(&base, "fanout");
+        let trace = record_small_trace(&base);
+        let names: Vec<String> = vec![
+            "random".to_string(),
+            "edf".to_string(),
+            "edf+drr".to_string(),
+            "least-loaded".to_string(),
+            format!("ppo:{path}"),
+        ];
+        for leaders in [1usize, 4] {
+            let mut cfg = base.clone();
+            cfg.shard.leaders = leaders;
+            let sequential =
+                compare_routers_opts(&cfg, &trace, &names, CompareOpts::default())
+                    .unwrap()
+                    .to_string_pretty();
+            // 16 > entrant count exercises the thread-count clamp
+            for threads in [2usize, 4, 16] {
+                let opts = CompareOpts {
+                    eval_threads: threads,
+                    ..CompareOpts::default()
+                };
+                let parallel = compare_routers_opts(&cfg, &trace, &names, opts)
+                    .unwrap()
+                    .to_string_pretty();
+                assert_eq!(
+                    sequential, parallel,
+                    "fan-out diverged (leaders {leaders}, threads {threads})"
+                );
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn entrant_errors_surface_in_entrant_order_at_any_thread_count() {
+        use crate::config::{PpoCfg, WIDTHS};
+        let cfg = small_cfg();
+        let trace = record_small_trace(&cfg);
+        // a 4-device checkpoint cannot load into the 3-device cluster —
+        // and it sits mid-field, so the parallel path must still report
+        // the first failing entrant in entrant order
+        let ppo = PpoRouter::new(4, WIDTHS.to_vec(), PpoCfg::default(), 7);
+        let path = std::env::temp_dir().join(format!(
+            "slim_sched_incompat_ckpt_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, ppo.to_json().to_string_pretty()).unwrap();
+        let names: Vec<String> = vec![
+            "random".to_string(),
+            format!("ppo:{path}"),
+            "edf".to_string(),
+        ];
+        let seq_err =
+            compare_routers_opts(&cfg, &trace, &names, CompareOpts::default())
+                .unwrap_err();
+        assert!(seq_err.contains("does not match the policy shape"), "{seq_err}");
+        for threads in [2usize, 4] {
+            let opts =
+                CompareOpts { eval_threads: threads, ..CompareOpts::default() };
+            let par_err =
+                compare_routers_opts(&cfg, &trace, &names, opts).unwrap_err();
+            assert_eq!(seq_err, par_err, "threads {threads}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn timing_emits_replay_wall_s_and_strips_back_to_the_deterministic_report() {
+        let cfg = small_cfg();
+        let trace = record_small_trace(&cfg);
+        let names: Vec<String> =
+            ["random", "edf", "least-loaded"].iter().map(|s| s.to_string()).collect();
+        let plain =
+            compare_routers_opts(&cfg, &trace, &names, CompareOpts::default())
+                .unwrap();
+        let timed = compare_routers_opts(
+            &cfg,
+            &trace,
+            &names,
+            CompareOpts { timing: true, eval_threads: 2, ..CompareOpts::default() },
+        )
+        .unwrap();
+        let routers = timed.get("routers").and_then(Json::as_arr).unwrap();
+        assert_eq!(routers.len(), 3);
+        for r in routers {
+            let w = r.get("replay_wall_s").and_then(Json::as_f64).unwrap();
+            assert!(w.is_finite() && w >= 0.0, "replay_wall_s = {w}");
+        }
+        assert!(plain
+            .get("routers")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .all(|r| r.get("replay_wall_s").is_none()));
+        // wall-clock is the report's only nondeterministic field:
+        // dropping its lines recovers the deterministic document (the
+        // CI leans on exactly this to cmp timed vs untimed runs)
+        let stripped: String = timed
+            .to_string_pretty()
+            .lines()
+            .filter(|l| !l.contains("\"replay_wall_s\""))
+            .collect::<Vec<_>>()
+            .join("\n");
+        assert_eq!(stripped, plain.to_string_pretty());
     }
 
     #[test]

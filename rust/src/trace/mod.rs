@@ -38,6 +38,7 @@ pub mod stats;
 
 pub use compare::{
     compare_routers, compare_routers_opts, record_trace, write_report,
+    CompareOpts,
 };
 pub use record::{
     done_stats, DoneStats, StreamingTraceWriter, TraceEvent, TraceRecorder,

@@ -15,6 +15,8 @@
 //! optional recording detail. The optional `tenant` field (v2) defaults
 //! to 0, so v1 and external tenant-less traces import unchanged.
 
+use std::sync::Arc;
+
 use crate::config::Config;
 use crate::sim::WorkloadEvent;
 use crate::utilx::json::Json;
@@ -56,9 +58,12 @@ pub struct Trace {
     /// Full serialized configuration of the recording run, when present.
     config: Option<Json>,
     pub events: Vec<TraceEvent>,
-    /// The arrival stream, extracted once at parse time (large traces
-    /// are mostly non-arrival records; callers hit this repeatedly).
-    arrivals: Vec<WorkloadEvent>,
+    /// The arrival stream, extracted once at parse time into a shared
+    /// immutable arena (large traces are mostly non-arrival records;
+    /// callers hit this repeatedly). Replays borrow the arena via
+    /// [`Trace::arrivals_arena`] — a million-request trace is parsed
+    /// and held once no matter how many entrants replay it.
+    arrivals: Arc<[WorkloadEvent]>,
 }
 
 /// Header fields shared by the in-memory parser and the streaming
@@ -109,7 +114,7 @@ impl Trace {
             events.push(TraceEvent::from_json(&json).map_err(|m| err(i + 1, m))?);
         }
 
-        let arrivals = events
+        let arrivals: Arc<[WorkloadEvent]> = events
             .iter()
             .filter_map(|ev| match ev {
                 TraceEvent::Arrival { t, id, w_req, tenant } => Some(WorkloadEvent {
@@ -175,8 +180,14 @@ impl Trace {
                 _ => {} // recording detail: validated, not retained
             }
         }
-        let trace =
-            Trace { version, router, requests, config, events: Vec::new(), arrivals };
+        let trace = Trace {
+            version,
+            router,
+            requests,
+            config,
+            events: Vec::new(),
+            arrivals: arrivals.into(),
+        };
         trace.validate()?;
         Ok(trace)
     }
@@ -200,7 +211,7 @@ impl Trace {
         }
         let mut last = f64::NEG_INFINITY;
         let mut seen = std::collections::BTreeSet::new();
-        for ev in arrivals {
+        for ev in arrivals.iter() {
             if !ev.at.is_finite() || ev.at < last {
                 return Err(err(
                     0,
@@ -224,9 +235,18 @@ impl Trace {
     }
 
     /// The fixed arrival stream, in record order (extracted at parse
-    /// time; `.to_vec()` it for `Engine::set_arrivals`).
+    /// time into the shared arena).
     pub fn arrivals(&self) -> &[WorkloadEvent] {
         &self.arrivals
+    }
+
+    /// A shared handle on the arrival arena — pass it to
+    /// [`crate::coordinator::Engine::set_arrivals`] (or
+    /// [`crate::sim::Workload::with_trace`]). Cloning the handle is
+    /// O(1) and copies nothing, so N concurrent entrant replays all
+    /// read the single parsed arrival set.
+    pub fn arrivals_arena(&self) -> Arc<[WorkloadEvent]> {
+        Arc::clone(&self.arrivals)
     }
 
     /// Per-request completion stats keyed by request id.
@@ -291,6 +311,17 @@ mod tests {
         let mut replay_cfg = Config::default();
         configure_for_replay(&mut replay_cfg, &trace);
         assert_eq!(replay_cfg.workload.total_requests, 2);
+    }
+
+    #[test]
+    fn arrival_arena_is_shared_not_copied() {
+        let trace = Trace::parse(&mini_trace()).unwrap();
+        let a = trace.arrivals_arena();
+        let b = trace.arrivals_arena();
+        assert!(Arc::ptr_eq(&a, &b), "arena handles alias one allocation");
+        // three live handles: the trace's own plus the two taken above
+        assert_eq!(Arc::strong_count(&a), 3);
+        assert_eq!(&a[..], trace.arrivals());
     }
 
     #[test]

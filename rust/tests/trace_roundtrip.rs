@@ -49,7 +49,7 @@ fn replay_and_rerecord(cfg: &Config, trace: &Trace, router_name: &str) -> String
     configure_for_replay(&mut cfg, trace);
     let recorder = TraceRecorder::new(&cfg, router_name);
     let mut engine = sharded_engine(cfg, router);
-    engine.set_arrivals(trace.arrivals().to_vec());
+    engine.set_arrivals(trace.arrivals_arena());
     engine.set_trace_sink(Box::new(recorder.clone()));
     engine.run();
     recorder.to_jsonl()
@@ -164,7 +164,7 @@ fn round_trip_holds_for_ppo_across_worker_counts() {
         run_ppo_episode_io(
             &replay_cfg,
             train(&cfg),
-            Some(trace.arrivals().to_vec()),
+            Some(trace.arrivals_arena()),
             Some(Box::new(recorder2.clone())),
         );
         assert_eq!(
