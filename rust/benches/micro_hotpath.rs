@@ -6,9 +6,11 @@
 //! scaling on the `sharded-hot` scenario (BENCH_LEADERS accepts a comma
 //! list, e.g. `4,16`), and (when artifacts are present) the real PJRT
 //! segment execution. Emits the batched-vs-per-head PPO evaluation
-//! speedup, the `leaders<N>_speedup_x` shard-scaling ratios, and the
-//! event-core `events_per_sec` / `wheel_vs_heap_speedup_x` pair as
-//! derived metrics in `BENCH_micro_hotpath.json`.
+//! speedup, the `leaders<N>_speedup_x` shard-scaling ratios, the
+//! event-core `events_per_sec` / `wheel_vs_heap_speedup_x` pair, and the
+//! observability-collector cost (`obs_overhead_pct`, instrumented vs
+//! uninstrumented engine run) as derived metrics in
+//! `BENCH_micro_hotpath.json`.
 
 use slim_scheduler::benchx::Bench;
 use slim_scheduler::config::{Config, PpoCfg, SchedulerCfg};
@@ -181,6 +183,34 @@ fn main() {
         let router = RandomRouter::new(cfg.scheduler.widths.clone(), true, 8);
         std::hint::black_box(Engine::new(cfg, router).run());
     });
+
+    // ---- observability overhead: instrumented vs uninstrumented ----
+    // The same 300-request run with the collector on (counters, stage
+    // histograms, tick series — the default) and off. The budget is
+    // <= 5% overhead; the derived `obs_overhead_pct` metric tracks it
+    // in the perf trajectory (CI checks presence, acceptance the bar).
+    let obs_run = |enabled: bool| {
+        let mut cfg = Config::default();
+        cfg.workload.total_requests = 300;
+        cfg.workload.rate_hz = 200.0;
+        cfg.obs.enabled = enabled;
+        let router = RandomRouter::new(cfg.scheduler.widths.clone(), true, 8);
+        Engine::new(cfg, router).run()
+    };
+    let obs_on_name = "engine/300_request_run_obs_on";
+    bench.bench(obs_on_name, || {
+        std::hint::black_box(obs_run(true));
+    });
+    let obs_off_name = "engine/300_request_run_obs_off";
+    bench.bench(obs_off_name, || {
+        std::hint::black_box(obs_run(false));
+    });
+    if let (Some(on_ns), Some(off_ns)) = (
+        bench.mean_ns_of(obs_on_name),
+        bench.mean_ns_of(obs_off_name),
+    ) {
+        bench.metric("obs_overhead_pct", (on_ns / off_ns - 1.0) * 100.0);
+    }
 
     // ---- event-queue churn: calendar queue vs binary heap ----
     // Steady-state hold-and-churn at ~4096 pending events, the regime a

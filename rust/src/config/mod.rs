@@ -275,6 +275,27 @@ impl Default for EvalCfg {
     }
 }
 
+/// Observability layer (`crate::obs`): metrics registry, stage timing,
+/// per-tick series.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ObsCfg {
+    /// Master switch (`--obs false` disables collection entirely). The
+    /// collector draws no RNG and never feeds back into scheduling, so
+    /// sim results are bit-identical either way — off saves only the
+    /// bookkeeping cost itself (`obs_overhead_pct` in the benches).
+    pub enabled: bool,
+    /// Per-tick series capacity in rows (`--obs-series-cap`). On
+    /// overflow the series decimates to every other row and doubles its
+    /// recording stride, so memory stays bounded for runs of any length.
+    pub series_cap: usize,
+}
+
+impl Default for ObsCfg {
+    fn default() -> Self {
+        ObsCfg { enabled: true, series_cap: 4096 }
+    }
+}
+
 /// Reward weights (eq. 7): r = α·p_acc − β·L − γ·E − δ·Var(U) + b.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RewardCfg {
@@ -492,6 +513,7 @@ pub struct Config {
     pub router: RouterCfg,
     pub shard: ShardCfg,
     pub eval: EvalCfg,
+    pub obs: ObsCfg,
     pub admission: AdmissionCfg,
     pub scheduler: SchedulerCfg,
     pub ppo: PpoCfg,
@@ -518,6 +540,7 @@ impl Default for Config {
             router: RouterCfg::default(),
             shard: ShardCfg::default(),
             eval: EvalCfg::default(),
+            obs: ObsCfg::default(),
             admission: AdmissionCfg::default(),
             scheduler: SchedulerCfg::default(),
             ppo: PpoCfg::default(),
@@ -578,6 +601,16 @@ impl Config {
             args.usize_or("plan-threads", self.shard.plan_threads).max(1);
         self.eval.threads =
             args.usize_or("eval-threads", self.eval.threads).max(1);
+        if let Some(v) = args.get("obs") {
+            // `flag()` can only turn things on; --obs needs the off path
+            self.obs.enabled = match v {
+                "true" | "1" | "yes" | "on" => true,
+                "false" | "0" | "no" | "off" => false,
+                other => panic!("--obs expects true|false, got {other:?}"),
+            };
+        }
+        self.obs.series_cap =
+            args.usize_or("obs-series-cap", self.obs.series_cap).max(2);
         if let Some(kind) = args.get("shard-assign") {
             self.shard.assign = ShardAssignKind::parse(kind).unwrap_or_else(|| {
                 panic!("--shard-assign expects hash|round-robin|key-affine, got {kind:?}")
@@ -672,6 +705,13 @@ impl Config {
                     "threads",
                     Json::Num(self.eval.threads as f64),
                 )]),
+            ),
+            (
+                "obs",
+                obj(vec![
+                    ("enabled", Json::Bool(self.obs.enabled)),
+                    ("series_cap", Json::Num(self.obs.series_cap as f64)),
+                ]),
             ),
             (
                 "admission",
@@ -822,6 +862,15 @@ impl Config {
         if let Some(ev) = json.get("eval") {
             if let Some(x) = ev.get("threads").and_then(Json::as_usize) {
                 cfg.eval.threads = x.max(1);
+            }
+        }
+        // pre-observability trace headers have no "obs" key: defaults apply
+        if let Some(o) = json.get("obs") {
+            if let Some(x) = o.get("enabled").and_then(Json::as_bool) {
+                cfg.obs.enabled = x;
+            }
+            if let Some(x) = o.get("series_cap").and_then(Json::as_usize) {
+                cfg.obs.series_cap = x.max(2);
             }
         }
         if let Some(a) = json.get("admission") {
@@ -1192,6 +1241,38 @@ mod tests {
         );
         cfg.apply_args(&args);
         assert_eq!(cfg.eval.threads, 1);
+    }
+
+    #[test]
+    fn obs_defaults_parse_and_roundtrip() {
+        let cfg = Config::default();
+        assert!(cfg.obs.enabled); // collection is on unless opted out
+        assert_eq!(cfg.obs.series_cap, 4096);
+
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--obs", "false", "--obs-series-cap", "128"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert!(!cfg.obs.enabled);
+        assert_eq!(cfg.obs.series_cap, 128);
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.obs, cfg.obs);
+
+        // pre-observability trace headers (no "obs" key) keep defaults
+        let old_header = Json::parse("{\"seed\": 7}").unwrap();
+        let parsed = Config::from_json(&old_header);
+        assert_eq!(parsed.obs, ObsCfg::default());
+
+        // a pathological cap floors at 2 so decimation can always halve
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--obs-series-cap", "0"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.obs.series_cap, 2);
     }
 
     #[test]

@@ -41,6 +41,13 @@ pub enum Offer {
 struct TenantState {
     credit: f64,
     pending: VecDeque<Request>,
+    /// Offers shed against this tenant's full queue.
+    shed: u64,
+    /// Admissions degraded to the slim width for this tenant.
+    degraded: u64,
+    /// Ticks where this tenant's positive deficit was forfeited
+    /// (queue went empty while credit remained).
+    forfeits: u64,
 }
 
 /// The deficit-round-robin admission gate.
@@ -86,6 +93,7 @@ impl DrrGate {
         let cap = self.cfg.queue_cap;
         let st = self.state_mut(req.tenant);
         if st.pending.len() >= cap {
+            st.shed += 1;
             self.shed += 1;
             return Offer::Shed;
         }
@@ -120,6 +128,9 @@ impl DrrGate {
             if st.pending.is_empty() {
                 // classic DRR: an empty queue forfeits its deficit, so
                 // idle tenants can't hoard credit beyond the cap
+                if st.credit > 0.0 {
+                    st.forfeits += 1;
+                }
                 st.credit = 0.0;
             } else {
                 st.credit = (st.credit + self.cfg.quantum).min(self.cfg.burst_cap);
@@ -146,6 +157,7 @@ impl DrrGate {
                 admitted += 1;
                 if degrade && req.w_req > slim_width {
                     req.w_req = slim_width;
+                    st.degraded += 1;
                     self.degraded += 1;
                 }
                 out.push(req);
@@ -169,6 +181,19 @@ impl DrrGate {
     /// Tenant ids the gate has seen (dense upper bound).
     pub fn tenant_count(&self) -> usize {
         self.tenants.len()
+    }
+
+    /// Per-tenant `(shed, degraded, credit_forfeits)` counters; unknown
+    /// tenants report zeros.
+    pub fn tenant_counters(&self, tenant: u16) -> (u64, u64, u64) {
+        self.tenants
+            .get(tenant as usize)
+            .map_or((0, 0, 0), |st| (st.shed, st.degraded, st.forfeits))
+    }
+
+    /// Total deficit forfeits across tenants.
+    pub fn credit_forfeits(&self) -> u64 {
+        self.tenants.iter().map(|st| st.forfeits).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -337,6 +362,49 @@ mod tests {
         out.clear();
         g.tick(&mut out, 0.25);
         assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn per_tenant_counters_split_the_aggregates() {
+        let mut g = DrrGate::new(AdmissionCfg {
+            kind: AdmissionKind::Drr,
+            quantum: 2.0,
+            burst_cap: 8.0,
+            scan_width: 16,
+            batch_max: 64,
+            queue_cap: 3,
+            degrade_depth: 2,
+        });
+        // tenant 0: 6 offers into a 3-deep queue → 3 shed, deep → degraded
+        for id in 0..6 {
+            g.offer(req(id, 0));
+        }
+        g.offer(req(100, 1));
+        let mut out = Vec::new();
+        g.tick(&mut out, 0.25);
+        let (shed0, deg0, _) = g.tenant_counters(0);
+        let (shed1, deg1, _) = g.tenant_counters(1);
+        assert_eq!(shed0, 3);
+        assert_eq!(shed1, 0);
+        assert!(deg0 > 0);
+        assert_eq!(deg1, 0);
+        assert_eq!(g.shed, shed0 + shed1);
+        assert_eq!(g.degraded, deg0 + deg1);
+        // drain tenant 0 fully; its leftover credit is forfeited on a
+        // later backlogged tick (tenant 1 keeps the gate non-idle)
+        while g.pending_for(0) > 0 {
+            g.tick(&mut out, 0.25);
+        }
+        for id in 0..4 {
+            g.offer(req(200 + id, 1));
+        }
+        g.tick(&mut out, 0.25);
+        let (_, _, forfeits0) = g.tenant_counters(0);
+        let (_, _, forfeits1) = g.tenant_counters(1);
+        assert!(forfeits0 > 0, "positive idle credit must be forfeited");
+        assert_eq!(g.credit_forfeits(), forfeits0 + forfeits1);
+        // unknown tenants report zeros
+        assert_eq!(g.tenant_counters(42), (0, 0, 0));
     }
 
     #[test]

@@ -144,6 +144,9 @@ pub struct EventQueue<E> {
     /// Virtual-time width of the next imminent batch (adaptive).
     span: f64,
     seq: u64,
+    /// Times the span adaptation fired (either direction) — exported by
+    /// the obs layer as `span_retunes`.
+    retunes: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -165,6 +168,7 @@ impl<E> EventQueue<E> {
             horizon: f64::NEG_INFINITY,
             span: SPAN_INIT,
             seq: 0,
+            retunes: 0,
         }
     }
 
@@ -220,10 +224,17 @@ impl<E> EventQueue<E> {
         let moved = self.cur.len();
         if moved > SPAN_MAX_BATCH {
             self.span *= 0.5;
+            self.retunes += 1;
         } else if moved < SPAN_MIN_BATCH {
             self.span *= 2.0;
+            self.retunes += 1;
         }
         self.span = self.span.clamp(1e-9, 1e9);
+    }
+
+    /// How many times the span adaptation fired so far.
+    pub fn span_retunes(&self) -> u64 {
+        self.retunes
     }
 
     /// Earliest event (ties in push order), or None when drained.
@@ -498,6 +509,11 @@ pub struct TenantStat {
     /// Completions that blew the tenant's effective SLA
     /// (`sla_s × sla_multiplier(tenant)`).
     pub sla_misses: u64,
+    /// Requests the DRR gate admitted at the degraded (slim) width.
+    pub degraded: u64,
+    /// Ticks where this tenant's DRR credit was forfeited (positive
+    /// credit zeroed because its queue went empty).
+    pub credit_forfeits: u64,
 }
 
 impl TenantStat {
@@ -598,7 +614,7 @@ impl RunMetrics {
         }
     }
 
-    fn tenant_mut(&mut self, tenant: u16) -> &mut TenantStat {
+    pub(crate) fn tenant_mut(&mut self, tenant: u16) -> &mut TenantStat {
         let idx = tenant as usize;
         if idx >= self.tenant_stats.len() {
             self.tenant_stats.resize(idx + 1, TenantStat::default());

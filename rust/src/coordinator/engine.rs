@@ -41,6 +41,7 @@ use std::sync::Arc;
 use crate::config::{AdmissionKind, Config};
 use crate::metrics::{RunReport, Summary};
 use crate::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS};
+use crate::obs::{ObsCollector, TickRow};
 use crate::sim::workload::sla_multiplier;
 use crate::sim::{profiles, Link, SimDevice, VirtualClock, Workload, WorkloadEvent};
 use crate::trace::record::{TraceEvent, TraceSink};
@@ -95,6 +96,35 @@ enum EvKind {
     AdmitTick,
 }
 
+/// Metric labels for the per-kind pop counters, indexed by
+/// [`EvKind::index`].
+const EV_KIND_NAMES: [&str; 8] = [
+    "arrival",
+    "block_arrive",
+    "batch_done",
+    "telemetry_tick",
+    "unload_tick",
+    "device_down",
+    "leader_free",
+    "admit_tick",
+];
+
+impl EvKind {
+    /// Dense index into [`EV_KIND_NAMES`].
+    fn index(&self) -> usize {
+        match self {
+            EvKind::Arrival(_) => 0,
+            EvKind::BlockArrive { .. } => 1,
+            EvKind::BatchDone { .. } => 2,
+            EvKind::TelemetryTick => 3,
+            EvKind::UnloadTick => 4,
+            EvKind::DeviceDown { .. } => 5,
+            EvKind::LeaderFree { .. } => 6,
+            EvKind::AdmitTick => 7,
+        }
+    }
+}
+
 /// Everything a finished run reports.
 #[derive(Clone, Debug)]
 pub struct RunOutcome {
@@ -128,8 +158,16 @@ pub struct RunOutcome {
     /// Requests shed by admission backpressure (counted toward run
     /// completion alongside `report.completed`).
     pub shed: u64,
+    /// Requests the DRR gate admitted at the degraded (slim) width
+    /// (0 without a gate).
+    pub degraded: u64,
+    /// DRR deficit forfeits summed across tenants (0 without a gate).
+    pub credit_forfeits: u64,
     /// Worst admission-queue wait observed (s).
     pub max_starvation_s: f64,
+    /// The observability collector, when `ObsCfg::enabled` — serialize
+    /// with `obs::bundle_json` / `obs::prometheus_text`.
+    pub obs: Option<ObsCollector>,
 }
 
 impl RunOutcome {
@@ -253,6 +291,10 @@ pub struct Engine<R: Router, D: DeviceModel = SimDevice, S: LocalScheduler = Gre
     heads_scratch: Vec<HeadView>,
     blocks_scratch: Vec<Vec<Queued>>,
     snap_scratch: TelemetrySnapshot,
+    /// The observability collector (`cfg.obs.enabled`): hot-path
+    /// counters, stage histograms, tick series. Never touches the RNG
+    /// or scheduling state, so enabling it cannot change sim results.
+    obs: Option<ObsCollector>,
     /// Safety cap for pathological configurations.
     pub max_sim_time_s: f64,
 }
@@ -339,6 +381,10 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         let plan_rngs: Vec<Rng> = (0..routers.len())
             .map(|si| plan_stream_rng(cfg.seed, si))
             .collect();
+        let obs = cfg
+            .obs
+            .enabled
+            .then(|| ObsCollector::new(n, &EV_KIND_NAMES, cfg.obs.series_cap));
         Engine {
             link: Link::new(cfg.link),
             rng: Rng::new(cfg.seed),
@@ -365,6 +411,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             down: vec![false; n],
             arrivals: None,
             sink: None,
+            obs,
             max_sim_time_s: 3600.0,
             cfg,
         }
@@ -517,8 +564,12 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             gate.tick(&mut admitted, slim);
         }
         let any = !admitted.is_empty();
-        for req in admitted.drain(..) {
+        for mut req in admitted.drain(..) {
             self.metrics.record_starvation(now - req.arrival);
+            // the gate released it just now: stage timing splits here —
+            // wait so far is gate wait, leader wait starts fresh
+            req.admitted_at = now;
+            req.enqueued_at = now;
             self.enqueue_leader(req);
         }
         self.admit_scratch = admitted;
@@ -555,6 +606,10 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         let th = self.cfg.shard.rebalance_threshold;
         if th > 0 && self.shards.len() > 1 {
             let migrations = rebalance(&mut self.shards, th, RUN_SCAN_CAP);
+            if let Some(o) = self.obs.as_mut() {
+                let moved: usize = migrations.iter().map(|m| m.ids.len()).sum();
+                o.on_migrations(moved as u64);
+            }
             if self.sink.is_some() {
                 let t = self.clock.now();
                 for m in migrations {
@@ -737,6 +792,9 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 .fifo
                 .drain(run.start..run.start + take)
                 .map(|mut req| {
+                    // stage timing: everything since the last enqueue
+                    // (admission or segment advance) was leader wait
+                    req.leader_wait_s += now - req.enqueued_at;
                     req.block_tag = gtag;
                     req.routed_at = now;
                     req.enqueued_at = now;
@@ -749,7 +807,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         blocks.reverse();
 
         let mut routed_heads = 0usize;
-        for (k, ((decision, run), entries)) in
+        for (k, ((decision, run), mut entries)) in
             decisions.iter().zip(runs).zip(blocks.drain(..)).enumerate()
         {
             debug_assert!(!entries.is_empty());
@@ -796,6 +854,11 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                     _ => self.link.transfer_s(bytes, &mut self.rng),
                 };
                 arrive = arrive.max(now + dt);
+            }
+            for q in &mut entries {
+                // stage timing: route → server arrival is network wait
+                q.req.net_wait_s += arrive - now;
+                q.req.arrived_at = arrive;
             }
             self.shards[si].stats.blocks += 1;
             if self.sink.is_some() {
@@ -979,6 +1042,9 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             self.scheds[server].step(now, dev)
         };
         for d in dispatches {
+            if let Some(o) = self.obs.as_mut() {
+                o.on_batch(server, d.batch.len());
+            }
             // semantic cost of the batch: per-request FLOPs at the
             // instance's width and the request's true w_prev
             let flops: u64 = d
@@ -1062,12 +1128,26 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 }
             }
 
+            // stage timing: server arrival → completion is device time
+            // (queueing at the server included)
+            req.device_s += now - req.arrived_at;
+
             if req.advance(d.width, now, server) {
                 self.enqueue_leader(req);
             } else {
                 let acc = self.prior.lookup(&req.width_tuple());
                 let e2e = now - req.arrival;
                 self.metrics.record_request_done(e2e, acc, req.tenant);
+                if let Some(o) = self.obs.as_mut() {
+                    o.on_done(
+                        req.tenant,
+                        req.admitted_at - req.arrival,
+                        req.leader_wait_s,
+                        req.net_wait_s,
+                        req.device_s,
+                        e2e,
+                    );
+                }
                 if self.sink.is_some() {
                     // slack against the tenant's *effective* SLA
                     // (×1.0 exact for tenant 0)
@@ -1165,6 +1245,9 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 break;
             }
             self.clock.advance_to(t);
+            if let Some(o) = self.obs.as_mut() {
+                o.on_event(ev.index());
+            }
             match ev {
                 EvKind::Arrival(req) => {
                     // the arrival is recorded *before* admission, so a
@@ -1229,6 +1312,21 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                             power: snap.servers.iter().map(|s| s.power_w).collect(),
                         });
                     }
+                    if let Some(o) = self.obs.as_mut() {
+                        let servers = &snap.servers;
+                        let m = &self.metrics;
+                        o.on_tick(TickRow {
+                            t: now,
+                            shard_depths: depths,
+                            server_util: servers.iter().map(|s| s.util_pct).collect(),
+                            server_power: servers.iter().map(|s| s.power_w).collect(),
+                            server_instances: servers.iter().map(|s| s.instances).collect(),
+                            gate_pending: self.gate.as_ref().map_or(0, |g| g.pending_total()),
+                            shed: m.shed,
+                            done: m.done,
+                            tenant_done: m.tenant_stats.iter().map(|ts| ts.done).collect(),
+                        });
+                    }
                     if !self.metrics.all_done() {
                         self.push_event(now + TELEMETRY_DT, EvKind::TelemetryTick);
                     }
@@ -1285,6 +1383,20 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         let label = self.shards[0].router.name().to_string();
         let shard_stats: Vec<ShardStats> =
             self.shards.iter().map(|s| s.stats.clone()).collect();
+        // fold the gate's per-tenant admission counters into the
+        // per-tenant stats so trace compare and obs export see them
+        if let Some(g) = self.gate.as_ref() {
+            for t in 0..self.metrics.tenant_stats.len() {
+                let (_, deg, forf) = g.tenant_counters(t as u16);
+                let ts = self.metrics.tenant_mut(t as u16);
+                ts.degraded = deg;
+                ts.credit_forfeits = forf;
+            }
+        }
+        let (degraded_total, credit_forfeits_total) = self
+            .gate
+            .as_ref()
+            .map_or((0, 0), |g| (g.degraded, g.credit_forfeits()));
         let m = self.metrics;
         let width_histogram: Vec<(f64, u64)> = self
             .cfg
@@ -1294,6 +1406,38 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             .cloned()
             .zip(m.width_histogram.iter().cloned())
             .collect();
+        let obs = self.obs.take().map(|mut o| {
+            o.reg.set_counter("span_retunes", self.events.span_retunes());
+            o.reg.set_counter("plan_clamps", m.plan_clamps);
+            o.reg.set_counter("requests_shed", m.shed);
+            o.reg.set_counter("requests_done", m.done);
+            o.reg.set_counter("sla_misses", m.sla_misses);
+            o.reg.set_gauge("sim_duration_s", now);
+            o.reg.set_gauge("total_energy_j", total_energy);
+            for (i, st) in shard_stats.iter().enumerate() {
+                let lbl = |base: &str| format!("{base}{{shard=\"{i}\"}}");
+                o.reg.set_counter(&lbl("shard_assigned"), st.assigned);
+                o.reg.set_counter(&lbl("shard_routed_heads"), st.routed_heads);
+                o.reg.set_counter(&lbl("shard_blocks"), st.blocks);
+                o.reg.set_counter(&lbl("shard_plan_clamps"), st.plan_clamps);
+                o.reg.set_counter(&lbl("shard_migrated_in"), st.migrated_in);
+                o.reg.set_counter(&lbl("shard_migrated_out"), st.migrated_out);
+                o.reg.set_gauge(&lbl("shard_max_depth"), st.max_depth as f64);
+            }
+            if let Some(g) = self.gate.as_ref() {
+                o.reg.set_counter("drr_shed_total", g.shed);
+                o.reg.set_counter("drr_degraded_total", g.degraded);
+                o.reg.set_counter("drr_credit_forfeits_total", g.credit_forfeits());
+                for t in 0..m.tenant_stats.len() {
+                    let (shed, deg, forf) = g.tenant_counters(t as u16);
+                    let lbl = |base: &str| format!("{base}{{tenant=\"{t}\"}}");
+                    o.reg.set_counter(&lbl("drr_shed"), shed);
+                    o.reg.set_counter(&lbl("drr_degraded"), deg);
+                    o.reg.set_counter(&lbl("drr_credit_forfeits"), forf);
+                }
+            }
+            o
+        });
         let outcome = RunOutcome {
             report: RunReport {
                 label,
@@ -1316,7 +1460,10 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             sla_misses: m.sla_misses,
             tenant_stats: m.tenant_stats,
             shed: m.shed,
+            degraded: degraded_total,
+            credit_forfeits: credit_forfeits_total,
             max_starvation_s: m.max_starvation_s,
+            obs,
         };
         // shard 0's router is the one handed back: for single-leader runs
         // it is *the* router; for shared-policy PPO every replica is a

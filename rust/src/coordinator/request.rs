@@ -81,6 +81,22 @@ pub struct Request {
     /// block aggregate. The trace `done` records this sum and the A/B
     /// harness pairs on it.
     pub energy_j: f64,
+    /// When the DRR gate released the request (== `arrival` when no
+    /// gate is configured), so gate wait = `admitted_at - arrival`.
+    pub admitted_at: f64,
+    /// Sim time this request's current block arrived at its server
+    /// (stamped at routing from the WLAN transfer model; device stage
+    /// time for a segment is completion − `arrived_at`).
+    pub arrived_at: f64,
+    /// Accumulated leader-queue wait across segments (admission/advance
+    /// → routing decision), for the obs stage decomposition.
+    pub leader_wait_s: f64,
+    /// Accumulated WLAN transfer wait across segments (routing → server
+    /// arrival).
+    pub net_wait_s: f64,
+    /// Accumulated on-server time across segments (server arrival →
+    /// batch completion, queueing included).
+    pub device_s: f64,
 }
 
 impl Request {
@@ -99,6 +115,11 @@ impl Request {
             block_tag: 0,
             block_size: 1,
             energy_j: 0.0,
+            admitted_at: arrival,
+            arrived_at: arrival,
+            leader_wait_s: 0.0,
+            net_wait_s: 0.0,
+            device_s: 0.0,
         }
     }
 

@@ -82,6 +82,9 @@ pub struct TelemetryLog {
     pub util_variance: Summary,
     pub per_server_util: Vec<Summary>,
     pub per_server_mem: Vec<Summary>,
+    /// Loaded-instance counts per server, sampled on the same tick —
+    /// the paper's instance-scaling mechanism, visible in run output.
+    pub per_server_instances: Vec<Summary>,
     /// Per-leader-shard FIFO depth, sampled on the same tick — the
     /// imbalance signal the cross-shard rebalancer acts on (one entry
     /// per shard; the engine sizes this at construction).
@@ -95,6 +98,7 @@ impl TelemetryLog {
             util_variance: Summary::default(),
             per_server_util: vec![Summary::default(); n_servers],
             per_server_mem: vec![Summary::default(); n_servers],
+            per_server_instances: vec![Summary::default(); n_servers],
             shard_depths: Vec::new(),
         }
     }
@@ -106,6 +110,7 @@ impl TelemetryLog {
             if i < self.per_server_util.len() {
                 self.per_server_util[i].record(s.util_pct);
                 self.per_server_mem[i].record(s.mem_util);
+                self.per_server_instances[i].record(s.instances as f64);
             }
         }
     }
@@ -190,6 +195,9 @@ mod tests {
         assert!(log.util_variance.mean() > 0.0);
         assert!((log.per_server_util[0].mean() - 30.0).abs() < 1e-9);
         assert!((log.per_server_util[1].mean() - 70.0).abs() < 1e-9);
+        // instance counts are logged too (snap() pins 2 per server)
+        assert_eq!(log.per_server_instances.len(), 2);
+        assert!((log.per_server_instances[0].mean() - 2.0).abs() < 1e-12);
     }
 
     #[test]

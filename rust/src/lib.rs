@@ -29,6 +29,9 @@
 //! * [`trace`] — trace record/replay + counterfactual router A/B:
 //!   byte-deterministic JSONL lifecycle traces, fixed-arrival replay,
 //!   paired per-request delta reports.
+//! * [`obs`] — deterministic observability: metrics registry,
+//!   request-lifecycle stage timing, bounded per-tick series, and the
+//!   `--metrics-out` / `repro report` bundle formats.
 //! * [`benchx`] — mini statistical bench harness (criterion substitute).
 
 pub mod benchx;
@@ -37,6 +40,7 @@ pub mod experiments;
 pub mod coordinator;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod ppo;
 pub mod runtime;
 pub mod sim;

@@ -12,6 +12,8 @@
 //!   trace-study   scenario-conditioned sweep: record one trace per
 //!                 registry scenario and trace-compare a PPO checkpoint
 //!                 against the algorithmic field (BENCH_trace_study.json)
+//!   report        render a --metrics-out bundle (stage-latency table,
+//!                 hottest ticks, per-tenant fairness trend) offline
 //!   tables        regenerate paper tables (I, II, III, IV, V)
 //!   figures       regenerate paper figures (1, 2, 3) as data series
 //!   train-ppo     train a PPO router, print learning curve, checkpoint it
@@ -23,6 +25,8 @@
 //!   repro simulate --router ppo --reward overfit --requests 5000
 //!   repro simulate --scenario hetero-mixed --router least-loaded
 //!   repro simulate --router random --requests 2000 --trace-out run.jsonl
+//!   repro simulate --scenario flash-crowd --metrics-out metrics.json
+//!   repro report --metrics-in metrics.json --top 8
 //!   repro replay --trace-in run.jsonl --router edf
 //!   repro trace-compare --trace-in run.jsonl --routers random,edf,ppo:ppo.json
 //!   repro trace-study --checkpoint ppo.json --requests 1500
@@ -73,6 +77,11 @@ fn main() -> anyhow::Result<()> {
         .describe("drr-quantum", "DRR credit accrued per admission tick per backlogged tenant")
         .describe("drr-burst-cap", "DRR credit ceiling (burstiness cap)")
         .describe("drr-queue-cap", "per-tenant admission queue depth; overflow is shed deterministically")
+        .describe("obs", "observability collector: true (default) | false (skip metrics/stages/series; sim results identical either way)")
+        .describe("obs-series-cap", "per-tick time-series ring capacity; overflow decimates deterministically to every 2nd row (default 4096, min 2)")
+        .describe("metrics-out", "write the observability bundle (versioned JSON + Prometheus-style .prom sibling) after the run (simulate, replay)")
+        .describe("metrics-in", "render a previously written metrics bundle (report)")
+        .describe("top", "hottest ticks to list in `repro report` (default 5)")
         .describe("trace-out", "record the run as a JSONL trace at this path")
         .describe("trace-in", "replay/compare a recorded JSONL trace (replay, trace-compare)")
         .describe("routers", "comma list for trace-compare/trace-study; first is the baseline; ppo:<path> loads a checkpoint entrant (default random,edf)")
@@ -95,6 +104,7 @@ fn main() -> anyhow::Result<()> {
         Some("replay") => cmd_replay(&args),
         Some("trace-compare") => cmd_trace_compare(&args),
         Some("trace-study") => cmd_trace_study(&args),
+        Some("report") => cmd_report(&args),
         Some("tables") => cmd_tables(&args),
         Some("figures") => cmd_figures(&args),
         Some("train-ppo") => cmd_train_ppo(&args),
@@ -213,6 +223,12 @@ fn print_outcome(outcome: &RunOutcome) {
             outcome.jain_throughput()
         );
     }
+    if outcome.degraded > 0 || outcome.credit_forfeits > 0 {
+        println!(
+            "drr gate: degraded {} to slim width, credit forfeits {}",
+            outcome.degraded, outcome.credit_forfeits
+        );
+    }
     if outcome.tenant_stats.len() > 1 {
         for (t, s) in outcome.tenant_stats.iter().enumerate() {
             println!(
@@ -240,6 +256,45 @@ fn print_outcome(outcome: &RunOutcome) {
     if outcome.plan_clamps > 0 {
         println!("plan clamps (router fields repaired): {}", outcome.plan_clamps);
     }
+}
+
+/// Write the observability bundle if `--metrics-out` was given: the
+/// versioned JSON at the requested path plus a Prometheus-style text
+/// sibling (`.json` swapped for `.prom`, else `.prom` appended). Both
+/// are byte-deterministic for a fixed (seed, scenario, leaders) so CI
+/// can `cmp` bundles across reruns and `--plan-threads`.
+fn write_metrics(
+    args: &Args,
+    cfg: &Config,
+    router: &str,
+    outcome: &RunOutcome,
+) -> anyhow::Result<()> {
+    let Some(path) = args.get("metrics-out") else {
+        return Ok(());
+    };
+    let obs = outcome.obs.as_ref().ok_or_else(|| {
+        anyhow::anyhow!(
+            "--metrics-out needs the observability collector (remove `--obs false`)"
+        )
+    })?;
+    let meta = slim_scheduler::obs::BundleMeta {
+        scenario: cfg.scenario.clone().unwrap_or_else(|| "paper".to_string()),
+        seed: cfg.seed,
+        requests: cfg.workload.total_requests,
+        leaders: cfg.shard.leaders,
+        router: router.to_string(),
+    };
+    let mut text = slim_scheduler::obs::bundle_json(obs, &meta).to_string_pretty();
+    text.push('\n');
+    std::fs::write(path, text)?;
+    let prom_path = match path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.prom"),
+        None => format!("{path}.prom"),
+    };
+    let prom = slim_scheduler::obs::prometheus_text(obs, &meta);
+    std::fs::write(&prom_path, prom)?;
+    println!("metrics bundle written to {path} (+ {prom_path})");
+    Ok(())
 }
 
 /// Run one engine episode of `router_name` under `cfg`, optionally fed
@@ -308,6 +363,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let trace_out = args.get("trace-out").map(str::to_string);
     let outcome = run_routed(args, &cfg, &router, None, &trace_out)?;
     print_outcome(&outcome);
+    write_metrics(args, &cfg, &router, &outcome)?;
     Ok(())
 }
 
@@ -340,6 +396,20 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
     let outcome =
         run_routed(args, &cfg, &router, Some(trace.arrivals_arena()), &trace_out)?;
     print_outcome(&outcome);
+    write_metrics(args, &cfg, &router, &outcome)?;
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .get("metrics-in")
+        .ok_or_else(|| anyhow::anyhow!("report needs --metrics-in <metrics.json>"))?;
+    let text = std::fs::read_to_string(path)?;
+    let bundle = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let top_k = args.usize_or("top", 5);
+    let rendered = slim_scheduler::obs::render_report(&bundle, top_k)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    print!("{rendered}");
     Ok(())
 }
 

@@ -1,0 +1,391 @@
+//! Metrics-bundle serialization and the `repro report` renderer.
+//!
+//! A bundle is versioned JSON (`metrics_version`) carrying the full
+//! registry, stage histograms, and per-tick series, plus a
+//! Prometheus-style text exposition for scrape-shaped consumers. Both
+//! are pure functions of the collector and run metadata — the
+//! determinism tests `cmp` them byte for byte across thread counts.
+//!
+//! Deliberately absent from `meta`: `plan_threads` / `eval_threads` and
+//! anything wall-clock. Embedding either would break the byte-identity
+//! guarantee the bundle exists to demonstrate.
+
+use super::hist::{bucket_upper_edge, LogHistogram, NUM_BUCKETS};
+use super::registry::split_labels;
+use super::stage::STAGE_NAMES;
+use super::ObsCollector;
+use crate::coordinator::core::jain_index;
+use crate::utilx::json::{obj, Json};
+use std::fmt::Write as _;
+
+/// Bump when the bundle layout changes shape.
+pub const METRICS_VERSION: u64 = 1;
+
+/// Run identity stamped into every bundle. Thread counts are excluded
+/// on purpose (see module docs).
+#[derive(Clone, Debug)]
+pub struct BundleMeta {
+    pub scenario: String,
+    pub seed: u64,
+    pub requests: usize,
+    pub leaders: usize,
+    pub router: String,
+}
+
+impl BundleMeta {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("leaders", Json::Num(self.leaders as f64)),
+            ("router", Json::Str(self.router.clone())),
+        ])
+    }
+}
+
+/// The versioned JSON bundle `--metrics-out` writes.
+pub fn bundle_json(obs: &ObsCollector, meta: &BundleMeta) -> Json {
+    obj(vec![
+        ("metrics_version", Json::Num(METRICS_VERSION as f64)),
+        ("meta", meta.to_json()),
+        ("registry", obs.reg.to_json()),
+        ("stages", obs.stages.to_json()),
+        ("series", obs.series.to_json()),
+    ])
+}
+
+fn prom_hist(out: &mut String, name: &str, h: &LogHistogram) {
+    let (base, labels) = split_labels(name);
+    let _ = writeln!(out, "# TYPE {base} histogram");
+    let labels_inner = labels.trim_start_matches('{').trim_end_matches('}');
+    let with = |le: &str| {
+        if labels_inner.is_empty() {
+            format!("{{le=\"{le}\"}}")
+        } else {
+            format!("{{{labels_inner},le=\"{le}\"}}")
+        }
+    };
+    let mut cum = h.underflow;
+    if cum > 0 {
+        let _ = writeln!(out, "{base}_bucket{} {cum}", with("0"));
+    }
+    for idx in 0..NUM_BUCKETS {
+        let c = h.bucket_count(idx);
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        let le = bucket_upper_edge(idx);
+        let le_s = if le.is_infinite() {
+            "+Inf".to_string()
+        } else {
+            format!("{le}")
+        };
+        let _ = writeln!(out, "{base}_bucket{} {cum}", with(&le_s));
+    }
+    let _ = writeln!(out, "{base}_bucket{} {}", with("+Inf"), h.count);
+    let _ = writeln!(out, "{base}_sum{labels} {}", h.sum);
+    let _ = writeln!(out, "{base}_count{labels} {}", h.count);
+}
+
+/// Prometheus-style text exposition: every counter and gauge, every
+/// registry histogram, and the global stage histograms (the per-tenant
+/// stage breakdown lives in the JSON bundle only).
+pub fn prometheus_text(obs: &ObsCollector, meta: &BundleMeta) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# slim_scheduler metrics v{METRICS_VERSION}");
+    let _ = writeln!(
+        out,
+        "# meta scenario={} seed={} requests={} leaders={} router={}",
+        meta.scenario, meta.seed, meta.requests, meta.leaders, meta.router
+    );
+    let mut last_base = String::new();
+    for (name, v) in obs.reg.counters() {
+        let (base, _) = split_labels(name);
+        if base != last_base {
+            let _ = writeln!(out, "# TYPE {base} counter");
+            last_base = base.to_string();
+        }
+        let _ = writeln!(out, "{name} {v}");
+    }
+    for (name, v) in obs.reg.gauges() {
+        let (base, _) = split_labels(name);
+        if base != last_base {
+            let _ = writeln!(out, "# TYPE {base} gauge");
+            last_base = base.to_string();
+        }
+        let _ = writeln!(out, "{name} {v}");
+    }
+    for (name, h) in obs.reg.hists() {
+        prom_hist(&mut out, name, h);
+    }
+    for (stage, h) in STAGE_NAMES.iter().zip(obs.stages.global.hists()) {
+        prom_hist(
+            &mut out,
+            &format!("stage_seconds{{stage=\"{stage}\"}}"),
+            h,
+        );
+    }
+    out
+}
+
+fn fmt_ms(s: f64) -> String {
+    format!("{:.3}", s * 1e3)
+}
+
+/// Render a human-readable report from a parsed bundle: stage-latency
+/// table, top-k hottest ticks, per-tenant fairness trend, and the
+/// counter dump. Errors name the missing/malformed field.
+pub fn render_report(bundle: &Json, top_k: usize) -> Result<String, String> {
+    let version = bundle
+        .get("metrics_version")
+        .and_then(Json::as_f64)
+        .ok_or("bundle missing metrics_version")? as u64;
+    if version != METRICS_VERSION {
+        return Err(format!(
+            "unsupported metrics_version {version} (expected {METRICS_VERSION})"
+        ));
+    }
+    let meta = bundle.get("meta").ok_or("bundle missing meta")?;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "metrics bundle v{version} — scenario={} seed={} requests={} leaders={} router={}",
+        meta.get("scenario").and_then(Json::as_str).unwrap_or("?"),
+        meta.get("seed").and_then(Json::as_f64).unwrap_or(0.0),
+        meta.get("requests").and_then(Json::as_f64).unwrap_or(0.0),
+        meta.get("leaders").and_then(Json::as_f64).unwrap_or(0.0),
+        meta.get("router").and_then(Json::as_str).unwrap_or("?"),
+    );
+
+    // ---- stage-latency table -------------------------------------------
+    let stages = bundle.get("stages").ok_or("bundle missing stages")?;
+    let global = stages.get("global").ok_or("stages missing global")?;
+    let _ = writeln!(out, "\nstage latency (global, ms):");
+    let _ = writeln!(
+        out,
+        "  {:<12} {:>9} {:>10} {:>10} {:>10} {:>10}",
+        "stage", "count", "mean", "p50", "p99", "max"
+    );
+    for name in STAGE_NAMES {
+        let h = global
+            .get(name)
+            .and_then(LogHistogram::from_json)
+            .ok_or_else(|| format!("stages.global missing {name}"))?;
+        let _ = writeln!(
+            out,
+            "  {:<12} {:>9} {:>10} {:>10} {:>10} {:>10}",
+            name,
+            h.count,
+            fmt_ms(h.mean()),
+            fmt_ms(h.quantile(0.50)),
+            fmt_ms(h.quantile(0.99)),
+            fmt_ms(h.max),
+        );
+    }
+
+    // ---- per-tenant e2e ------------------------------------------------
+    let tenants = stages
+        .get("tenants")
+        .and_then(Json::as_arr)
+        .ok_or("stages missing tenants")?;
+    if tenants.len() > 1 {
+        let _ = writeln!(out, "\nper-tenant e2e (ms):");
+        let _ = writeln!(
+            out,
+            "  {:<8} {:>9} {:>10} {:>10} {:>10}",
+            "tenant", "count", "mean", "p99", "gate_mean"
+        );
+        for (t, set) in tenants.iter().enumerate() {
+            let e2e = set
+                .get("e2e")
+                .and_then(LogHistogram::from_json)
+                .ok_or_else(|| format!("tenant {t} missing e2e"))?;
+            let gate = set
+                .get("gate_wait")
+                .and_then(LogHistogram::from_json)
+                .ok_or_else(|| format!("tenant {t} missing gate_wait"))?;
+            let _ = writeln!(
+                out,
+                "  {:<8} {:>9} {:>10} {:>10} {:>10}",
+                t,
+                e2e.count,
+                fmt_ms(e2e.mean()),
+                fmt_ms(e2e.quantile(0.99)),
+                fmt_ms(gate.mean()),
+            );
+        }
+    }
+
+    // ---- hottest ticks -------------------------------------------------
+    let series = bundle.get("series").ok_or("bundle missing series")?;
+    let rows = series
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or("series missing rows")?;
+    // columns: t, shard_depths, util, power, instances, gate_pending, shed, done, tenant_done
+    let mut ticks: Vec<(f64, f64, f64, f64)> = Vec::with_capacity(rows.len());
+    let mut last_tenant_done: Vec<Vec<f64>> = Vec::new();
+    for (i, r) in rows.iter().enumerate() {
+        let xs = r.as_arr().ok_or_else(|| format!("series row {i} not an array"))?;
+        if xs.len() != 9 {
+            return Err(format!("series row {i} has {} columns", xs.len()));
+        }
+        let t = xs[0].as_f64().ok_or("bad tick t")?;
+        let depth: f64 = xs[1].as_f64_vec().ok_or("bad shard_depths")?.iter().sum();
+        let util = xs[2]
+            .as_f64_vec()
+            .ok_or("bad server_util")?
+            .iter()
+            .fold(0.0f64, |a, &b| a.max(b));
+        let gate = xs[5].as_f64().ok_or("bad gate_pending")?;
+        ticks.push((t, depth, util, gate));
+        last_tenant_done.push(xs[8].as_f64_vec().ok_or("bad tenant_done")?);
+    }
+    let mut ranked: Vec<usize> = (0..ticks.len()).collect();
+    ranked.sort_by(|&a, &b| {
+        ticks[b]
+            .1
+            .total_cmp(&ticks[a].1)
+            .then(ticks[a].0.total_cmp(&ticks[b].0))
+    });
+    let _ = writeln!(
+        out,
+        "\nhottest ticks (of {} retained, stride {}):",
+        rows.len(),
+        series.get("stride").and_then(Json::as_f64).unwrap_or(1.0)
+    );
+    let _ = writeln!(
+        out,
+        "  {:<10} {:>11} {:>10} {:>12}",
+        "t", "total_depth", "max_util", "gate_pending"
+    );
+    for &i in ranked.iter().take(top_k) {
+        let (t, depth, util, gate) = ticks[i];
+        let _ = writeln!(
+            out,
+            "  {:<10.3} {:>11} {:>10.1} {:>12}",
+            t, depth as u64, util, gate as u64
+        );
+    }
+
+    // ---- per-tenant fairness trend -------------------------------------
+    let multi_tenant = last_tenant_done
+        .last()
+        .is_some_and(|d| d.len() > 1 && d.iter().sum::<f64>() > 0.0);
+    if multi_tenant {
+        let _ = writeln!(
+            out,
+            "\nfairness trend (Jain index of cumulative per-tenant completions):"
+        );
+        let n = last_tenant_done.len();
+        let samples = 10.min(n);
+        for k in 0..samples {
+            let i = if samples == 1 { n - 1 } else { k * (n - 1) / (samples - 1) };
+            let jain = jain_index(&last_tenant_done[i]);
+            let bar_len = (jain * 40.0).round() as usize;
+            let _ = writeln!(
+                out,
+                "  t={:<9.3} jain={:.4} {}",
+                ticks[i].0,
+                jain,
+                "#".repeat(bar_len)
+            );
+        }
+    }
+
+    // ---- counters ------------------------------------------------------
+    if let Some(counters) = bundle
+        .get("registry")
+        .and_then(|r| r.get("counters"))
+    {
+        if let Json::Obj(pairs) = counters {
+            let _ = writeln!(out, "\ncounters:");
+            for (name, v) in pairs {
+                let _ = writeln!(
+                    out,
+                    "  {:<44} {}",
+                    name,
+                    v.as_f64().unwrap_or(0.0) as u64
+                );
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::series::TickRow;
+
+    fn tiny_collector() -> ObsCollector {
+        let mut o = ObsCollector::new(2, &["arrival", "done"], 64);
+        o.on_event(0);
+        o.on_event(1);
+        o.on_batch(0, 4);
+        o.on_done(0, 0.0, 0.001, 0.002, 0.010, 0.013);
+        o.on_done(1, 0.2, 0.001, 0.002, 0.010, 0.213);
+        o.on_tick(TickRow {
+            t: 0.05,
+            shard_depths: vec![3, 1],
+            server_util: vec![55.0, 10.0],
+            server_power: vec![3.3, 1.1],
+            server_instances: vec![2, 1],
+            gate_pending: 1,
+            shed: 0,
+            done: 2,
+            tenant_done: vec![1, 1],
+        });
+        o.reg.set_counter("span_retunes", 2);
+        o
+    }
+
+    fn meta() -> BundleMeta {
+        BundleMeta {
+            scenario: "unit".into(),
+            seed: 7,
+            requests: 2,
+            leaders: 2,
+            router: "edf".into(),
+        }
+    }
+
+    #[test]
+    fn bundle_is_versioned_and_byte_stable() {
+        let o = tiny_collector();
+        let a = bundle_json(&o, &meta()).to_string_pretty();
+        let b = bundle_json(&o, &meta()).to_string_pretty();
+        assert_eq!(a, b);
+        assert!(a.contains("\"metrics_version\": 1"));
+        assert!(a.contains("\"span_retunes\""));
+    }
+
+    #[test]
+    fn prometheus_text_has_types_and_stage_histograms() {
+        let o = tiny_collector();
+        let text = prometheus_text(&o, &meta());
+        assert!(text.contains("# TYPE events_popped_total counter"));
+        assert!(text.contains("stage_seconds_bucket{stage=\"e2e\",le=\"+Inf\"} 2"));
+        assert!(text.contains("stage_seconds_count{stage=\"e2e\"} 2"));
+    }
+
+    #[test]
+    fn report_round_trips_from_bundle_json() {
+        let o = tiny_collector();
+        let json = bundle_json(&o, &meta()).to_string_pretty();
+        let parsed = Json::parse(&json).expect("bundle parses");
+        let report = render_report(&parsed, 3).expect("report renders");
+        assert!(report.contains("stage latency"), "{report}");
+        assert!(report.contains("hottest ticks"), "{report}");
+        assert!(report.contains("e2e"), "{report}");
+    }
+
+    #[test]
+    fn report_rejects_wrong_version() {
+        let parsed = Json::parse("{\"metrics_version\": 99}").unwrap();
+        let err = render_report(&parsed, 3).unwrap_err();
+        assert!(err.contains("unsupported"), "{err}");
+    }
+}

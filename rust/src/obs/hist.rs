@@ -1,0 +1,325 @@
+//! Deterministic log-bucketed histogram.
+//!
+//! `metrics::Summary` estimates percentiles from an RNG-fed reservoir —
+//! fine for run reports, useless for byte-stable metrics export. A
+//! [`LogHistogram`] is a pure function of the recorded multiset: values
+//! land in fixed log-spaced buckets derived from their IEEE-754 bit
+//! pattern (no libm, no platform-dependent rounding), so two runs that
+//! record the same values always serialize to identical bytes.
+//!
+//! Layout: 4 sub-buckets per octave (the top two mantissa bits) over the
+//! 128 octaves `[2^-64, 2^64)` — ~19 % relative resolution, 512 buckets.
+//! Zero, negatives, subnormals and NaN land in a dedicated underflow
+//! bucket; `+inf` and anything at or beyond `2^64` clamp into the top
+//! bucket. Exact count/sum/min/max ride alongside the buckets.
+
+use crate::utilx::json::{obj, Json};
+
+/// Sub-buckets per octave (top two mantissa bits).
+const SUBS: usize = 4;
+/// Octaves covered: `2^-64 ..= 2^63` (biased exponents 959..=1086).
+const OCTAVES: usize = 128;
+/// Biased-exponent offset of octave 0 (`2^-64`).
+const EXP_LO: i64 = 1023 - 64;
+/// Total bucket count.
+pub const NUM_BUCKETS: usize = OCTAVES * SUBS;
+
+/// Deterministic log-bucketed histogram (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogHistogram {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Values with no positive-normal bucket: zero, negatives,
+    /// subnormals, anything below `2^-64`, and NaN.
+    pub underflow: u64,
+    buckets: Vec<u64>,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Bucket index for `v`, or `None` for the underflow bucket.
+fn bucket_index(v: f64) -> Option<usize> {
+    if v.is_nan() || v <= 0.0 {
+        return None;
+    }
+    let bits = v.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as i64;
+    if exp == 0 {
+        // subnormal: below every bucket edge
+        return None;
+    }
+    let octave = exp - EXP_LO;
+    if octave < 0 {
+        return None;
+    }
+    if octave >= OCTAVES as i64 {
+        // huge finite values and +inf clamp into the top bucket
+        return Some(NUM_BUCKETS - 1);
+    }
+    let sub = ((bits >> 50) & 0x3) as usize;
+    Some(octave as usize * SUBS + sub)
+}
+
+/// Exact lower edge of bucket `idx`: `2^(octave-64) · (1 + sub/4)`,
+/// reconstructed bit-exactly (the edge is its own bucket's smallest
+/// member, so `bucket_index(lower_edge(i)) == i`).
+pub fn bucket_lower_edge(idx: usize) -> f64 {
+    let octave = (idx / SUBS) as u64;
+    let sub = (idx % SUBS) as u64;
+    f64::from_bits(((octave + EXP_LO as u64) << 52) | (sub << 50))
+}
+
+/// Exclusive upper edge of bucket `idx` (`+inf` for the top bucket).
+pub fn bucket_upper_edge(idx: usize) -> f64 {
+    if idx + 1 >= NUM_BUCKETS {
+        f64::INFINITY
+    } else {
+        bucket_lower_edge(idx + 1)
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram {
+            count: 0,
+            sum: 0.0,
+            min: 0.0,
+            max: 0.0,
+            underflow: 0,
+            buckets: vec![0; NUM_BUCKETS],
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            if v < self.min {
+                self.min = v;
+            }
+            if v > self.max {
+                self.max = v;
+            }
+        }
+        self.count += 1;
+        self.sum += v;
+        match bucket_index(v) {
+            Some(i) => self.buckets[i] += 1,
+            None => self.underflow += 1,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count > 0 {
+            self.sum / self.count as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Count in bucket `idx` (tests / export).
+    pub fn bucket_count(&self, idx: usize) -> u64 {
+        self.buckets[idx]
+    }
+
+    /// Deterministic quantile estimate: the lower edge of the bucket
+    /// holding the `q`-th ranked value (0.0 for underflow ranks). Exact
+    /// to one bucket width — ~19 % relative — which is what a log
+    /// histogram buys; `min`/`max` remain exact.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target =
+            ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = self.underflow;
+        if cum >= target {
+            return 0.0;
+        }
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_lower_edge(i);
+            }
+        }
+        self.max
+    }
+
+    /// Sparse `(lower_edge, count)` pairs over the non-empty buckets, in
+    /// ascending edge order.
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_lower_edge(i), c))
+            .collect()
+    }
+
+    /// Versioned-bundle JSON: exact scalars plus the sparse bucket list.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum)),
+            ("min", Json::Num(self.min)),
+            ("max", Json::Num(self.max)),
+            ("underflow", Json::Num(self.underflow as f64)),
+            (
+                "buckets",
+                Json::Arr(
+                    self.nonzero_buckets()
+                        .into_iter()
+                        .map(|(edge, c)| {
+                            Json::Arr(vec![
+                                Json::Num(edge),
+                                Json::Num(c as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild from [`LogHistogram::to_json`] output (the `repro report`
+    /// path). Bucket edges map back to their own buckets bit-exactly, so
+    /// a JSON round trip preserves every bucket count.
+    pub fn from_json(json: &Json) -> Option<LogHistogram> {
+        let mut h = LogHistogram::new();
+        h.count = json.get("count")?.as_f64()? as u64;
+        h.sum = json.get("sum")?.as_f64()?;
+        h.min = json.get("min")?.as_f64()?;
+        h.max = json.get("max")?.as_f64()?;
+        h.underflow = json.get("underflow")?.as_f64()? as u64;
+        for pair in json.get("buckets")?.as_arr()? {
+            let xs = pair.as_arr()?;
+            if xs.len() != 2 {
+                return None;
+            }
+            let edge = xs[0].as_f64()?;
+            let c = xs[1].as_f64()? as u64;
+            h.buckets[bucket_index(edge)?] += c;
+        }
+        Some(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketing_is_a_pure_function_of_the_bits() {
+        // same value, any order, any interleaving: identical buckets
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let vals = [0.003, 7.5, 0.003, 1e-6, 42.0, 0.25, 7.5];
+        for &v in &vals {
+            a.record(v);
+        }
+        for &v in vals.iter().rev() {
+            b.record(v);
+        }
+        assert_eq!(a, b);
+        assert_eq!(a.to_json().to_string_compact(), b.to_json().to_string_compact());
+    }
+
+    #[test]
+    fn zero_negative_and_nan_land_in_underflow() {
+        let mut h = LogHistogram::new();
+        h.record(0.0);
+        h.record(-1.5);
+        h.record(f64::NAN);
+        assert_eq!(h.underflow, 3);
+        assert_eq!(h.count, 3);
+        assert!(h.nonzero_buckets().is_empty());
+    }
+
+    #[test]
+    fn subnormals_underflow_instead_of_mis_bucketing() {
+        let mut h = LogHistogram::new();
+        h.record(1e-310); // subnormal
+        h.record(f64::MIN_POSITIVE / 4.0);
+        h.record(1e-20); // normal but below 2^-64
+        assert_eq!(h.underflow, 3);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn huge_values_clamp_into_the_top_bucket() {
+        let mut h = LogHistogram::new();
+        h.record(f64::MAX);
+        h.record(f64::INFINITY);
+        h.record(1e300);
+        assert_eq!(h.underflow, 0);
+        assert_eq!(h.bucket_count(NUM_BUCKETS - 1), 3);
+        assert_eq!(h.max, f64::INFINITY);
+    }
+
+    #[test]
+    fn edges_are_their_own_buckets() {
+        for idx in [0, 1, 5, 255, 256, NUM_BUCKETS - 2, NUM_BUCKETS - 1] {
+            let edge = bucket_lower_edge(idx);
+            assert_eq!(bucket_index(edge), Some(idx), "edge {edge} of {idx}");
+            // just under the edge falls in the previous bucket
+            let below = f64::from_bits(edge.to_bits() - 1);
+            if idx > 0 {
+                assert_eq!(bucket_index(below), Some(idx - 1));
+            }
+        }
+        assert_eq!(bucket_lower_edge(0), 2.0f64.powi(-64));
+        assert!(bucket_upper_edge(NUM_BUCKETS - 1).is_infinite());
+    }
+
+    #[test]
+    fn relative_error_is_one_sub_bucket() {
+        // every value sits within [edge, edge·1.25) of its bucket
+        let mut x = 1.3e-9;
+        while x < 1e9 {
+            let idx = bucket_index(x).unwrap();
+            let lo = bucket_lower_edge(idx);
+            let hi = bucket_upper_edge(idx);
+            assert!(lo <= x && x < hi, "{x} not in [{lo}, {hi})");
+            assert!(hi / lo <= 1.25 + 1e-12);
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn quantiles_walk_the_cumulative_counts() {
+        let mut h = LogHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count, 100);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        // bucket resolution: within 25 % below the true quantile
+        assert!(p50 <= 50.0 && p50 >= 40.0, "{p50}");
+        assert!(p99 <= 99.0 && p99 >= 79.0, "{p99}");
+        assert_eq!(h.min, 1.0);
+        assert_eq!(h.max, 100.0);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_buckets() {
+        let mut h = LogHistogram::new();
+        for &v in &[0.0, 1e-310, 0.004, 0.004, 9.0, 3.2e7, f64::MAX] {
+            h.record(v);
+        }
+        let parsed = LogHistogram::from_json(&h.to_json()).expect("parses");
+        assert_eq!(parsed, h);
+    }
+}

@@ -1,0 +1,158 @@
+//! Deterministic observability: registry, stage timing, tick series.
+//!
+//! Everything in this module runs on the sim clock, draws no RNG, and
+//! serializes in registration/insertion order, so for a fixed seed and
+//! leader count the exported bundle is byte-identical across
+//! `--plan-threads`, `--eval-threads`, and repeated runs — the same
+//! discipline the trace and evaluation layers already follow. (Across
+//! *different* `--leaders` values the sim itself — and therefore the
+//! per-shard columns — legitimately differs; determinism is per
+//! topology.)
+//!
+//! * [`hist`] — log-bucketed [`LogHistogram`]: percentiles without the
+//!   RNG reservoir `metrics::Summary` uses.
+//! * [`registry`] — named counters/gauges/histograms behind typed ids;
+//!   one array bump per hot-path event.
+//! * [`stage`] — request-lifecycle latency decomposition
+//!   (gate → leader → network → device), global and per tenant.
+//! * [`series`] — bounded per-tick ring of load snapshots, the
+//!   `SystemLoad`-shaped feed for a future adaptive control plane.
+//! * [`export`] — versioned JSON bundle + Prometheus-style text, and
+//!   the `repro report` renderer.
+//!
+//! The engine owns one [`ObsCollector`] (when `cfg.obs.enabled`) and
+//! hands it back in `RunOutcome::obs`; callers serialize it with
+//! [`bundle_json`] / [`prometheus_text`].
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod series;
+pub mod stage;
+
+pub use export::{bundle_json, prometheus_text, render_report, BundleMeta, METRICS_VERSION};
+pub use hist::LogHistogram;
+pub use registry::{CounterId, HistId, MetricsRegistry};
+pub use series::{TickRow, TickSeries};
+pub use stage::{StageAccum, StageSet, STAGE_NAMES};
+
+/// The engine-side collector: pre-registered hot-path ids plus the
+/// stage accumulator and tick series. Cheap to carry as
+/// `Option<ObsCollector>` — every hot-path hook is one id-indexed bump.
+#[derive(Clone, Debug)]
+pub struct ObsCollector {
+    pub reg: MetricsRegistry,
+    pub stages: StageAccum,
+    pub series: TickSeries,
+    ev_total: CounterId,
+    ev_kinds: Vec<CounterId>,
+    migrations: CounterId,
+    batch_hists: Vec<HistId>,
+}
+
+impl ObsCollector {
+    /// `kind_names` maps the engine's event-kind index to a metric
+    /// label; `n_servers` sizes the per-device batch histograms.
+    pub fn new(n_servers: usize, kind_names: &[&str], series_cap: usize) -> Self {
+        let mut reg = MetricsRegistry::new();
+        let ev_total = reg.counter("events_popped_total");
+        let ev_kinds = kind_names
+            .iter()
+            .map(|k| reg.counter(&format!("events_popped{{kind=\"{k}\"}}")))
+            .collect();
+        let migrations = reg.counter("rebalance_migrations_total");
+        let batch_hists = (0..n_servers)
+            .map(|s| reg.hist(&format!("batch_size{{server=\"{s}\"}}")))
+            .collect();
+        ObsCollector {
+            reg,
+            stages: StageAccum::default(),
+            series: TickSeries::new(series_cap),
+            ev_total,
+            ev_kinds,
+            migrations,
+            batch_hists,
+        }
+    }
+
+    /// Count one popped event of the given kind index.
+    #[inline]
+    pub fn on_event(&mut self, kind: usize) {
+        self.reg.inc(self.ev_total, 1);
+        if let Some(&id) = self.ev_kinds.get(kind) {
+            self.reg.inc(id, 1);
+        }
+    }
+
+    /// Count cross-shard request migrations from one rebalance pass.
+    #[inline]
+    pub fn on_migrations(&mut self, n: u64) {
+        if n > 0 {
+            self.reg.inc(self.migrations, n);
+        }
+    }
+
+    /// Record a dispatched batch size on `server`.
+    #[inline]
+    pub fn on_batch(&mut self, server: usize, size: usize) {
+        if let Some(&id) = self.batch_hists.get(server) {
+            self.reg.observe(id, size as f64);
+        }
+    }
+
+    /// Fold a completed request's stage decomposition into the
+    /// global and per-tenant histograms.
+    #[inline]
+    pub fn on_done(
+        &mut self,
+        tenant: u16,
+        gate: f64,
+        leader: f64,
+        net: f64,
+        device: f64,
+        e2e: f64,
+    ) {
+        self.stages.record(tenant, gate, leader, net, device, e2e);
+    }
+
+    /// Offer a telemetry-tick snapshot to the bounded series.
+    pub fn on_tick(&mut self, row: TickRow) {
+        self.series.push(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collector_prereg_counts_in_order() {
+        let mut o = ObsCollector::new(2, &["arrival", "batch_done"], 16);
+        o.on_event(0);
+        o.on_event(0);
+        o.on_event(1);
+        o.on_event(99); // unknown kinds count in the total only
+        o.on_migrations(0);
+        o.on_migrations(3);
+        o.on_batch(1, 8);
+        o.on_batch(7, 1); // out-of-range server is ignored
+        assert_eq!(o.reg.counter_value("events_popped_total"), Some(4));
+        assert_eq!(
+            o.reg.counter_value("events_popped{kind=\"arrival\"}"),
+            Some(2)
+        );
+        assert_eq!(
+            o.reg.counter_value("events_popped{kind=\"batch_done\"}"),
+            Some(1)
+        );
+        assert_eq!(o.reg.counter_value("rebalance_migrations_total"), Some(3));
+        assert_eq!(
+            o.reg.hist_ref("batch_size{server=\"1\"}").unwrap().count,
+            1
+        );
+        assert_eq!(
+            o.reg.hist_ref("batch_size{server=\"0\"}").unwrap().count,
+            0
+        );
+    }
+}

@@ -1,0 +1,190 @@
+//! Named-metric registry: counters, gauges, log-bucketed histograms.
+//!
+//! Hot paths register once at construction and hold typed ids
+//! ([`CounterId`] / [`HistId`] — plain vec indices), so a hot-path
+//! increment is one bounds-checked array bump with no hashing or string
+//! work. Export walks the vecs in registration order, which makes the
+//! serialized registry a pure function of the (deterministic) program
+//! order — no `HashMap` iteration anywhere near the output.
+//!
+//! Names follow the Prometheus idiom: a bare base name
+//! (`events_popped_total`) or a base name with a label set baked into
+//! the string (`drr_shed{tenant="3"}`). The text exposition groups
+//! `# TYPE` lines by the prefix before `{`.
+
+use super::hist::LogHistogram;
+use crate::utilx::json::{obj, Json};
+
+/// Handle to a registered counter (index into the registry's vec).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Handle to a registered histogram.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistId(usize);
+
+/// Insertion-ordered metrics store (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Vec<(String, u64)>,
+    gauges: Vec<(String, f64)>,
+    hists: Vec<(String, LogHistogram)>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or find) a counter by name.
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        if let Some(i) = self.counters.iter().position(|(n, _)| n == name) {
+            return CounterId(i);
+        }
+        self.counters.push((name.to_string(), 0));
+        CounterId(self.counters.len() - 1)
+    }
+
+    #[inline]
+    pub fn inc(&mut self, id: CounterId, n: u64) {
+        self.counters[id.0].1 += n;
+    }
+
+    /// Find-or-create by name and overwrite — for end-of-run totals
+    /// harvested from existing engine state, not hot-path use.
+    pub fn set_counter(&mut self, name: &str, v: u64) {
+        let id = self.counter(name);
+        self.counters[id.0].1 = v;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        if let Some(g) = self.gauges.iter_mut().find(|(n, _)| n == name) {
+            g.1 = v;
+        } else {
+            self.gauges.push((name.to_string(), v));
+        }
+    }
+
+    /// Register (or find) a histogram by name.
+    pub fn hist(&mut self, name: &str) -> HistId {
+        if let Some(i) = self.hists.iter().position(|(n, _)| n == name) {
+            return HistId(i);
+        }
+        self.hists.push((name.to_string(), LogHistogram::new()));
+        HistId(self.hists.len() - 1)
+    }
+
+    #[inline]
+    pub fn observe(&mut self, id: HistId, v: f64) {
+        self.hists[id.0].1.record(v);
+    }
+
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn hist_ref(&self, name: &str) -> Option<&LogHistogram> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    pub fn counters(&self) -> &[(String, u64)] {
+        &self.counters
+    }
+
+    pub fn gauges(&self) -> &[(String, f64)] {
+        &self.gauges
+    }
+
+    pub fn hists(&self) -> &[(String, LogHistogram)] {
+        &self.hists
+    }
+
+    /// Bundle JSON: `{counters: {...}, gauges: {...}, histograms: {...}}`
+    /// in registration order.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            (
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(n, v)| (n.clone(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "gauges",
+                Json::Obj(
+                    self.gauges
+                        .iter()
+                        .map(|(n, v)| (n.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+            (
+                "histograms",
+                Json::Obj(
+                    self.hists
+                        .iter()
+                        .map(|(n, h)| (n.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Split `drr_shed{tenant="3"}` into `("drr_shed", "{tenant=\"3\"}")`;
+/// bare names yield an empty label part.
+pub(crate) fn split_labels(name: &str) -> (&str, &str) {
+    match name.find('{') {
+        Some(i) => (&name[..i], &name[i..]),
+        None => (name, ""),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_register_once_and_accumulate() {
+        let mut r = MetricsRegistry::new();
+        let a = r.counter("events_total");
+        let b = r.counter("events_total");
+        assert_eq!(a, b);
+        r.inc(a, 3);
+        r.inc(b, 2);
+        assert_eq!(r.counter_value("events_total"), Some(5));
+        r.set_counter("events_total", 7);
+        assert_eq!(r.counter_value("events_total"), Some(7));
+    }
+
+    #[test]
+    fn export_preserves_registration_order() {
+        let mut r = MetricsRegistry::new();
+        r.counter("zz_first");
+        r.counter("aa_second");
+        r.set_gauge("m_gauge", 1.5);
+        let h = r.hist("lat");
+        r.observe(h, 0.01);
+        let json = r.to_json().to_string_compact();
+        let zz = json.find("zz_first").unwrap();
+        let aa = json.find("aa_second").unwrap();
+        assert!(zz < aa, "insertion order must survive export: {json}");
+        assert_eq!(r.hist_ref("lat").unwrap().count, 1);
+    }
+
+    #[test]
+    fn label_split() {
+        assert_eq!(split_labels("plain"), ("plain", ""));
+        assert_eq!(
+            split_labels("drr_shed{tenant=\"3\"}"),
+            ("drr_shed", "{tenant=\"3\"}")
+        );
+    }
+}

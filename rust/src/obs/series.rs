@@ -1,0 +1,209 @@
+//! Bounded per-tick time series.
+//!
+//! The engine's telemetry tick (every `TELEMETRY_DT` sim-seconds)
+//! pushes one [`TickRow`] snapshot: per-shard queue depth, per-server
+//! utilization / power / instance count, gate-held requests, and the
+//! cumulative shed/done counters. This is the `SystemLoad`-shaped
+//! stream a feedback controller consumes, and what `repro report`
+//! renders as "hottest ticks".
+//!
+//! Memory is bounded by `cap`: when the ring fills, every other
+//! retained row is dropped and the recording stride doubles, so a run
+//! of any length keeps ≤ `cap` rows at uniform (power-of-two) spacing —
+//! a deterministic decimation with no RNG and no wall-clock input.
+
+use crate::utilx::json::{arr_f64, obj, Json};
+
+/// One telemetry-tick snapshot (sim clock only).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TickRow {
+    pub t: f64,
+    pub shard_depths: Vec<usize>,
+    pub server_util: Vec<f64>,
+    pub server_power: Vec<f64>,
+    pub server_instances: Vec<usize>,
+    /// Requests currently held in the DRR gate (0 when ungated).
+    pub gate_pending: usize,
+    /// Cumulative sheds at this tick.
+    pub shed: u64,
+    /// Cumulative completions at this tick.
+    pub done: u64,
+    /// Cumulative completions per tenant.
+    pub tenant_done: Vec<u64>,
+}
+
+impl TickRow {
+    /// Total leader-queue depth — the "hotness" rank key for reports.
+    pub fn total_depth(&self) -> usize {
+        self.shard_depths.iter().sum()
+    }
+}
+
+/// Stride-doubling bounded ring (see module docs).
+#[derive(Clone, Debug)]
+pub struct TickSeries {
+    rows: Vec<TickRow>,
+    cap: usize,
+    stride: u64,
+    /// Ticks offered so far (decides which survive the stride filter).
+    offered: u64,
+}
+
+impl TickSeries {
+    pub fn new(cap: usize) -> Self {
+        TickSeries {
+            rows: Vec::new(),
+            cap: cap.max(2),
+            stride: 1,
+            offered: 0,
+        }
+    }
+
+    /// Offer the next tick row; kept iff its index lands on the current
+    /// stride. Doubling the stride on overflow keeps retained rows
+    /// uniformly spaced because earlier survivors of stride `s` at even
+    /// positions are exactly the survivors of stride `2s`.
+    pub fn push(&mut self, row: TickRow) {
+        let idx = self.offered;
+        self.offered += 1;
+        if idx % self.stride != 0 {
+            return;
+        }
+        if self.rows.len() == self.cap {
+            let mut keep = 0;
+            for i in (0..self.rows.len()).step_by(2) {
+                self.rows.swap(keep, i);
+                keep += 1;
+            }
+            self.rows.truncate(keep);
+            self.stride *= 2;
+            if idx % self.stride != 0 {
+                return;
+            }
+        }
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[TickRow] {
+        &self.rows
+    }
+
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    pub fn offered(&self) -> u64 {
+        self.offered
+    }
+
+    /// Bundle JSON: a `columns` legend plus compact per-row arrays.
+    pub fn to_json(&self) -> Json {
+        fn arr_usize(xs: &[usize]) -> Json {
+            arr_f64(&xs.iter().map(|&x| x as f64).collect::<Vec<_>>())
+        }
+        fn arr_u64(xs: &[u64]) -> Json {
+            arr_f64(&xs.iter().map(|&x| x as f64).collect::<Vec<_>>())
+        }
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::Arr(vec![
+                    Json::Num(r.t),
+                    arr_usize(&r.shard_depths),
+                    arr_f64(&r.server_util),
+                    arr_f64(&r.server_power),
+                    arr_usize(&r.server_instances),
+                    Json::Num(r.gate_pending as f64),
+                    Json::Num(r.shed as f64),
+                    Json::Num(r.done as f64),
+                    arr_u64(&r.tenant_done),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("stride", Json::Num(self.stride as f64)),
+            ("ticks_seen", Json::Num(self.offered as f64)),
+            (
+                "columns",
+                Json::Arr(
+                    [
+                        "t",
+                        "shard_depths",
+                        "server_util",
+                        "server_power",
+                        "server_instances",
+                        "gate_pending",
+                        "shed",
+                        "done",
+                        "tenant_done",
+                    ]
+                    .iter()
+                    .map(|s| Json::Str(s.to_string()))
+                    .collect(),
+                ),
+            ),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(t: f64) -> TickRow {
+        TickRow {
+            t,
+            shard_depths: vec![1, 2],
+            server_util: vec![0.5],
+            server_power: vec![3.0],
+            server_instances: vec![1],
+            gate_pending: 0,
+            shed: 0,
+            done: 0,
+            tenant_done: vec![],
+        }
+    }
+
+    #[test]
+    fn under_cap_keeps_every_tick() {
+        let mut s = TickSeries::new(8);
+        for i in 0..5 {
+            s.push(row(i as f64));
+        }
+        assert_eq!(s.rows().len(), 5);
+        assert_eq!(s.stride(), 1);
+    }
+
+    #[test]
+    fn overflow_decimates_to_uniform_stride() {
+        let mut s = TickSeries::new(4);
+        for i in 0..32 {
+            s.push(row(i as f64));
+        }
+        // after three doublings stride is 8; retained rows sit at 0,8,16,24
+        assert_eq!(s.stride(), 8);
+        let ts: Vec<f64> = s.rows().iter().map(|r| r.t).collect();
+        assert_eq!(ts, vec![0.0, 8.0, 16.0, 24.0]);
+        assert_eq!(s.offered(), 32);
+    }
+
+    #[test]
+    fn decimation_is_length_invariant() {
+        // a series fed N rows then M more equals one fed N+M straight
+        let mut a = TickSeries::new(4);
+        let mut b = TickSeries::new(4);
+        for i in 0..19 {
+            a.push(row(i as f64));
+        }
+        for i in 0..11 {
+            b.push(row(i as f64));
+        }
+        for i in 11..19 {
+            b.push(row(i as f64));
+        }
+        assert_eq!(a.rows(), b.rows());
+        assert_eq!(a.stride(), b.stride());
+    }
+}

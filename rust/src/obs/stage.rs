@@ -1,0 +1,130 @@
+//! Request-lifecycle stage timing.
+//!
+//! Every completed request decomposes its end-to-end latency into four
+//! stages measured on the sim clock:
+//!
+//! - `gate_wait`  — arrival → DRR admission (0 when no gate is active)
+//! - `leader_wait` — time queued in leader shards before each routing
+//!   decision (summed across segments)
+//! - `net_wait`   — WLAN transfer delay between route and device arrival
+//!   (summed across segments)
+//! - `device`     — time from device arrival to batch completion,
+//!   including server queueing and service (summed across segments)
+//! - `e2e`        — arrival → final completion
+//!
+//! In runs without dropout re-admission the first four stages sum to
+//! `e2e` up to float addition order; a re-dispatched segment counts its
+//! failed leg's network wait inside the retry's leader wait.
+
+use super::hist::LogHistogram;
+use crate::utilx::json::{obj, Json};
+
+/// Stage names in export order (matches [`StageSet::hists`]).
+pub const STAGE_NAMES: [&str; 5] = ["gate_wait", "leader_wait", "net_wait", "device", "e2e"];
+
+/// One histogram per lifecycle stage.
+#[derive(Clone, Debug, Default)]
+pub struct StageSet {
+    pub gate_wait: LogHistogram,
+    pub leader_wait: LogHistogram,
+    pub net_wait: LogHistogram,
+    pub device: LogHistogram,
+    pub e2e: LogHistogram,
+}
+
+impl StageSet {
+    #[inline]
+    fn record(&mut self, gate: f64, leader: f64, net: f64, device: f64, e2e: f64) {
+        self.gate_wait.record(gate);
+        self.leader_wait.record(leader);
+        self.net_wait.record(net);
+        self.device.record(device);
+        self.e2e.record(e2e);
+    }
+
+    /// Histograms in [`STAGE_NAMES`] order.
+    pub fn hists(&self) -> [&LogHistogram; 5] {
+        [
+            &self.gate_wait,
+            &self.leader_wait,
+            &self.net_wait,
+            &self.device,
+            &self.e2e,
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(STAGE_NAMES
+            .iter()
+            .zip(self.hists())
+            .map(|(n, h)| (*n, h.to_json()))
+            .collect())
+    }
+}
+
+/// Global stage histograms plus a per-tenant breakdown grown on demand
+/// (tenant ids are dense small integers from the workload generator).
+#[derive(Clone, Debug, Default)]
+pub struct StageAccum {
+    pub global: StageSet,
+    pub tenants: Vec<StageSet>,
+}
+
+impl StageAccum {
+    #[inline]
+    pub fn record(
+        &mut self,
+        tenant: u16,
+        gate: f64,
+        leader: f64,
+        net: f64,
+        device: f64,
+        e2e: f64,
+    ) {
+        self.global.record(gate, leader, net, device, e2e);
+        let t = tenant as usize;
+        if t >= self.tenants.len() {
+            self.tenants.resize_with(t + 1, StageSet::default);
+        }
+        self.tenants[t].record(gate, leader, net, device, e2e);
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("global", self.global.to_json()),
+            (
+                "tenants",
+                Json::Arr(self.tenants.iter().map(StageSet::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenants_grow_on_demand_and_global_sees_all() {
+        let mut acc = StageAccum::default();
+        acc.record(0, 0.0, 0.001, 0.002, 0.01, 0.013);
+        acc.record(3, 0.5, 0.002, 0.003, 0.02, 0.525);
+        assert_eq!(acc.tenants.len(), 4);
+        assert_eq!(acc.global.e2e.count, 2);
+        assert_eq!(acc.tenants[0].e2e.count, 1);
+        assert_eq!(acc.tenants[1].e2e.count, 0);
+        assert_eq!(acc.tenants[3].gate_wait.count, 1);
+        // gate_wait of an ungated request is a clean zero → underflow bucket
+        assert_eq!(acc.tenants[0].gate_wait.underflow, 1);
+    }
+
+    #[test]
+    fn export_names_every_stage() {
+        let mut acc = StageAccum::default();
+        acc.record(0, 0.0, 0.001, 0.002, 0.01, 0.013);
+        let json = acc.to_json().to_string_compact();
+        for name in STAGE_NAMES {
+            assert!(json.contains(name), "missing stage {name} in {json}");
+        }
+    }
+}

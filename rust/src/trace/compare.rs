@@ -32,6 +32,7 @@ use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::config::Config;
+use crate::coordinator::core::TenantStat;
 use crate::coordinator::router::{AlgoRouter, RouterSpec};
 use crate::coordinator::sharded_engine;
 use crate::metrics::Summary;
@@ -79,6 +80,13 @@ struct RouterRun {
     jain_throughput: f64,
     shed_rate: f64,
     shed: u64,
+    /// DRR gate aggregates (0 for gate-less entrants): admissions
+    /// degraded to the slim width, and credit-forfeit ticks.
+    degraded: u64,
+    credit_forfeits: u64,
+    /// Per-tenant accounting rows (one row on single-tenant runs) —
+    /// carries the gate's per-tenant shed/degraded/forfeit split.
+    tenant_stats: Vec<TenantStat>,
     /// Wall-clock seconds this entrant's replay took (measured around
     /// the engine run; reported only under [`CompareOpts::timing`]).
     replay_wall_s: f64,
@@ -146,6 +154,9 @@ fn replay_run(cfg: &Config, trace: &Trace, spec: &str) -> Result<RouterRun, Stri
         jain_throughput: outcome.jain_throughput(),
         shed_rate: outcome.shed_rate(),
         shed: outcome.shed,
+        degraded: outcome.degraded,
+        credit_forfeits: outcome.credit_forfeits,
+        tenant_stats: outcome.tenant_stats,
         replay_wall_s: wall.elapsed().as_secs_f64(),
     })
 }
@@ -274,6 +285,30 @@ pub fn compare_routers_opts(
             ));
             fields.push(("shed_rate".to_string(), Json::Num(r.shed_rate)));
             fields.push(("shed".to_string(), Json::Num(r.shed as f64)));
+            fields.push(("degraded".to_string(), Json::Num(r.degraded as f64)));
+            fields.push((
+                "credit_forfeits".to_string(),
+                Json::Num(r.credit_forfeits as f64),
+            ));
+            // per-tenant admission/fairness rows (one row single-tenant)
+            let tenants: Vec<Json> = r
+                .tenant_stats
+                .iter()
+                .enumerate()
+                .map(|(t, ts)| {
+                    obj(vec![
+                        ("tenant", Json::Num(t as f64)),
+                        ("arrivals", Json::Num(ts.arrivals as f64)),
+                        ("done", Json::Num(ts.done as f64)),
+                        ("shed", Json::Num(ts.shed as f64)),
+                        ("degraded", Json::Num(ts.degraded as f64)),
+                        ("credit_forfeits", Json::Num(ts.credit_forfeits as f64)),
+                        ("mean_latency_s", Json::Num(ts.mean_latency_s())),
+                        ("sla_miss_rate", Json::Num(ts.sla_miss_rate())),
+                    ])
+                })
+                .collect();
+            fields.push(("tenants".to_string(), Json::Arr(tenants)));
             Json::Obj(fields)
         })
         .collect();
@@ -662,12 +697,27 @@ mod tests {
 
         let routers = a.get("routers").and_then(Json::as_arr).unwrap();
         for r in routers {
-            for key in ["jain_latency", "jain_throughput", "shed_rate", "shed"] {
+            for key in [
+                "jain_latency",
+                "jain_throughput",
+                "shed_rate",
+                "shed",
+                "degraded",
+                "credit_forfeits",
+            ] {
                 let v = r.get(key).and_then(Json::as_f64).unwrap();
                 assert!(v.is_finite(), "{key} = {v}");
             }
             let jain = r.get("jain_latency").and_then(Json::as_f64).unwrap();
             assert!(jain > 0.0 && jain <= 1.0, "jain_latency = {jain}");
+            // per-tenant rows: flash-crowd is a 6-tenant workload (rows
+            // cover every tenant id seen in the arrival stream)
+            let tenants = r.get("tenants").and_then(Json::as_arr).unwrap();
+            assert!(
+                (2..=6).contains(&tenants.len()),
+                "flash-crowd tenant rows: {}",
+                tenants.len()
+            );
         }
         let fifo = &routers[0];
         let drr = &routers[1];
@@ -676,6 +726,17 @@ mod tests {
         assert_eq!(fifo.get("completed").and_then(Json::as_usize), Some(400));
         let drr_shed = drr.get("shed_rate").and_then(Json::as_f64).unwrap();
         assert!(drr_shed > 0.0, "DRR must shed under the 10x spike");
+        // the gate-on entrant's counters are live and split per tenant
+        assert_eq!(fifo.get("degraded").and_then(Json::as_f64), Some(0.0));
+        let drr_shed_n = drr.get("shed").and_then(Json::as_f64).unwrap();
+        let tenant_shed: f64 = drr
+            .get("tenants")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|t| t.get("shed").and_then(Json::as_f64).unwrap())
+            .sum();
+        assert_eq!(tenant_shed, drr_shed_n, "per-tenant shed sums to the total");
 
         // pairs only cover requests both runs completed, and carry the
         // fairness deltas

@@ -1,0 +1,170 @@
+//! Observability byte-determinism tests.
+//!
+//! The metrics bundle (versioned JSON + Prometheus-style text) must be a
+//! pure function of (seed, scenario, leaders): identical across reruns
+//! and across `--plan-threads`, gated and gateless alike. The collector
+//! draws no RNG and iterates no hash maps near output, so these tests
+//! pin the whole export pipeline byte for byte. (Across *different*
+//! `--leaders` values the per-shard columns legitimately differ — the
+//! guarantee is per topology, matching the engine's own determinism.)
+
+use slim_scheduler::config::Config;
+use slim_scheduler::coordinator::router::RandomRouter;
+use slim_scheduler::coordinator::{sharded_engine, RunOutcome};
+use slim_scheduler::experiments;
+use slim_scheduler::obs::{bundle_json, prometheus_text, BundleMeta};
+use slim_scheduler::sim::scenarios;
+
+fn run(cfg: &Config) -> RunOutcome {
+    let router = RandomRouter::new(cfg.scheduler.widths.clone(), true, 8);
+    sharded_engine(cfg.clone(), router).run()
+}
+
+/// Render the two export documents exactly as `repro simulate
+/// --metrics-out` writes them.
+fn bundle_bytes(out: &RunOutcome, cfg: &Config) -> (String, String) {
+    let obs = out.obs.as_ref().expect("obs is on by default");
+    let meta = BundleMeta {
+        scenario: cfg.scenario.clone().unwrap_or_else(|| "paper".to_string()),
+        seed: cfg.seed,
+        requests: cfg.workload.total_requests,
+        leaders: cfg.shard.leaders,
+        router: "random".to_string(),
+    };
+    let mut json = bundle_json(obs, &meta).to_string_pretty();
+    json.push('\n');
+    (json, prometheus_text(obs, &meta))
+}
+
+#[test]
+fn bundle_is_byte_identical_across_plan_threads_and_reruns() {
+    for leaders in [1usize, 4] {
+        let mk = |plan_threads: usize| {
+            let mut cfg = experiments::paper_cluster_cfg(400, 42);
+            cfg.shard.leaders = leaders;
+            cfg.shard.leader_service_s = 2e-4;
+            cfg.shard.plan_threads = plan_threads;
+            let out = run(&cfg);
+            bundle_bytes(&out, &cfg)
+        };
+        let (json1, prom1) = mk(1);
+        let (json1b, prom1b) = mk(1);
+        let (json4, prom4) = mk(4);
+        assert_eq!(json1, json1b, "rerun drift at leaders={leaders}");
+        assert_eq!(prom1, prom1b, "prom rerun drift at leaders={leaders}");
+        assert_eq!(json1, json4, "plan-threads drift at leaders={leaders}");
+        assert_eq!(prom1, prom4, "prom plan-threads drift at leaders={leaders}");
+        assert!(json1.contains("\"metrics_version\""));
+        assert!(prom1.starts_with("# slim_scheduler metrics"));
+    }
+}
+
+#[test]
+fn flash_crowd_drr_bundle_is_deterministic_and_gate_counters_surface() {
+    let mk = || {
+        let mut cfg = Config::default();
+        scenarios::apply_named("flash-crowd", &mut cfg).unwrap();
+        cfg.workload.total_requests = 400;
+        cfg.seed = 7;
+        let out = run(&cfg);
+        let bytes = bundle_bytes(&out, &cfg);
+        (out, bytes)
+    };
+    let (a, bytes_a) = mk();
+    let (_b, bytes_b) = mk();
+    assert_eq!(bytes_a.0, bytes_b.0, "gated bundle must be byte-stable");
+    assert_eq!(bytes_a.1, bytes_b.1, "gated prom text must be byte-stable");
+
+    // the 10x spike against a tight gate must actually exercise the
+    // admission counters the bundle claims to export
+    assert!(a.shed > 0, "flash-crowd sheds under the spike");
+    assert!(a.degraded > 0, "flash-crowd degrades deep backlogs");
+    let tenant_shed: u64 = a.tenant_stats.iter().map(|t| t.shed).sum();
+    let tenant_deg: u64 = a.tenant_stats.iter().map(|t| t.degraded).sum();
+    let tenant_forf: u64 = a.tenant_stats.iter().map(|t| t.credit_forfeits).sum();
+    assert_eq!(tenant_shed, a.shed, "per-tenant shed sums to the total");
+    assert_eq!(tenant_deg, a.degraded, "per-tenant degraded sums to the total");
+    assert_eq!(
+        tenant_forf, a.credit_forfeits,
+        "per-tenant forfeits sum to the total"
+    );
+    let obs = a.obs.as_ref().unwrap();
+    assert_eq!(
+        obs.reg.counter_value("drr_shed_total"),
+        Some(a.shed),
+        "registry mirrors the gate's shed total"
+    );
+    // gate waits are real in a gated run: the stage histogram saw every
+    // completion and at least some positive waits
+    assert_eq!(obs.stages.global.gate_wait.count, a.report.completed);
+    assert!(obs.stages.global.gate_wait.max > 0.0);
+}
+
+#[test]
+fn stage_sums_telescope_to_e2e_without_dropout() {
+    // per request: gate + leader + net + device == e2e exactly (the
+    // stamps telescope); summed over all completions the identity holds
+    // up to float addition order
+    let mut cfg = experiments::paper_cluster_cfg(400, 42);
+    cfg.shard.leaders = 2;
+    cfg.shard.leader_service_s = 2e-4;
+    let out = run(&cfg);
+    let obs = out.obs.as_ref().unwrap();
+    let st = &obs.stages.global;
+    let n = out.report.completed;
+    for h in st.hists() {
+        assert_eq!(h.count, n, "every stage sees every completion");
+    }
+    let parts = st.gate_wait.sum + st.leader_wait.sum + st.net_wait.sum + st.device.sum;
+    let e2e = st.e2e.sum;
+    assert!(e2e > 0.0);
+    let rel = (parts - e2e).abs() / e2e;
+    assert!(rel < 1e-9, "stage decomposition drifted: {parts} vs {e2e} ({rel})");
+    // ungated run: gate wait is identically zero → all-underflow histogram
+    assert_eq!(st.gate_wait.underflow, n);
+
+    // the per-tick series sampled the run on the telemetry clock
+    let rows = obs.series.rows();
+    assert!(!rows.is_empty(), "series must capture telemetry ticks");
+    assert!(
+        rows.windows(2).all(|w| w[0].t < w[1].t),
+        "tick rows are time-ordered"
+    );
+    let last = rows.last().unwrap();
+    assert_eq!(last.shard_depths.len(), 2, "one depth column per shard");
+    assert_eq!(last.server_util.len(), cfg.devices.len());
+    // events were counted: the total matches the sum of per-kind counters
+    let total = obs.reg.counter_value("events_popped_total").unwrap();
+    let per_kind: u64 = obs
+        .reg
+        .counters()
+        .iter()
+        .filter(|(name, _)| name.starts_with("events_popped{"))
+        .map(|(_, v)| *v)
+        .sum();
+    assert!(total > 0);
+    assert_eq!(total, per_kind, "per-kind event counters sum to the total");
+}
+
+#[test]
+fn disabling_obs_leaves_the_simulation_bit_identical() {
+    // the collector observes; it must never steer. An --obs false run
+    // has to reproduce the default run's numbers exactly.
+    let mk = |enabled: bool| {
+        let mut cfg = experiments::paper_cluster_cfg(400, 42);
+        cfg.shard.leaders = 2;
+        cfg.obs.enabled = enabled;
+        run(&cfg)
+    };
+    let on = mk(true);
+    let off = mk(false);
+    assert!(on.obs.is_some());
+    assert!(off.obs.is_none());
+    assert_eq!(on.report.completed, off.report.completed);
+    assert_eq!(
+        on.e2e_latency.mean().to_bits(),
+        off.e2e_latency.mean().to_bits()
+    );
+    assert_eq!(on.total_energy_j.to_bits(), off.total_energy_j.to_bits());
+    assert_eq!(on.sim_duration_s.to_bits(), off.sim_duration_s.to_bits());
+}
