@@ -9,8 +9,9 @@
 //! speedup, the `leaders<N>_speedup_x` shard-scaling ratios, the
 //! event-core `events_per_sec` / `wheel_vs_heap_speedup_x` pair, and the
 //! observability-collector cost (`obs_overhead_pct`, instrumented vs
-//! uninstrumented engine run) as derived metrics in
-//! `BENCH_micro_hotpath.json`.
+//! uninstrumented engine run) and the control-plane tax
+//! (`ctrl_overhead_pct`, backlog controller vs none on a quiet run) as
+//! derived metrics in `BENCH_micro_hotpath.json`.
 
 use slim_scheduler::benchx::Bench;
 use slim_scheduler::config::{Config, PpoCfg, SchedulerCfg};
@@ -210,6 +211,37 @@ fn main() {
         bench.mean_ns_of(obs_off_name),
     ) {
         bench.metric("obs_overhead_pct", (on_ns / off_ns - 1.0) * 100.0);
+    }
+
+    // ---- control-plane overhead: controller on vs off ----
+    // The same 300-request run with the backlog controller wired into
+    // the telemetry tick and without one. The quiet run never crosses
+    // the hysteresis high water, so this measures the pure control-plane
+    // tax: one tick-row build plus one knob diff per telemetry tick.
+    // Budget <= 5%, same bar as the collector (`ctrl_overhead_pct`).
+    let ctrl_run = |kind: slim_scheduler::config::ControllerKind| {
+        let mut cfg = Config::default();
+        cfg.workload.total_requests = 300;
+        cfg.workload.rate_hz = 200.0;
+        cfg.ctrl.controller = kind;
+        let router = RandomRouter::new(cfg.scheduler.widths.clone(), true, 8);
+        Engine::new(cfg, router).run()
+    };
+    let ctrl_on_name = "engine/300_request_run_ctrl_backlog";
+    bench.bench(ctrl_on_name, || {
+        std::hint::black_box(ctrl_run(
+            slim_scheduler::config::ControllerKind::Backlog,
+        ));
+    });
+    let ctrl_off_name = "engine/300_request_run_ctrl_none";
+    bench.bench(ctrl_off_name, || {
+        std::hint::black_box(ctrl_run(slim_scheduler::config::ControllerKind::None));
+    });
+    if let (Some(on_ns), Some(off_ns)) = (
+        bench.mean_ns_of(ctrl_on_name),
+        bench.mean_ns_of(ctrl_off_name),
+    ) {
+        bench.metric("ctrl_overhead_pct", (on_ns / off_ns - 1.0) * 100.0);
     }
 
     // ---- event-queue churn: calendar queue vs binary heap ----

@@ -199,6 +199,12 @@ pub struct AdmissionCfg {
     /// (serve everyone slim rather than queue the hot tenant to death).
     /// `0` disables degradation.
     pub degrade_depth: usize,
+    /// Kaskade-style failure cooldown (`--drr-cooldown`): a tenant whose
+    /// queue sheds waits this many admission ticks before re-accruing
+    /// credit — deterministic backoff for misbehaving tenants. `0` (the
+    /// default) disables the cooldown and is bit-identical to the
+    /// cooldown-less gate.
+    pub cooldown_ticks: u64,
 }
 
 impl Default for AdmissionCfg {
@@ -211,6 +217,7 @@ impl Default for AdmissionCfg {
             batch_max: 64,
             queue_cap: 512,
             degrade_depth: 128,
+            cooldown_ticks: 0,
         }
     }
 }
@@ -293,6 +300,50 @@ pub struct ObsCfg {
 impl Default for ObsCfg {
     fn default() -> Self {
         ObsCfg { enabled: true, series_cap: 4096 }
+    }
+}
+
+/// Live-control-plane policy (`crate::ctrl`). `None` (the default) pins
+/// the engine to its construction-time knobs — bit-identical to the
+/// pre-control-plane engine; `Backlog` installs the hysteresis
+/// backlog controller that retunes the tunable knob subset from the
+/// per-tick observability row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ControllerKind {
+    None,
+    Backlog,
+}
+
+impl ControllerKind {
+    /// Parse a CLI/JSON spelling (`none` | `backlog`).
+    pub fn parse(s: &str) -> Option<ControllerKind> {
+        match s {
+            "none" | "off" => Some(ControllerKind::None),
+            "backlog" => Some(ControllerKind::Backlog),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ControllerKind::None => "none",
+            ControllerKind::Backlog => "backlog",
+        }
+    }
+}
+
+/// Control-plane knobs (`--controller`). The controller is pure and
+/// zero-RNG: it maps each telemetry-tick row to a (clamped) knob
+/// vector, so controller-on runs stay pure functions of the seed and
+/// knob changes are recorded in the trace for identical replays.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CtrlCfg {
+    pub controller: ControllerKind,
+}
+
+impl Default for CtrlCfg {
+    fn default() -> Self {
+        CtrlCfg { controller: ControllerKind::None }
     }
 }
 
@@ -514,6 +565,7 @@ pub struct Config {
     pub shard: ShardCfg,
     pub eval: EvalCfg,
     pub obs: ObsCfg,
+    pub ctrl: CtrlCfg,
     pub admission: AdmissionCfg,
     pub scheduler: SchedulerCfg,
     pub ppo: PpoCfg,
@@ -541,6 +593,7 @@ impl Default for Config {
             shard: ShardCfg::default(),
             eval: EvalCfg::default(),
             obs: ObsCfg::default(),
+            ctrl: CtrlCfg::default(),
             admission: AdmissionCfg::default(),
             scheduler: SchedulerCfg::default(),
             ppo: PpoCfg::default(),
@@ -630,6 +683,14 @@ impl Config {
             args.f64_or("drr-burst-cap", self.admission.burst_cap);
         self.admission.queue_cap =
             args.usize_or("drr-queue-cap", self.admission.queue_cap).max(1);
+        self.admission.cooldown_ticks =
+            args.u64_or("drr-cooldown", self.admission.cooldown_ticks);
+        if let Some(kind) = args.get("controller") {
+            self.ctrl.controller =
+                ControllerKind::parse(kind).unwrap_or_else(|| {
+                    panic!("--controller expects none|backlog, got {kind:?}")
+                });
+        }
         self.scheduler.b_max = args.usize_or("b-max", self.scheduler.b_max);
         self.scheduler.u_blk_pct = args.f64_or("u-blk", self.scheduler.u_blk_pct);
         self.scheduler.t_idle_s = args.f64_or("t-idle", self.scheduler.t_idle_s);
@@ -714,6 +775,13 @@ impl Config {
                 ]),
             ),
             (
+                "ctrl",
+                obj(vec![(
+                    "controller",
+                    Json::Str(self.ctrl.controller.as_str().to_string()),
+                )]),
+            ),
+            (
                 "admission",
                 obj(vec![
                     ("kind", Json::Str(self.admission.kind.as_str().to_string())),
@@ -725,6 +793,10 @@ impl Config {
                     (
                         "degrade_depth",
                         Json::Num(self.admission.degrade_depth as f64),
+                    ),
+                    (
+                        "cooldown_ticks",
+                        Json::Num(self.admission.cooldown_ticks as f64),
                     ),
                 ]),
             ),
@@ -873,6 +945,14 @@ impl Config {
                 cfg.obs.series_cap = x.max(2);
             }
         }
+        // pre-control-plane trace headers have no "ctrl" key: defaults apply
+        if let Some(c) = json.get("ctrl") {
+            if let Some(x) = c.get("controller").and_then(Json::as_str) {
+                if let Some(kind) = ControllerKind::parse(x) {
+                    cfg.ctrl.controller = kind;
+                }
+            }
+        }
         if let Some(a) = json.get("admission") {
             if let Some(x) = a.get("kind").and_then(Json::as_str) {
                 if let Some(kind) = AdmissionKind::parse(x) {
@@ -896,6 +976,9 @@ impl Config {
             }
             if let Some(x) = a.get("degrade_depth").and_then(Json::as_usize) {
                 cfg.admission.degrade_depth = x;
+            }
+            if let Some(x) = a.get("cooldown_ticks").and_then(Json::as_f64) {
+                cfg.admission.cooldown_ticks = x as u64;
             }
         }
         if let Some(s) = json.get("scheduler") {
@@ -1373,7 +1456,8 @@ mod tests {
         let args = Args::parse_from(
             ["simulate", "--tenants", "6", "--tenant-zipf", "1.3",
              "--admission", "drr", "--drr-quantum", "2.5",
-             "--drr-burst-cap", "12", "--drr-queue-cap", "64"]
+             "--drr-burst-cap", "12", "--drr-queue-cap", "64",
+             "--drr-cooldown", "8"]
                 .iter()
                 .map(|s| s.to_string()),
         );
@@ -1384,6 +1468,7 @@ mod tests {
         assert_eq!(cfg.admission.quantum, 2.5);
         assert_eq!(cfg.admission.burst_cap, 12.0);
         assert_eq!(cfg.admission.queue_cap, 64);
+        assert_eq!(cfg.admission.cooldown_ticks, 8);
 
         let parsed = Config::from_json(&cfg.to_json());
         assert_eq!(parsed.admission, cfg.admission);
@@ -1407,6 +1492,51 @@ mod tests {
         assert_eq!(AdmissionKind::parse("nope"), None);
         assert_eq!(AdmissionKind::None.as_str(), "none");
         assert_eq!(AdmissionKind::Drr.as_str(), "drr");
+    }
+
+    #[test]
+    fn controller_kind_spellings() {
+        assert_eq!(ControllerKind::parse("none"), Some(ControllerKind::None));
+        assert_eq!(ControllerKind::parse("off"), Some(ControllerKind::None));
+        assert_eq!(
+            ControllerKind::parse("backlog"),
+            Some(ControllerKind::Backlog)
+        );
+        assert_eq!(ControllerKind::parse("nope"), None);
+        assert_eq!(ControllerKind::None.as_str(), "none");
+        assert_eq!(ControllerKind::Backlog.as_str(), "backlog");
+    }
+
+    #[test]
+    fn controller_defaults_parse_and_roundtrip() {
+        let cfg = Config::default();
+        assert_eq!(cfg.ctrl.controller, ControllerKind::None); // pinned knobs
+
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--controller", "backlog"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
+        assert_eq!(cfg.ctrl.controller, ControllerKind::Backlog);
+
+        let parsed = Config::from_json(&cfg.to_json());
+        assert_eq!(parsed.ctrl, cfg.ctrl);
+
+        // pre-control-plane trace headers (no "ctrl" key) keep defaults
+        let old_header = Json::parse("{\"seed\": 7}").unwrap();
+        let parsed = Config::from_json(&old_header);
+        assert_eq!(parsed.ctrl, CtrlCfg::default());
+        assert_eq!(parsed.admission.cooldown_ticks, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "--controller expects")]
+    fn unknown_controller_panics_with_hint() {
+        let mut cfg = Config::default();
+        let args = Args::parse_from(
+            ["simulate", "--controller", "pid"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args);
     }
 
     #[test]

@@ -48,6 +48,12 @@ struct TenantState {
     /// Ticks where this tenant's positive deficit was forfeited
     /// (queue went empty while credit remained).
     forfeits: u64,
+    /// Remaining cooldown ticks during which this tenant accrues no
+    /// credit (Kaskade-style failure cooldown; armed by a shed when
+    /// `cooldown_ticks > 0`).
+    cooldown: u64,
+    /// Cooldown windows entered by this tenant.
+    cooldowns: u64,
 }
 
 /// The deficit-round-robin admission gate.
@@ -91,10 +97,20 @@ impl DrrGate {
     /// the finite queue is full.
     pub fn offer(&mut self, req: Request) -> Offer {
         let cap = self.cfg.queue_cap;
+        let cooldown_ticks = self.cfg.cooldown_ticks;
         let st = self.state_mut(req.tenant);
         if st.pending.len() >= cap {
             st.shed += 1;
             self.shed += 1;
+            // Kaskade-style failure cooldown: a shed (re)arms the
+            // window; the tenant re-accrues credit only after it
+            // expires. Off (0) leaves the accrual path untouched.
+            if cooldown_ticks > 0 {
+                if st.cooldown == 0 {
+                    st.cooldowns += 1;
+                }
+                st.cooldown = cooldown_ticks;
+            }
             return Offer::Shed;
         }
         st.pending.push_back(req);
@@ -125,6 +141,10 @@ impl DrrGate {
             return;
         }
         for st in &mut self.tenants {
+            let cooling = st.cooldown > 0;
+            if cooling {
+                st.cooldown -= 1;
+            }
             if st.pending.is_empty() {
                 // classic DRR: an empty queue forfeits its deficit, so
                 // idle tenants can't hoard credit beyond the cap
@@ -132,7 +152,7 @@ impl DrrGate {
                     st.forfeits += 1;
                 }
                 st.credit = 0.0;
-            } else {
+            } else if !cooling {
                 st.credit = (st.credit + self.cfg.quantum).min(self.cfg.burst_cap);
             }
         }
@@ -183,17 +203,31 @@ impl DrrGate {
         self.tenants.len()
     }
 
-    /// Per-tenant `(shed, degraded, credit_forfeits)` counters; unknown
-    /// tenants report zeros.
-    pub fn tenant_counters(&self, tenant: u16) -> (u64, u64, u64) {
-        self.tenants
-            .get(tenant as usize)
-            .map_or((0, 0, 0), |st| (st.shed, st.degraded, st.forfeits))
+    /// Per-tenant `(shed, degraded, credit_forfeits, cooldowns)`
+    /// counters; unknown tenants report zeros.
+    pub fn tenant_counters(&self, tenant: u16) -> (u64, u64, u64, u64) {
+        self.tenants.get(tenant as usize).map_or((0, 0, 0, 0), |st| {
+            (st.shed, st.degraded, st.forfeits, st.cooldowns)
+        })
     }
 
     /// Total deficit forfeits across tenants.
     pub fn credit_forfeits(&self) -> u64 {
         self.tenants.iter().map(|st| st.forfeits).sum()
+    }
+
+    /// Total cooldown windows entered across tenants.
+    pub fn cooldowns_total(&self) -> u64 {
+        self.tenants.iter().map(|st| st.cooldowns).sum()
+    }
+
+    /// Control-plane hook: retune the gate's credit/queue knobs in
+    /// place. Existing credits and queues are untouched — the new
+    /// values take effect from the next offer/tick.
+    pub fn set_knobs(&mut self, quantum: f64, burst_cap: f64, queue_cap: usize) {
+        self.cfg.quantum = quantum;
+        self.cfg.burst_cap = burst_cap;
+        self.cfg.queue_cap = queue_cap;
     }
 
     pub fn is_empty(&self) -> bool {
@@ -215,6 +249,7 @@ mod tests {
             batch_max: 64,
             queue_cap,
             degrade_depth: 0,
+            cooldown_ticks: 0,
         })
     }
 
@@ -301,6 +336,7 @@ mod tests {
             batch_max: 64,
             queue_cap: 64,
             degrade_depth: 4,
+            cooldown_ticks: 0,
         });
         for id in 0..10 {
             g.offer(req(id, 0)); // deep: 10 > 4
@@ -326,6 +362,7 @@ mod tests {
             batch_max: 3,
             queue_cap: 64,
             degrade_depth: 0,
+            cooldown_ticks: 0,
         });
         for t in 0..4u16 {
             for id in 0..8 {
@@ -374,6 +411,7 @@ mod tests {
             batch_max: 64,
             queue_cap: 3,
             degrade_depth: 2,
+            cooldown_ticks: 0,
         });
         // tenant 0: 6 offers into a 3-deep queue → 3 shed, deep → degraded
         for id in 0..6 {
@@ -382,8 +420,8 @@ mod tests {
         g.offer(req(100, 1));
         let mut out = Vec::new();
         g.tick(&mut out, 0.25);
-        let (shed0, deg0, _) = g.tenant_counters(0);
-        let (shed1, deg1, _) = g.tenant_counters(1);
+        let (shed0, deg0, _, _) = g.tenant_counters(0);
+        let (shed1, deg1, _, _) = g.tenant_counters(1);
         assert_eq!(shed0, 3);
         assert_eq!(shed1, 0);
         assert!(deg0 > 0);
@@ -399,12 +437,108 @@ mod tests {
             g.offer(req(200 + id, 1));
         }
         g.tick(&mut out, 0.25);
-        let (_, _, forfeits0) = g.tenant_counters(0);
-        let (_, _, forfeits1) = g.tenant_counters(1);
+        let (_, _, forfeits0, _) = g.tenant_counters(0);
+        let (_, _, forfeits1, _) = g.tenant_counters(1);
         assert!(forfeits0 > 0, "positive idle credit must be forfeited");
         assert_eq!(g.credit_forfeits(), forfeits0 + forfeits1);
         // unknown tenants report zeros
-        assert_eq!(g.tenant_counters(42), (0, 0, 0));
+        assert_eq!(g.tenant_counters(42), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn cooldown_blocks_accrual_until_it_expires() {
+        let mut g = DrrGate::new(AdmissionCfg {
+            kind: AdmissionKind::Drr,
+            quantum: 1.0,
+            burst_cap: 8.0,
+            scan_width: 16,
+            batch_max: 64,
+            queue_cap: 2,
+            degrade_depth: 0,
+            cooldown_ticks: 3,
+        });
+        for id in 0..3 {
+            g.offer(req(id, 0)); // third overflows the 2-deep queue
+        }
+        assert_eq!(g.shed, 1);
+        assert_eq!(g.tenant_counters(0), (1, 0, 0, 1));
+        let mut out = Vec::new();
+        // three cooling ticks: no credit accrues, nothing admitted
+        for _ in 0..3 {
+            g.tick(&mut out, 0.25);
+            assert!(out.is_empty());
+        }
+        // cooldown expired: accrual resumes, the backlog drains
+        g.tick(&mut out, 0.25);
+        assert_eq!(out.len(), 1);
+        // a second shed during an armed window re-arms without
+        // counting a new cooldown entry
+        g.offer(req(10, 0));
+        g.offer(req(11, 0));
+        g.offer(req(12, 0));
+        let (_, _, _, cd) = g.tenant_counters(0);
+        assert_eq!(cd, 2);
+        g.offer(req(13, 0));
+        let (_, _, _, cd) = g.tenant_counters(0);
+        assert_eq!(cd, 2, "re-arm inside an active window is not a new entry");
+        assert_eq!(g.cooldowns_total(), 2);
+    }
+
+    #[test]
+    fn cooldown_off_is_bit_identical_to_the_plain_gate() {
+        let run = |cooldown_ticks: u64| {
+            // deliberately overloaded (quantum ≪ arrival rate, shallow
+            // queues) so both runs shed and the cooldown path is hot
+            let mut g = DrrGate::new(AdmissionCfg {
+                kind: AdmissionKind::Drr,
+                quantum: 0.25,
+                burst_cap: 6.0,
+                scan_width: 16,
+                batch_max: 64,
+                queue_cap: 2,
+                degrade_depth: 0,
+                cooldown_ticks,
+            });
+            let mut out = Vec::new();
+            for id in 0..100 {
+                g.offer(req(id, (id % 3) as u16));
+                if id % 2 == 0 {
+                    g.tick(&mut out, 0.25);
+                }
+            }
+            while !g.is_empty() {
+                g.tick(&mut out, 0.25);
+            }
+            (
+                out.iter().map(|r| (r.id, r.tenant)).collect::<Vec<_>>(),
+                g.shed,
+                g.cooldowns_total(),
+            )
+        };
+        let off = run(0);
+        assert_eq!(off.2, 0, "cooldown off must never count a window");
+        // armed, the same offered sequence admits differently
+        let on = run(4);
+        assert!(on.2 > 0);
+        assert_ne!(off.0, on.0);
+    }
+
+    #[test]
+    fn set_knobs_retunes_credit_and_queue_caps_live() {
+        let mut g = gate(1.0, 2.0, 8);
+        for id in 0..8 {
+            g.offer(req(id, 0));
+        }
+        let mut out = Vec::new();
+        g.tick(&mut out, 0.25);
+        assert_eq!(out.len(), 1); // quantum 1 admits one
+        g.set_knobs(4.0, 8.0, 2);
+        out.clear();
+        g.tick(&mut out, 0.25);
+        assert_eq!(out.len(), 4, "new quantum takes effect next tick");
+        // queue cap shrank to 2: with >2 already parked, new offers shed
+        assert!(g.pending_for(0) > 2);
+        assert_eq!(g.offer(req(50, 0)), Offer::Shed);
     }
 
     #[test]

@@ -514,6 +514,9 @@ pub struct TenantStat {
     /// Ticks where this tenant's DRR credit was forfeited (positive
     /// credit zeroed because its queue went empty).
     pub credit_forfeits: u64,
+    /// Failure-cooldown windows this tenant entered (a shed with
+    /// `--drr-cooldown` armed pauses its credit accrual).
+    pub cooldowns: u64,
 }
 
 impl TenantStat {

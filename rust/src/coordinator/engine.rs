@@ -39,9 +39,10 @@
 use std::sync::Arc;
 
 use crate::config::{AdmissionKind, Config};
+use crate::ctrl::{controller_for, Controller, TunableKnobs};
 use crate::metrics::{RunReport, Summary};
 use crate::model::{AccuracyPrior, ModelMeta, NUM_SEGMENTS};
-use crate::obs::{ObsCollector, TickRow};
+use crate::obs::{KnobPoint, ObsCollector, TickRow};
 use crate::sim::workload::sla_multiplier;
 use crate::sim::{profiles, Link, SimDevice, VirtualClock, Workload, WorkloadEvent};
 use crate::trace::record::{TraceEvent, TraceSink};
@@ -295,6 +296,16 @@ pub struct Engine<R: Router, D: DeviceModel = SimDevice, S: LocalScheduler = Gre
     /// counters, stage histograms, tick series. Never touches the RNG
     /// or scheduling state, so enabling it cannot change sim results.
     obs: Option<ObsCollector>,
+    /// Live knob state (the control plane): `route_window`, the
+    /// rebalance threshold, and the DRR credit/queue knobs are re-read
+    /// from here at each decision site instead of captured from `cfg`
+    /// at construction. Initialized from the config and only ever
+    /// rewritten by `controller` on telemetry ticks, so runs without a
+    /// controller are bit-identical to the pre-control-plane engine.
+    knobs: TunableKnobs,
+    /// The feedback controller (`--controller`); `None` (the default)
+    /// pins `knobs` to the config for the whole run.
+    controller: Option<Box<dyn Controller>>,
     /// Safety cap for pathological configurations.
     pub max_sim_time_s: f64,
 }
@@ -385,6 +396,8 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             .obs
             .enabled
             .then(|| ObsCollector::new(n, &EV_KIND_NAMES, cfg.obs.series_cap));
+        let knobs = TunableKnobs::from_config(&cfg);
+        let controller = controller_for(cfg.ctrl.controller, &knobs);
         Engine {
             link: Link::new(cfg.link),
             rng: Rng::new(cfg.seed),
@@ -412,6 +425,8 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
             arrivals: None,
             sink: None,
             obs,
+            knobs,
+            controller,
             max_sim_time_s: 3600.0,
             cfg,
         }
@@ -452,6 +467,34 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
 
     fn push_event(&mut self, t: f64, kind: EvKind) {
         self.events.push(t, kind);
+    }
+
+    /// Record the current knob state into the trace and the obs knob
+    /// log. Only ever called on controller runs (the initial state and
+    /// each retune), so controller-less traces and bundles stay
+    /// byte-identical to the pre-control-plane engine.
+    fn note_knobs(&mut self, t: f64) {
+        let k = self.knobs;
+        if self.sink.is_some() {
+            self.emit(TraceEvent::Knobs {
+                t,
+                route_window: k.route_window,
+                rebalance_threshold: k.rebalance_threshold,
+                drr_quantum: k.drr_quantum,
+                drr_burst_cap: k.drr_burst_cap,
+                drr_queue_cap: k.drr_queue_cap,
+            });
+        }
+        if let Some(o) = self.obs.as_mut() {
+            o.on_knobs(KnobPoint {
+                t,
+                route_window: k.route_window,
+                rebalance_threshold: k.rebalance_threshold,
+                drr_quantum: k.drr_quantum,
+                drr_burst_cap: k.drr_burst_cap,
+                drr_queue_cap: k.drr_queue_cap,
+            });
+        }
     }
 
     /// eq. 1 snapshot of the cluster. A downed server reports a
@@ -603,7 +646,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
     /// whose leader actually routes it — stale source-shard attribution
     /// must not leak into shard-level trace analysis.
     fn maybe_rebalance(&mut self) {
-        let th = self.cfg.shard.rebalance_threshold;
+        let th = self.knobs.rebalance_threshold;
         if th > 0 && self.shards.len() > 1 {
             let migrations = rebalance(&mut self.shards, th, RUN_SCAN_CAP);
             if let Some(o) = self.obs.as_mut() {
@@ -648,7 +691,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
     /// in the FIFO slice. With `route_window = 1` (and the default
     /// infinitely fast leader) this is the pre-plan per-head loop.
     fn route_shard(&mut self, si: usize) {
-        let window = self.cfg.router.route_window.max(1);
+        let window = self.knobs.route_window.max(1);
         let service = self.cfg.shard.leader_service_s;
         while !self.shards[si].fifo.is_empty() {
             let now = self.clock.now();
@@ -978,7 +1021,7 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
     /// behind a mutex — but not reproducible). The per-shard-cloned
     /// algorithmic routers parallelize deterministically.
     fn route_all_parallel(&mut self) {
-        let window = self.cfg.router.route_window.max(1);
+        let window = self.knobs.route_window.max(1);
         let service = self.cfg.shard.leader_service_s;
         let threads = self.cfg.shard.plan_threads.min(self.shards.len()).max(1);
         loop {
@@ -1231,6 +1274,11 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         if self.gate.is_some() {
             self.push_event(ADMIT_DT, EvKind::AdmitTick);
         }
+        if self.controller.is_some() {
+            // the starting knob state anchors the trajectory — retune
+            // events alone would leave the baseline implicit
+            self.note_knobs(0.0);
+        }
         if let Some(dp) = self.cfg.dropout {
             if dp.server < self.devices.len() {
                 self.push_event(
@@ -1312,10 +1360,10 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                             power: snap.servers.iter().map(|s| s.power_w).collect(),
                         });
                     }
-                    if let Some(o) = self.obs.as_mut() {
+                    if self.obs.is_some() || self.controller.is_some() {
                         let servers = &snap.servers;
                         let m = &self.metrics;
-                        o.on_tick(TickRow {
+                        let row = TickRow {
                             t: now,
                             shard_depths: depths,
                             server_util: servers.iter().map(|s| s.util_pct).collect(),
@@ -1325,7 +1373,30 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                             shed: m.shed,
                             done: m.done,
                             tenant_done: m.tenant_stats.iter().map(|ts| ts.done).collect(),
-                        });
+                        };
+                        // the control plane: a pure function of (tick
+                        // row, current knobs), clamped to the validated
+                        // ranges before anything re-reads it
+                        let proposed = self
+                            .controller
+                            .as_ref()
+                            .map(|c| crate::ctrl::clamp(c.tune(&row, &self.knobs)));
+                        if let Some(new_knobs) = proposed {
+                            if new_knobs != self.knobs {
+                                self.knobs = new_knobs;
+                                if let Some(g) = self.gate.as_mut() {
+                                    g.set_knobs(
+                                        new_knobs.drr_quantum,
+                                        new_knobs.drr_burst_cap,
+                                        new_knobs.drr_queue_cap,
+                                    );
+                                }
+                                self.note_knobs(now);
+                            }
+                        }
+                        if let Some(o) = self.obs.as_mut() {
+                            o.on_tick(row);
+                        }
                     }
                     if !self.metrics.all_done() {
                         self.push_event(now + TELEMETRY_DT, EvKind::TelemetryTick);
@@ -1387,10 +1458,11 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
         // per-tenant stats so trace compare and obs export see them
         if let Some(g) = self.gate.as_ref() {
             for t in 0..self.metrics.tenant_stats.len() {
-                let (_, deg, forf) = g.tenant_counters(t as u16);
+                let (_, deg, forf, cools) = g.tenant_counters(t as u16);
                 let ts = self.metrics.tenant_mut(t as u16);
                 ts.degraded = deg;
                 ts.credit_forfeits = forf;
+                ts.cooldowns = cools;
             }
         }
         let (degraded_total, credit_forfeits_total) = self
@@ -1428,12 +1500,21 @@ impl<R: Router, D: DeviceModel, S: LocalScheduler> Engine<R, D, S> {
                 o.reg.set_counter("drr_shed_total", g.shed);
                 o.reg.set_counter("drr_degraded_total", g.degraded);
                 o.reg.set_counter("drr_credit_forfeits_total", g.credit_forfeits());
+                // cooldown counters appear only when the feature is
+                // armed, keeping `--drr-cooldown 0` bundles unchanged
+                let cooldowns_on = self.cfg.admission.cooldown_ticks > 0;
+                if cooldowns_on {
+                    o.reg.set_counter("drr_cooldowns_total", g.cooldowns_total());
+                }
                 for t in 0..m.tenant_stats.len() {
-                    let (shed, deg, forf) = g.tenant_counters(t as u16);
+                    let (shed, deg, forf, cools) = g.tenant_counters(t as u16);
                     let lbl = |base: &str| format!("{base}{{tenant=\"{t}\"}}");
                     o.reg.set_counter(&lbl("drr_shed"), shed);
                     o.reg.set_counter(&lbl("drr_degraded"), deg);
                     o.reg.set_counter(&lbl("drr_credit_forfeits"), forf);
+                    if cooldowns_on {
+                        o.reg.set_counter(&lbl("drr_cooldowns"), cools);
+                    }
                 }
             }
             o
@@ -1764,6 +1845,9 @@ mod tests {
                     assert!(*e2e_s > 0.0);
                 }
                 TraceEvent::Tick { .. } => ticks += 1,
+                // no controller installed: the control plane must not
+                // have touched this trace
+                TraceEvent::Knobs { .. } => panic!("knobs event without a controller"),
             }
         }
         assert_eq!(arrivals, 80);
@@ -1782,6 +1866,65 @@ mod tests {
             })
             .sum();
         assert!(traced_energy > 0.0);
+    }
+
+    #[test]
+    fn backlog_controller_is_deterministic_and_retunes_under_pressure() {
+        use crate::config::ControllerKind;
+        use crate::trace::record::TraceRecorder;
+
+        // a single overloaded tenant behind a DRR gate builds hundreds
+        // of gate-held requests, so the tick-time depth crosses the
+        // hysteresis high water and the controller must enter relief
+        let mk = || {
+            let mut cfg = small_cfg(400, 3000.0);
+            cfg.ctrl.controller = ControllerKind::Backlog;
+            cfg.admission.kind = AdmissionKind::Drr;
+            cfg.admission.quantum = 1.0;
+            cfg.admission.queue_cap = 256;
+            let widths = cfg.scheduler.widths.clone();
+            let recorder = TraceRecorder::new(&cfg, "random");
+            let mut engine = Engine::new(cfg, RandomRouter::new(widths, true, 4));
+            engine.set_trace_sink(Box::new(recorder.clone()));
+            let out = engine.run();
+            (out, recorder.to_jsonl())
+        };
+        let (a, trace_a) = mk();
+        let (b, trace_b) = mk();
+        assert_eq!(a.report.completed + a.shed, 400);
+        // controller runs are pure functions of the seed
+        assert_eq!(trace_a, trace_b);
+        let knob_lines = trace_a
+            .lines()
+            .filter(|l| l.contains("\"ev\":\"knobs\""))
+            .count();
+        assert!(
+            knob_lines >= 2,
+            "expected the initial state plus at least one retune, got {knob_lines}"
+        );
+        assert_eq!(
+            a.report.latency.mean().to_bits(),
+            b.report.latency.mean().to_bits()
+        );
+    }
+
+    #[test]
+    fn controller_none_emits_no_knob_state_anywhere() {
+        use crate::trace::record::TraceRecorder;
+
+        let mut cfg = small_cfg(120, 200.0);
+        cfg.obs.enabled = true;
+        let widths = cfg.scheduler.widths.clone();
+        let recorder = TraceRecorder::new(&cfg, "random");
+        let mut engine = Engine::new(cfg, RandomRouter::new(widths, true, 4));
+        engine.set_trace_sink(Box::new(recorder.clone()));
+        let out = engine.run();
+        assert_eq!(out.report.completed, 120);
+        assert!(
+            !recorder.to_jsonl().contains("\"ev\":\"knobs\""),
+            "controller-less traces must stay knob-free"
+        );
+        assert!(out.obs.expect("obs enabled").knob_log.is_empty());
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! Adaptive control plane: live knob retuning from the obs tick series.
+//!
+//! The engine historically captured every scheduling knob at
+//! construction; this module inverts that. [`TunableKnobs`] is the
+//! runtime-tunable subset of [`Config`] (router window, shard rebalance
+//! threshold, DRR quantum/burst/queue caps). The engine owns one
+//! `TunableKnobs` value and re-reads it at each decision site; a
+//! [`Controller`] — a *pure, zero-RNG* function from the latest
+//! [`TickRow`] snapshot to a knob proposal — may rewrite it on every
+//! telemetry tick. Whatever a controller returns is passed through
+//! [`clamp`] before it is applied, so a buggy controller can degrade
+//! throughput but can never produce an invalid configuration.
+//!
+//! Determinism contract: controllers see only the sim-clock tick row
+//! and the current knobs, so a run with any controller is a pure
+//! function of the seed, and knob changes recorded into the trace
+//! replay identically (the replay engine retunes on the same ticks).
+//!
+//! Two controllers ship:
+//!
+//! * `none` — no controller object at all; the engine's knob state is
+//!   pinned to the config and the output is bit-identical to the
+//!   pre-control-plane engine.
+//! * `backlog` — two-state hysteresis on total shard depth (the gate
+//!   folds held requests into shard depths, so that one scalar is the
+//!   system backlog). Above [`BACKLOG_HI`] it switches to a relief
+//!   tuple (wider route window, halved rebalance threshold, doubled
+//!   DRR credit, halved queue cap); at or below [`BACKLOG_LO`] it
+//!   returns to the base tuple. The controller is stateless — which
+//!   regime it is in is recovered from the knobs it is handed.
+
+use crate::config::{Config, ControllerKind};
+use crate::obs::TickRow;
+
+/// Hysteresis high-water mark (total shard depth) for `backlog`.
+/// Sized against the regimes that actually build tick-time backlog:
+/// gate-held queues (per-tenant caps are tens — flash-crowd pins the
+/// hot tenant at its queue cap) and finite-capacity leaders
+/// (sharded-hot's burst backlog). An idle or keeping-up system sits at
+/// ~0 depth on every tick, far below this.
+pub const BACKLOG_HI: usize = 24;
+/// Hysteresis low-water mark for `backlog`; must sit well below
+/// [`BACKLOG_HI`] so the controller cannot oscillate every tick.
+pub const BACKLOG_LO: usize = 8;
+
+/// The runtime-tunable subset of [`Config`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TunableKnobs {
+    /// Candidate window the router scores per dispatch (≥ 1).
+    pub route_window: usize,
+    /// Shard-imbalance threshold that triggers a rebalance (0 = off).
+    pub rebalance_threshold: usize,
+    /// DRR credit added per tenant per admission tick.
+    pub drr_quantum: f64,
+    /// DRR per-tenant credit ceiling.
+    pub drr_burst_cap: f64,
+    /// DRR per-tenant queue cap (offers beyond it shed).
+    pub drr_queue_cap: usize,
+}
+
+impl TunableKnobs {
+    /// Snapshot the tunable subset out of a full config.
+    pub fn from_config(cfg: &Config) -> TunableKnobs {
+        TunableKnobs {
+            route_window: cfg.router.route_window,
+            rebalance_threshold: cfg.shard.rebalance_threshold,
+            drr_quantum: cfg.admission.quantum,
+            drr_burst_cap: cfg.admission.burst_cap,
+            drr_queue_cap: cfg.admission.queue_cap,
+        }
+    }
+}
+
+/// Validated range for each knob; controller returns are clamped here
+/// before the engine applies them. Non-finite floats collapse to the
+/// range minimum (a NaN must not survive into credit arithmetic).
+pub fn clamp(k: TunableKnobs) -> TunableKnobs {
+    fn clamp_f64(x: f64, lo: f64, hi: f64) -> f64 {
+        if !x.is_finite() {
+            lo
+        } else {
+            x.max(lo).min(hi)
+        }
+    }
+    TunableKnobs {
+        route_window: k.route_window.clamp(1, 64),
+        rebalance_threshold: k.rebalance_threshold.min(4096),
+        drr_quantum: clamp_f64(k.drr_quantum, 0.25, 64.0),
+        drr_burst_cap: clamp_f64(k.drr_burst_cap, 1.0, 256.0),
+        drr_queue_cap: k.drr_queue_cap.clamp(1, 65536),
+    }
+}
+
+/// A feedback controller: pure, zero-RNG, sim-clock only. `tune` is
+/// called once per telemetry tick with the freshest [`TickRow`] and the
+/// knobs currently in force, and returns the knobs it wants next (the
+/// engine clamps and diffs them; an unchanged return is a no-op).
+pub trait Controller: Send {
+    fn name(&self) -> &'static str;
+    fn tune(&self, row: &TickRow, knobs: &TunableKnobs) -> TunableKnobs;
+}
+
+/// Build the controller for a parsed `--controller` choice.
+/// `ControllerKind::None` maps to no controller at all so the
+/// engine's hot path stays byte-identical to the pre-control-plane
+/// binary (no tick-row construction, no virtual call).
+pub fn controller_for(
+    kind: ControllerKind,
+    base: &TunableKnobs,
+) -> Option<Box<dyn Controller>> {
+    match kind {
+        ControllerKind::None => None,
+        ControllerKind::Backlog => Some(Box::new(BacklogController::new(*base))),
+    }
+}
+
+/// Two-state hysteresis controller over total shard depth.
+pub struct BacklogController {
+    base: TunableKnobs,
+    relief: TunableKnobs,
+}
+
+impl BacklogController {
+    pub fn new(base: TunableKnobs) -> BacklogController {
+        let base = clamp(base);
+        BacklogController {
+            base,
+            relief: clamp(relief_of(&base)),
+        }
+    }
+}
+
+/// The relief tuple: spend more routing effort and DRR credit to drain
+/// a backlog, while shrinking the queue cap so sheds (and the cooldown
+/// satellite, when armed) kick in earlier for misbehaving tenants.
+fn relief_of(base: &TunableKnobs) -> TunableKnobs {
+    TunableKnobs {
+        route_window: base.route_window * 4,
+        rebalance_threshold: if base.rebalance_threshold == 0 {
+            0
+        } else {
+            (base.rebalance_threshold / 2).max(1)
+        },
+        drr_quantum: base.drr_quantum * 2.0,
+        drr_burst_cap: base.drr_burst_cap * 2.0,
+        drr_queue_cap: (base.drr_queue_cap / 2).max(1),
+    }
+}
+
+impl Controller for BacklogController {
+    fn name(&self) -> &'static str {
+        "backlog"
+    }
+
+    fn tune(&self, row: &TickRow, knobs: &TunableKnobs) -> TunableKnobs {
+        // Gate-held requests are already folded into shard depths by
+        // the planner, so total depth alone is the system backlog.
+        let pressure = row.total_depth();
+        if *knobs == self.base && pressure >= BACKLOG_HI {
+            self.relief
+        } else if *knobs == self.relief && pressure <= BACKLOG_LO {
+            self.base
+        } else {
+            *knobs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row_with_depth(depth: usize) -> TickRow {
+        TickRow {
+            t: 1.0,
+            shard_depths: vec![depth],
+            server_util: vec![],
+            server_power: vec![],
+            server_instances: vec![],
+            gate_pending: 0,
+            shed: 0,
+            done: 0,
+            tenant_done: vec![],
+        }
+    }
+
+    fn base() -> TunableKnobs {
+        TunableKnobs::from_config(&Config::default())
+    }
+
+    #[test]
+    fn from_config_snapshots_the_tunable_subset() {
+        let cfg = Config::default();
+        let k = TunableKnobs::from_config(&cfg);
+        assert_eq!(k.route_window, cfg.router.route_window);
+        assert_eq!(k.rebalance_threshold, cfg.shard.rebalance_threshold);
+        assert_eq!(k.drr_quantum, cfg.admission.quantum);
+        assert_eq!(k.drr_burst_cap, cfg.admission.burst_cap);
+        assert_eq!(k.drr_queue_cap, cfg.admission.queue_cap);
+    }
+
+    #[test]
+    fn clamp_is_identity_on_defaults() {
+        let k = base();
+        assert_eq!(clamp(k), k);
+    }
+
+    #[test]
+    fn clamp_bounds_out_of_range_returns() {
+        // the satellite case: a controller returning wild values must
+        // come back inside the validated ranges
+        let wild = TunableKnobs {
+            route_window: 0,
+            rebalance_threshold: usize::MAX,
+            drr_quantum: f64::NAN,
+            drr_burst_cap: 1.0e12,
+            drr_queue_cap: 0,
+        };
+        let k = clamp(wild);
+        assert_eq!(k.route_window, 1);
+        assert_eq!(k.rebalance_threshold, 4096);
+        assert_eq!(k.drr_quantum, 0.25); // NaN collapses to the minimum
+        assert_eq!(k.drr_burst_cap, 256.0);
+        assert_eq!(k.drr_queue_cap, 1);
+
+        let wild = TunableKnobs {
+            route_window: 10_000,
+            rebalance_threshold: 0,
+            drr_quantum: f64::NEG_INFINITY,
+            drr_burst_cap: f64::INFINITY,
+            drr_queue_cap: usize::MAX,
+        };
+        let k = clamp(wild);
+        assert_eq!(k.route_window, 64);
+        assert_eq!(k.rebalance_threshold, 0);
+        assert_eq!(k.drr_quantum, 0.25);
+        assert_eq!(k.drr_burst_cap, 256.0);
+        assert_eq!(k.drr_queue_cap, 65536);
+    }
+
+    #[test]
+    fn controller_for_none_is_no_controller() {
+        assert!(controller_for(ControllerKind::None, &base()).is_none());
+        let c = controller_for(ControllerKind::Backlog, &base()).unwrap();
+        assert_eq!(c.name(), "backlog");
+    }
+
+    #[test]
+    fn backlog_hysteresis_switches_and_holds() {
+        let b = base();
+        let ctrl = BacklogController::new(b);
+        let relief = clamp(relief_of(&b));
+
+        // quiet system: stays on base
+        assert_eq!(ctrl.tune(&row_with_depth(BACKLOG_LO), &b), b);
+        // crosses high water: relief
+        assert_eq!(ctrl.tune(&row_with_depth(BACKLOG_HI), &b), relief);
+        // in relief, mid-band pressure holds relief (hysteresis)
+        assert_eq!(
+            ctrl.tune(&row_with_depth(BACKLOG_LO + 1), &relief),
+            relief
+        );
+        // drains to low water: back to base
+        assert_eq!(ctrl.tune(&row_with_depth(BACKLOG_LO), &relief), b);
+        // on base, mid-band pressure holds base
+        assert_eq!(ctrl.tune(&row_with_depth(BACKLOG_HI - 1), &b), b);
+    }
+
+    #[test]
+    fn backlog_relief_is_in_range() {
+        let ctrl = BacklogController::new(base());
+        let relief = ctrl.tune(&row_with_depth(BACKLOG_HI), &base());
+        assert_eq!(clamp(relief), relief);
+        assert!(relief.route_window >= base().route_window);
+        assert!(relief.drr_quantum > base().drr_quantum);
+        assert!(relief.drr_queue_cap <= base().drr_queue_cap);
+    }
+
+    #[test]
+    fn tune_is_pure() {
+        let ctrl = BacklogController::new(base());
+        let row = row_with_depth(BACKLOG_HI + 5);
+        let a = ctrl.tune(&row, &base());
+        let b = ctrl.tune(&row, &base());
+        assert_eq!(a, b);
+    }
+}

@@ -352,6 +352,259 @@ pub fn trace_study(
     ]))
 }
 
+// ---------------------------------------------------------------------
+// Offline autotune baseline (`repro autotune`)
+// ---------------------------------------------------------------------
+
+/// Scenarios `repro autotune` sweeps when `--scenarios` is not given:
+/// the paper cluster (ungated control), sharded-hot (finite-capacity
+/// leaders — the one regime that builds genuine FIFO backlog), and
+/// flash-crowd (the gated multi-tenant spike).
+pub const AUTOTUNE_DEFAULT_SCENARIOS: &str = "paper,sharded-hot,flash-crowd";
+
+/// One static-knob replay: the recorded arrivals re-run under `cfg`
+/// (no controller), harvesting per-request completions and the shed
+/// count. Pure function of (trace, cfg) — same contract as the compare
+/// harness's entrant replays.
+fn replay_static(
+    cfg: &crate::config::Config,
+    trace: &crate::trace::Trace,
+) -> (std::collections::BTreeMap<u64, crate::trace::DoneStats>, u64, String) {
+    use crate::coordinator::router::AlgoRouter;
+    use crate::trace::{configure_for_replay, TraceRecorder};
+    let mut cfg = cfg.clone();
+    configure_for_replay(&mut cfg, trace);
+    let router = AlgoRouter::by_name("edf", &cfg.scheduler.widths)
+        .expect("edf is a registered router");
+    let recorder = TraceRecorder::new(&cfg, "edf");
+    let mut engine = sharded_engine(cfg, router);
+    engine.set_arrivals(trace.arrivals_arena());
+    engine.set_trace_sink(Box::new(recorder.clone()));
+    let out = engine.run();
+    (recorder.done_map(), out.shed, recorder.to_jsonl())
+}
+
+/// The offline autotune baseline: for each named scenario, record one
+/// trace under the stock (static, controller-less) config, grid-sweep
+/// static knob settings over it restart-per-trial, and pit the adaptive
+/// `backlog` controller against the *best* static point with paired
+/// per-request deltas — the honest question being "does live retuning
+/// beat the best config you could have picked offline?".
+///
+/// The grid is deliberately small (route window × DRR quantum, ~3–6
+/// trials per scenario): this is a baseline protocol, not a tuner.
+/// Deterministic end to end — every trial replays the same recorded
+/// arrivals under `seed`, the paired significance block's bootstrap is
+/// seeded, and the scenario fan-out reassembles entries in name order —
+/// so the `BENCH_autotune.json` document is byte-identical at any
+/// `eval_threads`. Per-scenario failures land in that scenario's entry
+/// (`record_error`), mirroring [`trace_study`].
+pub fn autotune(
+    scenario_names: &[String],
+    requests: usize,
+    seed: u64,
+    eval_threads: usize,
+) -> Result<Json, String> {
+    use crate::config::ControllerKind;
+    use crate::sim::scenarios;
+    use crate::trace::paired_stats;
+
+    if scenario_names.is_empty() {
+        return Err("autotune needs at least one scenario".into());
+    }
+    // validate every name up front so a typo aborts the sweep instead
+    // of surfacing as the last scenario's entry after minutes of work
+    for name in scenario_names {
+        let mut probe = Config::default();
+        scenarios::apply_named(name, &mut probe)?;
+    }
+
+    let scenario_entry = |si: usize, name: &str| -> Json {
+        let mut cfg = Config::default();
+        scenarios::apply_named(name, &mut cfg)
+            .expect("names validated above");
+        cfg.workload.total_requests = requests;
+        cfg.seed = seed;
+        cfg.ctrl.controller = ControllerKind::None;
+
+        let mut fields: Vec<(String, Json)> =
+            vec![("scenario".to_string(), Json::Str(name.to_string()))];
+        let trace = match record_trace(&cfg, "edf") {
+            Ok(trace) => trace,
+            Err(e) => {
+                fields.push(("record_error".to_string(), Json::Str(e)));
+                return Json::Obj(fields);
+            }
+        };
+
+        // restart-per-trial static grid: route window × DRR quantum
+        // (the quantum axis only exists when the scenario is gated)
+        let gated = cfg.admission.kind == crate::config::AdmissionKind::Drr;
+        let quanta: Vec<f64> = if gated {
+            vec![cfg.admission.quantum, cfg.admission.quantum * 2.0]
+        } else {
+            vec![cfg.admission.quantum]
+        };
+        let mut grid = Vec::new();
+        for &w in &[1usize, 4, 8] {
+            for &q in &quanta {
+                let mut trial_cfg = cfg.clone();
+                trial_cfg.router.route_window = w;
+                trial_cfg.admission.quantum = q;
+                let (done, shed, _) = replay_static(&trial_cfg, &trace);
+                let mut lat = crate::metrics::Summary::default();
+                for d in done.values() {
+                    lat.record(d.e2e_s);
+                }
+                grid.push((w, q, lat.mean(), done, shed));
+            }
+        }
+        // best static point: lowest mean e2e, grid order breaking ties
+        let best = grid
+            .iter()
+            .enumerate()
+            .min_by(|(ai, a), (bi, b)| {
+                a.2.total_cmp(&b.2).then(ai.cmp(bi))
+            })
+            .map(|(i, _)| i)
+            .expect("grid is non-empty");
+        fields.push((
+            "grid".to_string(),
+            Json::Arr(
+                grid.iter()
+                    .map(|(w, q, mean, done, shed)| {
+                        obj(vec![
+                            ("route_window", Json::Num(*w as f64)),
+                            ("drr_quantum", Json::Num(*q)),
+                            ("mean_latency_s", Json::Num(*mean)),
+                            ("completed", Json::Num(done.len() as f64)),
+                            ("shed", Json::Num(*shed as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+        let (best_w, best_q, best_mean, best_done, _) = &grid[best];
+        fields.push((
+            "autotune_best_route_window".to_string(),
+            Json::Num(*best_w as f64),
+        ));
+        fields.push(("autotune_best_drr_quantum".to_string(), Json::Num(*best_q)));
+        fields.push((
+            "autotune_best_mean_latency_s".to_string(),
+            Json::Num(*best_mean),
+        ));
+
+        // the adaptive entrant: same arrivals, stock knobs, live
+        // backlog controller. Retunes (knob changes past the initial
+        // state) are counted out of the replayed trace's knobs events.
+        let mut adaptive_cfg = cfg.clone();
+        adaptive_cfg.ctrl.controller = ControllerKind::Backlog;
+        let (adaptive_done, adaptive_shed, adaptive_trace) =
+            replay_static(&adaptive_cfg, &trace);
+        let knob_states = adaptive_trace
+            .lines()
+            .filter(|l| l.contains("\"ev\":\"knobs\""))
+            .count();
+        let mut adaptive_lat = crate::metrics::Summary::default();
+        for d in adaptive_done.values() {
+            adaptive_lat.record(d.e2e_s);
+        }
+        // paired per-request deltas, adaptive − best-static: negative
+        // means live retuning beats the offline optimum
+        let mut deltas = Vec::new();
+        for (id, b) in best_done {
+            if let Some(a) = adaptive_done.get(id) {
+                deltas.push(a.e2e_s - b.e2e_s);
+            }
+        }
+        let mut adaptive_fields: Vec<(String, Json)> = vec![
+            ("controller".to_string(), Json::Str("backlog".to_string())),
+            (
+                "knob_changes".to_string(),
+                Json::Num(knob_states.saturating_sub(1) as f64),
+            ),
+            (
+                "completed".to_string(),
+                Json::Num(adaptive_done.len() as f64),
+            ),
+            ("shed".to_string(), Json::Num(adaptive_shed as f64)),
+            ("mean_latency_s".to_string(), Json::Num(adaptive_lat.mean())),
+            ("n_pairs".to_string(), Json::Num(deltas.len() as f64)),
+        ];
+        if !deltas.is_empty() {
+            let mean = deltas.iter().sum::<f64>() / deltas.len() as f64;
+            adaptive_fields.push((
+                "adaptive_vs_static_delta_s".to_string(),
+                Json::Num(mean),
+            ));
+            let stats = paired_stats(&deltas, seed ^ 0xA070_70E ^ si as u64);
+            adaptive_fields.push((
+                "sign_test_p".to_string(),
+                Json::Num(stats.sign_test_p),
+            ));
+            adaptive_fields.push((
+                "delta_ci95".to_string(),
+                Json::Arr(vec![Json::Num(stats.ci_lo), Json::Num(stats.ci_hi)]),
+            ));
+            adaptive_fields.push(("win_rate".to_string(), Json::Num(stats.win_rate)));
+        }
+        fields.push(("adaptive".to_string(), Json::Obj(adaptive_fields)));
+        Json::Obj(fields)
+    };
+
+    let threads = eval_threads.max(1).min(scenario_names.len());
+    let entries: Vec<Json> = if threads <= 1 {
+        scenario_names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| scenario_entry(i, n))
+            .collect()
+    } else {
+        // strided scenario fan-out, reassembled in name order — the
+        // same pattern (and the same byte-identity argument) as
+        // `trace_study`'s scenario cells
+        let mut slots: Vec<Option<Json>> =
+            (0..scenario_names.len()).map(|_| None).collect();
+        let cell = &scenario_entry;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|worker| {
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        let mut i = worker;
+                        while i < scenario_names.len() {
+                            out.push((i, cell(i, &scenario_names[i])));
+                            i += threads;
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (i, entry) in h.join().expect("autotune worker panicked") {
+                    slots[i] = Some(entry);
+                }
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.expect("every scenario is assigned to a worker"))
+            .collect()
+    };
+    Ok(obj(vec![
+        (
+            "scenarios",
+            Json::Arr(
+                scenario_names.iter().cloned().map(Json::Str).collect(),
+            ),
+        ),
+        ("requests_per_scenario", Json::Num(requests as f64)),
+        ("seed", Json::Num(seed as f64)),
+        ("entries", Json::Arr(entries)),
+    ]))
+}
+
 /// Percentage change helper for EXPERIMENTS.md-style deltas.
 pub fn pct_change(from: f64, to: f64) -> f64 {
     if from == 0.0 {

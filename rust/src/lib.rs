@@ -32,10 +32,14 @@
 //! * [`obs`] — deterministic observability: metrics registry,
 //!   request-lifecycle stage timing, bounded per-tick series, and the
 //!   `--metrics-out` / `repro report` bundle formats.
+//! * [`ctrl`] — adaptive control plane: the tunable-knob subset of the
+//!   config, pure zero-RNG feedback controllers over the obs tick
+//!   stream, and the clamp that bounds whatever a controller returns.
 //! * [`benchx`] — mini statistical bench harness (criterion substitute).
 
 pub mod benchx;
 pub mod config;
+pub mod ctrl;
 pub mod experiments;
 pub mod coordinator;
 pub mod metrics;

@@ -12,6 +12,10 @@
 //!   trace-study   scenario-conditioned sweep: record one trace per
 //!                 registry scenario and trace-compare a PPO checkpoint
 //!                 against the algorithmic field (BENCH_trace_study.json)
+//!   autotune      offline control-plane baseline: grid-sweep static knob
+//!                 configs over one recorded trace per scenario, then pit
+//!                 the adaptive backlog controller against the best static
+//!                 point with paired deltas (BENCH_autotune.json)
 //!   report        render a --metrics-out bundle (stage-latency table,
 //!                 hottest ticks, per-tenant fairness trend) offline
 //!   tables        regenerate paper tables (I, II, III, IV, V)
@@ -30,6 +34,8 @@
 //!   repro replay --trace-in run.jsonl --router edf
 //!   repro trace-compare --trace-in run.jsonl --routers random,edf,ppo:ppo.json
 //!   repro trace-study --checkpoint ppo.json --requests 1500
+//!   repro simulate --scenario flash-crowd --controller backlog --drr-queue-cap 64
+//!   repro autotune --scenarios paper,sharded-hot,flash-crowd --requests 1200
 //!   repro tables --which 4 --scenario dropout
 //!   repro figures --which 1
 //!   repro train-ppo --episodes 10 --workers 4 --out ppo.json
@@ -77,6 +83,9 @@ fn main() -> anyhow::Result<()> {
         .describe("drr-quantum", "DRR credit accrued per admission tick per backlogged tenant")
         .describe("drr-burst-cap", "DRR credit ceiling (burstiness cap)")
         .describe("drr-queue-cap", "per-tenant admission queue depth; overflow is shed deterministically")
+        .describe("drr-cooldown", "admission ticks a tenant sits out after overflowing its queue (0 = off, bit-identical to the plain gate)")
+        .describe("controller", "live knob controller: none (static config, default) | backlog (hysteresis relief on total shard depth)")
+        .describe("scenarios", "comma list of scenario names to autotune (default paper,sharded-hot,flash-crowd)")
         .describe("obs", "observability collector: true (default) | false (skip metrics/stages/series; sim results identical either way)")
         .describe("obs-series-cap", "per-tick time-series ring capacity; overflow decimates deterministically to every 2nd row (default 4096, min 2)")
         .describe("metrics-out", "write the observability bundle (versioned JSON + Prometheus-style .prom sibling) after the run (simulate, replay)")
@@ -104,6 +113,7 @@ fn main() -> anyhow::Result<()> {
         Some("replay") => cmd_replay(&args),
         Some("trace-compare") => cmd_trace_compare(&args),
         Some("trace-study") => cmd_trace_study(&args),
+        Some("autotune") => cmd_autotune(&args),
         Some("report") => cmd_report(&args),
         Some("tables") => cmd_tables(&args),
         Some("figures") => cmd_figures(&args),
@@ -223,10 +233,12 @@ fn print_outcome(outcome: &RunOutcome) {
             outcome.jain_throughput()
         );
     }
-    if outcome.degraded > 0 || outcome.credit_forfeits > 0 {
+    let cooldowns: u64 = outcome.tenant_stats.iter().map(|s| s.cooldowns).sum();
+    if outcome.degraded > 0 || outcome.credit_forfeits > 0 || cooldowns > 0 {
         println!(
-            "drr gate: degraded {} to slim width, credit forfeits {}",
-            outcome.degraded, outcome.credit_forfeits
+            "drr gate: degraded {} to slim width, credit forfeits {}, \
+             cooldowns {}",
+            outcome.degraded, outcome.credit_forfeits, cooldowns
         );
     }
     if outcome.tenant_stats.len() > 1 {
@@ -560,6 +572,73 @@ fn cmd_trace_study(args: &Args) -> anyhow::Result<()> {
     let out = args.str_or("out", "BENCH_trace_study.json");
     write_report(&report, &out)?;
     println!("\nper-scenario paired matrix written to {out}");
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> anyhow::Result<()> {
+    let names: Vec<String> = args
+        .str_or("scenarios", experiments::AUTOTUNE_DEFAULT_SCENARIOS)
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let requests = args.usize_or("requests", 1200);
+    let seed = args.u64_or("seed", Config::default().seed);
+    let eval_threads = args.usize_or("eval-threads", 1).max(1);
+    println!(
+        "autotune: {} scenarios x {requests} requests, seed {seed}, \
+         eval threads {eval_threads}",
+        names.len()
+    );
+    let report = experiments::autotune(&names, requests, seed, eval_threads)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let mut table = Table::new(
+        "Offline static optimum vs adaptive backlog controller (mean e2e, s)",
+        &[
+            "scenario",
+            "best_rw",
+            "best_q",
+            "static_s",
+            "adaptive_s",
+            "delta_s",
+            "retunes",
+            "sign_p",
+        ],
+    );
+    if let Some(entries) = report.get("entries").and_then(Json::as_arr) {
+        for entry in entries {
+            let name =
+                entry.get("scenario").and_then(Json::as_str).unwrap_or("?");
+            if let Some(e) = entry.get("record_error").and_then(Json::as_str) {
+                println!("scenario {name}: recording failed — {e}");
+                continue;
+            }
+            let n = |k: &str| entry.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+            let adaptive = entry.get("adaptive");
+            let an = |k: &str| {
+                adaptive
+                    .and_then(|a| a.get(k))
+                    .and_then(Json::as_f64)
+                    .unwrap_or(f64::NAN)
+            };
+            table.row(&[
+                name.to_string(),
+                format!("{}", n("autotune_best_route_window") as u64),
+                format!("{:.2}", n("autotune_best_drr_quantum")),
+                format!("{:.4}", n("autotune_best_mean_latency_s")),
+                format!("{:.4}", an("mean_latency_s")),
+                format!("{:+.4}", an("adaptive_vs_static_delta_s")),
+                format!("{}", an("knob_changes") as u64),
+                format!("{:.4}", an("sign_test_p")),
+            ]);
+        }
+    }
+    table.print();
+
+    let out = args.str_or("out", "BENCH_autotune.json");
+    write_report(&report, &out)?;
+    println!("autotune report written to {out}");
     Ok(())
 }
 

@@ -12,6 +12,7 @@
 
 use super::hist::{bucket_upper_edge, LogHistogram, NUM_BUCKETS};
 use super::registry::split_labels;
+use super::series::KnobPoint;
 use super::stage::STAGE_NAMES;
 use super::ObsCollector;
 use crate::coordinator::core::jain_index;
@@ -44,15 +45,31 @@ impl BundleMeta {
     }
 }
 
-/// The versioned JSON bundle `--metrics-out` writes.
+/// The versioned JSON bundle `--metrics-out` writes. The control-plane
+/// `knobs` section appears only when the run carried a controller
+/// (`knob_log` non-empty), so controller-less bundles stay byte-identical
+/// to pre-control-plane ones.
 pub fn bundle_json(obs: &ObsCollector, meta: &BundleMeta) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("metrics_version", Json::Num(METRICS_VERSION as f64)),
         ("meta", meta.to_json()),
         ("registry", obs.reg.to_json()),
         ("stages", obs.stages.to_json()),
         ("series", obs.series.to_json()),
-    ])
+    ];
+    if !obs.knob_log.is_empty() {
+        fields.push((
+            "knobs",
+            obj(vec![
+                ("columns", KnobPoint::knob_columns()),
+                (
+                    "rows",
+                    Json::Arr(obs.knob_log.iter().map(KnobPoint::to_row).collect()),
+                ),
+            ]),
+        ));
+    }
+    obj(fields)
 }
 
 fn prom_hist(out: &mut String, name: &str, h: &LogHistogram) {
@@ -270,6 +287,38 @@ pub fn render_report(bundle: &Json, top_k: usize) -> Result<String, String> {
         );
     }
 
+    // ---- control-plane knob trajectory ---------------------------------
+    // present only when the run carried a controller (see bundle_json)
+    if let Some(knobs) = bundle.get("knobs") {
+        let krows = knobs
+            .get("rows")
+            .and_then(Json::as_arr)
+            .ok_or("knobs missing rows")?;
+        let _ = writeln!(
+            out,
+            "\ncontrol-plane knob trajectory ({} states: initial + retunes):",
+            krows.len()
+        );
+        let _ = writeln!(
+            out,
+            "  {:<10} {:>8} {:>10} {:>9} {:>10} {:>10}",
+            "t", "route_w", "rebal_th", "drr_q", "burst_cap", "queue_cap"
+        );
+        for (i, r) in krows.iter().enumerate() {
+            let xs = r
+                .as_f64_vec()
+                .ok_or_else(|| format!("knobs row {i} not numeric"))?;
+            if xs.len() != 6 {
+                return Err(format!("knobs row {i} has {} columns", xs.len()));
+            }
+            let _ = writeln!(
+                out,
+                "  {:<10.3} {:>8} {:>10} {:>9.2} {:>10.1} {:>10}",
+                xs[0], xs[1] as u64, xs[2] as u64, xs[3], xs[4], xs[5] as u64
+            );
+        }
+    }
+
     // ---- per-tenant fairness trend -------------------------------------
     let multi_tenant = last_tenant_done
         .last()
@@ -380,6 +429,50 @@ mod tests {
         assert!(report.contains("stage latency"), "{report}");
         assert!(report.contains("hottest ticks"), "{report}");
         assert!(report.contains("e2e"), "{report}");
+    }
+
+    #[test]
+    fn knobs_section_appears_only_on_controller_runs() {
+        let o = tiny_collector();
+        let plain = bundle_json(&o, &meta()).to_string_pretty();
+        assert!(
+            !plain.contains("\"knobs\""),
+            "controller-less bundles must not grow a knobs section"
+        );
+
+        let mut o = o;
+        o.on_knobs(KnobPoint {
+            t: 0.0,
+            route_window: 4,
+            rebalance_threshold: 6,
+            drr_quantum: 2.0,
+            drr_burst_cap: 16.0,
+            drr_queue_cap: 32,
+        });
+        o.on_knobs(KnobPoint {
+            t: 1.25,
+            route_window: 16,
+            rebalance_threshold: 3,
+            drr_quantum: 4.0,
+            drr_burst_cap: 32.0,
+            drr_queue_cap: 16,
+        });
+        let tuned = bundle_json(&o, &meta());
+        let rows = tuned
+            .get("knobs")
+            .and_then(|k| k.get("rows"))
+            .and_then(Json::as_arr)
+            .expect("knobs rows present");
+        assert_eq!(rows.len(), 2);
+
+        // the report grows a knob-trajectory section, and only then
+        let parsed = Json::parse(&tuned.to_string_pretty()).unwrap();
+        let report = render_report(&parsed, 3).expect("report renders");
+        assert!(report.contains("knob trajectory (2 states"), "{report}");
+        assert!(report.contains("route_w"), "{report}");
+        let plain_parsed = Json::parse(&plain).unwrap();
+        let plain_report = render_report(&plain_parsed, 3).unwrap();
+        assert!(!plain_report.contains("knob trajectory"), "{plain_report}");
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub mod stage;
 pub use export::{bundle_json, prometheus_text, render_report, BundleMeta, METRICS_VERSION};
 pub use hist::LogHistogram;
 pub use registry::{CounterId, HistId, MetricsRegistry};
-pub use series::{TickRow, TickSeries};
+pub use series::{KnobPoint, TickRow, TickSeries};
 pub use stage::{StageAccum, StageSet, STAGE_NAMES};
 
 /// The engine-side collector: pre-registered hot-path ids plus the
@@ -44,6 +44,10 @@ pub struct ObsCollector {
     pub reg: MetricsRegistry,
     pub stages: StageAccum,
     pub series: TickSeries,
+    /// Control-plane knob trajectory: the initial knob state plus one
+    /// point per retune. Empty on controller-less runs, which keeps
+    /// their exported bundles byte-identical to pre-control-plane ones.
+    pub knob_log: Vec<KnobPoint>,
     ev_total: CounterId,
     ev_kinds: Vec<CounterId>,
     migrations: CounterId,
@@ -68,6 +72,7 @@ impl ObsCollector {
             reg,
             stages: StageAccum::default(),
             series: TickSeries::new(series_cap),
+            knob_log: Vec::new(),
             ev_total,
             ev_kinds,
             migrations,
@@ -118,6 +123,11 @@ impl ObsCollector {
     /// Offer a telemetry-tick snapshot to the bounded series.
     pub fn on_tick(&mut self, row: TickRow) {
         self.series.push(row);
+    }
+
+    /// Record a control-plane knob state (initial, or one retune).
+    pub fn on_knobs(&mut self, point: KnobPoint) {
+        self.knob_log.push(point);
     }
 }
 

@@ -39,6 +39,51 @@ impl TickRow {
     }
 }
 
+/// One control-plane knob change (or the initial state): what the
+/// engine's live knobs were from sim-time `t` on. The knob trajectory
+/// is tiny (a handful of hysteresis flips per run), so it is kept
+/// unbounded — no decimation, unlike [`TickSeries`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KnobPoint {
+    pub t: f64,
+    pub route_window: usize,
+    pub rebalance_threshold: usize,
+    pub drr_quantum: f64,
+    pub drr_burst_cap: f64,
+    pub drr_queue_cap: usize,
+}
+
+impl KnobPoint {
+    /// Bundle JSON row (compact array; see `knob_columns`).
+    pub fn to_row(&self) -> Json {
+        Json::Arr(vec![
+            Json::Num(self.t),
+            Json::Num(self.route_window as f64),
+            Json::Num(self.rebalance_threshold as f64),
+            Json::Num(self.drr_quantum),
+            Json::Num(self.drr_burst_cap),
+            Json::Num(self.drr_queue_cap as f64),
+        ])
+    }
+
+    /// Column legend matching [`KnobPoint::to_row`].
+    pub fn knob_columns() -> Json {
+        Json::Arr(
+            [
+                "t",
+                "route_window",
+                "rebalance_threshold",
+                "drr_quantum",
+                "drr_burst_cap",
+                "drr_queue_cap",
+            ]
+            .iter()
+            .map(|s| Json::Str(s.to_string()))
+            .collect(),
+        )
+    }
+}
+
 /// Stride-doubling bounded ring (see module docs).
 #[derive(Clone, Debug)]
 pub struct TickSeries {
@@ -187,6 +232,42 @@ mod tests {
         let ts: Vec<f64> = s.rows().iter().map(|r| r.t).collect();
         assert_eq!(ts, vec![0.0, 8.0, 16.0, 24.0]);
         assert_eq!(s.offered(), 32);
+    }
+
+    #[test]
+    fn exact_cap_boundary_keeps_cap_rows_then_halves_on_overflow() {
+        // exactly cap offers: no decimation has happened yet
+        let mut s = TickSeries::new(4);
+        for i in 0..4 {
+            s.push(row(i as f64));
+        }
+        assert_eq!(s.rows().len(), 4);
+        assert_eq!(s.stride(), 1);
+        let ts: Vec<f64> = s.rows().iter().map(|r| r.t).collect();
+        assert_eq!(ts, vec![0.0, 1.0, 2.0, 3.0]);
+
+        // the cap+1'th offer triggers the halving: survivors are the
+        // even indices, the stride doubles, and the new row (odd index
+        // 4 % 2 == 0 — index 4 survives stride 2) is appended
+        s.push(row(4.0));
+        let ts: Vec<f64> = s.rows().iter().map(|r| r.t).collect();
+        assert_eq!(ts, vec![0.0, 2.0, 4.0]);
+        assert_eq!(s.stride(), 2);
+        assert_eq!(s.offered(), 5);
+
+        // filling back to the cap again stays under it until the next
+        // boundary: indices 6, 8 land on stride 2 → rows [0,2,4,6]
+        s.push(row(5.0)); // filtered (5 % 2 != 0)
+        s.push(row(6.0));
+        let ts: Vec<f64> = s.rows().iter().map(|r| r.t).collect();
+        assert_eq!(ts, vec![0.0, 2.0, 4.0, 6.0]);
+        assert_eq!(s.rows().len(), 4); // exactly at cap again
+        // next surviving index (8) halves again: [0,4,8], stride 4
+        s.push(row(7.0));
+        s.push(row(8.0));
+        let ts: Vec<f64> = s.rows().iter().map(|r| r.t).collect();
+        assert_eq!(ts, vec![0.0, 4.0, 8.0]);
+        assert_eq!(s.stride(), 4);
     }
 
     #[test]

@@ -303,6 +303,7 @@ pub fn compare_routers_opts(
                         ("shed", Json::Num(ts.shed as f64)),
                         ("degraded", Json::Num(ts.degraded as f64)),
                         ("credit_forfeits", Json::Num(ts.credit_forfeits as f64)),
+                        ("cooldowns", Json::Num(ts.cooldowns as f64)),
                         ("mean_latency_s", Json::Num(ts.mean_latency_s())),
                         ("sla_miss_rate", Json::Num(ts.sla_miss_rate())),
                     ])

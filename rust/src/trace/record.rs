@@ -25,7 +25,11 @@ use crate::utilx::json::{arr_f64, obj, Json};
 /// v2 appends a `tenant` field to `arrival` and `done` records (v1
 /// traces parse with tenant defaulting to 0 — see [`TraceEvent::
 /// from_json`] and the replay-side version gate).
-pub const TRACE_VERSION: u64 = 2;
+///
+/// v3 adds the `knobs` record: the control plane's knob state at run
+/// start and at every retune, so a replay can verify the controller
+/// retuned identically. v1/v2 traces (no controller) still load.
+pub const TRACE_VERSION: u64 = 3;
 
 /// One per-request lifecycle (or run-level telemetry) record.
 #[derive(Clone, Debug, PartialEq)]
@@ -73,6 +77,17 @@ pub enum TraceEvent {
     /// Run-level telemetry tick: leader FIFO depth, completions, and
     /// per-server utilization / power samples.
     Tick { t: f64, fifo: usize, done: u64, util: Vec<f64>, power: Vec<f64> },
+    /// Control-plane knob state (v3): emitted once at run start and
+    /// again whenever a controller retunes, so replays can assert the
+    /// adaptive path re-derived the same knob trajectory.
+    Knobs {
+        t: f64,
+        route_window: usize,
+        rebalance_threshold: usize,
+        drr_quantum: f64,
+        drr_burst_cap: f64,
+        drr_queue_cap: usize,
+    },
 }
 
 impl TraceEvent {
@@ -138,6 +153,22 @@ impl TraceEvent {
                 ("util", arr_f64(util)),
                 ("power", arr_f64(power)),
             ]),
+            TraceEvent::Knobs {
+                t,
+                route_window,
+                rebalance_threshold,
+                drr_quantum,
+                drr_burst_cap,
+                drr_queue_cap,
+            } => obj(vec![
+                ("ev", Json::Str("knobs".into())),
+                ("t", Json::Num(*t)),
+                ("route_window", Json::Num(*route_window as f64)),
+                ("rebalance_threshold", Json::Num(*rebalance_threshold as f64)),
+                ("drr_quantum", Json::Num(*drr_quantum)),
+                ("drr_burst_cap", Json::Num(*drr_burst_cap)),
+                ("drr_queue_cap", Json::Num(*drr_queue_cap as f64)),
+            ]),
         }
     }
 
@@ -201,6 +232,14 @@ impl TraceEvent {
                 done: num("done")? as u64,
                 util: vec("util")?,
                 power: vec("power")?,
+            }),
+            "knobs" => Ok(TraceEvent::Knobs {
+                t: num("t")?,
+                route_window: num("route_window")? as usize,
+                rebalance_threshold: num("rebalance_threshold")? as usize,
+                drr_quantum: num("drr_quantum")?,
+                drr_burst_cap: num("drr_burst_cap")?,
+                drr_queue_cap: num("drr_queue_cap")? as usize,
             }),
             other => Err(format!("unknown record kind {other:?}")),
         }
@@ -430,6 +469,14 @@ mod tests {
                 util: vec![10.0, 0.0],
                 power: vec![60.5, 55.0],
             },
+            TraceEvent::Knobs {
+                t: 0.35,
+                route_window: 8,
+                rebalance_threshold: 3,
+                drr_quantum: 2.5,
+                drr_burst_cap: 16.0,
+                drr_queue_cap: 32,
+            },
         ]
     }
 
@@ -478,13 +525,13 @@ mod tests {
         for ev in samples() {
             engine_side.record(&ev);
         }
-        assert_eq!(rec.len(), 5);
+        assert_eq!(rec.len(), 6);
         assert_eq!(rec.events(), samples());
         let jsonl = rec.to_jsonl();
-        assert_eq!(jsonl.lines().count(), 6); // header + 5 records
+        assert_eq!(jsonl.lines().count(), 7); // header + 6 records
         let header = Json::parse(jsonl.lines().next().unwrap()).unwrap();
         assert_eq!(header.get("trace").and_then(Json::as_str), Some("slim-scheduler"));
-        assert_eq!(header.get("version").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(header.get("version").and_then(Json::as_f64), Some(3.0));
         assert_eq!(header.get("router").and_then(Json::as_str), Some("random"));
         assert!(header.get("config").is_some());
     }
@@ -542,8 +589,8 @@ mod tests {
             engine_side.record(&ev);
             rec.record(&ev);
         }
-        assert_eq!(writer.records(), 5);
-        assert_eq!(writer.finish().unwrap(), 5);
+        assert_eq!(writer.records(), 6);
+        assert_eq!(writer.finish().unwrap(), 6);
         let streamed = std::fs::read_to_string(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(streamed, rec.to_jsonl());
